@@ -1,0 +1,64 @@
+//! The paper's accuracy experiment as a standalone study: run the
+//! ResNet18-conv1-like workload through every Table I architecture plus a
+//! Wm sweep, reporting the accuracy/cost frontier — the analysis a user
+//! would run to pick a PDPU configuration for their own network.
+//!
+//! Run: `cargo run --release --example conv1_accuracy [-- --hw 32 --oc 8]`
+
+use pdpu::baselines::{table1_units, PdpuArch};
+use pdpu::cost::{synthesize_combinational, PdpuParams, Tech};
+use pdpu::dnn::dataset::conv1_workload;
+use pdpu::dnn::layers::{conv2d, conv2d_f64};
+use pdpu::dnn::metrics::{mean_relative_accuracy, rmse, sqnr_db};
+use pdpu::pdpu::PdpuConfig;
+use pdpu::posit::PositFormat;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let get = |key: &str, default: usize| -> usize {
+        args.iter()
+            .position(|a| a == key)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    };
+    let hw = get("--hw", 32);
+    let oc = get("--oc", 8);
+
+    println!("synthetic ResNet18-conv1 workload: {hw}x{hw} input, {oc} output channels, K = 147\n");
+    let wl = conv1_workload(2023, hw, oc);
+    let reference = conv2d_f64(&wl.image, &wl.weights, wl.stride, wl.pad);
+
+    println!("{:<30} {:>10} {:>12} {:>10}", "architecture", "accuracy", "rmse", "SQNR(dB)");
+    for unit in table1_units() {
+        let out = conv2d(unit.as_ref(), &wl.image, &wl.weights, wl.stride, wl.pad);
+        println!(
+            "{:<30} {:>9.2}% {:>12.3e} {:>10.1}",
+            unit.name(),
+            100.0 * mean_relative_accuracy(out.data(), reference.data()),
+            rmse(out.data(), reference.data()),
+            sqnr_db(out.data(), reference.data()),
+        );
+    }
+
+    // Wm frontier: accuracy vs area for the flagship format
+    println!("\nWm frontier, P(13/16,2) N=4 (pick the knee for your accuracy target):");
+    println!("{:<10} {:>10} {:>12} {:>10}", "Wm", "accuracy", "area(um2)", "power(mW)");
+    let tech = Tech::default();
+    for wm in [6u32, 8, 10, 12, 14, 16, 20, 26] {
+        let cfg = PdpuConfig::mixed(13, 16, 2, 4, wm).unwrap();
+        let out = conv2d(&PdpuArch::new(cfg), &wl.image, &wl.weights, wl.stride, wl.pad);
+        let acc = mean_relative_accuracy(out.data(), reference.data());
+        let nl = pdpu::cost::netlists::pdpu(PdpuParams {
+            in_fmt: PositFormat::p(13, 2),
+            out_fmt: PositFormat::p(16, 2),
+            n: 4,
+            wm,
+        });
+        let r = synthesize_combinational(&nl, &tech);
+        println!("{:<10} {:>9.2}% {:>12.0} {:>10.2}", wm, 100.0 * acc, r.area_um2, r.power_mw);
+    }
+
+    println!("\n(absolute percentages depend on the synthetic data; orderings and the");
+    println!(" Wm knee reproduce the paper — see EXPERIMENTS.md §T1 for the comparison)");
+}

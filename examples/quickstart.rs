@@ -1,0 +1,61 @@
+//! Quickstart — the public API in five minutes:
+//! posit values, one fused PDPU dot product, its exact/discrete
+//! comparisons, and the synthesized cost of the unit you just used.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use pdpu::baselines::{DotArch, MulAddTreeDpu, PdpuArch, PositArith};
+use pdpu::cost::{synthesize_combinational, PdpuParams, Tech};
+use pdpu::pdpu::{Pdpu, PdpuConfig};
+use pdpu::posit::{quire::exact_dot, Posit, PositFormat};
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. posit values --------------------------------------------------
+    let p8 = PositFormat::p(8, 2);
+    let x = Posit::from_f64(11.0, p8);
+    println!("posit P(8,2) of 11.0 : bits {:#010b}  value {}", x.bits(), x.to_f64());
+    println!("maxpos / minpos      : {} / {}", Posit::maxpos(p8).to_f64(), Posit::minpos(p8).to_f64());
+    println!("nearest to 1.06      : {}  (3 fraction bits near 1.0)", Posit::from_f64(1.06, p8).to_f64());
+
+    // --- 2. one fused dot product (the paper's Eq. 2) --------------------
+    let cfg = PdpuConfig::paper_default(); // P(13/16,2), N=4, Wm=14
+    let unit = Pdpu::new(cfg);
+    let in_fmt = cfg.in_fmt;
+    let a: Vec<Posit> = [1.5, -2.25, 0.4, 3.0].iter().map(|&v| Posit::from_f64(v, in_fmt)).collect();
+    let b: Vec<Posit> = [2.0, 0.5, -8.0, 0.125].iter().map(|&v| Posit::from_f64(v, in_fmt)).collect();
+    let acc = Posit::from_f64(0.25, cfg.out_fmt);
+    let out = unit.dot(acc, &a, &b);
+    println!("\nPDPU {} :", cfg.label());
+    println!("  acc + Va·Vb = {}   (fp64 would be {})", out.to_f64(), 0.25 + 3.0 - 1.125 - 3.2 + 0.375);
+
+    // exact (quire) reference — the fused unit is ≤ (N+1) grid-ulps away
+    let exact = exact_dot(acc, &a, &b, cfg.out_fmt);
+    println!("  quire-exact        = {}", exact.to_f64());
+
+    // --- 3. the same dot on a discrete architecture ----------------------
+    let discrete = MulAddTreeDpu::new(
+        PositArith { in_fmt, out_fmt: cfg.out_fmt },
+        4,
+        "discrete",
+    );
+    let av: Vec<f64> = a.iter().map(|p| p.to_f64()).collect();
+    let bv: Vec<f64> = b.iter().map(|p| p.to_f64()).collect();
+    println!("  discrete mul+add   = {}   (rounds after every op)", discrete.dot_f64(0.25, &av, &bv));
+
+    // --- 4. long-vector chunked accumulation ----------------------------
+    let arch = PdpuArch::new(cfg);
+    let long_a: Vec<f64> = (0..147).map(|i| ((i * 37) % 19) as f64 / 19.0 - 0.5).collect();
+    let long_b: Vec<f64> = (0..147).map(|i| ((i * 53) % 23) as f64 / 23.0 - 0.5).collect();
+    let got = arch.dot_f64(0.0, &long_a, &long_b);
+    let reference: f64 = long_a.iter().zip(&long_b).map(|(x, y)| x * y).sum();
+    println!("\nconv1-length dot (K=147, chunked by N=4):");
+    println!("  PDPU {:.6}  vs fp64 {:.6}  (rel err {:.2e})", got, reference, ((got - reference) / reference).abs());
+
+    // --- 5. what does this unit cost in silicon? -------------------------
+    let nl = pdpu::cost::netlists::pdpu(PdpuParams::from_config(&cfg));
+    let r = synthesize_combinational(&nl, &Tech::default());
+    println!("\nsynthesized (28 nm-class structural model):");
+    println!("  area  {:.0} um²   delay {:.2} ns   power {:.2} mW", r.area_um2, r.delay_ns, r.power_mw);
+    println!("  perf  {:.2} GOPS   {:.0} GOPS/mm²   {:.0} GOPS/W", r.perf_gops(), r.area_eff(), r.energy_eff());
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Serving demo — start the coordinator's TCP server, drive it with
+//! concurrent clients, and report the latency/throughput profile with and
+//! without dynamic batching pressure.
+//!
+//! Run: `cargo run --release --example serve_inference [-- --clients 8 --requests 64]`
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Instant;
+
+use pdpu::coordinator::{json, Metrics, Server, ServiceHandle};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let get = |key: &str, default: usize| -> usize {
+        args.iter()
+            .position(|a| a == key)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    };
+    let clients = get("--clients", 8);
+    let requests = get("--requests", 64);
+
+    println!("starting coordinator (engine thread + dynamic batcher + TCP front end)…");
+    let engine = ServiceHandle::start("artifacts")
+        .map_err(|e| anyhow::anyhow!("{e:#}\nhint: run `make artifacts` first"))?;
+    let metrics = Arc::new(Metrics::new());
+    let server = Server::start("127.0.0.1:0", engine.clone(), metrics.clone())?;
+    let addr = server.addr;
+    println!("listening on {addr}\n");
+
+    // --- warm: a single sequential client (no batching pressure) ---------
+    println!("phase 1: one sequential client, {requests} requests (batch size ≈ 1)");
+    let t0 = Instant::now();
+    run_client(addr, 0, requests)?;
+    let solo = t0.elapsed();
+    let solo_snapshot = metrics.snapshot();
+    println!(
+        "  {:.1} req/s, mean latency {:.2} ms, mean batch {:.2}",
+        requests as f64 / solo.as_secs_f64(),
+        solo_snapshot.mean_latency_us / 1e3,
+        solo_snapshot.mean_batch_size
+    );
+
+    // --- loaded: concurrent clients (batching kicks in) ------------------
+    println!("\nphase 2: {clients} concurrent clients × {requests} requests");
+    let t1 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| std::thread::spawn(move || run_client(addr, c as u64 + 1, requests)))
+        .collect();
+    for h in handles {
+        h.join().unwrap()?;
+    }
+    let loaded = t1.elapsed();
+    let s = metrics.snapshot();
+    let loaded_reqs = (clients * requests) as f64;
+    println!("  {:.1} req/s aggregate", loaded_reqs / loaded.as_secs_f64());
+    println!(
+        "  mean latency {:.2} ms   p95 {:.2} ms   mean batch {:.2} (batching amortizes PJRT dispatch)",
+        s.mean_latency_us / 1e3,
+        s.p95_latency_us as f64 / 1e3,
+        s.mean_batch_size
+    );
+    println!(
+        "\ntotals: {} requests, {} responses, {} errors, {} batches",
+        s.requests, s.responses, s.errors, s.batches
+    );
+    anyhow::ensure!(s.errors == 0, "serving errors occurred");
+    println!("serving demo OK");
+    Ok(())
+}
+
+fn run_client(addr: std::net::SocketAddr, seed: u64, requests: usize) -> anyhow::Result<()> {
+    let stream = TcpStream::connect(addr)?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut rng = pdpu::testing::Rng::seeded(seed);
+    for _ in 0..requests {
+        let img: Vec<f64> = (0..784).map(|_| rng.unit()).collect();
+        let req = json::Json::obj(vec![
+            ("op", json::Json::Str("infer".into())),
+            ("image", json::Json::arr_f64(&img)),
+        ]);
+        writer.write_all((req.to_string() + "\n").as_bytes())?;
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let v = json::parse(&line).map_err(|e| anyhow::anyhow!(e))?;
+        anyhow::ensure!(v.get("ok") == Some(&json::Json::Bool(true)), "bad response: {line}");
+    }
+    Ok(())
+}

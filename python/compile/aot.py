@@ -1,0 +1,121 @@
+"""AOT lowering: JAX entry points → HLO **text** artifacts for the Rust
+runtime.
+
+HLO text (not ``.serialize()``): jax ≥ 0.5 emits HloModuleProto with
+64-bit instruction ids which the image's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Outputs (under ``artifacts/``):
+  mlp_infer.hlo.txt       serving forward pass       (B=32)
+  mlp_train_step.hlo.txt  SGD step returning (params', loss)
+  posit_gemm.hlo.txt      raw 128×128×128 posit GEMM service
+  params_init.bin         initial MLP parameters, little-endian f32,
+                          concatenated in argument order
+  manifest.json           shapes/dtypes/offsets for the Rust loader
+
+Python runs ONCE, at build time (``make artifacts``); the Rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_entry(s: jax.ShapeDtypeStruct):
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=model.BATCH)
+    ap.add_argument("--gemm", type=int, nargs=3, default=[128, 128, 128], metavar=("M", "K", "N"))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries = {}
+
+    # --- the three entry points -----------------------------------------
+    infer_args = model.infer_example_args(args.batch)
+    text = to_hlo_text(model.mlp_infer, infer_args)
+    with open(os.path.join(args.out_dir, "mlp_infer.hlo.txt"), "w") as f:
+        f.write(text)
+    entries["mlp_infer"] = {
+        "file": "mlp_infer.hlo.txt",
+        "args": [shape_entry(s) for s in infer_args],
+        "outputs": 1,
+    }
+    print(f"mlp_infer: {len(text)} chars")
+
+    train_args = model.train_example_args(args.batch)
+    text = to_hlo_text(model.mlp_train_step, train_args)
+    with open(os.path.join(args.out_dir, "mlp_train_step.hlo.txt"), "w") as f:
+        f.write(text)
+    entries["mlp_train_step"] = {
+        "file": "mlp_train_step.hlo.txt",
+        "args": [shape_entry(s) for s in train_args],
+        "outputs": len(train_args) - 2 + 1,  # params' + loss
+    }
+    print(f"mlp_train_step: {len(text)} chars")
+
+    m, k, n = args.gemm
+    gemm_args = model.gemm_example_args(m, k, n)
+    text = to_hlo_text(model.posit_gemm, gemm_args)
+    with open(os.path.join(args.out_dir, "posit_gemm.hlo.txt"), "w") as f:
+        f.write(text)
+    entries["posit_gemm"] = {
+        "file": "posit_gemm.hlo.txt",
+        "args": [shape_entry(s) for s in gemm_args],
+        "outputs": 1,
+    }
+    print(f"posit_gemm ({m}x{k}x{n}): {len(text)} chars")
+
+    # --- initial parameters ----------------------------------------------
+    params = model.init_params(args.seed)
+    blob = bytearray()
+    offsets = []
+    for p in params:
+        import numpy as np
+
+        arr = np.asarray(p, dtype="<f4")
+        offsets.append({"offset": len(blob), "shape": list(arr.shape)})
+        blob.extend(arr.tobytes())
+    with open(os.path.join(args.out_dir, "params_init.bin"), "wb") as f:
+        f.write(bytes(blob))
+    print(f"params_init.bin: {len(blob)} bytes, {model.param_count(params)} parameters")
+
+    manifest = {
+        "format": {"n_in": model.N_IN, "n_out": model.N_OUT, "es": model.ES},
+        "batch": args.batch,
+        "layer_sizes": model.LAYER_SIZES,
+        "gemm": {"m": m, "k": k, "n": n},
+        "params_bin": {"file": "params_init.bin", "tensors": offsets},
+        "entries": entries,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("manifest.json written")
+    # struct import kept for documentation of the raw-f32 layout
+    _ = struct
+
+
+if __name__ == "__main__":
+    main()

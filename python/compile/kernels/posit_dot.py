@@ -1,0 +1,108 @@
+"""L1 — the PDPU dot-product hot-spot as a Pallas kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's N-wide
+fused MAC datapath becomes, on TPU-class hardware, a tiled matmul whose
+
+* **input decode (S1)** happens on the HBM→VMEM path: each A/B tile is
+  quantized to the P(n_in, es) grid as it enters the kernel;
+* **wide accumulation (S3–S4, the Wm register)** is the float32 output
+  tile resident in VMEM across the K grid dimension, feeding the MXU;
+* **single output rounding (S6)** is the P(n_out, es) quantization applied
+  exactly once, when the K loop finishes.
+
+So the kernel computes ``Q_out( Σ_k Q_in(A)·Q_in(B) )`` — PDPU's fused
+rounding discipline: one rounding at the end, none in between.
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU performance is *estimated* from the BlockSpec
+footprint (see ``vmem_footprint_bytes`` and EXPERIMENTS.md §Perf).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..posit_emu import quantize_posit
+
+__all__ = ["posit_matmul", "vmem_footprint_bytes", "mxu_utilization_estimate"]
+
+
+def _kernel(a_ref, b_ref, o_ref, *, n_out, es, k_steps):
+    """One (i, j, k) grid step of the blocked posit matmul.
+
+    The output tile o_ref is revisited across the K grid dimension (its
+    index map ignores k), so it doubles as the wide accumulator — the Wm
+    register of the paper.
+
+    PERF (EXPERIMENTS.md §Perf, L1 iteration 1): the input quantization
+    Q_in is hoisted OUT of the kernel into the surrounding graph. Inside
+    the kernel each A tile would be re-quantized N/bn times and each B
+    tile M/bm times; hoisting makes Q_in exactly-once per element (and it
+    is the hardware-faithful reading anyway: operands *stored* in posit are
+    already on the grid when DMA'd into VMEM).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # S2–S4: exact products, wide (f32) accumulation
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _round():
+        # S6: the single output rounding
+        o_ref[...] = quantize_posit(o_ref[...], n_out, es)
+
+
+@partial(jax.jit, static_argnames=("n_in", "es", "n_out", "bm", "bn", "bk"))
+def posit_matmul(a, b, *, n_in=13, es=2, n_out=16, bm=32, bn=64, bk=64):
+    """Posit-quantized matmul ``C = Q_out(Q_in(A) @ Q_in(B))``.
+
+    ``a``: [M, K] float32, ``b``: [K, N] float32. M, N, K must be
+    divisible by the block sizes (the L2 model pads to multiples).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    # fit blocks to the problem: the largest divisor of each dim that does
+    # not exceed the requested block (small matrices → one tile per dim;
+    # 96-wide dims → 32-wide blocks; trace-time only)
+    def _fit(dim, want):
+        for cand in range(min(want, dim), 0, -1):
+            if dim % cand == 0:
+                return cand
+        return 1
+
+    bm, bn, bk = _fit(m, bm), _fit(n, bn), _fit(k, bk)
+    k_steps = k // bk
+    # S1 decode: quantize operands to the input grid once, in the graph
+    a = quantize_posit(a, n_in, es)
+    b = quantize_posit(b, n_in, es)
+    return pl.pallas_call(
+        partial(_kernel, n_out=n_out, es=es, k_steps=k_steps),
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """VMEM bytes held live per grid step: A tile + B tile + f32 out/acc
+    tile (double-buffered inputs would 2× the first two terms)."""
+    return bm * bk * dtype_bytes + bk * bn * dtype_bytes + bm * bn * 4
+
+
+def mxu_utilization_estimate(bm: int, bn: int, bk: int, mxu: int = 128) -> float:
+    """Fraction of the MXU systolic array a (bm×bk)·(bk×bn) tile keeps
+    busy (dimension-granularity model: each dimension occupies
+    min(dim, mxu)/mxu of the array)."""
+    return (min(bm, mxu) / mxu) * (min(bn, mxu) / mxu) * (min(bk, mxu) / mxu)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the L1 Pallas kernel.
+
+Computes the same value as ``posit_dot.posit_matmul`` with no Pallas, no
+tiling, no tricks: quantize inputs, one f32 matmul, quantize the output.
+Bit-for-bit agreement with the kernel is the core L1 correctness signal
+(``python/tests/test_kernel.py``) — the kernel's K-blocked accumulation
+order must not change the result beyond f32 reassociation, which the
+tests bound tightly.
+"""
+
+import jax.numpy as jnp
+
+from ..posit_emu import quantize_posit
+
+__all__ = ["posit_matmul_ref"]
+
+
+def posit_matmul_ref(a, b, *, n_in=13, es=2, n_out=16):
+    """Reference ``C = Q_out(Q_in(A) @ Q_in(B))`` with a single f32 GEMM."""
+    aq = quantize_posit(a.astype(jnp.float32), n_in, es)
+    bq = quantize_posit(b.astype(jnp.float32), n_in, es)
+    c = jnp.dot(aq, bq, preferred_element_type=jnp.float32)
+    return quantize_posit(c, n_out, es)

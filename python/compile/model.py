@@ -1,0 +1,162 @@
+"""L2 — the JAX model: a posit-quantized MLP classifier whose every matmul
+routes through the L1 Pallas kernel.
+
+This is the "deep learning application" layer of the paper: DNN compute
+expressed over PDPU-semantics dot products. Entry points (all AOT-lowered
+to HLO text by ``aot.py``, executed from Rust via PJRT — Python never runs
+at request time):
+
+* ``mlp_infer(params…, x)``         → logits              (serving path)
+* ``mlp_train_step(params…, x, y)`` → (params…, loss)     (e2e training)
+* ``posit_gemm(a, b)``              → c                   (raw GEMM service)
+
+Architecture: 784 → 256 → 128 → 10 MLP with ReLU, ~235k parameters.
+Quantization: inputs/weights P(N_IN, ES), accumulations f32 (the Wm-wide
+register), layer outputs P(N_OUT, ES) — the mixed-precision operating
+point of Table I. Gradients flow through the quantizers with a
+straight-through estimator so the same graph trains.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.posit_dot import posit_matmul
+from .posit_emu import quantize_posit
+
+# The paper's flagship mixed-precision configuration.
+N_IN, N_OUT, ES = 13, 16, 2
+
+# MLP shape; padded to kernel blocks inside posit_linear.
+LAYER_SIZES = [784, 256, 128, 10]
+BATCH = 32
+# PERF (EXPERIMENTS.md §Perf, L2 iteration 2): 64-wide K/N blocks halve
+# the interpret-mode grid-step count per layer vs 32³ (grid overhead
+# dominates on the CPU interpreter; on TPU the same change lifts the MXU
+# dimension-utilization estimate from 0.25³ to 0.5²·0.25).
+_BM = 32
+_BK = 64
+_BN = 64
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _ste(x_sur, q):
+    """Straight-through estimator: forward = q, gradient flows via x_sur."""
+    return x_sur + jax.lax.stop_gradient(q - x_sur)
+
+
+def posit_linear(x, w, use_kernel=True):
+    """``x[B, I] @ w[I, O]`` with PDPU semantics.
+
+    ``use_kernel=True`` routes through the Pallas kernel (padded to
+    blocks) — the serving path. ``use_kernel=False`` uses the numerically
+    equivalent single-GEMM formulation (``kernels.ref``); the training
+    artifact uses it because ``pallas_call`` cannot be traced under
+    ``value_and_grad`` in this JAX version, and ``test_kernel.py`` pins
+    kernel ≡ ref. Differentiable either way: the forward value is the
+    quantized result, the gradient flows through a plain f32 surrogate
+    (straight-through estimator).
+    """
+    b, _ = x.shape
+    o = w.shape[1]
+    if use_kernel:
+        xp = _pad_to(_pad_to(x, _BM, 0), _BK, 1)
+        wp = _pad_to(_pad_to(w, _BK, 0), _BN, 1)
+        y = posit_matmul(xp, wp, n_in=N_IN, es=ES, n_out=N_OUT, bm=_BM, bn=_BN, bk=_BK)
+        y = y[:b, :o]
+    else:
+        from .kernels.ref import posit_matmul_ref
+
+        y = posit_matmul_ref(x, w, n_in=N_IN, es=ES, n_out=N_OUT)
+    y_sur = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    return _ste(y_sur, jax.lax.stop_gradient(y))
+
+
+def init_params(seed: int = 0):
+    """He-initialized weights + zero biases as a flat list of arrays (the
+    Rust runtime passes them positionally)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for d_in, d_out in zip(LAYER_SIZES[:-1], LAYER_SIZES[1:]):
+        key, k = jax.random.split(key)
+        w = jax.random.normal(k, (d_in, d_out), jnp.float32) * jnp.sqrt(2.0 / d_in)
+        params += [w, jnp.zeros((d_out,), jnp.float32)]
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(p.size) for p in params)
+
+
+def mlp_logits(params, x, use_kernel=True):
+    """Forward pass: every matmul with PDPU semantics."""
+    h = x
+    n_layers = len(params) // 2
+    for li in range(n_layers):
+        w, b = params[2 * li], params[2 * li + 1]
+        h = posit_linear(h, w, use_kernel=use_kernel) + b[None, :]
+        if li < n_layers - 1:
+            h = jax.nn.relu(h)
+            # activations re-enter the next layer in the narrow format
+            h = _ste(h, quantize_posit(h, N_IN, ES))
+    return h
+
+
+def mlp_infer(*args):
+    """AOT entry: (w0,b0,w1,b1,w2,b2, x[B,784]) → (logits[B,10],)."""
+    params, x = list(args[:-1]), args[-1]
+    return (mlp_logits(params, x),)
+
+
+def _loss(params, x, y):
+    # ref formulation: traceable under value_and_grad (see posit_linear)
+    logits = mlp_logits(params, x, use_kernel=False)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
+
+
+def mlp_train_step(*args, lr: float = 0.05):
+    """AOT entry: (w0,b0,…, x[B,784], y[B] i32) → (w0',b0',…, loss)."""
+    params, x, y = list(args[:-2]), args[-2], args[-1]
+    loss, grads = jax.value_and_grad(_loss)(params, x, y)
+    new_params = [p - lr * g for p, g in zip(params, grads)]
+    return (*new_params, loss)
+
+
+def posit_gemm(a, b):
+    """AOT entry: raw posit GEMM service (shapes fixed at lowering).
+
+    PERF (§Perf, L1 iteration 3): 128-wide N/K tiles — at 128³ the whole
+    GEMM runs in a 4-step grid and each tile occupies a full MXU dimension
+    (mxu_utilization_estimate(32,128,128) = 0.25 vs 0.0625 at 64-blocks).
+    VMEM: 32·128·4 + 128·128·4 + 32·128·4 B ≈ 96 KiB ≪ 16 MiB.
+    """
+    return (posit_matmul(a, b, n_in=N_IN, es=ES, n_out=N_OUT, bm=_BM, bn=128, bk=128),)
+
+
+def infer_example_args(batch: int = BATCH):
+    """ShapeDtypeStructs for lowering ``mlp_infer``."""
+    params = [
+        jax.ShapeDtypeStruct(s, jnp.float32)
+        for d_in, d_out in zip(LAYER_SIZES[:-1], LAYER_SIZES[1:])
+        for s in [(d_in, d_out), (d_out,)]
+    ]
+    return params + [jax.ShapeDtypeStruct((batch, LAYER_SIZES[0]), jnp.float32)]
+
+
+def train_example_args(batch: int = BATCH):
+    return infer_example_args(batch) + [jax.ShapeDtypeStruct((batch,), jnp.int32)]
+
+
+def gemm_example_args(m: int = 128, k: int = 128, n: int = 128):
+    return [
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32),
+    ]

@@ -1,0 +1,134 @@
+"""Posit quantization in pure jnp — the numeric twin of ``rust/src/posit``.
+
+Used by the L1 Pallas kernel and the L2 model to express PDPU's rounding
+discipline (quantize operands to P(n_in, es) on ingest, accumulate wide,
+round the result once to P(n_out, es)) inside a jittable JAX graph.
+
+The emulation is value-level, not bit-level: it rounds a float to the
+nearest posit *value* using arithmetic round-half-to-even on the fraction
+grid. This matches the bit-exact Rust implementation everywhere except
+(a) ties that fall across regime/exponent boundaries (bit-field RNE picks
+the even *pattern*) and (b) sub-fraction exponent rounding in the extreme
+regimes — both ≤ 1-ulp effects at the far tails; the Rust side remains the
+ground truth, and ``python/tests/test_posit_emu.py`` pins the agreement.
+
+All functions are shape-polymorphic and dtype-preserving; computation is
+in float32 unless the input is float64.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "max_scale",
+    "minpos",
+    "maxpos",
+    "quantize_posit",
+    "PositSpec",
+]
+
+
+def max_scale(n: int, es: int) -> int:
+    """Scale (base-2 exponent) of maxpos for P(n, es)."""
+    return (n - 2) * (1 << es)
+
+
+def minpos(n: int, es: int) -> float:
+    return 2.0 ** (-max_scale(n, es))
+
+
+def maxpos(n: int, es: int) -> float:
+    return 2.0 ** max_scale(n, es)
+
+
+class PositSpec:
+    """A (n, es) pair with derived constants, hashable for jit closure."""
+
+    def __init__(self, n: int, es: int):
+        assert 3 <= n <= 32, f"n={n} out of range"
+        assert 0 <= es <= 4, f"es={es} out of range"
+        self.n = n
+        self.es = es
+        self.max_scale = max_scale(n, es)
+
+    def __repr__(self):
+        return f"P({self.n},{self.es})"
+
+    def __eq__(self, other):
+        return (self.n, self.es) == (other.n, other.es)
+
+    def __hash__(self):
+        return hash((self.n, self.es))
+
+
+@partial(jax.jit, static_argnums=(1, 2))
+def quantize_posit(x: jax.Array, n: int, es: int) -> jax.Array:
+    """Round every element of ``x`` to the nearest P(n, es) posit value.
+
+    Zero maps to zero; non-finite values saturate to ±maxpos (posit has no
+    ±inf; NaR handling is done on the Rust side — a jitted DNN graph never
+    produces NaN on valid data). Saturation: |x| above maxpos clamps to
+    maxpos, below minpos clamps to minpos (posits never underflow to zero).
+    """
+    dtype = x.dtype
+    xf = x.astype(jnp.float32) if x.dtype not in (jnp.float32, jnp.float64) else x
+
+    # jnp.sign / log2 flush f32 subnormals to zero on CPU XLA — use an
+    # explicit comparison for the sign and clamp magnitudes into the f32
+    # normal range (every supported posit's minpos/maxpos lies inside it)
+    sign = jnp.where(xf < 0, -1.0, 1.0).astype(xf.dtype)
+    mag = jnp.abs(xf)
+    safe = jnp.clip(jnp.where(mag > 0, mag, 1.0), 1.2e-38, 3.0e38)
+
+    # exact scale/significand split via frexp (bit manipulation — XLA's
+    # f32 log2/exp2 are 1-2 ulp approximations and would corrupt exact
+    # powers of two)
+    m_, e_ = jnp.frexp(safe)  # safe = m·2^e with m ∈ [0.5, 1)
+    scale = (e_ - 1).astype(jnp.float32)
+
+    useed_pow = float(1 << es)
+    k = jnp.floor(scale / useed_pow)
+    # regime length: k >= 0 → k+2 ; k < 0 → -k+1
+    rl = jnp.where(k >= 0, k + 2.0, -k + 1.0)
+    # fraction bits left after sign, regime, exponent
+    fb = jnp.clip(float(n - 1) - rl - float(es), 0.0, None)
+
+    # quantize the significand 1.f on a 2^fb grid, round-half-to-even.
+    # f32 significands carry 23 fraction bits, so any grid with fb ≥ 23 is
+    # at least as fine as the input itself — quantization is the identity
+    # there (and the arithmetic below would lose precision), hence the cap.
+    sig = m_ * 2.0  # in [1, 2), exact
+    fb = jnp.minimum(fb, 23.0)
+    step = jnp.ldexp(jnp.ones_like(sig), fb.astype(jnp.int32))  # exact 2^fb
+    sig_q = jnp.round((sig - 1.0) * step) / step + 1.0  # jnp.round is RNE
+    # carry: significand rounded up to 2.0 → bump the scale
+    carried = sig_q >= 2.0
+    sig_q = jnp.where(carried, 1.0, sig_q)
+    scale_q = scale + carried.astype(scale.dtype)
+
+    # When fb == 0 the exponent bits may also be truncated and the grid
+    # coarsens to scale steps of 2^(es − avail). The posit bit field below
+    # the regime orders values as (exponent, fraction), so round the pair
+    # jointly (rounding sig first and then the scale would double-round,
+    # e.g. 2^21.6 in P(8,2) must go to 2^20, not 2^24).
+    eb_avail = jnp.clip(float(n - 1) - rl, 0.0, float(es))
+    escale = jnp.ldexp(jnp.ones_like(sig), (float(es) - eb_avail).astype(jnp.int32))  # exact 2^(es−avail)
+    e_off = scale - k * useed_pow  # exponent field value ∈ [0, 2^es)
+    field = e_off + (sig - 1.0)  # (e, fraction) as one ordered coordinate
+    e_q = jnp.round(field / escale) * escale
+    scale_q = jnp.where(fb > 0.0, scale_q, k * useed_pow + e_q)
+    sig_q = jnp.where(fb > 0.0, sig_q, 1.0)
+
+    # exact power-of-two scaling (ldexp manipulates the exponent field)
+    q = jnp.ldexp(sig_q, scale_q.astype(jnp.int32))
+
+    # saturation
+    mx = float(2.0 ** max_scale(n, es))
+    mn = float(2.0 ** (-max_scale(n, es)))
+    q = jnp.clip(q, mn, mx)
+    q = jnp.where(jnp.isfinite(mag), q, mx)
+
+    out = sign * jnp.where(mag > 0, q, 0.0)
+    return out.astype(dtype)

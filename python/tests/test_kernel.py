@@ -1,0 +1,109 @@
+"""L1 correctness: the Pallas posit-matmul kernel vs the pure-jnp oracle —
+the CORE correctness signal of the Python layers. Hypothesis sweeps
+shapes and posit formats."""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.posit_dot import (
+    mxu_utilization_estimate,
+    posit_matmul,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import posit_matmul_ref
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, shape).astype(np.float32))
+
+
+class TestKernelVsRef:
+    def test_single_block(self):
+        a, b = rand((32, 32), 1), rand((32, 32), 2)
+        out = posit_matmul(a, b)
+        ref = posit_matmul_ref(a, b)
+        np.testing.assert_allclose(out, ref, rtol=1e-6, atol=1e-6)
+
+    def test_multi_block_k(self):
+        # K-blocked accumulation reassociates f32 adds; after the final
+        # P(16,2) rounding the results must still agree to ≤ 1 output ulp.
+        a, b = rand((32, 128), 3), rand((128, 32), 4)
+        out = np.asarray(posit_matmul(a, b))
+        ref = np.asarray(posit_matmul_ref(a, b))
+        np.testing.assert_allclose(out, ref, rtol=2e-3, atol=1e-6)
+        # and the vast majority agree exactly (same posit value)
+        exact = (out == ref).mean()
+        assert exact > 0.95, f"only {exact:.2%} bit-identical"
+
+    def test_multi_block_all_dims(self):
+        a, b = rand((64, 96), 5), rand((96, 64), 6)
+        out = posit_matmul(a, b)
+        ref = posit_matmul_ref(a, b)
+        np.testing.assert_allclose(out, ref, rtol=2e-3, atol=1e-6)
+
+    @given(
+        mi=st.integers(1, 3),
+        ki=st.integers(1, 4),
+        ni=st.integers(1, 3),
+        seed=st.integers(0, 2**16),
+        fmt=st.sampled_from([(8, 16, 2), (13, 16, 2), (16, 16, 2), (10, 16, 2)]),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_shape_format_sweep(self, mi, ki, ni, seed, fmt):
+        n_in, n_out, es = fmt
+        m, k, n = 32 * mi, 32 * ki, 32 * ni
+        a, b = rand((m, k), seed), rand((k, n), seed + 1)
+        out = posit_matmul(a, b, n_in=n_in, es=es, n_out=n_out)
+        ref = posit_matmul_ref(a, b, n_in=n_in, es=es, n_out=n_out)
+        np.testing.assert_allclose(out, ref, rtol=3e-3, atol=1e-6)
+
+    def test_output_values_are_posits(self):
+        # every output must be idempotent under re-quantization
+        from compile.posit_emu import quantize_posit
+
+        a, b = rand((32, 64), 9), rand((64, 32), 10)
+        out = posit_matmul(a, b, n_in=13, es=2, n_out=16)
+        np.testing.assert_array_equal(out, quantize_posit(out, 16, 2))
+
+    def test_shape_mismatch_raises(self):
+        a, b = rand((32, 32), 1), rand((64, 32), 2)
+        with pytest.raises(AssertionError):
+            posit_matmul(a, b)
+
+    def test_non_divisible_shapes_fit_smaller_blocks(self):
+        # blocks auto-fit to the largest divisor ≤ requested (perf pass
+        # made the API shape-flexible); odd shapes still compute correctly
+        a, b = rand((33, 32), 1), rand((32, 32), 2)
+        out = posit_matmul(a, b)
+        ref = posit_matmul_ref(a, b)
+        np.testing.assert_allclose(out, ref, rtol=2e-3, atol=1e-6)
+
+    def test_quantization_actually_applied(self):
+        # with aggressive P(8,2) inputs the kernel must differ from a plain
+        # f32 matmul (sanity that Q_in isn't optimized away)
+        a, b = rand((32, 32), 11), rand((32, 32), 12)
+        out = posit_matmul(a, b, n_in=8, es=2, n_out=16)
+        plain = jnp.dot(a, b)
+        assert not np.allclose(out, plain, rtol=1e-6)
+
+
+class TestPerfEstimators:
+    def test_vmem_footprint(self):
+        # 32³ f32 blocks: 3 × 4 KiB
+        assert vmem_footprint_bytes(32, 32, 32) == 3 * 32 * 32 * 4
+        # 128³ tiles stay far under 16 MiB VMEM
+        assert vmem_footprint_bytes(128, 128, 128) < 16 * 2**20
+
+    def test_mxu_utilization(self):
+        assert mxu_utilization_estimate(128, 128, 128) == 1.0
+        assert mxu_utilization_estimate(32, 32, 32) == pytest.approx((32 / 128) ** 3)
+        assert mxu_utilization_estimate(256, 128, 128) == 1.0

@@ -1,0 +1,108 @@
+"""L2 correctness: model shapes, loss decrease under the posit train step,
+and AOT manifest consistency."""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+
+
+def synthetic_batch(seed, batch=model.BATCH):
+    """Blob-classification batch matching rust/src/dnn/dataset.rs."""
+    rng = np.random.default_rng(seed)
+    classes = 10
+    xs = np.zeros((batch, 784), np.float32)
+    ys = rng.integers(0, classes, batch)
+    yy, xx = np.mgrid[0:28, 0:28]
+    for i, label in enumerate(ys):
+        ang = label / classes * 2 * np.pi
+        cy, cx = 14 + 7 * np.sin(ang), 14 + 7 * np.cos(ang)
+        img = np.exp(-(((yy - cy) ** 2 + (xx - cx) ** 2) / 9.0))
+        img += 0.08 * rng.normal(size=(28, 28))
+        xs[i] = np.clip(img, 0, 1).ravel()
+    return jnp.asarray(xs), jnp.asarray(ys.astype(np.int32))
+
+
+class TestForward:
+    def test_param_shapes_and_count(self):
+        params = model.init_params(0)
+        assert len(params) == 6
+        assert params[0].shape == (784, 256)
+        assert params[5].shape == (10,)
+        # 784·256 + 256 + 256·128 + 128 + 128·10 + 10 = 235,146
+        assert model.param_count(params) == 235_146
+
+    def test_logits_shape(self):
+        params = model.init_params(0)
+        x, _ = synthetic_batch(1)
+        (logits,) = model.mlp_infer(*params, x)
+        assert logits.shape == (model.BATCH, 10)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_forward_is_quantized(self):
+        # the posit path must differ from an unquantized f32 MLP
+        params = model.init_params(0)
+        x, _ = synthetic_batch(2)
+        (logits,) = model.mlp_infer(*params, x)
+        h = x
+        for li in range(3):
+            w, b = params[2 * li], params[2 * li + 1]
+            h = h @ w + b[None, :]
+            if li < 2:
+                h = jax.nn.relu(h)
+        assert not np.allclose(np.asarray(logits), np.asarray(h), rtol=1e-6)
+        # …but should be close (P(13/16,2) keeps ~3 decimal digits)
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(h), rtol=0.1, atol=0.05)
+
+
+class TestTraining:
+    def test_loss_decreases(self):
+        params = model.init_params(0)
+        losses = []
+        for step in range(30):
+            x, y = synthetic_batch(step)
+            *params, loss = model.mlp_train_step(*params, x, y)
+            params = list(params)
+            losses.append(float(loss))
+        assert losses[0] > 2.0, f"init loss ≈ ln(10): {losses[0]}"
+        assert np.mean(losses[-5:]) < np.mean(losses[:5]) * 0.8, f"no learning: {losses}"
+
+    def test_train_step_outputs_match_param_structure(self):
+        params = model.init_params(0)
+        x, y = synthetic_batch(0)
+        out = model.mlp_train_step(*params, x, y)
+        assert len(out) == len(params) + 1
+        for p, o in zip(params, out[:-1]):
+            assert p.shape == o.shape
+        assert out[-1].shape == ()
+
+
+class TestGemmEntry:
+    def test_gemm_shapes(self):
+        a = jnp.ones((128, 128), jnp.float32)
+        b = jnp.ones((128, 128), jnp.float32) * 0.5
+        (c,) = model.posit_gemm(a, b)
+        assert c.shape == (128, 128)
+        # 128 × (1 · 0.5) = 64, exactly representable
+        np.testing.assert_allclose(np.asarray(c), 64.0)
+
+
+class TestAotLowering:
+    @pytest.mark.slow
+    def test_all_entries_lower_to_hlo_text(self):
+        from compile.aot import to_hlo_text
+
+        text = to_hlo_text(model.posit_gemm, model.gemm_example_args(32, 32, 32))
+        assert "HloModule" in text
+        text = to_hlo_text(model.mlp_infer, model.infer_example_args(8))
+        assert "HloModule" in text
+        text = to_hlo_text(model.mlp_train_step, model.train_example_args(8))
+        assert "HloModule" in text

@@ -1,0 +1,165 @@
+"""Properties of the jnp posit quantizer, pinned against known posit
+values and (when the Rust binary has been built) against the bit-exact
+Rust implementation."""
+
+import os
+import shutil
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.posit_emu import maxpos, minpos, quantize_posit
+
+FORMATS = [(8, 0), (8, 2), (10, 2), (13, 2), (16, 1), (16, 2), (32, 2)]
+
+
+def q(x, n, es):
+    return np.asarray(quantize_posit(jnp.asarray(x, dtype=jnp.float32), n, es))
+
+
+class TestKnownValues:
+    def test_exact_values_preserved(self):
+        # values exactly representable in every listed format
+        for n, es in FORMATS:
+            for v in [0.0, 1.0, -1.0, 2.0, 0.5, -4.0]:
+                assert q(v, n, es) == v, f"P({n},{es}) {v}"
+
+    def test_paper_fig2_value(self):
+        # 11 = 2^3·1.375 is exactly representable in P(8,2)
+        assert q(11.0, 8, 2) == 11.0
+        assert q(-11.0, 8, 2) == -11.0
+
+    def test_rounding_p8_2_near_one(self):
+        # P(8,2) near 1.0 has 3 fraction bits: step 0.125
+        assert q(1.06, 8, 2) == 1.0
+        assert q(1.07, 8, 2) == 1.125
+        # RNE at the midpoint 1.0625 → even significand (1.0)
+        assert q(1.0625, 8, 2) == 1.0
+
+    def test_saturation(self):
+        # 1e38 / 1e-38 are beyond maxpos/minpos of every listed format
+        # (largest maxpos is P(32,2) = 2^120 ≈ 1.33e36) yet inside the float32 NORMAL range (subnormals are flushed by CPU XLA)
+        for n, es in FORMATS:
+            assert q(1e38, n, es) == pytest.approx(maxpos(n, es))
+            assert q(-1e38, n, es) == pytest.approx(-maxpos(n, es))
+            got = q(1e-37, n, es)
+            assert got == pytest.approx(minpos(n, es))
+            assert got > 0, "posit never underflows to zero"
+
+    def test_nonfinite_saturate(self):
+        assert q(np.inf, 16, 2) == maxpos(16, 2)
+        assert q(-np.inf, 16, 2) == -maxpos(16, 2)
+
+
+class TestProperties:
+    @given(
+        st.lists(st.floats(-1e6, 1e6, allow_nan=False), min_size=1, max_size=64),
+        st.sampled_from(FORMATS),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_idempotent(self, xs, fmt):
+        n, es = fmt
+        q1 = q(np.array(xs, dtype=np.float32), n, es)
+        q2 = q(q1, n, es)
+        np.testing.assert_array_equal(q1, q2)
+
+    @given(
+        st.floats(1e-6, 1e6, allow_nan=False),
+        st.sampled_from(FORMATS),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_sign_symmetry(self, x, fmt):
+        n, es = fmt
+        assert q(-x, n, es) == -q(x, n, es)
+
+    @given(st.sampled_from(FORMATS), st.integers(-20, 20))
+    @settings(max_examples=100, deadline=None)
+    def test_powers_of_two_exact(self, fmt, e):
+        # 2^e is representable only while the regime leaves all es exponent
+        # bits in the word; at the extremes the exponent field truncates
+        # and scales coarsen to multiples of 2^(missing bits).
+        n, es = fmt
+        k = e >> es  # floor division (arithmetic shift)
+        rl = k + 2 if k >= 0 else -k + 1
+        if rl + es <= n - 1:
+            assert q(float(2.0**e), n, es) == 2.0**e
+
+    @given(
+        st.lists(st.floats(0.01, 100.0), min_size=2, max_size=32),
+        st.sampled_from([(8, 2), (13, 2), (16, 2)]),
+    )
+    @settings(max_examples=100, deadline=None)
+    def test_monotone(self, xs, fmt):
+        n, es = fmt
+        xs = np.sort(np.array(xs, dtype=np.float32))
+        qs = q(xs, n, es)
+        assert (np.diff(qs) >= 0).all(), f"quantizer must be monotone: {xs} -> {qs}"
+
+    @given(
+        st.floats(0.01, 100.0),
+        st.sampled_from([(13, 2), (16, 2)]),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_relative_error_bounded(self, x, fmt):
+        n, es = fmt
+        # central region: relative error ≤ 2^-(frac_bits_min) where at
+        # least n-3-es-3 fraction bits are live for |x| in [0.01, 100]
+        got = float(q(x, n, es))
+        rel = abs(got - x) / x
+        assert rel < 2.0 ** -(n - 9), f"P({n},{es}) {x} -> {got} rel {rel}"
+
+    def test_narrower_format_coarser(self):
+        rng = np.random.default_rng(0)
+        xs = rng.normal(0, 2, size=500).astype(np.float32)
+        errs = {}
+        for n in [8, 10, 13, 16]:
+            errs[n] = np.abs(q(xs, n, 2) - xs).mean()
+        assert errs[8] > errs[10] > errs[13] > errs[16]
+
+
+@pytest.mark.skipif(
+    not (
+        shutil.which("cargo")
+        and os.path.exists(os.path.join(os.path.dirname(__file__), "../../target/release/pdpu"))
+    ),
+    reason="rust CLI not built",
+)
+class TestCrossLayerAgreement:
+    """The jnp quantizer vs the bit-exact Rust posit library, via the
+    ``pdpu quantize`` CLI. Value-level agreement within 1 ulp everywhere,
+    exact agreement away from tie points."""
+
+    def test_against_rust(self):
+        binary = os.path.join(os.path.dirname(__file__), "../../target/release/pdpu")
+        rng = np.random.default_rng(7)
+        xs = np.concatenate(
+            [
+                rng.normal(0, 1, 50),
+                rng.normal(0, 100, 20),
+                np.exp(rng.uniform(-20, 20, 30)) * rng.choice([-1, 1], 30),
+            ]
+        ).astype(np.float32)
+        for n, es in [(8, 2), (13, 2), (16, 2)]:
+            out = subprocess.run(
+                [binary, "quantize", f"--format={n},{es}"]
+                + [repr(float(v)) for v in xs],
+                capture_output=True,
+                text=True,
+                check=True,
+            )
+            rust_vals = np.array([float(t) for t in out.stdout.split()])
+            py_vals = q(xs, n, es).astype(np.float64)
+            # agreement within one quantizer step of each other
+            for x, rv, pv in zip(xs, rust_vals, py_vals):
+                if rv == pv:
+                    continue
+                # ≤ 1-ulp disagreement allowed at tie/boundary points
+                step = abs(rv) * 2.0 ** -(n - 3 - es) + 1e-300
+                assert abs(rv - pv) <= 2 * step, f"P({n},{es}) x={x}: rust {rv} vs py {pv}"

@@ -1,0 +1,62 @@
+//! Bench E2E — the serving stack on real PJRT executables: batched
+//! inference latency/throughput, posit GEMM rate, and train-step rate.
+//! Skips gracefully when `artifacts/` is missing.
+//!
+//! Run: `cargo bench --bench bench_e2e`
+
+use std::time::Duration;
+
+use pdpu::bench_harness::{bench, report, report_header};
+use pdpu::coordinator::ServiceHandle;
+use pdpu::testing::Rng;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("skipping bench_e2e: run `make artifacts` first");
+        return;
+    }
+    let engine = ServiceHandle::start("artifacts").expect("engine");
+    let info = engine.info().clone();
+    let mut rng = Rng::seeded(0xE2E);
+
+    println!("== PJRT serving path (CPU, interpret-mode pallas artifacts) ==\n");
+    report_header();
+
+    // single-image latency (batch of 1 padded to 32 inside)
+    let img: Vec<f32> = (0..info.input_dim).map(|_| rng.unit() as f32).collect();
+    let m = bench("infer batch=1", Duration::from_secs(2), || {
+        engine.infer_batch(vec![img.clone()]).unwrap()
+    });
+    report(&m);
+    println!("  -> {:.1} images/s\n", m.per_second(1.0));
+
+    // full batch throughput
+    let batch: Vec<Vec<f32>> =
+        (0..info.batch).map(|_| (0..info.input_dim).map(|_| rng.unit() as f32).collect()).collect();
+    let m = bench(&format!("infer batch={}", info.batch), Duration::from_secs(3), || {
+        engine.infer_batch(batch.clone()).unwrap()
+    });
+    report(&m);
+    println!("  -> {:.1} images/s (batched)\n", m.per_second(info.batch as f64));
+
+    // raw posit GEMM
+    let (mm, kk, nn) = info.gemm_mkn;
+    let a: Vec<f32> = (0..mm * kk).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..kk * nn).map(|_| rng.normal() as f32).collect();
+    let m = bench(&format!("posit GEMM {mm}x{kk}x{nn}"), Duration::from_secs(3), || {
+        engine.gemm(a.clone(), b.clone()).unwrap()
+    });
+    report(&m);
+    let macs = (mm * kk * nn) as f64;
+    println!("  -> {:.2} M posit-MACs/s\n", m.per_second(macs) / 1e6);
+
+    // train step
+    let labels: Vec<u32> = (0..info.batch).map(|_| (rng.next_u64() % info.classes as u64) as u32).collect();
+    let m = bench("train step (fwd+bwd+SGD)", Duration::from_secs(3), || {
+        engine.train_step(batch.clone(), labels.clone()).unwrap()
+    });
+    report(&m);
+    println!("  -> {:.1} steps/s, {:.0} samples/s", m.per_second(1.0), m.per_second(info.batch as f64));
+
+    engine.shutdown();
+}

@@ -1,0 +1,52 @@
+//! Bench F6 — Fig. 6 pipeline: regenerate the per-stage breakdown, then
+//! measure the cycle-level pipeline/scheduler models (the coordinator's
+//! planning hot path) — ticks/s and scheduled MAC-chunks/s.
+//!
+//! Run: `cargo bench --bench bench_fig6`
+
+use std::time::Duration;
+
+use pdpu::bench_harness::{bench, report, report_header};
+use pdpu::coordinator::{conv_jobs, schedule};
+use pdpu::cost::Tech;
+use pdpu::experiments::fig6;
+use pdpu::pdpu::pipeline::Pipeline;
+
+fn main() {
+    println!("== Fig. 6: 6-stage pipeline breakdown (cost model) ==\n");
+    let entries = fig6::build(&[4, 8, 16], &Tech::default());
+    print!("{}", fig6::render(&entries));
+
+    println!("\n== cycle-level model throughput (coordinator planning hot path) ==\n");
+    report_header();
+
+    let m = bench("pipeline tick (full, independent ops)", Duration::from_millis(300), || {
+        let mut p = Pipeline::new();
+        for i in 0..1_000u64 {
+            std::hint::black_box(p.tick(Some((i, None))));
+        }
+        p.stats().retired
+    });
+    report(&m);
+    println!("  -> {:.1} M ticks/s\n", m.per_second(1_000.0) / 1e6);
+
+    let jobs = conv_jobs(256, 147);
+    let m = bench("schedule 256 conv outputs on 4 units", Duration::from_millis(400), || {
+        std::hint::black_box(schedule(&jobs, 4, 4, 6))
+    });
+    report(&m);
+    let r = schedule(&jobs, 4, 4, 6);
+    println!(
+        "  -> models {} cycles ({:.1}% util) per call; {:.1} M modeled-cycles/s",
+        r.cycles,
+        100.0 * r.utilization,
+        m.per_second(r.cycles as f64) / 1e6
+    );
+
+    // sweep: utilization vs interleave depth (the Fig. 6 hazard story)
+    println!("\ninterleave depth vs utilization (N=4, 64 outputs, 1 unit):");
+    for il in [1usize, 2, 3, 4, 6, 8] {
+        let r = schedule(&conv_jobs(64, 147), 1, 4, il);
+        println!("  interleave {:<2} -> {:>5.1}% utilization, {} cycles", il, 100.0 * r.utilization, r.cycles);
+    }
+}

@@ -1,0 +1,105 @@
+//! Bench K — posit arithmetic primitives: the hot path of every
+//! bit-exact simulation in the repo (accuracy experiments, baselines,
+//! property tests). Decode/encode/add/mul/fma/quire/PDPU-dot ns/op.
+//!
+//! Run: `cargo bench --bench bench_kernels`
+
+use std::time::Duration;
+
+use pdpu::bench_harness::{bench, report, report_header};
+use pdpu::pdpu::{Pdpu, PdpuConfig};
+use pdpu::posit::{decode, p_add, p_fma, p_mul, quire::Quire, Posit, PositFormat};
+use pdpu::testing::Rng;
+
+fn main() {
+    let fmt = PositFormat::p(16, 2);
+    let mut rng = Rng::seeded(0xBE7C);
+    let vals: Vec<Posit> = (0..1024)
+        .map(|_| loop {
+            let p = Posit::from_bits(rng.next_u64() as u32 & 0xFFFF, fmt);
+            if !p.is_nar() {
+                break p;
+            }
+        })
+        .collect();
+
+    println!("== posit primitive throughput (P(16,2), batches of 1024) ==\n");
+    report_header();
+
+    let m = bench("decode", Duration::from_millis(200), || {
+        let mut acc = 0u64;
+        for p in &vals {
+            acc ^= match decode(*p) {
+                pdpu::posit::Decoded::Finite(f) => f.frac,
+                _ => 0,
+            };
+        }
+        acc
+    });
+    report(&m);
+    println!("  -> {:.1} M decodes/s", m.per_second(1024.0) / 1e6);
+
+    let m = bench("from_f64 (encode path)", Duration::from_millis(200), || {
+        let mut acc = 0u32;
+        for (i, p) in vals.iter().enumerate() {
+            acc ^= Posit::from_f64(p.to_f64() * (1.0 + i as f64 * 1e-6), fmt).bits();
+        }
+        acc
+    });
+    report(&m);
+    println!("  -> {:.1} M encodes/s", m.per_second(1024.0) / 1e6);
+
+    type Op = fn(Posit, Posit, PositFormat) -> Posit;
+    let ops: [(&str, Op); 3] = [
+        ("p_add", |a, b, f| p_add(a, b, f)),
+        ("p_mul", |a, b, f| p_mul(a, b, f)),
+        ("p_fma (c = a)", |a, b, f| p_fma(a, b, a, f)),
+    ];
+    for (name, f) in ops {
+        let m = bench(name, Duration::from_millis(200), || {
+            let mut acc = 0u32;
+            for w in vals.windows(2) {
+                acc ^= f(w[0], w[1], fmt).bits();
+            }
+            acc
+        });
+        report(&m);
+        println!("  -> {:.1} M ops/s", m.per_second(1023.0) / 1e6);
+    }
+
+    let m = bench("quire: 147-term exact dot", Duration::from_millis(200), || {
+        let mut q = Quire::new(fmt, fmt).unwrap();
+        for w in vals[..148].windows(2) {
+            q.add_product(w[0], w[1]);
+        }
+        q.to_posit(fmt).bits()
+    });
+    report(&m);
+    println!("  -> {:.1} M exact MACs/s", m.per_second(147.0) / 1e6);
+
+    println!("\n== PDPU functional unit (the accuracy-experiment hot path) ==\n");
+    for (label, cfg) in [
+        ("PDPU P(13/16,2) N=4 Wm=14 dot", PdpuConfig::mixed(13, 16, 2, 4, 14).unwrap()),
+        ("PDPU P(13/16,2) N=8 Wm=14 dot", PdpuConfig::mixed(13, 16, 2, 8, 14).unwrap()),
+    ] {
+        let unit = Pdpu::new(cfg);
+        let in_vals: Vec<Posit> =
+            (0..cfg.n).map(|i| Posit::from_f64(vals[i].to_f64().clamp(-8.0, 8.0), cfg.in_fmt)).collect();
+        let acc = Posit::zero(cfg.out_fmt);
+        let m = bench(label, Duration::from_millis(250), || {
+            std::hint::black_box(unit.dot(acc, &in_vals, &in_vals)).bits()
+        });
+        report(&m);
+        println!("  -> {:.2} M MACs/s per simulated unit", m.per_second(cfg.n as f64) / 1e6);
+    }
+
+    let cfg = PdpuConfig::paper_default();
+    let unit = Pdpu::new(cfg);
+    let a: Vec<Posit> = (0..147).map(|i| Posit::from_f64((i as f64 * 0.31).sin(), cfg.in_fmt)).collect();
+    let b: Vec<Posit> = (0..147).map(|i| Posit::from_f64((i as f64 * 0.17).cos(), cfg.in_fmt)).collect();
+    let m = bench("PDPU chunked K=147 (conv1 column)", Duration::from_millis(250), || {
+        std::hint::black_box(unit.dot_chunked(Posit::zero(cfg.out_fmt), &a, &b)).bits()
+    });
+    report(&m);
+    println!("  -> {:.2} M MACs/s", m.per_second(147.0) / 1e6);
+}

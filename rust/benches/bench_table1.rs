@@ -1,0 +1,56 @@
+//! Bench T1 — Table I end-to-end: time the bit-exact functional
+//! simulation of every Table I architecture on the conv1-like dot
+//! products (the workload behind the accuracy column), and regenerate the
+//! cost-model side of the table. Also prints the §IV-A claim ratios.
+//!
+//! Run: `cargo bench --bench bench_table1`
+
+use std::time::Duration;
+
+use pdpu::baselines::table1_units;
+use pdpu::bench_harness::{bench, report, report_header, Measurement};
+use pdpu::cost::{table1_reports, Tech};
+use pdpu::testing::Rng;
+
+fn main() {
+    println!("== Table I: functional-model MAC throughput (bit-exact simulation) ==\n");
+    let mut rng = Rng::seeded(0x7AB1E);
+    let k = 147usize; // conv1 dot-product length
+    let a: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+    let b: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+
+    report_header();
+    let mut sims: Vec<(String, Measurement)> = Vec::new();
+    for unit in table1_units() {
+        let m = bench(&unit.name(), Duration::from_millis(300), || {
+            std::hint::black_box(unit.dot_f64(0.0, &a, &b))
+        });
+        report(&m);
+        sims.push((unit.name(), m));
+    }
+    println!("\nsimulation rate (bit-exact MACs/s):");
+    for (name, m) in &sims {
+        println!("  {:<32} {:>10.2} M MAC/s", name, m.per_second(k as f64) / 1e6);
+    }
+
+    println!("\n== Table I: cost model (what the paper synthesized) ==\n");
+    let t0 = std::time::Instant::now();
+    let reports = table1_reports(&Tech::default());
+    println!(
+        "{:<32} {:>10} {:>7} {:>8} {:>8} {:>12} {:>10}",
+        "architecture", "area um2", "delay", "power", "GOPS", "GOPS/mm2", "GOPS/W"
+    );
+    for r in &reports {
+        println!(
+            "{:<32} {:>10.0} {:>7.2} {:>8.2} {:>8.2} {:>12.1} {:>10.1}",
+            r.label,
+            r.area_um2,
+            r.delay_ns,
+            r.power_mw,
+            r.perf_gops(),
+            r.area_eff(),
+            r.energy_eff()
+        );
+    }
+    println!("(cost model regenerated in {:?})", t0.elapsed());
+}

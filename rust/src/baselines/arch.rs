@@ -1,0 +1,157 @@
+//! The common interface every dot-product architecture in Table I
+//! implements, plus the scalar-arithmetic backends (posit and IEEE) the
+//! discrete architectures are assembled from.
+//!
+//! `DotArch::dot_f64` is the experiment-facing contract: take an FP64
+//! accumulator and FP64 input vectors (the paper's reference
+//! representation), quantize to the unit's input format, run the
+//! architecture's exact internal dataflow — including every intermediate
+//! rounding it performs in hardware — and return the FP64 reading of the
+//! output. Accuracy experiments compare that against the FP64 reference.
+
+use crate::posit::{p_add, p_fma, p_mul, Posit, PositFormat};
+
+use super::ieee::{fp_add, fp_fma, fp_from_f64, fp_mul, fp_to_f64, IeeeFormat};
+
+/// A dot-product architecture under evaluation.
+pub trait DotArch {
+    /// Row label, e.g. "PDPU P(13/16,2) N=4 Wm=14".
+    fn name(&self) -> String;
+
+    /// Dot-product chunk size N (1 for FMA units).
+    fn chunk(&self) -> usize;
+
+    /// `acc + Σ aᵢ·bᵢ` over arbitrary-length vectors with this
+    /// architecture's quantization and internal rounding behaviour.
+    fn dot_f64(&self, acc: f64, a: &[f64], b: &[f64]) -> f64;
+}
+
+/// Scalar multiply/add/fma in some number system — the building block of
+/// the *discrete* architectures (Fig. 1), which round after every op.
+pub trait ScalarArith {
+    /// Opaque value representation (a bit pattern).
+    type V: Copy + std::fmt::Debug;
+    fn quant_in(&self, v: f64) -> Self::V;
+    fn quant_acc(&self, v: f64) -> Self::V;
+    fn to_f64(&self, v: Self::V) -> f64;
+    /// rounded multiply of two input-format values into the wide format
+    fn mul(&self, a: Self::V, b: Self::V) -> Self::V;
+    /// rounded add of two wide-format values
+    fn add(&self, x: Self::V, y: Self::V) -> Self::V;
+    /// single-rounding fused multiply-add (inputs in input format, addend
+    /// and result in wide format)
+    fn fma(&self, a: Self::V, b: Self::V, c: Self::V) -> Self::V;
+    fn describe(&self) -> String;
+}
+
+/// Posit scalar backend, mixed precision: inputs in `in_fmt`,
+/// products/sums/acc in `out_fmt` (the PACoGen-style discrete units).
+#[derive(Clone, Copy, Debug)]
+pub struct PositArith {
+    pub in_fmt: PositFormat,
+    pub out_fmt: PositFormat,
+}
+
+impl ScalarArith for PositArith {
+    type V = Posit;
+
+    fn quant_in(&self, v: f64) -> Posit {
+        Posit::from_f64(v, self.in_fmt)
+    }
+
+    fn quant_acc(&self, v: f64) -> Posit {
+        Posit::from_f64(v, self.out_fmt)
+    }
+
+    fn to_f64(&self, v: Posit) -> f64 {
+        v.to_f64()
+    }
+
+    fn mul(&self, a: Posit, b: Posit) -> Posit {
+        p_mul(a, b, self.out_fmt)
+    }
+
+    fn add(&self, x: Posit, y: Posit) -> Posit {
+        p_add(x, y, self.out_fmt)
+    }
+
+    fn fma(&self, a: Posit, b: Posit, c: Posit) -> Posit {
+        p_fma(a, b, c, self.out_fmt)
+    }
+
+    fn describe(&self) -> String {
+        if self.in_fmt == self.out_fmt {
+            format!("{}", self.in_fmt)
+        } else {
+            format!("P({}/{},{})", self.in_fmt.n(), self.out_fmt.n(), self.in_fmt.es())
+        }
+    }
+}
+
+/// IEEE-754 scalar backend (uniform precision, FPnew-style).
+#[derive(Clone, Copy, Debug)]
+pub struct IeeeArith {
+    pub fmt: IeeeFormat,
+}
+
+impl ScalarArith for IeeeArith {
+    type V = u64;
+
+    fn quant_in(&self, v: f64) -> u64 {
+        fp_from_f64(v, self.fmt)
+    }
+
+    fn quant_acc(&self, v: f64) -> u64 {
+        fp_from_f64(v, self.fmt)
+    }
+
+    fn to_f64(&self, v: u64) -> f64 {
+        fp_to_f64(v, self.fmt)
+    }
+
+    fn mul(&self, a: u64, b: u64) -> u64 {
+        fp_mul(a, b, self.fmt)
+    }
+
+    fn add(&self, x: u64, y: u64) -> u64 {
+        fp_add(x, y, self.fmt)
+    }
+
+    fn fma(&self, a: u64, b: u64, c: u64) -> u64 {
+        fp_fma(a, b, c, self.fmt)
+    }
+
+    fn describe(&self) -> String {
+        match (self.fmt.exp_bits, self.fmt.man_bits) {
+            (5, 10) => "FP16".into(),
+            (8, 23) => "FP32".into(),
+            (8, 7) => "BF16".into(),
+            (e, m) => format!("FP(e{e},m{m})"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn posit_arith_quantizes_by_role() {
+        let ar = PositArith { in_fmt: PositFormat::p(13, 2), out_fmt: PositFormat::p(16, 2) };
+        assert_eq!(ar.quant_in(1.0).format(), PositFormat::p(13, 2));
+        assert_eq!(ar.quant_acc(1.0).format(), PositFormat::p(16, 2));
+        let p = ar.mul(ar.quant_in(3.0), ar.quant_in(4.0));
+        assert_eq!(p.format(), PositFormat::p(16, 2));
+        assert_eq!(ar.to_f64(p), 12.0);
+        assert_eq!(ar.describe(), "P(13/16,2)");
+    }
+
+    #[test]
+    fn ieee_arith_roundtrip() {
+        let ar = IeeeArith { fmt: IeeeFormat::fp16() };
+        assert_eq!(ar.to_f64(ar.quant_in(1.5)), 1.5);
+        assert_eq!(ar.to_f64(ar.fma(ar.quant_in(2.0), ar.quant_in(3.0), ar.quant_in(4.0))), 10.0);
+        assert_eq!(ar.describe(), "FP16");
+        assert_eq!(IeeeArith { fmt: IeeeFormat::fp32() }.describe(), "FP32");
+    }
+}

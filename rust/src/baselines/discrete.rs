@@ -1,0 +1,210 @@
+//! The discrete dot-product architectures of Fig. 1 — what PDPU replaces.
+//!
+//! * [`MulAddTreeDpu`] — Fig. 1(a): N parallel multipliers feeding a
+//!   binary adder tree, **every** intermediate result rounded to the wide
+//!   format (each box in Fig. 1(a) is a complete unit with its own
+//!   decode/round/encode). Instantiated with [`PositArith`] this is the
+//!   PACoGen-style DPU row of Table I; with [`IeeeArith`] the FPnew DPU
+//!   rows.
+//! * [`FmaCascadeDpu`] — Fig. 1(b): N cascaded fused multiply-add units;
+//!   one rounding per FMA, serial dependency through the accumulator.
+//!   With `chunk = 1` this is also the FMA-unit rows (FPnew FMA, posit
+//!   FMA [17]), which perform one MAC per cycle.
+
+use super::arch::{DotArch, ScalarArith};
+
+/// Fig. 1(a): multipliers + rounded adder tree, chunked accumulation.
+#[derive(Clone, Debug)]
+pub struct MulAddTreeDpu<A: ScalarArith> {
+    pub arith: A,
+    pub n: usize,
+    pub label: String,
+}
+
+impl<A: ScalarArith> MulAddTreeDpu<A> {
+    pub fn new(arith: A, n: usize, label: impl Into<String>) -> Self {
+        assert!(n >= 1);
+        Self { arith, n, label: label.into() }
+    }
+
+    /// One chunk: products then tree reduction then accumulator add —
+    /// every step individually rounded.
+    fn chunk_dot(&self, acc: A::V, a: &[A::V], b: &[A::V]) -> A::V {
+        let mut level: Vec<A::V> = a.iter().zip(b).map(|(&x, &y)| self.arith.mul(x, y)).collect();
+        while level.len() > 1 {
+            let mut next = Vec::with_capacity(level.len().div_ceil(2));
+            for pair in level.chunks(2) {
+                if pair.len() == 2 {
+                    next.push(self.arith.add(pair[0], pair[1]));
+                } else {
+                    next.push(pair[0]);
+                }
+            }
+            level = next;
+        }
+        self.arith.add(acc, level[0])
+    }
+}
+
+impl<A: ScalarArith> DotArch for MulAddTreeDpu<A> {
+    fn name(&self) -> String {
+        format!("{} {} N={}", self.label, self.arith.describe(), self.n)
+    }
+
+    fn chunk(&self) -> usize {
+        self.n
+    }
+
+    fn dot_f64(&self, acc: f64, a: &[f64], b: &[f64]) -> f64 {
+        assert_eq!(a.len(), b.len());
+        let mut acc_v = self.arith.quant_acc(acc);
+        let zero = self.arith.quant_in(0.0);
+        for (ca, cb) in a.chunks(self.n).zip(b.chunks(self.n)) {
+            let mut qa: Vec<A::V> = ca.iter().map(|&v| self.arith.quant_in(v)).collect();
+            let mut qb: Vec<A::V> = cb.iter().map(|&v| self.arith.quant_in(v)).collect();
+            qa.resize(self.n, zero);
+            qb.resize(self.n, zero);
+            acc_v = self.chunk_dot(acc_v, &qa, &qb);
+        }
+        self.arith.to_f64(acc_v)
+    }
+}
+
+/// Fig. 1(b): cascaded FMA units (or, with n = 1, a single FMA unit doing
+/// one MAC per step).
+#[derive(Clone, Debug)]
+pub struct FmaCascadeDpu<A: ScalarArith> {
+    pub arith: A,
+    pub n: usize,
+    pub label: String,
+}
+
+impl<A: ScalarArith> FmaCascadeDpu<A> {
+    pub fn new(arith: A, n: usize, label: impl Into<String>) -> Self {
+        assert!(n >= 1);
+        Self { arith, n, label: label.into() }
+    }
+}
+
+impl<A: ScalarArith> DotArch for FmaCascadeDpu<A> {
+    fn name(&self) -> String {
+        format!("{} {} N={}", self.label, self.arith.describe(), self.n)
+    }
+
+    fn chunk(&self) -> usize {
+        self.n
+    }
+
+    fn dot_f64(&self, acc: f64, a: &[f64], b: &[f64]) -> f64 {
+        assert_eq!(a.len(), b.len());
+        // the cascade is numerically a pure serial FMA chain regardless of
+        // how many physical units it is spread across
+        let mut acc_v = self.arith.quant_acc(acc);
+        for (&x, &y) in a.iter().zip(b) {
+            let (qx, qy) = (self.arith.quant_in(x), self.arith.quant_in(y));
+            acc_v = self.arith.fma(qx, qy, acc_v);
+        }
+        self.arith.to_f64(acc_v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::arch::{IeeeArith, PositArith};
+    use super::super::ieee::IeeeFormat;
+    use super::*;
+    use crate::posit::PositFormat;
+    use crate::testing::Rng;
+
+    fn posit_arith() -> PositArith {
+        PositArith { in_fmt: PositFormat::p(16, 2), out_fmt: PositFormat::p(16, 2) }
+    }
+
+    #[test]
+    fn exact_small_integers() {
+        // integer data well inside every format: all architectures agree
+        // with the true value
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let b = [2.0, 2.0, 2.0, 2.0, 1.0, 1.0, 1.0, 1.0];
+        let want = 20.0 + 26.0 + 3.0;
+        let tree = MulAddTreeDpu::new(posit_arith(), 4, "discrete");
+        assert_eq!(tree.dot_f64(3.0, &a, &b), want);
+        let casc = FmaCascadeDpu::new(posit_arith(), 4, "cascade");
+        assert_eq!(casc.dot_f64(3.0, &a, &b), want);
+        let fp = MulAddTreeDpu::new(IeeeArith { fmt: IeeeFormat::fp16() }, 4, "FPnew DPU");
+        assert_eq!(fp.dot_f64(3.0, &a, &b), want);
+    }
+
+    #[test]
+    fn tail_chunks_are_zero_padded() {
+        let tree = MulAddTreeDpu::new(posit_arith(), 4, "discrete");
+        // length 5: one full chunk + tail of 1
+        let a = [1.0, 1.0, 1.0, 1.0, 10.0];
+        let b = [1.0, 1.0, 1.0, 1.0, 0.5];
+        assert_eq!(tree.dot_f64(0.0, &a, &b), 9.0);
+    }
+
+    #[test]
+    fn discrete_rounds_more_than_fused() {
+        // A dataset engineered so intermediate rounding hurts: many terms
+        // whose products need more mantissa than P(8,2) keeps. The discrete
+        // tree (rounds every add) must drift at least as far from the exact
+        // value as a single-rounding FMA cascade over f64 would.
+        let fa = PositArith { in_fmt: PositFormat::p(8, 2), out_fmt: PositFormat::p(8, 2) };
+        let tree = MulAddTreeDpu::new(fa, 4, "discrete");
+        let mut rng = Rng::seeded(99);
+        let mut tree_err = 0.0;
+        let n = 64;
+        for _ in 0..200 {
+            let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let exact: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            tree_err += (tree.dot_f64(0.0, &a, &b) - exact).abs();
+        }
+        assert!(tree_err > 0.0, "P(8,2) discrete tree cannot be exact on gaussian data");
+    }
+
+    #[test]
+    fn fp16_dpu_can_overflow_where_fp32_does_not() {
+        let fp16 = MulAddTreeDpu::new(IeeeArith { fmt: IeeeFormat::fp16() }, 4, "FPnew DPU");
+        let fp32 = MulAddTreeDpu::new(IeeeArith { fmt: IeeeFormat::fp32() }, 4, "FPnew DPU");
+        let a = [300.0; 4];
+        let b = [300.0; 4]; // products 90k > 65504 → FP16 inf
+        assert!(fp16.dot_f64(0.0, &a, &b).is_infinite());
+        assert_eq!(fp32.dot_f64(0.0, &a, &b), 360_000.0);
+    }
+
+    #[test]
+    fn cascade_order_sensitivity_exists_for_discrete() {
+        // serial FMA chains are order-sensitive (no quire): our model must
+        // expose that reality on cancellation-heavy data. Scan random
+        // triples until a pair of orderings disagrees.
+        let casc = FmaCascadeDpu::new(
+            PositArith { in_fmt: PositFormat::p(8, 2), out_fmt: PositFormat::p(8, 2) },
+            1,
+            "posit FMA",
+        );
+        let mut rng = Rng::seeded(0x0D9);
+        let b = [1.0, 1.0, 1.0];
+        let mut found = false;
+        for _ in 0..200 {
+            let x = rng.normal_ms(0.0, 30.0);
+            let y = rng.normal_ms(0.0, 1.0);
+            let a = [x, y, -x];
+            let rev = [-x, y, x];
+            if casc.dot_f64(0.0, &a, &b) != casc.dot_f64(0.0, &rev, &b) {
+                found = true;
+                break;
+            }
+        }
+        assert!(found, "no order sensitivity observed in 200 random triples");
+    }
+
+    #[test]
+    fn names_are_informative() {
+        let tree = MulAddTreeDpu::new(posit_arith(), 4, "PACoGen DPU");
+        assert_eq!(tree.name(), "PACoGen DPU P(16,2) N=4");
+        let fma = FmaCascadeDpu::new(IeeeArith { fmt: IeeeFormat::fp32() }, 1, "FPnew FMA");
+        assert_eq!(fma.name(), "FPnew FMA FP32 N=1");
+    }
+}

@@ -1,0 +1,159 @@
+//! The fused architectures as [`DotArch`] rows: the proposed PDPU itself
+//! and the quire-equipped PDPU baseline (Table I's "Quire PDPU" row).
+
+use super::arch::DotArch;
+use crate::pdpu::{Pdpu, PdpuConfig};
+use crate::posit::{quire::Quire, Posit, PositFormat};
+
+/// The proposed PDPU as an evaluable architecture.
+#[derive(Clone, Debug)]
+pub struct PdpuArch {
+    unit: Pdpu,
+}
+
+impl PdpuArch {
+    pub fn new(cfg: PdpuConfig) -> Self {
+        Self { unit: Pdpu::new(cfg) }
+    }
+
+    pub fn config(&self) -> &PdpuConfig {
+        self.unit.config()
+    }
+}
+
+impl DotArch for PdpuArch {
+    fn name(&self) -> String {
+        format!("PDPU {}", self.unit.config().label())
+    }
+
+    fn chunk(&self) -> usize {
+        self.unit.config().n
+    }
+
+    fn dot_f64(&self, acc: f64, a: &[f64], b: &[f64]) -> f64 {
+        let cfg = self.unit.config();
+        let qa: Vec<Posit> = a.iter().map(|&v| Posit::from_f64(v, cfg.in_fmt)).collect();
+        let qb: Vec<Posit> = b.iter().map(|&v| Posit::from_f64(v, cfg.in_fmt)).collect();
+        let acc = Posit::from_f64(acc, cfg.out_fmt);
+        self.unit.dot_chunked(acc, &qa, &qb).to_f64()
+    }
+}
+
+/// PDPU with quire-exact accumulation (Wm = full quire width): one
+/// rounding for the *entire* chunk including the running accumulator —
+/// the most precise and most expensive row of Table I.
+///
+/// Numerically, chunked quire accumulation still re-rounds the running
+/// accumulator between chunks (it re-enters the datapath as a posit), so
+/// this matches the hardware's chunk-serial behaviour rather than an
+/// idealized one-quire-per-whole-vector model.
+#[derive(Clone, Debug)]
+pub struct QuirePdpuArch {
+    pub in_fmt: PositFormat,
+    pub out_fmt: PositFormat,
+    pub n: usize,
+}
+
+impl QuirePdpuArch {
+    pub fn new(in_fmt: PositFormat, out_fmt: PositFormat, n: usize) -> Self {
+        assert!(n >= 1);
+        Self { in_fmt, out_fmt, n }
+    }
+
+    /// The quire register width this configuration implies (the Wm column
+    /// of the quire row; P(13,2) products need 256 bits in the paper).
+    pub fn quire_bits(&self) -> u32 {
+        Quire::new(self.in_fmt, self.in_fmt).expect("quire capacity").required_bits()
+    }
+}
+
+impl DotArch for QuirePdpuArch {
+    fn name(&self) -> String {
+        format!(
+            "Quire PDPU P({}/{},{}) N={}",
+            self.in_fmt.n(),
+            self.out_fmt.n(),
+            self.in_fmt.es(),
+            self.n
+        )
+    }
+
+    fn chunk(&self) -> usize {
+        self.n
+    }
+
+    fn dot_f64(&self, acc: f64, a: &[f64], b: &[f64]) -> f64 {
+        assert_eq!(a.len(), b.len());
+        let qa: Vec<Posit> = a.iter().map(|&v| Posit::from_f64(v, self.in_fmt)).collect();
+        let qb: Vec<Posit> = b.iter().map(|&v| Posit::from_f64(v, self.in_fmt)).collect();
+        let mut acc = Posit::from_f64(acc, self.out_fmt);
+        for (ca, cb) in qa.chunks(self.n).zip(qb.chunks(self.n)) {
+            let mut q = Quire::new(self.in_fmt, self.in_fmt).expect("quire capacity");
+            q.add_posit(acc);
+            for (&x, &y) in ca.iter().zip(cb) {
+                q.add_product(x, y);
+            }
+            acc = q.to_posit(self.out_fmt);
+        }
+        acc.to_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::Rng;
+
+    #[test]
+    fn pdpu_arch_reports_config() {
+        let arch = PdpuArch::new(PdpuConfig::paper_default());
+        assert_eq!(arch.name(), "PDPU P(13/16,2) N=4 Wm=14");
+        assert_eq!(arch.chunk(), 4);
+    }
+
+    #[test]
+    fn quire_bits_ballpark_of_paper() {
+        let q = QuirePdpuArch::new(PositFormat::p(13, 2), PositFormat::p(16, 2), 4);
+        // the paper rounds its quire row's Wm to 256
+        assert!((150..=320).contains(&q.quire_bits()), "{}", q.quire_bits());
+    }
+
+    #[test]
+    fn quire_beats_or_matches_pdpu_on_accuracy() {
+        let in_f = PositFormat::p(13, 2);
+        let out_f = PositFormat::p(16, 2);
+        let pdpu = PdpuArch::new(PdpuConfig::mixed(13, 16, 2, 4, 14).unwrap());
+        let quire = QuirePdpuArch::new(in_f, out_f, 4);
+        let mut rng = Rng::seeded(0xACC);
+        let (mut err_pdpu, mut err_quire) = (0.0f64, 0.0f64);
+        for _ in 0..300 {
+            let n = 64;
+            let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            // reference with quantized inputs (so only accumulation error
+            // is measured, same as both units see)
+            let exact: f64 = a
+                .iter()
+                .zip(&b)
+                .map(|(&x, &y)| Posit::from_f64(x, in_f).to_f64() * Posit::from_f64(y, in_f).to_f64())
+                .sum();
+            err_pdpu += (pdpu.dot_f64(0.0, &a, &b) - exact).abs();
+            err_quire += (quire.dot_f64(0.0, &a, &b) - exact).abs();
+        }
+        assert!(err_quire <= err_pdpu, "quire {err_quire} vs pdpu {err_pdpu}");
+    }
+
+    #[test]
+    fn single_chunk_quire_is_single_rounding() {
+        // one chunk → quire result equals exact_dot
+        let q = QuirePdpuArch::new(PositFormat::p(16, 2), PositFormat::p(16, 2), 4);
+        let a = [0.1, 0.2, 0.3, 0.4];
+        let b = [1.0, 1.0, 1.0, -1.0];
+        let got = q.dot_f64(0.25, &a, &b);
+        let fmt = PositFormat::p(16, 2);
+        let qa: Vec<Posit> = a.iter().map(|&v| Posit::from_f64(v, fmt)).collect();
+        let qb: Vec<Posit> = b.iter().map(|&v| Posit::from_f64(v, fmt)).collect();
+        let want = crate::posit::quire::exact_dot(Posit::from_f64(0.25, fmt), &qa, &qb, fmt).to_f64();
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,579 @@
+//! Bit-exact IEEE-754 binary floating point for arbitrary (exp, man)
+//! widths — the substrate under the FPnew-style baselines of Table I.
+//!
+//! FPnew [35] is a transprecision IEEE FPU; its DPU/FMA rows compute with
+//! per-operation round-to-nearest-even, gradual underflow (subnormals),
+//! and overflow to ±∞. This module reimplements exactly those semantics in
+//! software: decode → exact integer compute with sticky → single RNE
+//! encode, the same discipline as [`crate::posit`]. FP16 = `Ieee::fp16()`,
+//! FP32 = `Ieee::fp32()`; any (e ≤ 11, m ≤ 52) pair works, mirroring
+//! FPnew's multi-format generator.
+
+/// An IEEE-754 binary format: `1 + exp_bits + man_bits` wide.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct IeeeFormat {
+    pub exp_bits: u32,
+    pub man_bits: u32,
+}
+
+impl IeeeFormat {
+    pub fn new(exp_bits: u32, man_bits: u32) -> Self {
+        assert!((2..=11).contains(&exp_bits), "exp_bits out of range");
+        assert!((1..=52).contains(&man_bits), "man_bits out of range");
+        Self { exp_bits, man_bits }
+    }
+
+    /// binary16: e=5, m=10.
+    pub fn fp16() -> Self {
+        Self::new(5, 10)
+    }
+
+    /// binary32: e=8, m=23.
+    pub fn fp32() -> Self {
+        Self::new(8, 23)
+    }
+
+    /// bfloat16: e=8, m=7 (useful for ablations).
+    pub fn bf16() -> Self {
+        Self::new(8, 7)
+    }
+
+    #[inline]
+    pub fn width(&self) -> u32 {
+        1 + self.exp_bits + self.man_bits
+    }
+
+    #[inline]
+    pub fn bias(&self) -> i32 {
+        (1 << (self.exp_bits - 1)) - 1
+    }
+
+    /// Smallest normal scale (unbiased exponent of min normal).
+    #[inline]
+    pub fn e_min(&self) -> i32 {
+        1 - self.bias()
+    }
+
+    /// Largest finite scale.
+    #[inline]
+    pub fn e_max(&self) -> i32 {
+        self.bias()
+    }
+
+    #[inline]
+    fn man_mask(&self) -> u64 {
+        (1u64 << self.man_bits) - 1
+    }
+
+    #[inline]
+    fn exp_mask(&self) -> u64 {
+        (1u64 << self.exp_bits) - 1
+    }
+
+    /// Canonical quiet NaN pattern.
+    pub fn nan_bits(&self) -> u64 {
+        (self.exp_mask() << self.man_bits) | (1u64 << (self.man_bits - 1))
+    }
+
+    pub fn inf_bits(&self, sign: bool) -> u64 {
+        let mag = self.exp_mask() << self.man_bits;
+        if sign {
+            mag | (1u64 << (self.width() - 1))
+        } else {
+            mag
+        }
+    }
+
+    pub fn zero_bits(&self, sign: bool) -> u64 {
+        if sign {
+            1u64 << (self.width() - 1)
+        } else {
+            0
+        }
+    }
+
+    /// Largest finite magnitude pattern (sign = false).
+    pub fn max_finite_bits(&self) -> u64 {
+        ((self.exp_mask() - 1) << self.man_bits) | self.man_mask()
+    }
+}
+
+/// Decoded IEEE value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FpClass {
+    Zero { sign: bool },
+    Inf { sign: bool },
+    NaN,
+    /// normalized: `(-1)^sign · 2^scale · sig/2^fb` with `sig >> fb == 1`
+    /// (subnormals arrive here normalized too)
+    Finite { sign: bool, scale: i32, sig: u64, fb: u32 },
+}
+
+/// Decode an IEEE pattern.
+pub fn fp_decode(bits: u64, fmt: IeeeFormat) -> FpClass {
+    let sign = (bits >> (fmt.width() - 1)) & 1 == 1;
+    let exp = (bits >> fmt.man_bits) & fmt.exp_mask();
+    let man = bits & fmt.man_mask();
+    if exp == fmt.exp_mask() {
+        return if man == 0 { FpClass::Inf { sign } } else { FpClass::NaN };
+    }
+    if exp == 0 {
+        if man == 0 {
+            return FpClass::Zero { sign };
+        }
+        // subnormal: value = man · 2^(e_min − m); normalize
+        let msb = 63 - man.leading_zeros();
+        return FpClass::Finite { sign, scale: fmt.e_min() - (fmt.man_bits - msb) as i32, sig: man, fb: msb };
+    }
+    FpClass::Finite {
+        sign,
+        scale: exp as i32 - fmt.bias(),
+        sig: (1u64 << fmt.man_bits) | man,
+        fb: fmt.man_bits,
+    }
+}
+
+/// Encode a normalized (sign, scale, sig, fb, sticky) with IEEE RNE,
+/// gradual underflow and overflow-to-infinity.
+pub fn fp_encode(sign: bool, scale: i32, sig: u128, fb: u32, sticky: bool, fmt: IeeeFormat) -> u64 {
+    debug_assert!(sig >> fb == 1, "significand not normalized");
+    let m = fmt.man_bits;
+
+    // target fraction width: m for normals; fewer for subnormals
+    let target_fb: i64 = if scale >= fmt.e_min() { m as i64 } else { m as i64 - (fmt.e_min() - scale) as i64 };
+
+    // round sig from fb to target_fb fraction bits (RNE with sticky)
+    let (rounded, carry_scale): (u64, i32) = if target_fb >= fb as i64 {
+        ((sig << (target_fb - fb as i64)) as u64, 0)
+    } else {
+        let drop = (fb as i64 - target_fb) as u32;
+        if drop >= 127 {
+            // everything rounds away; value can never reach half of the
+            // smallest representable step
+            let r = 0u64;
+            let _ = r;
+            return fmt.zero_bits(sign);
+        }
+        let keep = (sig >> drop) as u64;
+        let round = (sig >> (drop - 1)) & 1 == 1;
+        let low_sticky = (sig & ((1u128 << (drop - 1)) - 1)) != 0 || sticky;
+        let mut r = keep;
+        if round && (low_sticky || (keep & 1) == 1) {
+            r += 1;
+        }
+        // carry out of the significand width?
+        if scale >= fmt.e_min() && r >> (m + 1) == 1 {
+            (r >> 1, 1)
+        } else {
+            (r, 0)
+        }
+    };
+    let scale = scale + carry_scale;
+
+    if scale >= fmt.e_min() {
+        // normal (or became normal after carry)
+        if scale > fmt.e_max() {
+            return fmt.inf_bits(sign); // overflow → ±∞ under RNE
+        }
+        debug_assert!(rounded >> m == 1, "normal significand must have hidden bit");
+        let biased = (scale + fmt.bias()) as u64;
+        let mag = (biased << m) | (rounded & fmt.man_mask());
+        mag | ((sign as u64) << (fmt.width() - 1))
+    } else {
+        // subnormal result (rounded has ≤ m bits; may have carried up to 2^m,
+        // in which case it *is* the smallest normal)
+        if rounded >> m == 1 {
+            let mag = 1u64 << m; // biased exponent 1, mantissa 0
+            return mag | ((sign as u64) << (fmt.width() - 1));
+        }
+        if rounded == 0 {
+            return fmt.zero_bits(sign);
+        }
+        rounded | ((sign as u64) << (fmt.width() - 1))
+    }
+}
+
+/// Exact value as f64 (exact whenever m ≤ 52, e ≤ 11).
+pub fn fp_to_f64(bits: u64, fmt: IeeeFormat) -> f64 {
+    match fp_decode(bits, fmt) {
+        FpClass::Zero { sign } => {
+            if sign {
+                -0.0
+            } else {
+                0.0
+            }
+        }
+        FpClass::Inf { sign } => {
+            if sign {
+                f64::NEG_INFINITY
+            } else {
+                f64::INFINITY
+            }
+        }
+        FpClass::NaN => f64::NAN,
+        FpClass::Finite { sign, scale, sig, fb } => {
+            let v = sig as f64 * 2f64.powi(scale - fb as i32);
+            if sign {
+                -v
+            } else {
+                v
+            }
+        }
+    }
+}
+
+/// Correctly-rounded conversion from f64.
+pub fn fp_from_f64(v: f64, fmt: IeeeFormat) -> u64 {
+    if v.is_nan() {
+        return fmt.nan_bits();
+    }
+    if v.is_infinite() {
+        return fmt.inf_bits(v < 0.0);
+    }
+    if v == 0.0 {
+        return fmt.zero_bits(v.is_sign_negative());
+    }
+    let bits = v.to_bits();
+    let sign = bits >> 63 == 1;
+    let biased = ((bits >> 52) & 0x7FF) as i32;
+    let man = bits & ((1u64 << 52) - 1);
+    let (scale, sig, fb) = if biased == 0 {
+        let msb = 63 - man.leading_zeros();
+        (msb as i32 - 1074, man as u128, msb)
+    } else {
+        (biased - 1023, ((1u64 << 52) | man) as u128, 52)
+    };
+    fp_encode(sign, scale, sig, fb, false, fmt)
+}
+
+/// Correctly-rounded multiplication (one rounding).
+pub fn fp_mul(a: u64, b: u64, fmt: IeeeFormat) -> u64 {
+    use FpClass::*;
+    match (fp_decode(a, fmt), fp_decode(b, fmt)) {
+        (NaN, _) | (_, NaN) => fmt.nan_bits(),
+        (Inf { .. }, Zero { .. }) | (Zero { .. }, Inf { .. }) => fmt.nan_bits(),
+        (Inf { sign: s1 }, Inf { sign: s2 }) => fmt.inf_bits(s1 ^ s2),
+        (Inf { sign: s1 }, Finite { sign: s2, .. }) | (Finite { sign: s1, .. }, Inf { sign: s2 }) => {
+            fmt.inf_bits(s1 ^ s2)
+        }
+        (Zero { sign: s1 }, Zero { sign: s2 })
+        | (Zero { sign: s1 }, Finite { sign: s2, .. })
+        | (Finite { sign: s1, .. }, Zero { sign: s2 }) => fmt.zero_bits(s1 ^ s2),
+        (Finite { sign: s1, scale: e1, sig: m1, fb: f1 }, Finite { sign: s2, scale: e2, sig: m2, fb: f2 }) => {
+            let sig = (m1 as u128) * (m2 as u128);
+            let fb = f1 + f2;
+            let msb = 127 - sig.leading_zeros();
+            let scale = e1 + e2 + msb as i32 - fb as i32;
+            fp_encode(s1 ^ s2, scale, sig, msb, false, fmt)
+        }
+    }
+}
+
+/// Correctly-rounded addition (one rounding).
+pub fn fp_add(a: u64, b: u64, fmt: IeeeFormat) -> u64 {
+    use FpClass::*;
+    match (fp_decode(a, fmt), fp_decode(b, fmt)) {
+        (NaN, _) | (_, NaN) => fmt.nan_bits(),
+        (Inf { sign: s1 }, Inf { sign: s2 }) => {
+            if s1 == s2 {
+                fmt.inf_bits(s1)
+            } else {
+                fmt.nan_bits()
+            }
+        }
+        (Inf { sign }, _) | (_, Inf { sign }) => fmt.inf_bits(sign),
+        (Zero { sign: s1 }, Zero { sign: s2 }) => fmt.zero_bits(s1 && s2),
+        (Zero { .. }, f @ Finite { .. }) | (f @ Finite { .. }, Zero { .. }) => {
+            let Finite { sign, scale, sig, fb } = f else { unreachable!() };
+            fp_encode(sign, scale, sig as u128, fb, false, fmt)
+        }
+        (Finite { sign: s1, scale: e1, sig: m1, fb: f1 }, Finite { sign: s2, scale: e2, sig: m2, fb: f2 }) => {
+            add_sig(s1, e1, m1 as u128, f1, s2, e2, m2 as u128, f2, fmt)
+        }
+    }
+}
+
+/// Correctly-rounded fused multiply-add `a·b + c` (one rounding) — the
+/// FPnew FMA baseline semantics.
+pub fn fp_fma(a: u64, b: u64, c: u64, fmt: IeeeFormat) -> u64 {
+    use FpClass::*;
+    let (da, db, dc) = (fp_decode(a, fmt), fp_decode(b, fmt), fp_decode(c, fmt));
+    if matches!(da, NaN) || matches!(db, NaN) || matches!(dc, NaN) {
+        return fmt.nan_bits();
+    }
+    // product classification
+    let prod: Result<(bool, i32, u128, u32), FpClass> = match (da, db) {
+        (NaN, _) | (_, NaN) => unreachable!("NaN handled above"),
+        (Inf { .. }, Zero { .. }) | (Zero { .. }, Inf { .. }) => return fmt.nan_bits(),
+        (Inf { sign: s1 }, Inf { sign: s2 }) => Err(Inf { sign: s1 ^ s2 }),
+        (Inf { sign: s1 }, Finite { sign: s2, .. }) | (Finite { sign: s1, .. }, Inf { sign: s2 }) => {
+            Err(Inf { sign: s1 ^ s2 })
+        }
+        (Zero { sign: s1 }, Zero { sign: s2 })
+        | (Zero { sign: s1 }, Finite { sign: s2, .. })
+        | (Finite { sign: s1, .. }, Zero { sign: s2 }) => Err(Zero { sign: s1 ^ s2 }),
+        (Finite { sign: s1, scale: e1, sig: m1, fb: f1 }, Finite { sign: s2, scale: e2, sig: m2, fb: f2 }) => {
+            let sig = (m1 as u128) * (m2 as u128);
+            let msb = 127 - sig.leading_zeros();
+            Ok((s1 ^ s2, e1 + e2 + msb as i32 - (f1 + f2) as i32, sig, msb))
+        }
+    };
+    match (prod, dc) {
+        (Err(Inf { sign: sp }), Inf { sign: sc }) => {
+            if sp == sc {
+                fmt.inf_bits(sp)
+            } else {
+                fmt.nan_bits()
+            }
+        }
+        (Err(Inf { sign }), _) => fmt.inf_bits(sign),
+        (Ok(_), Inf { sign }) => fmt.inf_bits(sign),
+        (Err(Zero { sign: sp }), Zero { sign: sc }) => fmt.zero_bits(sp && sc),
+        (Err(Zero { .. }), Finite { sign, scale, sig, fb }) => fp_encode(sign, scale, sig as u128, fb, false, fmt),
+        (Ok((sp, ep, mp, fp_)), Zero { .. }) => fp_encode(sp, ep, mp, fp_, false, fmt),
+        (Ok((sp, ep, mp, fp_)), Finite { sign: sc, scale: ec, sig: mc, fb: fc }) => {
+            add_sig(sp, ep, mp, fp_, sc, ec, mc as u128, fc, fmt)
+        }
+        // Zero-product + Inf addend → the addend
+        (Err(Zero { .. }), Inf { sign }) => fmt.inf_bits(sign),
+        // NaN operands returned early; Ok product is Finite by construction
+        (_, NaN) | (Err(NaN), _) | (Err(Finite { .. }), _) => unreachable!("handled above"),
+    }
+}
+
+/// Exact signed addition of two normalized significands, one IEEE
+/// rounding. Same alignment-with-sticky strategy as
+/// `posit::arith::add_fields`, including the borrow-bias correction for
+/// effective subtraction.
+#[allow(clippy::too_many_arguments)]
+fn add_sig(s1: bool, e1: i32, m1: u128, f1: u32, s2: bool, e2: i32, m2: u128, f2: u32, fmt: IeeeFormat) -> u64 {
+    let (s1, e1, m1, f1, s2, e2, m2, f2) =
+        if e1 >= e2 { (s1, e1, m1, f1, s2, e2, m2, f2) } else { (s2, e2, m2, f2, s1, e1, m1, f1) };
+    let fmax = f1.max(f2);
+    let a1 = m1 << (fmax - f1);
+    let a2 = m2 << (fmax - f2);
+    let diff = (e1 - e2) as u32;
+    let headroom = a1.leading_zeros().saturating_sub(1);
+    let (lhs, rhs, grid_fb, sticky) = if diff <= headroom {
+        (a1 << diff, a2, fmax + diff, false)
+    } else {
+        let up = headroom;
+        let down = diff - up;
+        let lhs = a1 << up;
+        if down >= 127 {
+            (lhs, 0u128, fmax + up, m2 != 0)
+        } else {
+            let sticky = a2 & ((1u128 << down) - 1) != 0;
+            (lhs, a2 >> down, fmax + up, sticky)
+        }
+    };
+    let (sum_sign, sum_mag) = if s1 == s2 {
+        (s1, lhs + rhs)
+    } else if lhs >= rhs {
+        (s1, lhs - rhs)
+    } else {
+        (s2, rhs - lhs)
+    };
+    let (sum_mag, sticky) = if sticky && s1 != s2 { (sum_mag - 1, true) } else { (sum_mag, sticky) };
+    if sum_mag == 0 {
+        // exact cancellation: IEEE says +0 under RNE (unless both negative)
+        return fmt.zero_bits(s1 && s2);
+    }
+    let msb = 127 - sum_mag.leading_zeros();
+    let scale = e1 + msb as i32 - grid_fb as i32;
+    fp_encode(sum_sign, scale, sum_mag, msb, sticky, fmt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, Rng};
+
+    #[test]
+    fn format_constants() {
+        let h = IeeeFormat::fp16();
+        assert_eq!(h.width(), 16);
+        assert_eq!(h.bias(), 15);
+        assert_eq!(h.e_min(), -14);
+        assert_eq!(h.e_max(), 15);
+        assert_eq!(fp_to_f64(h.max_finite_bits(), h), 65504.0);
+        let s = IeeeFormat::fp32();
+        assert_eq!(s.bias(), 127);
+        assert_eq!(fp_to_f64(s.max_finite_bits(), s), f32::MAX as f64);
+    }
+
+    /// Every FP16 pattern must round-trip exactly through f64 — compared
+    /// against Rust's native f16-via-f32 semantics would need unstable
+    /// features, so we check against the IEEE definition directly.
+    #[test]
+    fn fp16_roundtrip_exhaustive() {
+        let h = IeeeFormat::fp16();
+        for bits in 0..=0xFFFFu64 {
+            let v = fp_to_f64(bits, h);
+            if v.is_nan() {
+                assert_eq!(fp_from_f64(v, h), h.nan_bits());
+                continue;
+            }
+            let back = fp_from_f64(v, h);
+            assert_eq!(back, bits, "bits={bits:#06x} v={v}");
+        }
+    }
+
+    #[test]
+    fn fp32_roundtrip_matches_native_f32() {
+        let s = IeeeFormat::fp32();
+        let mut rng = Rng::seeded(0x32);
+        for _ in 0..50_000 {
+            let raw = rng.next_u64() as u32;
+            let native = f32::from_bits(raw);
+            if native.is_nan() {
+                continue;
+            }
+            assert_eq!(fp_to_f64(raw as u64, s), native as f64, "decode {raw:#x}");
+            // and conversion from arbitrary f64 must equal native rounding
+            let v = rng.normal_ms(0.0, 1e3);
+            assert_eq!(fp_from_f64(v, s), (v as f32).to_bits() as u64, "from_f64 {v}");
+        }
+    }
+
+    /// FP16 add/mul vs the f64 oracle. One f64 op on FP16 operands is
+    /// exact, so rounding the f64 result once = correctly rounded.
+    #[test]
+    fn fp16_add_mul_vs_f64_oracle() {
+        let h = IeeeFormat::fp16();
+        check("fp16 ops == f64 oracle", 0x16, 200_000, |rng, _| {
+            let a = rng.next_u64() & 0xFFFF;
+            let b = rng.next_u64() & 0xFFFF;
+            let (va, vb) = (fp_to_f64(a, h), fp_to_f64(b, h));
+            if va.is_nan() || vb.is_nan() {
+                return;
+            }
+            let sum = fp_add(a, b, h);
+            let want_sum = fp_from_f64(va + vb, h);
+            // ±0 sign subtleties: compare values, and bits when nonzero
+            if fp_to_f64(sum, h) != 0.0 || fp_to_f64(want_sum, h) != 0.0 {
+                assert_eq!(sum, want_sum, "{va} + {vb}");
+            }
+            let prod = fp_mul(a, b, h);
+            let want_prod = fp_from_f64(va * vb, h);
+            if fp_to_f64(prod, h) != 0.0 || fp_to_f64(want_prod, h) != 0.0 {
+                assert_eq!(prod, want_prod, "{va} · {vb}");
+            }
+        });
+    }
+
+    /// FP32 mul vs f64 oracle (a single f64 product of two f32s is exact).
+    #[test]
+    fn fp32_mul_vs_f64_oracle() {
+        let s = IeeeFormat::fp32();
+        check("fp32 mul == f64 oracle", 0x33, 100_000, |rng, _| {
+            let a = (rng.next_u64() as u32) as u64;
+            let b = (rng.next_u64() as u32) as u64;
+            let (va, vb) = (fp_to_f64(a, s), fp_to_f64(b, s));
+            if va.is_nan() || vb.is_nan() {
+                return;
+            }
+            let got = fp_mul(a, b, s);
+            let want = ((va as f32) * (vb as f32)) as f64; // native f32 mul
+            let got_v = fp_to_f64(got, s);
+            if want.is_nan() {
+                assert!(got_v.is_nan());
+            } else if want != 0.0 || got_v != 0.0 {
+                assert_eq!(got_v, want, "{va} · {vb}");
+            }
+        });
+    }
+
+    /// FP32 add vs native f32 (native f32 + is correctly rounded).
+    #[test]
+    fn fp32_add_vs_native() {
+        let s = IeeeFormat::fp32();
+        check("fp32 add == native", 0x34, 100_000, |rng, _| {
+            let a = (rng.next_u64() as u32) as u64;
+            let b = (rng.next_u64() as u32) as u64;
+            let (va, vb) = (fp_to_f64(a, s), fp_to_f64(b, s));
+            if va.is_nan() || vb.is_nan() {
+                return;
+            }
+            let got = fp_to_f64(fp_add(a, b, s), s);
+            let want = ((va as f32) + (vb as f32)) as f64;
+            if want.is_nan() {
+                assert!(got.is_nan());
+            } else if want != 0.0 || got != 0.0 {
+                assert_eq!(got, want, "{va} + {vb}");
+            }
+        });
+    }
+
+    /// FP32 fma vs native f32::mul_add (hardware-correct single rounding).
+    #[test]
+    fn fp32_fma_vs_native() {
+        let s = IeeeFormat::fp32();
+        check("fp32 fma == native mul_add", 0x35, 100_000, |rng, _| {
+            let a = (rng.next_u64() as u32) as u64;
+            let b = (rng.next_u64() as u32) as u64;
+            let c = (rng.next_u64() as u32) as u64;
+            let (va, vb, vc) = (fp_to_f64(a, s), fp_to_f64(b, s), fp_to_f64(c, s));
+            if va.is_nan() || vb.is_nan() || vc.is_nan() {
+                return;
+            }
+            let got = fp_to_f64(fp_fma(a, b, c, s), s);
+            let want = ((va as f32).mul_add(vb as f32, vc as f32)) as f64;
+            if want.is_nan() {
+                assert!(got.is_nan(), "{va}·{vb}+{vc}: got {got}");
+            } else if want != 0.0 || got != 0.0 {
+                assert_eq!(got, want, "{va}·{vb}+{vc}");
+            }
+        });
+    }
+
+    #[test]
+    fn overflow_to_infinity() {
+        let h = IeeeFormat::fp16();
+        let max = h.max_finite_bits();
+        assert_eq!(fp_add(max, max, h), h.inf_bits(false));
+        assert_eq!(fp_mul(max, max, h), h.inf_bits(false));
+        // 65504 + 8 = 65512 < the 65520 overflow midpoint → stays maxfinite;
+        // 65504 + 16 = 65520 is the exact tie and RNE's "even" neighbour is
+        // the (overflowing) 2^16 → rounds to +inf; +32 overflows outright
+        let v8 = fp_from_f64(8.0, h);
+        assert_eq!(fp_add(max, v8, h), max);
+        let v16 = fp_from_f64(16.0, h);
+        assert_eq!(fp_add(max, v16, h), h.inf_bits(false));
+        let v32 = fp_from_f64(32.0, h);
+        assert_eq!(fp_add(max, v32, h), h.inf_bits(false));
+    }
+
+    #[test]
+    fn gradual_underflow() {
+        let h = IeeeFormat::fp16();
+        // min subnormal = 2^-24
+        let min_sub = 1u64;
+        assert_eq!(fp_to_f64(min_sub, h), 2f64.powi(-24));
+        // half of it rounds to zero (RNE, tie to even=0)
+        assert_eq!(fp_from_f64(2f64.powi(-25), h), 0);
+        // three quarters rounds up to min subnormal
+        assert_eq!(fp_from_f64(1.5 * 2f64.powi(-25), h), min_sub);
+        // subnormal × 2 stays exact
+        assert_eq!(fp_to_f64(fp_mul(min_sub, fp_from_f64(2.0, h), h), h), 2f64.powi(-23));
+    }
+
+    #[test]
+    fn special_value_semantics() {
+        let h = IeeeFormat::fp16();
+        let inf = h.inf_bits(false);
+        let ninf = h.inf_bits(true);
+        let one = fp_from_f64(1.0, h);
+        let zero = h.zero_bits(false);
+        assert_eq!(fp_add(inf, ninf, h), h.nan_bits());
+        assert_eq!(fp_add(inf, one, h), inf);
+        assert_eq!(fp_mul(inf, zero, h), h.nan_bits());
+        assert_eq!(fp_mul(ninf, one, h), ninf);
+        assert_eq!(fp_fma(inf, zero, one, h), h.nan_bits());
+        assert_eq!(fp_fma(one, one, ninf, h), ninf);
+        // NaN propagates everywhere
+        for op in [fp_add(h.nan_bits(), one, h), fp_mul(one, h.nan_bits(), h), fp_fma(one, one, h.nan_bits(), h)] {
+            assert_eq!(op, h.nan_bits());
+        }
+    }
+}

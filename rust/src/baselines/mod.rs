@@ -1,0 +1,81 @@
+//! Every dot-product architecture of Table I, behind one [`DotArch`]
+//! interface.
+//!
+//! * [`ieee`] — bit-exact IEEE-754 arithmetic of any (e,m): the FPnew
+//!   substrate.
+//! * [`arch`] — the `DotArch` evaluation interface and the posit/IEEE
+//!   scalar backends.
+//! * [`discrete`] — Fig. 1(a) multiplier+adder-tree DPUs (PACoGen / FPnew
+//!   DPU rows) and Fig. 1(b) FMA cascades (FPnew FMA / posit FMA rows).
+//! * [`fused`] — the proposed PDPU and the quire PDPU as `DotArch` rows.
+//!
+//! [`table1_units`] assembles the full line-up exactly as the paper's
+//! Table I lists it.
+
+pub mod arch;
+pub mod discrete;
+pub mod fused;
+pub mod ieee;
+
+pub use arch::{DotArch, IeeeArith, PositArith, ScalarArith};
+pub use discrete::{FmaCascadeDpu, MulAddTreeDpu};
+pub use fused::{PdpuArch, QuirePdpuArch};
+pub use ieee::IeeeFormat;
+
+use crate::pdpu::PdpuConfig;
+use crate::posit::PositFormat;
+
+/// The full Table I line-up, in row order.
+pub fn table1_units() -> Vec<Box<dyn DotArch>> {
+    let p16 = PositFormat::p(16, 2);
+    vec![
+        // FPnew DPU [35]: FP32 and FP16, N=4
+        Box::new(MulAddTreeDpu::new(IeeeArith { fmt: IeeeFormat::fp32() }, 4, "FPnew DPU")),
+        Box::new(MulAddTreeDpu::new(IeeeArith { fmt: IeeeFormat::fp16() }, 4, "FPnew DPU")),
+        // PACoGen DPU [13]: P(16,2), N=4 (discrete posit mul + add tree)
+        Box::new(MulAddTreeDpu::new(PositArith { in_fmt: p16, out_fmt: p16 }, 4, "PACoGen DPU")),
+        // Proposed PDPU, five configurations
+        Box::new(PdpuArch::new(PdpuConfig::uniform(16, 2, 4, 14).unwrap())),
+        Box::new(PdpuArch::new(PdpuConfig::mixed(13, 16, 2, 4, 14).unwrap())),
+        Box::new(PdpuArch::new(PdpuConfig::mixed(13, 16, 2, 8, 14).unwrap())),
+        Box::new(PdpuArch::new(PdpuConfig::mixed(10, 16, 2, 8, 14).unwrap())),
+        Box::new(PdpuArch::new(PdpuConfig::mixed(13, 16, 2, 8, 10).unwrap())),
+        // Quire PDPU: P(13/16,2), N=4, Wm = quire width (~256)
+        Box::new(QuirePdpuArch::new(PositFormat::p(13, 2), p16, 4)),
+        // FPnew FMA [35]: FP32 and FP16, single MAC
+        Box::new(FmaCascadeDpu::new(IeeeArith { fmt: IeeeFormat::fp32() }, 1, "FPnew FMA")),
+        Box::new(FmaCascadeDpu::new(IeeeArith { fmt: IeeeFormat::fp16() }, 1, "FPnew FMA")),
+        // Posit FMA [17]: P(16,2), single MAC
+        Box::new(FmaCascadeDpu::new(PositArith { in_fmt: p16, out_fmt: p16 }, 1, "Posit FMA")),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_lineup_matches_paper_rows() {
+        let units = table1_units();
+        assert_eq!(units.len(), 12);
+        let names: Vec<String> = units.iter().map(|u| u.name()).collect();
+        assert_eq!(names[0], "FPnew DPU FP32 N=4");
+        assert_eq!(names[1], "FPnew DPU FP16 N=4");
+        assert_eq!(names[2], "PACoGen DPU P(16,2) N=4");
+        assert_eq!(names[3], "PDPU P(16/16,2) N=4 Wm=14");
+        assert_eq!(names[4], "PDPU P(13/16,2) N=4 Wm=14");
+        assert_eq!(names[8], "Quire PDPU P(13/16,2) N=4");
+        assert_eq!(names[11], "Posit FMA P(16,2) N=1");
+    }
+
+    #[test]
+    fn all_units_compute_a_simple_dot() {
+        let a = [1.0, 2.0, -1.5, 0.5, 3.0];
+        let b = [2.0, 0.5, 2.0, 4.0, 1.0];
+        let want = 2.0 + 1.0 - 3.0 + 2.0 + 3.0;
+        for u in table1_units() {
+            let got = u.dot_f64(0.0, &a, &b);
+            assert_eq!(got, want, "{}", u.name());
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Minimal benchmark harness (the offline image has no criterion): timed
+//! runs with warmup, adaptive iteration count, and mean/p50/p95 reporting.
+//! Used by the `[[bench]] harness = false` targets under `rust/benches/`.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    pub fn mean_ns(&self) -> f64 {
+        self.mean.as_nanos() as f64
+    }
+
+    /// Throughput for `work` logical items per iteration.
+    pub fn per_second(&self, work: f64) -> f64 {
+        work / self.mean.as_secs_f64()
+    }
+}
+
+/// Benchmark `f`, auto-scaling iterations to fill ~`budget` of wall time.
+pub fn bench<R>(name: &str, budget: Duration, mut f: impl FnMut() -> R) -> Measurement {
+    // warmup + calibration
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let one = t0.elapsed().max(Duration::from_nanos(50));
+    let target_iters = (budget.as_secs_f64() / one.as_secs_f64()).clamp(5.0, 100_000.0) as u64;
+
+    let mut samples = Vec::with_capacity(target_iters as usize);
+    for _ in 0..target_iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    Measurement {
+        name: name.to_string(),
+        iters: target_iters,
+        mean: total / target_iters as u32,
+        p50: samples[samples.len() / 2],
+        p95: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+        min: samples[0],
+    }
+}
+
+/// Print a measurement row (aligned, human units).
+pub fn report(m: &Measurement) {
+    println!(
+        "{:<48} {:>12} {:>12} {:>12}  ({} iters)",
+        m.name,
+        fmt_dur(m.mean),
+        fmt_dur(m.p50),
+        fmt_dur(m.p95),
+        m.iters
+    );
+}
+
+pub fn report_header() {
+    println!("{:<48} {:>12} {:>12} {:>12}", "benchmark", "mean", "p50", "p95");
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2} s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let m = bench("spin", Duration::from_millis(20), || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(m.iters >= 5);
+        assert!(m.mean.as_nanos() > 0);
+        assert!(m.p50 <= m.p95);
+        assert!(m.min <= m.p50);
+    }
+
+    #[test]
+    fn per_second_math() {
+        let m = Measurement {
+            name: "x".into(),
+            iters: 10,
+            mean: Duration::from_millis(10),
+            p50: Duration::from_millis(10),
+            p95: Duration::from_millis(10),
+            min: Duration::from_millis(10),
+        };
+        assert!((m.per_second(100.0) - 10_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
+        assert!(fmt_dur(Duration::from_micros(1500)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with(" s"));
+    }
+}

@@ -1,0 +1,334 @@
+//! Hand-rolled CLI (no clap in the offline image): `pdpu <command> …`.
+//!
+//! Commands:
+//!   exp table1|fig3|fig6|ablation   regenerate a paper table/figure
+//!   quantize --format=n,es v…       bit-exact posit quantization (also the
+//!                                   python cross-layer test oracle)
+//!   dot …                           one fused PDPU dot product
+//!   schedule …                      PDPU-array scheduling report
+//!   serve …                         start the inference server
+//!   selftest                        artifact + runtime smoke check
+
+use std::collections::HashMap;
+
+use crate::cost::Tech;
+use crate::experiments::{ablation, fig3, fig6, table1};
+use crate::pdpu::{Pdpu, PdpuConfig};
+use crate::posit::{Posit, PositFormat};
+
+/// Parsed arguments: positionals + --key=value / --key value flags.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.flags.insert(stripped.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag_usize(&self, key: &str, default: usize) -> usize {
+        self.flag(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Parse "--format=n,es".
+    pub fn format(&self, key: &str, default: (u32, u32)) -> anyhow::Result<PositFormat> {
+        match self.flag(key) {
+            None => Ok(PositFormat::p(default.0, default.1)),
+            Some(v) => {
+                let (n, es) = v.split_once(',').ok_or_else(|| anyhow::anyhow!("--{key} wants n,es"))?;
+                Ok(PositFormat::new(n.trim().parse()?, es.trim().parse()?)?)
+            }
+        }
+    }
+}
+
+pub const USAGE: &str = "\
+pdpu — posit dot-product unit (ISCAS'23) full-stack reproduction
+
+USAGE: pdpu <command> [options]
+
+COMMANDS
+  exp table1 [--hw N] [--oc N]    Table I: accuracy + area/delay/power/eff
+  exp fig3                        Fig. 3: tapered accuracy vs distribution
+  exp fig6                        Fig. 6: 6-stage pipeline breakdown
+  exp ablation [--hw N] [--oc N]  §III-C design-space sweeps
+  quantize --format=n,es v…       round values to the nearest posit
+  dot --in=n,es --out=n,es --n N --wm W --acc A -- a… -- b…
+                                  one fused dot product (bit-exact)
+  schedule [--outputs N] [--dot-len K] [--units U] [--n N] [--interleave I]
+                                  PDPU-array cycle-accurate schedule
+  serve [--addr HOST:PORT] [--artifacts DIR]
+                                  start the batched inference server
+  selftest [--artifacts DIR]      load artifacts, run a PJRT smoke batch
+";
+
+/// Run the CLI; returns the process exit code.
+pub fn run(argv: Vec<String>) -> anyhow::Result<i32> {
+    let args = Args::parse(&argv);
+    let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
+        println!("{USAGE}");
+        return Ok(2);
+    };
+    match cmd {
+        "exp" => cmd_exp(&args),
+        "quantize" => cmd_quantize(&args),
+        "dot" => cmd_dot(&args, &argv),
+        "schedule" => cmd_schedule(&args),
+        "serve" => cmd_serve(&args),
+        "selftest" => cmd_selftest(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(0)
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            Ok(2)
+        }
+    }
+}
+
+fn cmd_exp(args: &Args) -> anyhow::Result<i32> {
+    let tech = Tech::default();
+    let hw = args.flag_usize("hw", 32);
+    let oc = args.flag_usize("oc", 8);
+    match args.positional.get(1).map(|s| s.as_str()) {
+        Some("table1") => {
+            let params = table1::Table1Params { seed: 2023, hw, out_channels: oc };
+            let rows = table1::build(&params, &tech);
+            print!("{}", table1::render(&rows));
+            let c = table1::claims(&rows);
+            println!("\n§IV-A claims (paper → measured):");
+            println!(
+                "  area/delay/power saving vs PACoGen: 43%/64%/70% → {:.0}%/{:.0}%/{:.0}%",
+                100.0 * c.area_saving_vs_pacogen,
+                100.0 * c.delay_saving_vs_pacogen,
+                100.0 * c.power_saving_vs_pacogen
+            );
+            println!(
+                "  area/energy-eff gain vs quire: 5.0x/2.1x → {:.1}x/{:.1}x",
+                c.area_eff_gain_vs_quire, c.energy_eff_gain_vs_quire
+            );
+            println!(
+                "  area/energy-eff gain vs posit FMA: 3.1x/3.5x → {:.1}x/{:.1}x",
+                c.area_eff_gain_vs_posit_fma, c.energy_eff_gain_vs_posit_fma
+            );
+            Ok(0)
+        }
+        Some("fig3") => {
+            let pts = fig3::accuracy_curves(-16, 16, 64);
+            let hist = fig3::activation_histogram(2023, hw, -12, 4);
+            print!("{}", fig3::render(&pts, &hist));
+            Ok(0)
+        }
+        Some("fig6") => {
+            let entries = fig6::build(&[4, 8, 16], &tech);
+            print!("{}", fig6::render(&entries));
+            Ok(0)
+        }
+        Some("ablation") => {
+            let (hw, oc) = (args.flag_usize("hw", 16), args.flag_usize("oc", 4));
+            print!("{}", ablation::render("Wm sweep (P(13/16,2) N=4)", &ablation::wm_sweep(&[6, 8, 10, 14, 20, 26], &tech, hw, oc)));
+            println!();
+            print!(
+                "{}",
+                ablation::render("input-format sweep (N=4 Wm=14)", &ablation::format_sweep(&[8, 10, 13, 16], &tech, hw, oc))
+            );
+            println!();
+            print!("{}", ablation::render("N sweep (P(13/16,2) Wm=14)", &ablation::n_sweep(&[2, 4, 8, 16], &tech, hw, oc)));
+            Ok(0)
+        }
+        _ => {
+            eprintln!("exp wants one of: table1 fig3 fig6 ablation");
+            Ok(2)
+        }
+    }
+}
+
+fn cmd_quantize(args: &Args) -> anyhow::Result<i32> {
+    let fmt = args.format("format", (16, 2))?;
+    let mut out = String::new();
+    for v in &args.positional[1..] {
+        let x: f64 = v.parse().map_err(|_| anyhow::anyhow!("bad number '{v}'"))?;
+        let p = Posit::from_f64(x, fmt);
+        out.push_str(&format!("{}\n", p.to_f64()));
+    }
+    print!("{out}");
+    Ok(0)
+}
+
+fn cmd_dot(args: &Args, argv: &[String]) -> anyhow::Result<i32> {
+    let in_fmt = args.format("in", (13, 2))?;
+    let out_fmt = args.format("out", (16, 2))?;
+    let n = args.flag_usize("n", 4);
+    let wm = args.flag_usize("wm", 14) as u32;
+    let acc: f64 = args.flag("acc").unwrap_or("0").parse()?;
+    // vectors: everything after the first `--` is a, after the second is b
+    let mut sections: Vec<Vec<f64>> = Vec::new();
+    let mut cur: Option<Vec<f64>> = None;
+    for a in argv {
+        if a == "--" {
+            if let Some(v) = cur.take() {
+                sections.push(v);
+            }
+            cur = Some(Vec::new());
+        } else if let Some(v) = cur.as_mut() {
+            if let Ok(x) = a.parse::<f64>() {
+                v.push(x);
+            }
+        }
+    }
+    if let Some(v) = cur.take() {
+        sections.push(v);
+    }
+    anyhow::ensure!(sections.len() == 2, "dot wants two `--`-separated vectors");
+    let (va, vb) = (&sections[0], &sections[1]);
+    anyhow::ensure!(va.len() == vb.len(), "vector length mismatch");
+
+    let cfg = PdpuConfig::new(in_fmt, out_fmt, n, wm)?;
+    let unit = Pdpu::new(cfg);
+    let a: Vec<Posit> = va.iter().map(|&v| Posit::from_f64(v, in_fmt)).collect();
+    let b: Vec<Posit> = vb.iter().map(|&v| Posit::from_f64(v, in_fmt)).collect();
+    let result = unit.dot_chunked(Posit::from_f64(acc, out_fmt), &a, &b);
+    let exact: f64 = acc + va.iter().zip(vb).map(|(x, y)| x * y).sum::<f64>();
+    println!("config  : {}", cfg.label());
+    println!("result  : {} (bits {:#06x})", result.to_f64(), result.bits());
+    println!("fp64 ref: {exact}");
+    println!("rel err : {:.3e}", ((result.to_f64() - exact) / exact.abs().max(1e-300)).abs());
+    Ok(0)
+}
+
+fn cmd_schedule(args: &Args) -> anyhow::Result<i32> {
+    use crate::coordinator::{conv_jobs, schedule};
+    let outputs = args.flag_usize("outputs", 256);
+    let dot_len = args.flag_usize("dot-len", 147);
+    let units = args.flag_usize("units", 4);
+    let n = args.flag_usize("n", 4);
+    let il = args.flag_usize("interleave", 6);
+    let r = schedule(&conv_jobs(outputs, dot_len), units, n, il);
+    println!("jobs {} × K={}  on {} PDPU(s), N={}, interleave {}", outputs, dot_len, units, n, il);
+    println!("chunks        : {}", r.total_chunks);
+    println!("cycles        : {}", r.cycles);
+    println!("utilization   : {:.1}%", 100.0 * r.utilization);
+    println!("MACs/cycle    : {:.2}", r.macs_per_cycle);
+    // translate to wall-clock at the Fig. 6 pipelined clock
+    let tech = Tech::default();
+    let entry = &fig6::build(&[n as u32], &tech)[0];
+    let t_us = r.cycles as f64 * entry.report.clock_ns * 1e-3;
+    println!("@ {:.2} GHz     : {:.1} us  ({:.2} GMAC/s)", entry.report.fmax_ghz, t_us, r.macs_per_cycle * entry.report.fmax_ghz);
+    Ok(0)
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
+    use crate::coordinator::{Metrics, Server, ServiceHandle};
+    use std::sync::Arc;
+    let addr = args.flag("addr").unwrap_or("127.0.0.1:7878");
+    let dir = args.flag("artifacts").unwrap_or("artifacts");
+    let service = ServiceHandle::start(dir)?;
+    let metrics = Arc::new(Metrics::new());
+    let server = Server::start(addr, service, metrics)?;
+    println!("pdpu coordinator listening on {}", server.addr);
+    println!("protocol: JSON lines — {{\"op\":\"infer\",\"image\":[784 floats]}} | {{\"op\":\"stats\"}} | {{\"op\":\"ping\"}}");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_selftest(args: &Args) -> anyhow::Result<i32> {
+    use crate::coordinator::PositService;
+    let dir = args.flag("artifacts").unwrap_or("artifacts");
+    print!("loading artifacts from {dir}… ");
+    let service = PositService::load(dir)?;
+    println!("ok ({} entries)", service.manifest().entries.len());
+    print!("running one inference batch… ");
+    let img = vec![0.5f32; service.input_dim()];
+    let logits = service.infer_batch(&[img])?;
+    anyhow::ensure!(logits[0].len() == service.classes());
+    anyhow::ensure!(logits[0].iter().all(|v| v.is_finite()));
+    println!("ok (logits {:?})", &logits[0][..3.min(logits[0].len())]);
+    print!("running one posit GEMM… ");
+    let (m, k, n) = service.manifest().gemm_mkn;
+    let a = vec![1.0f32; m * k];
+    let b = vec![0.5f32; k * n];
+    let c = service.gemm(&a, &b)?;
+    anyhow::ensure!((c[0] - k as f32 * 0.5).abs() < 1e-3, "gemm value {}", c[0]);
+    println!("ok (c[0] = {})", c[0]);
+    println!("selftest PASSED");
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_and_positionals() {
+        let a = Args::parse(&argv("exp table1 --hw=16 --oc 4 --verbose"));
+        assert_eq!(a.positional, vec!["exp", "table1"]);
+        assert_eq!(a.flag("hw"), Some("16"));
+        assert_eq!(a.flag("oc"), Some("4"));
+        assert_eq!(a.flag("verbose"), Some("true"));
+        assert_eq!(a.flag_usize("hw", 0), 16);
+        assert_eq!(a.flag_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn format_flag_parses() {
+        let a = Args::parse(&argv("quantize --format=13,2"));
+        assert_eq!(a.format("format", (16, 2)).unwrap(), PositFormat::p(13, 2));
+        let a = Args::parse(&argv("quantize"));
+        assert_eq!(a.format("format", (16, 2)).unwrap(), PositFormat::p(16, 2));
+        let a = Args::parse(&argv("quantize --format=99,2"));
+        assert!(a.format("format", (16, 2)).is_err());
+    }
+
+    #[test]
+    fn unknown_command_exits_2() {
+        assert_eq!(run(argv("bogus")).unwrap(), 2);
+    }
+
+    #[test]
+    fn quantize_runs() {
+        assert_eq!(run(argv("quantize --format=8,2 11.0 1.06")).unwrap(), 0);
+    }
+
+    #[test]
+    fn dot_runs() {
+        let mut v = argv("dot --n 4 --wm 14 --acc 1.0");
+        v.extend(argv("-- 1 2 3 4 -- 1 1 1 1").into_iter());
+        let v: Vec<String> = v.into_iter().map(|s| if s == "--" { "--".into() } else { s }).collect();
+        assert_eq!(run(v).unwrap(), 0);
+    }
+
+    #[test]
+    fn schedule_runs() {
+        assert_eq!(run(argv("schedule --outputs 16 --dot-len 32 --units 2")).unwrap(), 0);
+    }
+}

@@ -1,0 +1,120 @@
+//! Engine thread — the single owner of all PJRT state.
+//!
+//! The `xla` crate's client/executable handles are `!Send` (they hold
+//! `Rc`s over C++ objects), so the coordinator confines them to one
+//! dedicated thread and talks to it over channels. [`ServiceHandle`] is
+//! the cloneable, `Send + Sync` face the batcher/server/examples use.
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+use super::service::PositService;
+
+enum EngineReq {
+    InferBatch(Vec<Vec<f32>>, Sender<Result<Vec<Vec<f32>>, String>>),
+    TrainStep(Vec<Vec<f32>>, Vec<u32>, Sender<Result<f32, String>>),
+    Gemm(Vec<f32>, Vec<f32>, Sender<Result<Vec<f32>, String>>),
+    Shutdown,
+}
+
+/// Static model facts the rest of the system needs without touching PJRT.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub batch: usize,
+    pub input_dim: usize,
+    pub classes: usize,
+    pub gemm_mkn: (usize, usize, usize),
+    pub n_in: u32,
+    pub n_out: u32,
+    pub es: u32,
+}
+
+/// Cloneable handle to the engine thread.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    tx: Sender<EngineReq>,
+    info: ModelInfo,
+    joiner: Arc<Mutex<Option<std::thread::JoinHandle<()>>>>,
+}
+
+// the Sender and info are Send+Sync-safe; the join handle sits in a Mutex
+unsafe impl Sync for ServiceHandle {}
+
+impl ServiceHandle {
+    /// Spawn the engine thread, loading artifacts from `dir`.
+    pub fn start(dir: impl Into<std::path::PathBuf>) -> anyhow::Result<ServiceHandle> {
+        let dir = dir.into();
+        let (tx, rx) = channel::<EngineReq>();
+        let (info_tx, info_rx) = channel::<Result<ModelInfo, String>>();
+        let joiner = std::thread::spawn(move || {
+            let service = match PositService::load(&dir) {
+                Ok(s) => {
+                    let m = s.manifest();
+                    let _ = info_tx.send(Ok(ModelInfo {
+                        batch: m.batch,
+                        input_dim: m.layer_sizes[0],
+                        classes: *m.layer_sizes.last().unwrap(),
+                        gemm_mkn: m.gemm_mkn,
+                        n_in: m.n_in,
+                        n_out: m.n_out,
+                        es: m.es,
+                    }));
+                    s
+                }
+                Err(e) => {
+                    let _ = info_tx.send(Err(format!("{e:#}")));
+                    return;
+                }
+            };
+            while let Ok(req) = rx.recv() {
+                match req {
+                    EngineReq::InferBatch(images, reply) => {
+                        let _ = reply.send(service.infer_batch(&images).map_err(|e| format!("{e:#}")));
+                    }
+                    EngineReq::TrainStep(images, labels, reply) => {
+                        let _ = reply.send(service.train_step(&images, &labels).map_err(|e| format!("{e:#}")));
+                    }
+                    EngineReq::Gemm(a, b, reply) => {
+                        let _ = reply.send(service.gemm(&a, &b).map_err(|e| format!("{e:#}")));
+                    }
+                    EngineReq::Shutdown => return,
+                }
+            }
+        });
+        let info = info_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine thread died during startup"))?
+            .map_err(|e| anyhow::anyhow!(e))?;
+        Ok(ServiceHandle { tx, info, joiner: Arc::new(Mutex::new(Some(joiner))) })
+    }
+
+    pub fn info(&self) -> &ModelInfo {
+        &self.info
+    }
+
+    pub fn infer_batch(&self, images: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>, String> {
+        let (tx, rx) = channel();
+        self.tx.send(EngineReq::InferBatch(images, tx)).map_err(|_| "engine gone".to_string())?;
+        rx.recv().map_err(|_| "engine gone".to_string())?
+    }
+
+    pub fn train_step(&self, images: Vec<Vec<f32>>, labels: Vec<u32>) -> Result<f32, String> {
+        let (tx, rx) = channel();
+        self.tx.send(EngineReq::TrainStep(images, labels, tx)).map_err(|_| "engine gone".to_string())?;
+        rx.recv().map_err(|_| "engine gone".to_string())?
+    }
+
+    pub fn gemm(&self, a: Vec<f32>, b: Vec<f32>) -> Result<Vec<f32>, String> {
+        let (tx, rx) = channel();
+        self.tx.send(EngineReq::Gemm(a, b, tx)).map_err(|_| "engine gone".to_string())?;
+        rx.recv().map_err(|_| "engine gone".to_string())?
+    }
+
+    /// Ask the engine to exit once current work drains.
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(EngineReq::Shutdown);
+        if let Some(j) = self.joiner.lock().unwrap().take() {
+            let _ = j.join();
+        }
+    }
+}

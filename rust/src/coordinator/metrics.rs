@@ -1,0 +1,152 @@
+//! Coordinator metrics: lock-free counters plus a fixed-bucket latency
+//! histogram (microseconds). No external deps; snapshot-able for the
+//! `stats` endpoint.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Histogram bucket upper bounds in microseconds.
+const BUCKETS_US: [u64; 12] = [50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 1_000_000];
+
+/// Shared metrics registry.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub errors: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_items: AtomicU64,
+    pub macs: AtomicU64,
+    latency_buckets: [AtomicU64; 13],
+    latency_sum_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn observe_latency(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(BUCKETS_US.len());
+        self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, items: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_items.fetch_add(items as u64, Ordering::Relaxed);
+    }
+
+    /// Mean observed latency in microseconds.
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.responses.load(Ordering::Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Approximate latency quantile from the histogram (bucket upper bound).
+    pub fn latency_quantile_us(&self, q: f64) -> u64 {
+        let total: u64 = self.latency_buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.latency_buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return BUCKETS_US.get(i).copied().unwrap_or(u64::MAX);
+            }
+        }
+        u64::MAX
+    }
+
+    /// Mean items per formed batch.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_items.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            responses: self.responses.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            mean_batch_size: self.mean_batch_size(),
+            mean_latency_us: self.mean_latency_us(),
+            p95_latency_us: self.latency_quantile_us(0.95),
+            macs: self.macs.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time view for the stats endpoint.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub responses: u64,
+    pub errors: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub mean_latency_us: f64,
+    pub p95_latency_us: u64,
+    pub macs: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.responses.fetch_add(2, Ordering::Relaxed);
+        m.record_batch(8);
+        m.record_batch(4);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.responses, 2);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.mean_batch_size, 6.0);
+    }
+
+    #[test]
+    fn latency_histogram_quantiles() {
+        let m = Metrics::new();
+        for us in [10u64, 20, 30, 40, 60, 80, 200, 300, 400, 30_000] {
+            m.observe_latency(Duration::from_micros(us));
+        }
+        // 40% of samples ≤ 50us bucket
+        assert_eq!(m.latency_quantile_us(0.4), 50);
+        // p90 within 500us bucket, p100 in 50ms bucket
+        assert!(m.latency_quantile_us(0.9) <= 500);
+        assert_eq!(m.latency_quantile_us(1.0), 50_000);
+    }
+
+    #[test]
+    fn mean_latency_uses_response_count() {
+        let m = Metrics::new();
+        m.responses.fetch_add(2, Ordering::Relaxed);
+        m.observe_latency(Duration::from_micros(100));
+        m.observe_latency(Duration::from_micros(300));
+        assert_eq!(m.mean_latency_us(), 200.0);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.mean_batch_size, 0.0);
+        assert_eq!(s.mean_latency_us, 0.0);
+        assert_eq!(s.p95_latency_us, 0);
+    }
+}

@@ -1,0 +1,26 @@
+//! L3 — the coordinator: the serving layer that turns the PDPU arithmetic
+//! stack into a system.
+//!
+//! * [`json`] — wire format + manifest parsing (no serde offline).
+//! * [`metrics`] — counters and latency histograms.
+//! * [`batcher`] — dynamic batching (size-or-deadline policy) feeding one
+//!   PJRT invocation per batch.
+//! * [`scheduler`] — cycle-accurate PDPU-array scheduling with RAW-hazard
+//!   interleaving (the chunked-accumulation pipeline problem).
+//! * [`service`] — compiled artifacts + parameter state, typed batch ops.
+//! * [`server`] — TCP JSON-lines front end (std::net + threads).
+
+pub mod batcher;
+pub mod engine;
+pub mod json;
+pub mod metrics;
+pub mod scheduler;
+pub mod server;
+pub mod service;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use engine::{ModelInfo, ServiceHandle};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use scheduler::{conv_jobs, schedule, DotJob, ScheduleReport};
+pub use server::Server;
+pub use service::PositService;

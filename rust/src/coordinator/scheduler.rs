@@ -1,0 +1,215 @@
+//! PDPU-array scheduler — maps DNN dot-product workloads onto an array of
+//! 6-stage-pipelined PDPUs, cycle-accurately.
+//!
+//! The scheduling problem the paper's pipeline creates: chunk-based
+//! accumulation makes chunk k+1 of one output RAW-dependent on chunk k
+//! (6-cycle latency), so a single output pixel cannot keep one unit busy.
+//! The scheduler interleaves *independent* outputs (different pixels /
+//! channels) across each unit's pipeline — the same trick systolic
+//! accelerators use — recovering ~1 MAC-chunk per unit per cycle.
+//!
+//! Used by the Fig. 6-derived throughput analyses, the serving examples
+//! and `cargo bench --bench bench_schedule`.
+
+use crate::pdpu::pipeline::{Pipeline, STAGES};
+
+/// One dot-product job: `dot_len` MACs chunked into ⌈dot_len/n⌉ dependent
+/// pipeline operations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DotJob {
+    pub id: u64,
+    pub dot_len: usize,
+}
+
+/// Array-level schedule outcome.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScheduleReport {
+    pub units: usize,
+    pub n: usize,
+    pub jobs: usize,
+    pub total_chunks: u64,
+    pub cycles: u64,
+    /// chunks retired per unit-cycle (1.0 = perfect)
+    pub utilization: f64,
+    /// MACs per cycle across the array
+    pub macs_per_cycle: f64,
+}
+
+/// Per-unit work queue state.
+struct UnitState {
+    pipe: Pipeline,
+    /// (job, chunks_remaining, last_issued_op) chains assigned to this unit
+    chains: Vec<(u64, u64, Option<u64>)>,
+    rr: usize,
+    next_op: u64,
+}
+
+/// Schedule `jobs` across `units` PDPUs with chunk size `n`; each unit
+/// interleaves up to `interleave` independent accumulation chains.
+pub fn schedule(jobs: &[DotJob], units: usize, n: usize, interleave: usize) -> ScheduleReport {
+    assert!(units >= 1 && n >= 1 && interleave >= 1);
+    let mut queues: Vec<Vec<(u64, u64)>> = vec![Vec::new(); units];
+    let mut total_chunks = 0u64;
+    for (i, j) in jobs.iter().enumerate() {
+        let chunks = j.dot_len.div_ceil(n) as u64;
+        total_chunks += chunks;
+        queues[i % units].push((j.id, chunks));
+    }
+
+    let mut states: Vec<UnitState> = queues
+        .iter()
+        .enumerate()
+        .map(|(u, _)| UnitState {
+            pipe: Pipeline::new(),
+            chains: Vec::new(),
+            rr: 0,
+            next_op: (u as u64) << 40,
+        })
+        .collect();
+    // reverse so pop() takes jobs in order
+    for q in &mut queues {
+        q.reverse();
+    }
+
+    let mut cycles = 0u64;
+    loop {
+        let mut all_done = true;
+        for (u, st) in states.iter_mut().enumerate() {
+            // top up interleaved chains
+            while st.chains.len() < interleave {
+                match queues[u].pop() {
+                    Some((id, chunks)) => st.chains.push((id, chunks, None)),
+                    None => break,
+                }
+            }
+            if !st.chains.is_empty() || !st.pipe.is_empty() || !queues[u].is_empty() {
+                all_done = false;
+            }
+            // pick an issuable chain round-robin
+            let mut offer = None;
+            for k in 0..st.chains.len() {
+                let idx = (st.rr + k) % st.chains.len();
+                let (_, _, dep) = st.chains[idx];
+                if st.pipe.can_issue(dep) {
+                    offer = Some(idx);
+                    break;
+                }
+            }
+            let tick = match offer {
+                Some(idx) => {
+                    let op = st.next_op;
+                    st.next_op += 1;
+                    let dep = st.chains[idx].2;
+                    let r = st.pipe.tick(Some((op, dep)));
+                    if r.stalled.is_none() {
+                        let chain = &mut st.chains[idx];
+                        chain.1 -= 1;
+                        chain.2 = Some(op);
+                        if chain.1 == 0 {
+                            st.chains.remove(idx);
+                        }
+                        st.rr = st.rr.wrapping_add(1);
+                    } else {
+                        st.next_op -= 1; // op not accepted; reuse the id
+                    }
+                    r
+                }
+                None => st.pipe.tick(None),
+            };
+            let _ = tick;
+        }
+        if all_done {
+            break;
+        }
+        cycles += 1;
+        // safety valve for bugs: no schedule needs more than
+        // chunks·STAGES + jobs·STAGES cycles even fully serialized
+        assert!(
+            cycles <= (total_chunks + jobs.len() as u64 + 1) * STAGES as u64 + 100,
+            "scheduler failed to converge"
+        );
+    }
+
+    let retired: u64 = states.iter().map(|s| s.pipe.stats().retired).sum();
+    debug_assert_eq!(retired, total_chunks);
+    let util = if cycles == 0 { 0.0 } else { total_chunks as f64 / (cycles * units as u64) as f64 };
+    ScheduleReport {
+        units,
+        n,
+        jobs: jobs.len(),
+        total_chunks,
+        cycles,
+        utilization: util,
+        macs_per_cycle: util * n as f64 * units as f64,
+    }
+}
+
+/// Convenience: the jobs of one conv layer (every output position ×
+/// channel is an independent dot product of length `dot_len`).
+pub fn conv_jobs(outputs: usize, dot_len: usize) -> Vec<DotJob> {
+    (0..outputs as u64).map(|id| DotJob { id, dot_len }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_job_fully_serialized() {
+        // one length-147 output on one N=4 unit: 37 chunks, each waiting
+        // 6 cycles for its predecessor → ~222 cycles, utilization ≈ 1/6
+        let r = schedule(&conv_jobs(1, 147), 1, 4, 1);
+        assert_eq!(r.total_chunks, 37);
+        assert!(r.cycles >= 37 * 6, "RAW chain must serialize: {r:?}");
+        assert!(r.utilization < 0.2);
+    }
+
+    #[test]
+    fn interleaving_recovers_throughput() {
+        // 64 independent outputs, interleave 6 chains: pipeline stays full
+        let serial = schedule(&conv_jobs(64, 147), 1, 4, 1);
+        let inter = schedule(&conv_jobs(64, 147), 1, 4, STAGES);
+        assert!(inter.cycles < serial.cycles / 4, "serial {} vs interleaved {}", serial.cycles, inter.cycles);
+        assert!(inter.utilization > 0.9, "{inter:?}");
+    }
+
+    #[test]
+    fn utilization_bounded_by_one() {
+        for (jobs, units, n, il) in [(10usize, 2usize, 4usize, 6usize), (100, 4, 8, 6), (3, 8, 4, 2)] {
+            let r = schedule(&conv_jobs(jobs, 147), units, n, il);
+            assert!(r.utilization <= 1.0 + 1e-9, "{r:?}");
+            assert!(r.macs_per_cycle <= (n * units) as f64 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn all_chunks_retire() {
+        let r = schedule(&conv_jobs(33, 100), 3, 8, 4);
+        assert_eq!(r.total_chunks, 33 * 13);
+    }
+
+    #[test]
+    fn more_units_scale_throughput() {
+        let one = schedule(&conv_jobs(256, 147), 1, 4, STAGES);
+        let four = schedule(&conv_jobs(256, 147), 4, 4, STAGES);
+        let speedup = one.cycles as f64 / four.cycles as f64;
+        assert!(speedup > 3.0, "4 units speedup {speedup}");
+    }
+
+    #[test]
+    fn bigger_n_fewer_chunks() {
+        let n4 = schedule(&conv_jobs(64, 147), 1, 4, STAGES);
+        let n8 = schedule(&conv_jobs(64, 147), 1, 8, STAGES);
+        assert!(n8.total_chunks < n4.total_chunks);
+        assert!(n8.cycles < n4.cycles);
+        // MACs/cycle roughly doubles with N at high utilization
+        assert!(n8.macs_per_cycle > 1.6 * n4.macs_per_cycle);
+    }
+
+    #[test]
+    fn empty_jobs_zero_cycles() {
+        let r = schedule(&[], 2, 4, 4);
+        assert_eq!(r.cycles, 0);
+        assert_eq!(r.total_chunks, 0);
+    }
+}

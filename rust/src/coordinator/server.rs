@@ -1,0 +1,161 @@
+//! TCP JSON-lines server — the outward face of the L3 coordinator.
+//!
+//! Protocol (one JSON object per line, response per line):
+//!   {"op":"ping"}                        → {"ok":true,"pong":true}
+//!   {"op":"infer","image":[784 floats]}  → {"ok":true,"logits":[10]}
+//!   {"op":"stats"}                       → {"ok":true, …counters…}
+//!
+//! Requests from all connections funnel through one [`Batcher`], so
+//! concurrent clients get batched into single PJRT invocations — the
+//! serving pattern of vLLM-style routers, at MLP scale.
+//!
+//! std::net + threads (no tokio in the offline image): one reader thread
+//! per connection, one batch-executor thread overall.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::engine::ServiceHandle;
+use super::json::{parse, Json};
+use super::metrics::Metrics;
+
+/// Running server handle.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    shutdown: Arc<std::sync::atomic::AtomicBool>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve `service` forever (until
+    /// the handle is dropped).
+    pub fn start(addr: &str, service: ServiceHandle, metrics: Arc<Metrics>) -> anyhow::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+
+        let svc = service.clone();
+        let batcher: Arc<Batcher<Vec<f32>, Vec<f32>>> = Arc::new(Batcher::spawn(
+            BatchPolicy { max_batch: service.info().batch, max_wait: std::time::Duration::from_millis(2) },
+            metrics.clone(),
+            move |images: Vec<Vec<f32>>| {
+                let n = images.len();
+                match svc.infer_batch(images) {
+                    Ok(outs) => outs.into_iter().map(Ok).collect(),
+                    Err(e) => (0..n).map(|_| Err(e.clone())).collect(),
+                }
+            },
+        ));
+
+        let sd = shutdown.clone();
+        let accept_thread = std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                if sd.load(std::sync::atomic::Ordering::Relaxed) {
+                    break;
+                }
+                match stream {
+                    Ok(s) => {
+                        let b = batcher.clone();
+                        let m = metrics.clone();
+                        let svc = service.clone();
+                        std::thread::spawn(move || handle_conn(s, b, m, svc));
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+
+        Ok(Server { addr: local, accept_thread: Some(accept_thread), shutdown })
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown.store(true, std::sync::atomic::Ordering::Relaxed);
+        // accept loop wakes on its polling interval
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    batcher: Arc<Batcher<Vec<f32>, Vec<f32>>>,
+    metrics: Arc<Metrics>,
+    service: ServiceHandle,
+) {
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = handle_request(&line, &batcher, &metrics, &service);
+        if writer.write_all((resp.to_string() + "\n").as_bytes()).is_err() {
+            break;
+        }
+    }
+    let _ = peer;
+}
+
+fn err(msg: impl Into<String>) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.into()))])
+}
+
+fn handle_request(
+    line: &str,
+    batcher: &Batcher<Vec<f32>, Vec<f32>>,
+    metrics: &Metrics,
+    service: &ServiceHandle,
+) -> Json {
+    let req = match parse(line) {
+        Ok(v) => v,
+        Err(e) => return err(format!("bad json: {e}")),
+    };
+    match req.get("op").and_then(Json::as_str) {
+        Some("ping") => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
+        Some("infer") => {
+            let Some(img) = req.get("image").and_then(Json::as_f64_vec) else {
+                return err("infer needs 'image': [f64]");
+            };
+            if img.len() != service.info().input_dim {
+                return err(format!("image must have {} pixels", service.info().input_dim));
+            }
+            let img: Vec<f32> = img.into_iter().map(|v| v as f32).collect();
+            match batcher.call(img) {
+                Ok(logits) => Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("logits", Json::arr_f64(&logits.iter().map(|&v| v as f64).collect::<Vec<_>>())),
+                ]),
+                Err(e) => err(e),
+            }
+        }
+        Some("stats") => {
+            let s = metrics.snapshot();
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("requests", Json::Num(s.requests as f64)),
+                ("responses", Json::Num(s.responses as f64)),
+                ("errors", Json::Num(s.errors as f64)),
+                ("batches", Json::Num(s.batches as f64)),
+                ("mean_batch_size", Json::Num(s.mean_batch_size)),
+                ("mean_latency_us", Json::Num(s.mean_latency_us)),
+                ("p95_latency_us", Json::Num(s.p95_latency_us as f64)),
+            ])
+        }
+        Some(op) => err(format!("unknown op '{op}'")),
+        None => err("missing 'op'"),
+    }
+}

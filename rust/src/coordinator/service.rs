@@ -1,0 +1,120 @@
+//! The PJRT-backed model service: owns the compiled artifacts and the
+//! mutable parameter state, and exposes typed batch operations. This is
+//! the layer between the protocol/batching machinery and raw PJRT.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::runtime::{literal_f32, literal_i32, to_vec_f32, ArtifactManifest, LoadedModel, Runtime};
+
+/// Loaded artifacts + parameter state.
+pub struct PositService {
+    manifest: ArtifactManifest,
+    infer: LoadedModel,
+    train: LoadedModel,
+    gemm: LoadedModel,
+    /// current MLP parameters (train steps update them in place)
+    params: Mutex<Vec<Vec<f32>>>,
+    param_shapes: Vec<Vec<usize>>,
+}
+
+impl PositService {
+    /// Load and compile every entry point from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let rt = Runtime::cpu()?;
+        let manifest = ArtifactManifest::load(&dir)?;
+        let infer = rt.load_hlo(&manifest.entry("mlp_infer")?.file)?;
+        let train = rt.load_hlo(&manifest.entry("mlp_train_step")?.file)?;
+        let gemm = rt.load_hlo(&manifest.entry("posit_gemm")?.file)?;
+        let params = manifest.load_params()?;
+        let param_shapes = manifest.param_shapes.clone();
+        Ok(Self { manifest, infer, train, gemm, params: Mutex::new(params), param_shapes })
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.manifest.batch
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.manifest.layer_sizes[0]
+    }
+
+    pub fn classes(&self) -> usize {
+        *self.manifest.layer_sizes.last().unwrap()
+    }
+
+    fn param_literals(&self) -> Result<Vec<xla::Literal>> {
+        let params = self.params.lock().unwrap();
+        params
+            .iter()
+            .zip(&self.param_shapes)
+            .map(|(p, s)| literal_f32(p, s))
+            .collect()
+    }
+
+    /// Run a batch of images (≤ batch_size; padded internally) through the
+    /// posit MLP. Returns one logits vector per input image.
+    pub fn infer_batch(&self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let b = self.batch_size();
+        let d = self.input_dim();
+        anyhow::ensure!(!images.is_empty() && images.len() <= b, "batch of {} exceeds compiled size {b}", images.len());
+        let mut flat = vec![0f32; b * d];
+        for (i, img) in images.iter().enumerate() {
+            anyhow::ensure!(img.len() == d, "image {} has {} pixels, want {d}", i, img.len());
+            flat[i * d..(i + 1) * d].copy_from_slice(img);
+        }
+        let mut args = self.param_literals()?;
+        args.push(literal_f32(&flat, &[b, d])?);
+        let out = self.infer.execute(&args)?;
+        let logits = to_vec_f32(&out[0])?;
+        let c = self.classes();
+        Ok(images.iter().enumerate().map(|(i, _)| logits[i * c..(i + 1) * c].to_vec()).collect())
+    }
+
+    /// One SGD step on a full batch; updates the parameter state and
+    /// returns the loss.
+    pub fn train_step(&self, images: &[Vec<f32>], labels: &[u32]) -> Result<f32> {
+        let b = self.batch_size();
+        let d = self.input_dim();
+        anyhow::ensure!(images.len() == b && labels.len() == b, "train step needs a full batch of {b}");
+        let mut flat = vec![0f32; b * d];
+        for (i, img) in images.iter().enumerate() {
+            anyhow::ensure!(img.len() == d, "image {i} has wrong size");
+            flat[i * d..(i + 1) * d].copy_from_slice(img);
+        }
+        let ys: Vec<i32> = labels.iter().map(|&l| l as i32).collect();
+        let mut args = self.param_literals()?;
+        args.push(literal_f32(&flat, &[b, d])?);
+        args.push(literal_i32(&ys, &[b])?);
+        let out = self.train.execute(&args)?;
+        anyhow::ensure!(out.len() == self.param_shapes.len() + 1, "train step output arity");
+        let mut params = self.params.lock().unwrap();
+        for (slot, lit) in params.iter_mut().zip(&out[..self.param_shapes.len()]) {
+            *slot = to_vec_f32(lit)?;
+        }
+        let loss = to_vec_f32(&out[self.param_shapes.len()])?;
+        Ok(loss[0])
+    }
+
+    /// Raw posit GEMM at the compiled (M, K, N).
+    pub fn gemm(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let (m, k, n) = self.manifest.gemm_mkn;
+        anyhow::ensure!(a.len() == m * k, "A must be {}x{}", m, k);
+        anyhow::ensure!(b.len() == k * n, "B must be {}x{}", k, n);
+        let out = self
+            .gemm
+            .execute(&[literal_f32(a, &[m, k])?, literal_f32(b, &[k, n])?])
+            .context("gemm execute")?;
+        to_vec_f32(&out[0])
+    }
+
+    /// Snapshot of current parameters (for checkpoint-style inspection).
+    pub fn params_snapshot(&self) -> Vec<Vec<f32>> {
+        self.params.lock().unwrap().clone()
+    }
+}

@@ -1,0 +1,131 @@
+//! Mid-level datapath components shared by every architecture's netlist:
+//! posit decoders/encoders, IEEE unpack/pack, the exponent max tree and
+//! the recursive CSA tree — each assembled from the primitives in
+//! [`super::gates`].
+
+use super::gates::*;
+use crate::pdpu::config::ceil_log2;
+use crate::pdpu::stages::s4_accumulate::csa_tree_shape;
+use crate::posit::PositFormat;
+
+use super::IeeeFormat;
+
+/// Posit decoder for an n-bit input (paper S1; "complicated leading zero
+/// count and dynamic shift modules" — §IV-B): two's-complement negate,
+/// regime LZC, dynamic shifter to extract exponent+fraction, small adds.
+pub fn posit_decoder(fmt: PositFormat) -> Cost {
+    let n = fmt.n();
+    negate(n) // conditional complement of the input
+        .then(lzc(n)) // regime run length
+        .then(barrel_shifter(n, n)) // dynamic field extraction
+        .then(Cost::new(3.5 * n as f64, 1.5)) // exponent/fraction field split, k→scale concat, zero/NaR flags
+}
+
+/// Posit encoder for an n-bit output (paper S6): regime construction,
+/// dynamic shifter to pack fields, round increment, output complement.
+pub fn posit_encoder(fmt: PositFormat) -> Cost {
+    let n = fmt.n();
+    Cost::new(2.5 * n as f64, 2.0) // regime pattern + bounds checks
+        .then(barrel_shifter(2 * n, n)) // field packing shift (double width pre-round)
+        .then(adder(n)) // rounding increment
+        .then(negate(n)) // sign application
+}
+
+/// IEEE unpack: fixed fields, but gradual underflow needs an LZC + shift
+/// on the mantissa (FPnew keeps subnormal support on).
+pub fn ieee_unpack(fmt: IeeeFormat) -> Cost {
+    let m = fmt.man_bits;
+    Cost::new(1.0 * fmt.width() as f64, 1.0) // field split + specials
+        .then(lzc(m).beside(Cost::ZERO)) // subnormal normalization count
+        .then(barrel_shifter(m + 1, m)) // subnormal shift
+}
+
+/// IEEE pack: rounding increment, subnormal shift, special-case muxes.
+pub fn ieee_pack(fmt: IeeeFormat) -> Cost {
+    let m = fmt.man_bits;
+    adder(m + 2) // round increment
+        .then(barrel_shifter(m + 2, m)) // denormalization shift
+        .then(Cost::new(1.5 * fmt.width() as f64, 1.2)) // specials/inf/nan muxes
+}
+
+/// Max tree over `entries` scales of `w` bits (paper S2 comparator tree).
+pub fn max_tree(entries: u32, w: u32) -> Cost {
+    if entries <= 1 {
+        return Cost::ZERO;
+    }
+    let depth = ceil_log2(entries);
+    let nodes = entries - 1;
+    Cost { area_ge: max_node(w).area_ge * nodes as f64, delay_fo4: max_node(w).delay_fo4 * depth as f64 }
+}
+
+/// Recursive CSA tree over `inputs` operands of `w` bits, followed by the
+/// final carry-propagate adder (paper S4, Fig. 5).
+pub fn csa_tree(inputs: u32, w: u32) -> Cost {
+    let shape = csa_tree_shape(inputs as usize);
+    let compress = Cost {
+        area_ge: csa32(w).area_ge * shape.c32 as f64 + csa42(w).area_ge * shape.c42 as f64,
+        delay_fo4: 3.0 * shape.depth as f64, // worst level is a 4:2
+    };
+    compress.then(adder(w))
+}
+
+/// Alignment shifter bank: `lanes` barrel shifters of `w` bits with shift
+/// range `max_shift`, plus the shift-amount subtractors and the
+/// two's-complement conversion row (paper S3).
+pub fn align_bank(lanes: u32, w: u32, max_shift: u32, exp_w: u32) -> Cost {
+    let per_lane = adder(exp_w) // e_max − e_ab
+        .then(barrel_shifter(w, max_shift))
+        .then(negate(w)); // conditional two's complement
+    Cost { area_ge: per_lane.area_ge * lanes as f64, delay_fo4: per_lane.delay_fo4 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn posit_decoder_more_expensive_than_ieee_unpack_at_same_width() {
+        // the paper's motivation for fused ops: posit decode needs dynamic
+        // regime handling; IEEE-16 unpack is cheaper than posit-16 decode
+        let p = posit_decoder(PositFormat::p(16, 2));
+        let f = ieee_unpack(IeeeFormat::fp16());
+        assert!(p.area_ge > f.area_ge, "posit {0} vs ieee {1}", p.area_ge, f.area_ge);
+    }
+
+    #[test]
+    fn decoder_scales_with_n() {
+        assert!(posit_decoder(PositFormat::p(16, 2)).area_ge > posit_decoder(PositFormat::p(8, 2)).area_ge);
+        assert!(posit_encoder(PositFormat::p(16, 2)).area_ge > posit_encoder(PositFormat::p(13, 2)).area_ge);
+    }
+
+    #[test]
+    fn max_tree_structure() {
+        assert_eq!(max_tree(1, 8), Cost::ZERO);
+        // N+1=5 entries: 4 nodes, depth 3
+        let t5 = max_tree(5, 8);
+        let node = max_node(8);
+        assert!((t5.area_ge - 4.0 * node.area_ge).abs() < 1e-9);
+        assert!((t5.delay_fo4 - 3.0 * node.delay_fo4).abs() < 1e-9);
+        // 9 entries: 8 nodes, depth 4
+        let t9 = max_tree(9, 8);
+        assert!(t9.area_ge > t5.area_ge && t9.delay_fo4 > t5.delay_fo4);
+    }
+
+    #[test]
+    fn csa_tree_grows_logarithmically_in_delay() {
+        let d5 = csa_tree(5, 18).delay_fo4;
+        let d9 = csa_tree(9, 18).delay_fo4;
+        let d17 = csa_tree(17, 18).delay_fo4;
+        assert!(d9 > d5 && d17 > d9);
+        // but sub-linearly: doubling inputs adds ~one level (≈3 FO4)
+        assert!(d17 - d9 <= 4.0);
+    }
+
+    #[test]
+    fn align_bank_delay_independent_of_lanes() {
+        let a4 = align_bank(5, 14, 14, 8);
+        let a8 = align_bank(9, 14, 14, 8);
+        assert_eq!(a4.delay_fo4, a8.delay_fo4);
+        assert!(a8.area_ge > a4.area_ge);
+    }
+}

@@ -1,0 +1,364 @@
+//! Structural netlists — one builder per architecture in Table I.
+//!
+//! A netlist is a list of named stages, each with combinational logic cost
+//! and (for pipelined evaluation) the width of the pipeline register that
+//! follows it. The builders mirror each architecture's published
+//! micro-structure; pricing happens in [`super::report`].
+
+use super::components::*;
+use super::gates::{adder, barrel_shifter, booth_multiplier, dff_bits, lzc, Cost};
+use super::IeeeFormat;
+use crate::pdpu::config::ceil_log2;
+use crate::posit::PositFormat;
+
+/// One pipeline-stage worth of logic.
+#[derive(Clone, Debug)]
+pub struct StageCost {
+    pub name: &'static str,
+    pub logic: Cost,
+    /// bits latched after this stage when the unit is pipelined
+    pub reg_bits: u32,
+}
+
+/// A priced architecture structure.
+#[derive(Clone, Debug)]
+pub struct Netlist {
+    pub label: String,
+    pub stages: Vec<StageCost>,
+    /// MACs completed per operation (the N of Perf = N/delay)
+    pub macs_per_op: u32,
+    /// Switching-activity multiplier vs. a balanced fused datapath.
+    /// Cascades of discrete posit units glitch heavily — every stage's
+    /// LZC + dynamic-shift chain re-toggles on each upstream arrival-time
+    /// wave — which is how PACoGen's measured 12.21 mW dwarfs its area
+    /// share in Table I. Calibrated against that row; 1.0 for fused units.
+    pub activity_mult: f64,
+}
+
+impl Netlist {
+    /// Total combinational logic (no pipeline registers).
+    pub fn combinational(&self) -> Cost {
+        self.stages.iter().fold(Cost::ZERO, |acc, s| acc.then(s.logic))
+    }
+
+    /// Total pipeline register bits.
+    pub fn reg_bits(&self) -> u32 {
+        self.stages.iter().map(|s| s.reg_bits).sum()
+    }
+
+    /// Register area cost when pipelined.
+    pub fn reg_cost(&self) -> Cost {
+        dff_bits(self.reg_bits())
+    }
+
+    /// Worst per-stage logic delay (sets pipelined fmax).
+    pub fn worst_stage(&self) -> &StageCost {
+        self.stages
+            .iter()
+            .max_by(|a, b| a.logic.delay_fo4.partial_cmp(&b.logic.delay_fo4).unwrap())
+            .expect("netlist has stages")
+    }
+}
+
+/// Datapath width parameters shared by the posit fused builders.
+#[derive(Clone, Copy, Debug)]
+pub struct PdpuParams {
+    pub in_fmt: PositFormat,
+    pub out_fmt: PositFormat,
+    pub n: u32,
+    pub wm: u32,
+}
+
+impl PdpuParams {
+    pub fn from_config(cfg: &crate::pdpu::PdpuConfig) -> Self {
+        Self { in_fmt: cfg.in_fmt, out_fmt: cfg.out_fmt, n: cfg.n as u32, wm: cfg.wm }
+    }
+
+    fn mb_in(&self) -> u32 {
+        self.in_fmt.max_frac_bits() + 1 // 1.f significand width
+    }
+
+    fn mb_out(&self) -> u32 {
+        self.out_fmt.max_frac_bits() + 1
+    }
+
+    fn eab_w(&self) -> u32 {
+        let span = 2 * self.in_fmt.max_scale().max(self.out_fmt.max_scale());
+        32 - (span as u32).leading_zeros() + 1
+    }
+
+    fn acc_w(&self) -> u32 {
+        self.wm + ceil_log2(self.n + 1) + 1
+    }
+}
+
+/// The proposed PDPU (paper Fig. 4): fused, mixed-precision, 6 stages.
+pub fn pdpu(p: PdpuParams) -> Netlist {
+    let n = p.n;
+    let (mb_in, eab_w, acc_w) = (p.mb_in(), p.eab_w(), p.acc_w());
+    let prod_w = 2 * mb_in;
+
+    // S1: 2N input decoders + 1 acc decoder + N scale adders
+    let s1 = posit_decoder(p.in_fmt)
+        .replicate(2 * n)
+        .beside(posit_decoder(p.out_fmt))
+        .then(adder(eab_w)) // e_a + e_b (delay of one; area of N)
+        .then(Cost::new(adder(eab_w).area_ge * (n as f64 - 1.0), 0.0));
+    let s1_regs = n * (1 + eab_w + 2 * mb_in) + (1 + eab_w + p.mb_out());
+
+    // S2: N booth multipliers ∥ exponent max tree over N+1 scales
+    let s2 = booth_multiplier(mb_in).replicate(n).beside(max_tree(n + 1, eab_w));
+    let s2_regs = n * (1 + eab_w + prod_w) + eab_w + (1 + eab_w + p.mb_out());
+
+    // S3: N+1 alignment shifters to the Wm grid + two's complement
+    let s3 = align_bank(n + 1, p.wm, p.wm, eab_w);
+    let s3_regs = (n + 1) * p.wm + eab_w;
+
+    // S4: recursive CSA tree over N+1 operands + final adder
+    let s4 = csa_tree(n + 1, acc_w);
+    let s4_regs = acc_w + 1 + eab_w;
+
+    // S5: LZC + normalize shift + exponent adjust
+    let s5 = lzc_stage(acc_w, eab_w);
+    let s5_regs = 1 + eab_w + acc_w;
+
+    // S6: single posit encoder
+    let s6 = posit_encoder(p.out_fmt);
+
+    Netlist {
+        label: format!(
+            "PDPU P({}/{},{}) N={} Wm={}",
+            p.in_fmt.n(),
+            p.out_fmt.n(),
+            p.in_fmt.es(),
+            n,
+            p.wm
+        ),
+        stages: vec![
+            StageCost { name: "S1 Decode", logic: s1, reg_bits: s1_regs },
+            StageCost { name: "S2 Multiply", logic: s2, reg_bits: s2_regs },
+            StageCost { name: "S3 Align", logic: s3, reg_bits: s3_regs },
+            StageCost { name: "S4 Accumulate", logic: s4, reg_bits: s4_regs },
+            StageCost { name: "S5 Normalize", logic: s5, reg_bits: s5_regs },
+            StageCost { name: "S6 Encode", logic: s6, reg_bits: 0 },
+        ],
+        macs_per_op: n,
+        activity_mult: 1.0,
+    }
+}
+
+fn lzc_stage(acc_w: u32, exp_w: u32) -> Cost {
+    lzc(acc_w).then(barrel_shifter(acc_w, acc_w)).then(adder(exp_w))
+}
+
+/// A discrete posit multiplier unit (PACoGen-style): full decode → booth →
+/// round/encode.
+pub fn posit_mul_unit(in_fmt: PositFormat, out_fmt: PositFormat) -> Cost {
+    let mb = in_fmt.max_frac_bits() + 1;
+    posit_decoder(in_fmt)
+        .beside(posit_decoder(in_fmt))
+        .then(booth_multiplier(mb))
+        .then(posit_encoder(out_fmt))
+}
+
+/// A discrete posit adder unit: decode both, align, add, normalize, encode.
+pub fn posit_add_unit(fmt: PositFormat) -> Cost {
+    let mb = fmt.max_frac_bits() + 1;
+    let w = 2 * mb + 2; // aligned add width with guard bits
+    let exp_w = 32 - (fmt.max_scale() as u32).leading_zeros() + 1;
+    posit_decoder(fmt)
+        .beside(posit_decoder(fmt))
+        .then(adder(exp_w)) // exponent difference
+        .then(barrel_shifter(w, w)) // alignment
+        .then(adder(w))
+        .then(lzc(w))
+        .then(barrel_shifter(w, w)) // normalize
+        .then(posit_encoder(fmt))
+}
+
+/// A posit FMA unit [17]: three decoders, multiplier, aligned add, encode.
+pub fn posit_fma_unit(in_fmt: PositFormat, out_fmt: PositFormat) -> Cost {
+    let mb_in = in_fmt.max_frac_bits() + 1;
+    // [17] aligns the addend against the product over the full posit scale
+    // range (no Wm-style clamping), so the add/normalize datapath spans
+    // max_scale + product mantissa bits — this is why the posit FMA's
+    // synthesized area rivals an FP32 FMA in Table I.
+    let w = out_fmt.max_scale() as u32 + 2 * mb_in + 2;
+    let exp_w = 32 - (2 * in_fmt.max_scale().max(out_fmt.max_scale()) as u32).leading_zeros() + 1;
+    posit_decoder(in_fmt)
+        .beside(posit_decoder(in_fmt))
+        .beside(posit_decoder(out_fmt))
+        .then(booth_multiplier(mb_in))
+        .then(adder(exp_w))
+        .then(barrel_shifter(w, w))
+        .then(adder(w))
+        .then(lzc(w))
+        .then(barrel_shifter(w, w))
+        .then(posit_encoder(out_fmt))
+}
+
+/// IEEE multiplier unit (FPnew-style, subnormal support on).
+pub fn ieee_mul_unit(fmt: IeeeFormat) -> Cost {
+    let mb = fmt.man_bits + 1;
+    ieee_unpack(fmt).beside(ieee_unpack(fmt)).then(booth_multiplier(mb)).then(ieee_pack(fmt))
+}
+
+/// IEEE adder unit.
+pub fn ieee_add_unit(fmt: IeeeFormat) -> Cost {
+    let mb = fmt.man_bits + 1;
+    let w = 2 * mb + 2;
+    ieee_unpack(fmt)
+        .beside(ieee_unpack(fmt))
+        .then(adder(fmt.exp_bits))
+        .then(barrel_shifter(w, w))
+        .then(adder(w))
+        .then(lzc(w))
+        .then(barrel_shifter(w, w))
+        .then(ieee_pack(fmt))
+}
+
+/// IEEE FMA unit (FPnew FMA rows).
+pub fn ieee_fma_unit(fmt: IeeeFormat) -> Cost {
+    let mb = fmt.man_bits + 1;
+    let w = 3 * mb + 4;
+    ieee_unpack(fmt)
+        .beside(ieee_unpack(fmt))
+        .beside(ieee_unpack(fmt))
+        .then(booth_multiplier(mb))
+        .then(adder(fmt.exp_bits + 1))
+        .then(barrel_shifter(w, w))
+        .then(adder(w))
+        .then(lzc(w))
+        .then(barrel_shifter(w, w))
+        .then(ieee_pack(fmt))
+}
+
+/// Fig. 1(a) discrete DPU: N multiplier units + a rounded adder tree of
+/// N−1 adders + 1 accumulator adder. Delay = mul + (log₂N + 1)·add.
+///
+/// `activity_mult` models glitch amplification through the cascade of
+/// complete decode→compute→round units (see [`Netlist::activity_mult`]):
+/// ~4.0 for posit cascades (PACoGen row calibration), ~1.0 for IEEE.
+pub fn discrete_mul_add(mul: Cost, add: Cost, n: u32, label: String, activity_mult: f64) -> Netlist {
+    let tree_levels = ceil_log2(n) + 1; // adder tree + accumulate
+    let logic = Cost {
+        area_ge: mul.area_ge * n as f64 + add.area_ge * n as f64,
+        delay_fo4: mul.delay_fo4 + add.delay_fo4 * tree_levels as f64,
+    };
+    Netlist {
+        label,
+        stages: vec![StageCost { name: "discrete datapath", logic, reg_bits: 0 }],
+        macs_per_op: n,
+        activity_mult,
+    }
+}
+
+/// Fig. 1(b) cascaded-FMA DPU: N FMA units in series.
+pub fn fma_cascade(fma: Cost, n: u32, label: String) -> Netlist {
+    let logic = Cost { area_ge: fma.area_ge * n as f64, delay_fo4: fma.delay_fo4 * n as f64 };
+    Netlist {
+        label,
+        stages: vec![StageCost { name: "fma cascade", logic, reg_bits: 0 }],
+        macs_per_op: n,
+        activity_mult: 1.0 + 0.5 * (n as f64 - 1.0), // serial glitch growth
+    }
+}
+
+/// A single FMA unit as an architecture row (one MAC per op).
+pub fn single_fma(fma: Cost, label: String) -> Netlist {
+    Netlist {
+        label,
+        stages: vec![StageCost { name: "fma", logic: fma, reg_bits: 0 }],
+        macs_per_op: 1,
+        activity_mult: 1.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pdpu::PdpuConfig;
+
+    fn paper_pdpu() -> Netlist {
+        pdpu(PdpuParams::from_config(&PdpuConfig::paper_default()))
+    }
+
+    #[test]
+    fn pdpu_has_six_stages() {
+        let nl = paper_pdpu();
+        assert_eq!(nl.stages.len(), 6);
+        assert_eq!(nl.stages[0].name, "S1 Decode");
+        assert_eq!(nl.stages[5].name, "S6 Encode");
+        assert_eq!(nl.macs_per_op, 4);
+        assert!(nl.reg_bits() > 0);
+    }
+
+    #[test]
+    fn decoders_dominate_s1_and_s1_is_biggest_area() {
+        // paper §IV-B: "the parallel posit decoders of S1 occupy a
+        // relatively large proportion of PDPU"
+        let nl = paper_pdpu();
+        let s1 = &nl.stages[0];
+        let max_area =
+            nl.stages.iter().map(|s| s.logic.area_ge).fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(s1.logic.area_ge, max_area, "S1 must be the largest stage by area");
+    }
+
+    #[test]
+    fn wm_grows_s3_s4() {
+        let a = pdpu(PdpuParams { wm: 14, ..PdpuParams::from_config(&PdpuConfig::paper_default()) });
+        let b = pdpu(PdpuParams { wm: 28, ..PdpuParams::from_config(&PdpuConfig::paper_default()) });
+        assert!(b.stages[2].logic.area_ge > a.stages[2].logic.area_ge);
+        assert!(b.stages[3].logic.area_ge > a.stages[3].logic.area_ge);
+        // other stages untouched
+        assert_eq!(b.stages[1].logic.area_ge, a.stages[1].logic.area_ge);
+    }
+
+    #[test]
+    fn n_grows_s2_s4_delay() {
+        // paper §IV-B: "with the increase of N, the latency of S2 and S4
+        // increases rapidly ... since their tree structure becomes more
+        // complicated"
+        let p4 = PdpuParams { n: 4, ..PdpuParams::from_config(&PdpuConfig::paper_default()) };
+        let p16 = PdpuParams { n: 16, ..p4 };
+        let (a, b) = (pdpu(p4), pdpu(p16));
+        assert!(b.stages[1].logic.delay_fo4 > a.stages[1].logic.delay_fo4, "S2 tree deepens");
+        assert!(b.stages[3].logic.delay_fo4 > a.stages[3].logic.delay_fo4, "S4 tree deepens");
+        // S6 delay independent of N
+        assert_eq!(b.stages[5].logic.delay_fo4, a.stages[5].logic.delay_fo4);
+    }
+
+    #[test]
+    fn fused_uses_fewer_codecs_than_discrete() {
+        // the §III-B decoder/encoder count comparison, expressed in area:
+        // PDPU's codec area = (2N+1) dec + 1 enc; discrete(a) uses
+        // 2N dec + N enc for muls plus 2 dec + 1 enc per adder × N adders.
+        let p16 = PositFormat::p(16, 2);
+        let n = 4u32;
+        let pdpu_codecs = posit_decoder(p16).area_ge * (2.0 * n as f64 + 1.0) + posit_encoder(p16).area_ge;
+        let discrete_codecs = posit_decoder(p16).area_ge * (2.0 * n as f64 + 2.0 * n as f64)
+            + posit_encoder(p16).area_ge * (n as f64 + n as f64);
+        assert!(discrete_codecs > 1.5 * pdpu_codecs);
+    }
+
+    #[test]
+    fn cascade_delay_linear_in_n() {
+        let fma = posit_fma_unit(PositFormat::p(16, 2), PositFormat::p(16, 2));
+        let c4 = fma_cascade(fma, 4, "c4".into());
+        let c8 = fma_cascade(fma, 8, "c8".into());
+        assert!((c8.combinational().delay_fo4 / c4.combinational().delay_fo4 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fp16_unit_cheaper_than_fp32() {
+        assert!(ieee_fma_unit(IeeeFormat::fp16()).area_ge < ieee_fma_unit(IeeeFormat::fp32()).area_ge);
+        assert!(ieee_mul_unit(IeeeFormat::fp16()).area_ge < ieee_mul_unit(IeeeFormat::fp32()).area_ge);
+    }
+
+    #[test]
+    fn worst_stage_identified() {
+        let nl = paper_pdpu();
+        let w = nl.worst_stage();
+        assert!(nl.stages.iter().all(|s| s.logic.delay_fo4 <= w.logic.delay_fo4));
+    }
+}

@@ -1,0 +1,160 @@
+//! Pricing netlists into the paper's reported quantities: area (µm²),
+//! delay (ns), power (mW), and the derived Perf / Area-efficiency /
+//! Energy-efficiency columns of Table I, plus the per-stage pipelined
+//! breakdown of Fig. 6.
+
+use super::gates::{Cost, Tech};
+use super::netlists::Netlist;
+
+/// One Table I row's worth of synthesis results (combinational, as the
+/// paper evaluates all units for fairness in §IV-A).
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub label: String,
+    pub area_um2: f64,
+    pub delay_ns: f64,
+    pub power_mw: f64,
+    pub energy_per_op_pj: f64,
+    /// MAC operations completed per invocation
+    pub macs_per_op: u32,
+}
+
+impl Report {
+    /// Perf in GOPS: one MAC = one op (paper footnote †), back-to-back
+    /// combinational invocations.
+    pub fn perf_gops(&self) -> f64 {
+        self.macs_per_op as f64 / self.delay_ns
+    }
+
+    /// GOPS/mm².
+    pub fn area_eff(&self) -> f64 {
+        self.perf_gops() / (self.area_um2 * 1e-6)
+    }
+
+    /// GOPS/W.
+    pub fn energy_eff(&self) -> f64 {
+        self.perf_gops() / (self.power_mw * 1e-3)
+    }
+}
+
+/// Price a netlist combinationally (no pipeline registers) — the Table I
+/// methodology ("all units in the comparison are combinationally
+/// implemented to avoid impacts of different pipeline schemes").
+pub fn synthesize_combinational(nl: &Netlist, tech: &Tech) -> Report {
+    let total = nl.combinational();
+    price(nl.label.clone(), total, nl.macs_per_op, nl.activity_mult, tech)
+}
+
+fn price(label: String, logic: Cost, macs: u32, activity_mult: f64, tech: &Tech) -> Report {
+    let area_um2 = logic.area_ge * tech.um2_per_ge;
+    let delay_ns = logic.delay_fo4 * tech.fo4_ns;
+    let energy_per_op_pj = logic.area_ge * tech.activity * activity_mult * tech.fj_per_ge_switch * 1e-3;
+    // back-to-back combinational operation: P = E/op · (1/delay)
+    let power_mw = energy_per_op_pj / delay_ns;
+    Report { label, area_um2, delay_ns, power_mw, energy_per_op_pj, macs_per_op: macs }
+}
+
+/// One pipeline stage's share in the Fig. 6 breakdown.
+#[derive(Clone, Debug)]
+pub struct StageReport {
+    pub name: &'static str,
+    pub delay_ns: f64,
+    pub area_um2: f64,
+}
+
+/// Pipelined synthesis: per-stage delay/area (logic + following pipeline
+/// register), achievable clock and throughput speedup vs. combinational —
+/// everything Fig. 6 plots.
+#[derive(Clone, Debug)]
+pub struct PipelineReport {
+    pub label: String,
+    pub stages: Vec<StageReport>,
+    /// worst stage delay incl. register overhead = clock period
+    pub clock_ns: f64,
+    pub fmax_ghz: f64,
+    pub total_area_um2: f64,
+    /// throughput gain over the combinational implementation
+    pub speedup: f64,
+}
+
+/// Register timing overhead per pipeline stage (setup + clk-to-Q), in FO4.
+const REG_OVERHEAD_FO4: f64 = 3.0;
+
+pub fn synthesize_pipelined(nl: &Netlist, tech: &Tech) -> PipelineReport {
+    let mut stages = Vec::with_capacity(nl.stages.len());
+    let mut worst_fo4 = 0f64;
+    let mut total_ge = 0f64;
+    for s in &nl.stages {
+        let reg_ge = super::gates::dff_bits(s.reg_bits).area_ge;
+        let stage_ge = s.logic.area_ge + reg_ge;
+        total_ge += stage_ge;
+        worst_fo4 = worst_fo4.max(s.logic.delay_fo4 + REG_OVERHEAD_FO4);
+        stages.push(StageReport {
+            name: s.name,
+            delay_ns: (s.logic.delay_fo4 + REG_OVERHEAD_FO4) * tech.fo4_ns,
+            area_um2: stage_ge * tech.um2_per_ge,
+        });
+    }
+    let clock_ns = worst_fo4 * tech.fo4_ns;
+    let comb_delay_ns = nl.combinational().delay_fo4 * tech.fo4_ns;
+    PipelineReport {
+        label: nl.label.clone(),
+        stages,
+        clock_ns,
+        fmax_ghz: 1.0 / clock_ns,
+        total_area_um2: total_ge * tech.um2_per_ge,
+        speedup: comb_delay_ns / clock_ns,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::netlists::{pdpu, PdpuParams};
+    use super::*;
+    use crate::pdpu::PdpuConfig;
+
+    fn paper_report() -> Report {
+        let nl = pdpu(PdpuParams::from_config(&PdpuConfig::paper_default()));
+        synthesize_combinational(&nl, &Tech::default())
+    }
+
+    #[test]
+    fn perf_formula_matches_paper_footnote() {
+        let r = paper_report();
+        assert_eq!(r.macs_per_op, 4);
+        assert!((r.perf_gops() - 4.0 / r.delay_ns).abs() < 1e-12);
+        // efficiency columns consistent
+        assert!((r.area_eff() - r.perf_gops() / (r.area_um2 * 1e-6)).abs() < 1e-9);
+        assert!((r.energy_eff() - r.perf_gops() / (r.power_mw * 1e-3)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn power_energy_consistent() {
+        let r = paper_report();
+        assert!((r.power_mw * r.delay_ns - r.energy_per_op_pj).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pipelined_clock_beats_combinational_delay() {
+        let nl = pdpu(PdpuParams::from_config(&PdpuConfig::paper_default()));
+        let t = Tech::default();
+        let comb = synthesize_combinational(&nl, &t);
+        let pipe = synthesize_pipelined(&nl, &t);
+        assert!(pipe.clock_ns < comb.delay_ns / 3.0, "6 stages must cut the critical path hard");
+        assert!(pipe.speedup > 3.0);
+        assert_eq!(pipe.stages.len(), 6);
+        // registers make the pipelined unit bigger
+        assert!(pipe.total_area_um2 > comb.area_um2);
+    }
+
+    #[test]
+    fn stage_delays_are_balanced_within_3x() {
+        // paper: "the proposed pipeline strategy leads to a balanced
+        // critical path delay of each stage"
+        let nl = pdpu(PdpuParams::from_config(&PdpuConfig::paper_default()));
+        let pipe = synthesize_pipelined(&nl, &Tech::default());
+        let min = pipe.stages.iter().map(|s| s.delay_ns).fold(f64::INFINITY, f64::min);
+        let max = pipe.stages.iter().map(|s| s.delay_ns).fold(0.0, f64::max);
+        assert!(max / min < 3.0, "stage imbalance {min}..{max}");
+    }
+}

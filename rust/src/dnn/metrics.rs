@@ -1,0 +1,157 @@
+//! Accuracy metrics for comparing a unit's outputs against the FP64
+//! reference — including the Table I "Accuracy" column metric.
+
+/// The Table I accuracy metric: **mean clipped relative accuracy**,
+///
+/// ```text
+/// acc = mean_i max(0, 1 − |y_i − ŷ_i| / max(|ŷ_i|, ε))
+/// ```
+///
+/// with ŷ the FP64 reference. The paper does not print its formula; this
+/// choice reproduces its orderings (FP32 ≈ 100 %, P(16,2) ≈ 99 %,
+/// FP16 ≈ 91 % on cancellation-heavy conv sums) — see DESIGN.md. NaN/∞
+/// outputs (FP16 overflow) count as zero accuracy for that element, which
+/// is how FP16's limited dynamic range hurts it in this metric.
+pub fn mean_relative_accuracy(outputs: &[f64], reference: &[f64]) -> f64 {
+    assert_eq!(outputs.len(), reference.len());
+    assert!(!outputs.is_empty());
+    let eps = 1e-12;
+    let mut total = 0.0;
+    for (&y, &r) in outputs.iter().zip(reference) {
+        if !y.is_finite() {
+            continue; // contributes 0
+        }
+        let rel = (y - r).abs() / r.abs().max(eps);
+        total += (1.0 - rel).max(0.0);
+    }
+    total / outputs.len() as f64
+}
+
+/// Root-mean-square error.
+pub fn rmse(outputs: &[f64], reference: &[f64]) -> f64 {
+    assert_eq!(outputs.len(), reference.len());
+    let s: f64 = outputs
+        .iter()
+        .zip(reference)
+        .map(|(&y, &r)| {
+            let d = if y.is_finite() { y - r } else { r };
+            d * d
+        })
+        .sum();
+    (s / outputs.len() as f64).sqrt()
+}
+
+/// Signal-to-quantization-noise ratio in dB (common in posit literature).
+pub fn sqnr_db(outputs: &[f64], reference: &[f64]) -> f64 {
+    assert_eq!(outputs.len(), reference.len());
+    let sig: f64 = reference.iter().map(|r| r * r).sum();
+    let noise: f64 = outputs
+        .iter()
+        .zip(reference)
+        .map(|(&y, &r)| {
+            let d = if y.is_finite() { y - r } else { r };
+            d * d
+        })
+        .sum();
+    if noise == 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * (sig / noise).log10()
+    }
+}
+
+/// Top-1 classification accuracy.
+pub fn top1(logits: &[Vec<f64>], labels: &[usize]) -> f64 {
+    assert_eq!(logits.len(), labels.len());
+    let correct = logits
+        .iter()
+        .zip(labels)
+        .filter(|(row, &l)| {
+            let arg = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                .map(|(i, _)| i)
+                .unwrap_or(usize::MAX);
+            arg == l
+        })
+        .count();
+    correct as f64 / labels.len().max(1) as f64
+}
+
+/// Decimal accuracy of a representation at value `x`: −log₁₀ of the
+/// relative error when rounding `x` to the format (Gustafson's metric,
+/// the y-axis of Fig. 3).
+pub fn decimal_accuracy(x: f64, quantize: impl Fn(f64) -> f64) -> f64 {
+    let q = quantize(x);
+    if !q.is_finite() || x == 0.0 {
+        return 0.0;
+    }
+    let rel = ((q - x) / x).abs();
+    if rel == 0.0 {
+        f64::INFINITY
+    } else {
+        -rel.log10()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_outputs_score_one() {
+        let r = vec![1.0, -2.0, 3.0];
+        assert_eq!(mean_relative_accuracy(&r, &r), 1.0);
+        assert_eq!(rmse(&r, &r), 0.0);
+        assert_eq!(sqnr_db(&r, &r), f64::INFINITY);
+    }
+
+    #[test]
+    fn relative_accuracy_scales() {
+        // 1% error everywhere → 0.99
+        let r = vec![1.0, 10.0, -5.0];
+        let y: Vec<f64> = r.iter().map(|v| v * 1.01).collect();
+        let a = mean_relative_accuracy(&y, &r);
+        assert!((a - 0.99).abs() < 1e-12, "{a}");
+    }
+
+    #[test]
+    fn infinite_outputs_score_zero() {
+        let r = vec![1.0, 1.0];
+        let y = vec![1.0, f64::INFINITY];
+        assert!((mean_relative_accuracy(&y, &r) - 0.5).abs() < 1e-12);
+        let y = vec![1.0, f64::NAN];
+        assert!((mean_relative_accuracy(&y, &r) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn huge_errors_clip_at_zero() {
+        let r = vec![1.0];
+        let y = vec![-100.0];
+        assert_eq!(mean_relative_accuracy(&y, &r), 0.0);
+    }
+
+    #[test]
+    fn top1_counts_argmax() {
+        let logits = vec![vec![0.1, 0.9], vec![0.8, 0.2], vec![0.4, 0.6]];
+        let labels = vec![1, 0, 0];
+        assert!((top1(&logits, &labels) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decimal_accuracy_of_identity_is_infinite() {
+        assert_eq!(decimal_accuracy(1.0, |x| x), f64::INFINITY);
+        // 0.1% rounding error ≈ 3 decimal digits
+        let d = decimal_accuracy(1.0, |x| x * 1.001);
+        assert!((d - 3.0).abs() < 0.01, "{d}");
+    }
+
+    #[test]
+    fn sqnr_reasonable() {
+        let r = vec![1.0, 1.0, 1.0, 1.0];
+        let y = vec![1.01, 0.99, 1.01, 0.99]; // 1% noise → ~40 dB
+        let s = sqnr_db(&y, &r);
+        assert!((s - 40.0).abs() < 0.5, "{s}");
+    }
+}

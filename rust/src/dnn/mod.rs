@@ -1,0 +1,14 @@
+//! The deep-learning workload substrate: tensors, layers that compute
+//! through any [`crate::baselines::DotArch`], posit/IEEE quantization, the
+//! synthetic datasets standing in for the paper's ResNet18-conv1
+//! extraction, and the accuracy metrics of Table I / Fig. 3.
+
+pub mod dataset;
+pub mod layers;
+pub mod metrics;
+pub mod quantize;
+pub mod tensor;
+
+pub use dataset::{conv1_workload, mnist_like, ConvWorkload, Dataset};
+pub use metrics::{mean_relative_accuracy, rmse, sqnr_db, top1};
+pub use tensor::Tensor;

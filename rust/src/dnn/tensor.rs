@@ -1,0 +1,192 @@
+//! A minimal row-major f64 tensor — just enough substrate for the paper's
+//! DNN workloads (conv/fc layers over chunked dot products). FP64 is the
+//! reference representation, exactly as the paper extracts its conv1
+//! tensors in FP64.
+
+/// Row-major dense tensor of up to 4 dimensions.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f64>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let len = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; len] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f64>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape: shape.to_vec(), data }
+    }
+
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Flat index of a 4-D coordinate (unused trailing dims must be 0).
+    #[inline]
+    pub fn idx4(&self, a: usize, b: usize, c: usize, d: usize) -> usize {
+        debug_assert_eq!(self.shape.len(), 4);
+        ((a * self.shape[1] + b) * self.shape[2] + c) * self.shape[3] + d
+    }
+
+    #[inline]
+    pub fn at4(&self, a: usize, b: usize, c: usize, d: usize) -> f64 {
+        self.data[self.idx4(a, b, c, d)]
+    }
+
+    #[inline]
+    pub fn idx3(&self, a: usize, b: usize, c: usize) -> usize {
+        debug_assert_eq!(self.shape.len(), 3);
+        (a * self.shape[1] + b) * self.shape[2] + c
+    }
+
+    #[inline]
+    pub fn at3(&self, a: usize, b: usize, c: usize) -> f64 {
+        self.data[self.idx3(a, b, c)]
+    }
+
+    #[inline]
+    pub fn idx2(&self, a: usize, b: usize) -> usize {
+        debug_assert_eq!(self.shape.len(), 2);
+        a * self.shape[1] + b
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Elementwise map.
+    pub fn map(mut self, f: impl Fn(f64) -> f64) -> Self {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+        self
+    }
+
+    /// Max absolute difference to another tensor of the same shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        self.data.iter().zip(&other.data).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max)
+    }
+}
+
+/// im2col for a single-image CHW tensor: extract the patch feeding output
+/// position (oy, ox) as a flat vector (channel-major, then ky, kx) —
+/// the dot-product layout both the reference and the hardware paths share.
+pub fn im2col_patch(
+    img: &Tensor, // [C, H, W]
+    oy: usize,
+    ox: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    out: &mut Vec<f64>,
+) {
+    let (c, h, w) = (img.shape()[0], img.shape()[1], img.shape()[2]);
+    out.clear();
+    for ch in 0..c {
+        for ky in 0..kh {
+            for kx in 0..kw {
+                let iy = (oy * stride + ky) as isize - pad as isize;
+                let ix = (ox * stride + kx) as isize - pad as isize;
+                if iy < 0 || ix < 0 || iy >= h as isize || ix >= w as isize {
+                    out.push(0.0);
+                } else {
+                    out.push(img.at3(ch, iy as usize, ix as usize));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|i| i as f64).collect());
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.data()[t.idx2(1, 2)], 5.0);
+        let t = t.reshape(&[3, 2]);
+        assert_eq!(t.shape(), &[3, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn bad_shape_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn map_and_diff() {
+        let a = Tensor::from_vec(&[4], vec![1.0, -2.0, 3.0, -4.0]);
+        let b = a.clone().map(|v| v.max(0.0)); // relu
+        assert_eq!(b.data(), &[1.0, 0.0, 3.0, 0.0]);
+        assert_eq!(a.max_abs_diff(&b), 4.0);
+    }
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // 1 channel 3x3 image, 1x1 kernel: patch == pixel
+        let img = Tensor::from_vec(&[1, 3, 3], (0..9).map(|i| i as f64).collect());
+        let mut patch = Vec::new();
+        im2col_patch(&img, 1, 2, 1, 1, 1, 0, &mut patch);
+        assert_eq!(patch, vec![5.0]);
+    }
+
+    #[test]
+    fn im2col_padding_zeroes() {
+        let img = Tensor::from_vec(&[1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let mut patch = Vec::new();
+        // 3x3 kernel at (0,0) with pad 1: top-left corner patch
+        im2col_patch(&img, 0, 0, 3, 3, 1, 1, &mut patch);
+        assert_eq!(patch.len(), 9);
+        assert_eq!(patch, vec![0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn im2col_channel_major_order() {
+        // 2 channels, 2x2 image, 2x2 kernel at origin: all of ch0 then ch1
+        let img = Tensor::from_vec(&[2, 2, 2], vec![1., 2., 3., 4., 10., 20., 30., 40.]);
+        let mut patch = Vec::new();
+        im2col_patch(&img, 0, 0, 2, 2, 1, 0, &mut patch);
+        assert_eq!(patch, vec![1., 2., 3., 4., 10., 20., 30., 40.]);
+    }
+
+    #[test]
+    fn im2col_stride() {
+        let img = Tensor::from_vec(&[1, 4, 4], (0..16).map(|i| i as f64).collect());
+        let mut patch = Vec::new();
+        im2col_patch(&img, 1, 1, 2, 2, 2, 0, &mut patch);
+        // stride-2 position (1,1) → rows 2..3, cols 2..3
+        assert_eq!(patch, vec![10.0, 11.0, 14.0, 15.0]);
+    }
+}

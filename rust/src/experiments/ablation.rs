@@ -1,0 +1,124 @@
+//! Experiment A2 — the design-space ablations §III-C motivates: sweep the
+//! generator's three knobs (input format, dot-product size N, alignment
+//! width Wm) and report the accuracy ↔ cost trade-off each one buys.
+//! The paper's observation that "inappropriate data formats or alignment
+//! width may result in 10 % higher computational loss of accuracy" falls
+//! out of these sweeps.
+
+use crate::baselines::PdpuArch;
+use crate::cost::{synthesize_combinational, PdpuParams, Tech};
+use crate::dnn::dataset::conv1_workload;
+use crate::pdpu::PdpuConfig;
+use crate::posit::PositFormat;
+
+use super::table1::unit_accuracy_on;
+
+/// One point of a sweep.
+#[derive(Clone, Debug)]
+pub struct AblationPoint {
+    pub label: String,
+    pub accuracy: f64,
+    pub area_um2: f64,
+    pub power_mw: f64,
+    pub delay_ns: f64,
+}
+
+fn eval(in_n: u32, out_n: u32, n: usize, wm: u32, tech: &Tech, hw: usize, oc: usize) -> AblationPoint {
+    let cfg = PdpuConfig::mixed(in_n, out_n, 2, n, wm).expect("valid sweep point");
+    let wl = conv1_workload(2023, hw, oc);
+    let accuracy = unit_accuracy_on(&PdpuArch::new(cfg), &wl);
+    let nl = crate::cost::netlists::pdpu(PdpuParams {
+        in_fmt: PositFormat::p(in_n, 2),
+        out_fmt: PositFormat::p(out_n, 2),
+        n: n as u32,
+        wm,
+    });
+    let r = synthesize_combinational(&nl, tech);
+    AblationPoint {
+        label: format!("P({in_n}/{out_n},2) N={n} Wm={wm}"),
+        accuracy,
+        area_um2: r.area_um2,
+        power_mw: r.power_mw,
+        delay_ns: r.delay_ns,
+    }
+}
+
+/// Sweep the alignment width Wm at the paper's flagship format.
+pub fn wm_sweep(wms: &[u32], tech: &Tech, hw: usize, oc: usize) -> Vec<AblationPoint> {
+    wms.iter().map(|&wm| eval(13, 16, 4, wm, tech, hw, oc)).collect()
+}
+
+/// Sweep the input word size at fixed output format.
+pub fn format_sweep(in_ns: &[u32], tech: &Tech, hw: usize, oc: usize) -> Vec<AblationPoint> {
+    in_ns.iter().map(|&n| eval(n, 16, 4, 14, tech, hw, oc)).collect()
+}
+
+/// Sweep the dot-product size N.
+pub fn n_sweep(ns: &[usize], tech: &Tech, hw: usize, oc: usize) -> Vec<AblationPoint> {
+    ns.iter().map(|&n| eval(13, 16, n, 14, tech, hw, oc)).collect()
+}
+
+pub fn render(title: &str, pts: &[AblationPoint]) -> String {
+    let mut s = format!("{title}\n{:<24} {:>9} {:>10} {:>8} {:>7}\n", "config", "accuracy", "area(um2)", "power", "delay");
+    for p in pts {
+        s.push_str(&format!(
+            "{:<24} {:>8.2}% {:>10.0} {:>8.2} {:>7.2}\n",
+            p.label,
+            100.0 * p.accuracy,
+            p.area_um2,
+            p.power_mw,
+            p.delay_ns
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const HW: usize = 12;
+    const OC: usize = 3;
+
+    #[test]
+    fn wm_trades_accuracy_for_area() {
+        let pts = wm_sweep(&[6, 10, 14, 20], &Tech::default(), HW, OC);
+        // accuracy non-decreasing in Wm (allowing metric noise)
+        for w in pts.windows(2) {
+            assert!(w[1].accuracy >= w[0].accuracy - 5e-3, "{:?}", w);
+            assert!(w[1].area_um2 > w[0].area_um2, "area must grow with Wm");
+        }
+        // the paper's "inappropriate alignment width" cliff: Wm=6 loses
+        // several points of accuracy vs Wm=14
+        let (w6, w14) = (&pts[0], &pts[2]);
+        assert!(w14.accuracy - w6.accuracy > 0.02, "wm6 {:.4} vs wm14 {:.4}", w6.accuracy, w14.accuracy);
+    }
+
+    #[test]
+    fn input_format_trades_accuracy_for_area() {
+        let pts = format_sweep(&[8, 10, 13, 16], &Tech::default(), HW, OC);
+        for w in pts.windows(2) {
+            assert!(w[1].accuracy >= w[0].accuracy - 5e-3, "{:?}", w);
+            assert!(w[1].area_um2 > w[0].area_um2);
+        }
+        // P(8) inputs crater accuracy (paper: "may result in 10% higher loss")
+        assert!(pts[3].accuracy - pts[0].accuracy > 0.05);
+    }
+
+    #[test]
+    fn n_scales_area_roughly_linearly() {
+        let pts = n_sweep(&[2, 4, 8], &Tech::default(), HW, OC);
+        let ratio = pts[2].area_um2 / pts[0].area_um2;
+        assert!((2.0..5.0).contains(&ratio), "area N=8/N=2 ratio {ratio}");
+        // accuracy roughly flat in N (chunking changes rounding slightly)
+        for w in pts.windows(2) {
+            assert!((w[1].accuracy - w[0].accuracy).abs() < 0.02, "{:?}", w);
+        }
+    }
+
+    #[test]
+    fn render_contains_rows() {
+        let s = render("wm sweep", &wm_sweep(&[10, 14], &Tech::default(), HW, OC));
+        assert!(s.contains("Wm=10") && s.contains("Wm=14"));
+    }
+}

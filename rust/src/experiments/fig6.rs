@@ -1,0 +1,133 @@
+//! Experiment F6 — regenerate **Fig. 6**: the 6-stage pipeline breakdown
+//! of PDPU (per-stage latency and area), the balanced-critical-path claim,
+//! the ~2.7 GHz fmax claim, and the throughput speedup over the
+//! combinational implementation, for N ∈ {4, 8, 16} at P(13/16,2) Wm=14.
+
+use crate::cost::{synthesize_combinational, synthesize_pipelined, PdpuParams, PipelineReport, Tech};
+use crate::posit::PositFormat;
+
+/// The Fig. 6 data for one N.
+#[derive(Clone, Debug)]
+pub struct Fig6Entry {
+    pub n: u32,
+    pub report: PipelineReport,
+    pub comb_delay_ns: f64,
+}
+
+/// Build the Fig. 6 sweep (paper: P(13/16,2), Wm=14).
+pub fn build(ns: &[u32], tech: &Tech) -> Vec<Fig6Entry> {
+    ns.iter()
+        .map(|&n| {
+            let params = PdpuParams {
+                in_fmt: PositFormat::p(13, 2),
+                out_fmt: PositFormat::p(16, 2),
+                n,
+                wm: 14,
+            };
+            let nl = crate::cost::netlists::pdpu(params);
+            let comb = synthesize_combinational(&nl, tech);
+            Fig6Entry { n, report: synthesize_pipelined(&nl, tech), comb_delay_ns: comb.delay_ns }
+        })
+        .collect()
+}
+
+/// Render the per-stage rings of Fig. 6 as a table.
+pub fn render(entries: &[Fig6Entry]) -> String {
+    let mut s = String::new();
+    for e in entries {
+        s.push_str(&format!(
+            "PDPU P(13/16,2) Wm=14 N={}  (clock {:.3} ns, fmax {:.2} GHz, pipeline speedup {:.1}x)\n",
+            e.n, e.report.clock_ns, e.report.fmax_ghz, e.report.speedup
+        ));
+        s.push_str(&format!("  {:<15} {:>11} {:>11}\n", "stage", "latency(ns)", "area(um2)"));
+        for st in &e.report.stages {
+            s.push_str(&format!("  {:<15} {:>11.3} {:>11.0}\n", st.name, st.delay_ns, st.area_um2));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entries() -> Vec<Fig6Entry> {
+        build(&[4, 8, 16], &Tech::default())
+    }
+
+    #[test]
+    fn six_stages_everywhere() {
+        for e in entries() {
+            assert_eq!(e.report.stages.len(), 6, "N={}", e.n);
+        }
+    }
+
+    /// Paper: "the worst latency of the 6-stage pipeline PDPU is merely
+    /// about 0.37 ns, and thus, it can operate up to 2.7 GHz".
+    #[test]
+    fn fmax_in_multi_ghz_range() {
+        let es = entries();
+        let n4 = &es[0];
+        assert!(
+            (0.25..0.55).contains(&n4.report.clock_ns),
+            "N=4 clock {:.3} ns (paper ≈ 0.37)",
+            n4.report.clock_ns
+        );
+        assert!(n4.report.fmax_ghz > 1.8, "fmax {:.2} GHz (paper 2.7)", n4.report.fmax_ghz);
+    }
+
+    /// Paper: pipelining improves throughput by 4.4× / 4.6× — i.e. the
+    /// speedup is between ~4 and 6 for these configs.
+    #[test]
+    fn speedup_matches_paper_band() {
+        for e in entries() {
+            assert!(
+                (3.0..6.5).contains(&e.report.speedup),
+                "N={} speedup {:.2} (paper ~4.4-4.6)",
+                e.n,
+                e.report.speedup
+            );
+        }
+    }
+
+    /// Paper: S2 and S4 latency grows quickly with N (deeper trees).
+    #[test]
+    fn s2_s4_grow_with_n() {
+        let es = entries();
+        let stage = |e: &Fig6Entry, i: usize| e.report.stages[i].delay_ns;
+        assert!(stage(&es[2], 1) > stage(&es[0], 1), "S2 grows with N");
+        assert!(stage(&es[2], 3) > stage(&es[0], 3), "S4 grows with N");
+        // S6 (encoder) does not depend on N
+        assert!((stage(&es[2], 5) - stage(&es[0], 5)).abs() < 1e-12);
+    }
+
+    /// Paper: S1's parallel decoders occupy a relatively large area share.
+    #[test]
+    fn s1_area_share_is_largest() {
+        for e in entries() {
+            let s1 = e.report.stages[0].area_um2;
+            for st in &e.report.stages[1..] {
+                assert!(s1 >= st.area_um2, "N={}: {} ({:.0}) > S1 ({:.0})", e.n, st.name, st.area_um2, s1);
+            }
+            let total: f64 = e.report.stages.iter().map(|s| s.area_um2).sum();
+            assert!(s1 / total > 0.25, "N={}: S1 share {:.2}", e.n, s1 / total);
+        }
+    }
+
+    /// Comparison anchor from §IV-B: the 5-stage posit MAC of [19] has a
+    /// 0.8 ns worst stage in the same 28 nm node — PDPU's must be well
+    /// under that.
+    #[test]
+    fn beats_crespo_mac_stage_latency() {
+        let es = entries();
+        assert!(es[0].report.clock_ns < 0.8 * 0.8, "{:.3}", es[0].report.clock_ns);
+    }
+
+    #[test]
+    fn render_mentions_all_stages() {
+        let s = render(&entries());
+        for name in ["S1 Decode", "S2 Multiply", "S3 Align", "S4 Accumulate", "S5 Normalize", "S6 Encode"] {
+            assert!(s.contains(name), "{name}");
+        }
+    }
+}

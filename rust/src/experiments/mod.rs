@@ -1,0 +1,15 @@
+//! Experiment drivers — one module per paper artifact (see DESIGN.md
+//! §Experiment index):
+//!
+//! * [`table1`] — Table I (T1) and the §IV-A claims (A1)
+//! * [`fig3`] — Fig. 3 tapered-accuracy-vs-distribution (F3)
+//! * [`fig6`] — Fig. 6 pipeline breakdown (F6)
+//! * [`ablation`] — the §III-C design-space sweeps (A2)
+//!
+//! Each module exposes `build`/`render` pairs used by the `pdpu exp …` CLI
+//! and by the `cargo bench` harnesses.
+
+pub mod ablation;
+pub mod fig3;
+pub mod fig6;
+pub mod table1;

@@ -1,0 +1,245 @@
+//! Experiment T1 — regenerate **Table I**: accuracy (bit-exact simulation
+//! on the conv1-like workload) joined with area/delay/power (structural
+//! cost model) and the derived Perf / Area-eff / Energy-eff columns, for
+//! all twelve rows; plus the §IV-A headline claims (experiment A1).
+
+use crate::baselines::{table1_units, DotArch};
+use crate::cost::{table1_reports, Report, Tech};
+use crate::dnn::dataset::{conv1_workload, ConvWorkload};
+use crate::dnn::layers::{conv2d, conv2d_f64};
+use crate::dnn::metrics::mean_relative_accuracy;
+
+/// One assembled Table I row.
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub label: String,
+    pub accuracy: f64,
+    pub area_um2: f64,
+    pub delay_ns: f64,
+    pub power_mw: f64,
+    pub perf_gops: f64,
+    pub area_eff: f64,
+    pub energy_eff: f64,
+}
+
+/// Workload parameters for the accuracy column.
+#[derive(Clone, Copy, Debug)]
+pub struct Table1Params {
+    pub seed: u64,
+    /// input spatial size of the synthetic conv1 image
+    pub hw: usize,
+    /// output channels evaluated
+    pub out_channels: usize,
+}
+
+impl Default for Table1Params {
+    fn default() -> Self {
+        Self { seed: 2023, hw: 32, out_channels: 8 }
+    }
+}
+
+/// Compute the accuracy column: run every unit over the same conv1-like
+/// workload and compare against the FP64 reference.
+pub fn accuracy_column(params: &Table1Params) -> Vec<(String, f64)> {
+    let wl = conv1_workload(params.seed, params.hw, params.out_channels);
+    let reference = conv2d_f64(&wl.image, &wl.weights, wl.stride, wl.pad);
+    table1_units()
+        .iter()
+        .map(|u| {
+            let out = conv2d(u.as_ref(), &wl.image, &wl.weights, wl.stride, wl.pad);
+            (u.name(), mean_relative_accuracy(out.data(), reference.data()))
+        })
+        .collect()
+}
+
+/// Accuracy of one specific unit on the standard workload (used by
+/// ablations and tests).
+pub fn unit_accuracy(unit: &dyn DotArch, params: &Table1Params) -> f64 {
+    let wl = conv1_workload(params.seed, params.hw, params.out_channels);
+    unit_accuracy_on(unit, &wl)
+}
+
+pub fn unit_accuracy_on(unit: &dyn DotArch, wl: &ConvWorkload) -> f64 {
+    let reference = conv2d_f64(&wl.image, &wl.weights, wl.stride, wl.pad);
+    let out = conv2d(unit, &wl.image, &wl.weights, wl.stride, wl.pad);
+    mean_relative_accuracy(out.data(), reference.data())
+}
+
+/// Assemble the full table: accuracy column + cost columns. Row order and
+/// labels follow the paper's Table I.
+pub fn build(params: &Table1Params, tech: &Tech) -> Vec<Table1Row> {
+    let acc = accuracy_column(params);
+    let cost: Vec<Report> = table1_reports(tech);
+    assert_eq!(acc.len(), cost.len(), "accuracy and cost row counts must match");
+    acc.into_iter()
+        .zip(cost)
+        .map(|((label, accuracy), r)| Table1Row {
+            label,
+            accuracy,
+            area_um2: r.area_um2,
+            delay_ns: r.delay_ns,
+            power_mw: r.power_mw,
+            perf_gops: r.perf_gops(),
+            area_eff: r.area_eff(),
+            energy_eff: r.energy_eff(),
+        })
+        .collect()
+}
+
+/// The §IV-A headline claims derived from the table (experiment A1).
+#[derive(Clone, Debug)]
+pub struct Claims {
+    /// vs PACoGen DPU (paper: 0.43 / 0.64 / 0.70)
+    pub area_saving_vs_pacogen: f64,
+    pub delay_saving_vs_pacogen: f64,
+    pub power_saving_vs_pacogen: f64,
+    /// vs quire PDPU (paper: 5.0× / 2.1×)
+    pub area_eff_gain_vs_quire: f64,
+    pub energy_eff_gain_vs_quire: f64,
+    /// vs posit FMA (paper: 3.1× / 3.5×)
+    pub area_eff_gain_vs_posit_fma: f64,
+    pub energy_eff_gain_vs_posit_fma: f64,
+}
+
+pub fn claims(rows: &[Table1Row]) -> Claims {
+    let find = |frag: &str| {
+        rows.iter().find(|r| r.label.contains(frag)).unwrap_or_else(|| panic!("missing row {frag}"))
+    };
+    let pdpu = find("PDPU P(13/16,2) N=4");
+    let paco = find("PACoGen");
+    let quire = find("Quire");
+    let pfma = find("Posit FMA");
+    Claims {
+        area_saving_vs_pacogen: 1.0 - pdpu.area_um2 / paco.area_um2,
+        delay_saving_vs_pacogen: 1.0 - pdpu.delay_ns / paco.delay_ns,
+        power_saving_vs_pacogen: 1.0 - pdpu.power_mw / paco.power_mw,
+        area_eff_gain_vs_quire: pdpu.area_eff / quire.area_eff,
+        energy_eff_gain_vs_quire: pdpu.energy_eff / quire.energy_eff,
+        area_eff_gain_vs_posit_fma: pdpu.area_eff / pfma.area_eff,
+        energy_eff_gain_vs_posit_fma: pdpu.energy_eff / pfma.energy_eff,
+    }
+}
+
+/// Render the table in the paper's column layout.
+pub fn render(rows: &[Table1Row]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<28} {:>9} {:>10} {:>7} {:>8} {:>7} {:>12} {:>10}\n",
+        "Architecture", "Accuracy", "Area(um2)", "Delay", "Power", "Perf", "AreaEff", "EnergyEff"
+    ));
+    s.push_str(&format!(
+        "{:<28} {:>9} {:>10} {:>7} {:>8} {:>7} {:>12} {:>10}\n",
+        "", "(%)", "", "(ns)", "(mW)", "(GOPS)", "(GOPS/mm2)", "(GOPS/W)"
+    ));
+    for r in rows {
+        s.push_str(&format!(
+            "{:<28} {:>8.2}% {:>10.0} {:>7.2} {:>8.2} {:>7.2} {:>12.1} {:>10.1}\n",
+            r.label,
+            100.0 * r.accuracy,
+            r.area_um2,
+            r.delay_ns,
+            r.power_mw,
+            r.perf_gops,
+            r.area_eff,
+            r.energy_eff
+        ));
+    }
+    s
+}
+
+/// Paper values for the same table (for EXPERIMENTS.md side-by-side).
+pub const PAPER_ROWS: &[(&str, f64, f64, f64, f64)] = &[
+    // (label fragment, accuracy %, area um2, delay ns, power mW)
+    ("FPnew DPU FP32", 100.0, 28563.19, 3.45, 7.60),
+    ("FPnew DPU FP16", 91.21, 13448.99, 2.75, 4.29),
+    ("PACoGen DPU", 98.86, 13433.11, 4.45, 12.21),
+    ("PDPU P(16/16,2) N=4", 99.10, 9579.15, 1.62, 4.49),
+    ("PDPU P(13/16,2) N=4", 98.69, 7694.82, 1.60, 3.66),
+    ("PDPU P(13/16,2) N=8 Wm=14", 98.68, 13560.37, 1.69, 5.80),
+    ("PDPU P(10/16,2) N=8", 89.58, 10006.42, 1.70, 4.24),
+    ("PDPU P(13/16,2) N=8 Wm=10", 88.90, 12157.11, 1.66, 5.06),
+    ("Quire PDPU", 98.79, 29209.45, 2.10, 5.87),
+    ("FPnew FMA FP32", 100.0, 6668.17, 1.20, 3.97),
+    ("FPnew FMA FP16", 92.93, 3713.72, 1.00, 2.51),
+    ("Posit FMA", 99.23, 7035.34, 1.35, 3.79),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_params() -> Table1Params {
+        // smaller workload for test speed; orderings are robust to size
+        Table1Params { seed: 2023, hw: 16, out_channels: 4 }
+    }
+
+    #[test]
+    fn accuracy_orderings_match_paper() {
+        let acc = accuracy_column(&small_params());
+        let get = |frag: &str| {
+            acc.iter().find(|(l, _)| l.contains(frag)).map(|(_, a)| *a).unwrap_or_else(|| panic!("{frag}"))
+        };
+        let fp32 = get("FPnew DPU FP32");
+        let fp16 = get("FPnew DPU FP16");
+        let pacogen = get("PACoGen");
+        let pdpu16 = get("PDPU P(16/16,2) N=4");
+        let pdpu13 = get("PDPU P(13/16,2) N=4");
+        let pdpu10 = get("PDPU P(10/16,2)");
+        let quire = get("Quire");
+
+        // FP32 is (essentially) the reference
+        assert!(fp32 > 0.999, "fp32 {fp32}");
+        // 16-bit posit beats FP16 at equal word size (the paper's central
+        // accuracy claim, rows PACoGen/PDPU-16 vs FPnew-FP16)
+        for (name, v) in [("pacogen", pacogen), ("pdpu16", pdpu16)] {
+            assert!(v > fp16, "{name} ({v}) must beat FP16 ({fp16})");
+        }
+        // NOTE: the paper's FP16 row drops all the way to 91.21 % — below
+        // even the 13-bit-input PDPU — on the authors' (unpublished)
+        // ImageNet conv1 tensor + metric. Our synthetic workload
+        // reproduces every ordering except that absolute magnitude; see
+        // EXPERIMENTS.md §T1 for the divergence note.
+        // P(10) inputs cost real accuracy vs P(13) (paper: 98.68 → 89.58)
+        assert!(pdpu10 < pdpu13 - 0.01, "p10 {pdpu10} vs p13 {pdpu13}");
+        // quire ≈ pdpu13 (negligible loss from Wm=14: paper 98.79 vs 98.69)
+        assert!((quire - pdpu13).abs() < 0.02, "quire {quire} pdpu13 {pdpu13}");
+        // mixed precision costs a little accuracy vs uniform P(16,2)
+        // (paper: 99.10 → 98.69)
+        assert!(pdpu13 < pdpu16, "pdpu13 {pdpu13} vs pdpu16 {pdpu16}");
+        // everything sane
+        for (l, a) in &acc {
+            assert!((0.0..=1.0).contains(a), "{l}: {a}");
+        }
+    }
+
+    #[test]
+    fn full_table_assembles() {
+        let rows = build(&small_params(), &Tech::default());
+        assert_eq!(rows.len(), 12);
+        let rendered = render(&rows);
+        assert!(rendered.contains("PACoGen"));
+        assert!(rendered.lines().count() >= 14);
+    }
+
+    #[test]
+    fn claims_directions_match_paper() {
+        let rows = build(&small_params(), &Tech::default());
+        let c = claims(&rows);
+        // paper: 43% / 64% / 70% savings — require the direction plus
+        // at least half the magnitude from the structural model
+        assert!(c.area_saving_vs_pacogen > 0.25, "{c:?}");
+        assert!(c.delay_saving_vs_pacogen > 0.40, "{c:?}");
+        assert!(c.power_saving_vs_pacogen > 0.40, "{c:?}");
+        // paper: 5.0× / 2.1× vs quire
+        assert!(c.area_eff_gain_vs_quire > 2.5, "{c:?}");
+        assert!(c.energy_eff_gain_vs_quire > 1.5, "{c:?}");
+        // paper: 3.1× / 3.5× vs posit FMA
+        assert!(c.area_eff_gain_vs_posit_fma > 1.8, "{c:?}");
+        assert!(c.energy_eff_gain_vs_posit_fma > 1.8, "{c:?}");
+    }
+
+    #[test]
+    fn paper_reference_rows_complete() {
+        assert_eq!(PAPER_ROWS.len(), 12);
+    }
+}

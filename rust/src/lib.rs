@@ -1,0 +1,39 @@
+//! # PDPU — posit dot-product unit, full-stack reproduction
+//!
+//! Reproduction of Li, Fang & Wang, *"PDPU: An Open-Source Posit
+//! Dot-Product Unit for Deep Learning Applications"* (ISCAS 2023), as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * [`posit`] — bit-exact posit arithmetic for any P(n,es), the quire, and
+//!   exact references (the paper's SoftPosit role).
+//! * [`pdpu`] — the paper's contribution: a bit-exact functional model of
+//!   the fused, mixed-precision, 6-stage dot-product datapath plus its
+//!   configurable generator and a cycle-level pipeline model.
+//! * [`baselines`] — every architecture PDPU is compared against in
+//!   Table I: discrete mul+add-tree DPUs, cascaded-FMA DPUs, the quire
+//!   PDPU, IEEE-754 (FPnew-style) DPUs/FMAs, and posit FMAs.
+//! * [`cost`] — a structural 28 nm-class area/delay/power model standing in
+//!   for Synopsys DC synthesis (see DESIGN.md substitution log).
+//! * [`dnn`] — the deep-learning workload substrate (tensors, layers,
+//!   posit quantization, synthetic conv1/MNIST-like datasets, metrics).
+//! * [`experiments`] — drivers that regenerate every table and figure.
+//! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts.
+//! * [`coordinator`] — the L3 serving layer: router, dynamic batcher,
+//!   PDPU-array scheduler with pipeline-occupancy modelling, TCP server.
+//! * [`testing`] — in-repo property-testing support (offline image has no
+//!   proptest).
+
+pub mod baselines;
+pub mod bench_harness;
+pub mod cli;
+pub mod coordinator;
+pub mod cost;
+pub mod dnn;
+pub mod experiments;
+pub mod runtime;
+pub mod pdpu;
+pub mod posit;
+pub mod testing;
+
+pub use pdpu::{Pdpu, PdpuConfig};
+pub use posit::{Posit, PositFormat};

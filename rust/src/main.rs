@@ -1,0 +1,13 @@
+//! `pdpu` — leader entrypoint: CLI over the full reproduction stack.
+//! See `pdpu help` (or [`pdpu::cli::USAGE`]).
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match pdpu::cli::run(argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,221 @@
+//! PDPU configuration — the software twin of the paper's *configurable
+//! PDPU generator* (§III-C).
+//!
+//! A configuration fixes the three degrees of freedom the paper calls out:
+//! * **custom posit formats** — independent input format (for the vectors
+//!   `Va`, `Vb`) and output format (for `acc` and `out`), enabling the
+//!   mixed-precision `P(n_in/n_out, es)` operating points of Table I;
+//! * **dot-product size** `N` — number of parallel product lanes;
+//! * **alignment width** `Wm` — bits of aligned mantissa kept in S3/S4,
+//!   the precision/cost knob that replaces a full quire.
+
+use crate::posit::{PositError, PositFormat};
+
+/// Full parameterization of one PDPU instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PdpuConfig {
+    /// Format of the elements of `Va` and `Vb`.
+    pub in_fmt: PositFormat,
+    /// Format of `acc` and `out` (may be wider: mixed precision).
+    pub out_fmt: PositFormat,
+    /// Dot-product size N (number of product terms per operation).
+    pub n: usize,
+    /// Alignment width Wm: bits of aligned mantissa kept before the CSA
+    /// tree. Larger = closer to exact (quire) accumulation.
+    pub wm: u32,
+}
+
+/// Errors from configuration validation.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum ConfigError {
+    #[error(transparent)]
+    Posit(#[from] PositError),
+    #[error("dot-product size N={0} out of supported range 1..=256")]
+    BadN(usize),
+    #[error("alignment width Wm={0} out of supported range 4..=96 (use the quire baseline beyond)")]
+    BadWm(u32),
+    #[error("accumulator width {0} exceeds the 127-bit functional-model limit; reduce Wm or N")]
+    AccTooWide(u32),
+}
+
+impl PdpuConfig {
+    /// Uniform-precision configuration `P(n,es)`, like the Table I
+    /// `P(16/16,2)` row.
+    pub fn uniform(n_bits: u32, es: u32, n: usize, wm: u32) -> Result<Self, ConfigError> {
+        let fmt = PositFormat::new(n_bits, es)?;
+        Self::new(fmt, fmt, n, wm)
+    }
+
+    /// Mixed-precision configuration `P(n_in/n_out, es)`, like the Table I
+    /// `P(13/16,2)` rows: narrow inputs, wider accumulator/output.
+    pub fn mixed(n_in: u32, n_out: u32, es: u32, n: usize, wm: u32) -> Result<Self, ConfigError> {
+        Self::new(PositFormat::new(n_in, es)?, PositFormat::new(n_out, es)?, n, wm)
+    }
+
+    /// Validated constructor.
+    pub fn new(in_fmt: PositFormat, out_fmt: PositFormat, n: usize, wm: u32) -> Result<Self, ConfigError> {
+        if !(1..=256).contains(&n) {
+            return Err(ConfigError::BadN(n));
+        }
+        if !(4..=96).contains(&wm) {
+            return Err(ConfigError::BadWm(wm));
+        }
+        let cfg = Self { in_fmt, out_fmt, n, wm };
+        let acc_w = cfg.acc_width();
+        if acc_w > 127 {
+            return Err(ConfigError::AccTooWide(acc_w));
+        }
+        Ok(cfg)
+    }
+
+    /// The paper's headline configuration: P(13/16,2), N=4, Wm=14.
+    pub fn paper_default() -> Self {
+        Self::mixed(13, 16, 2, 4, 14).expect("paper default must validate")
+    }
+
+    // ---- derived datapath widths (consumed by the cost model and the
+    // ---- stage implementations; these mirror the RTL generator's
+    // ---- localparam computations) ----
+
+    /// Fraction bits of one decoded input mantissa.
+    #[inline]
+    pub fn in_frac_bits(&self) -> u32 {
+        self.in_fmt.max_frac_bits()
+    }
+
+    /// Fraction bits of the decoded accumulator mantissa.
+    #[inline]
+    pub fn acc_frac_bits(&self) -> u32 {
+        self.out_fmt.max_frac_bits()
+    }
+
+    /// Width of one product mantissa `ma·mb` (two `1.f` operands):
+    /// `2·(mb+1)` bits, value in [1,4).
+    #[inline]
+    pub fn prod_width(&self) -> u32 {
+        2 * (self.in_frac_bits() + 1)
+    }
+
+    /// Bits needed for a product scale `e_ab = ea + eb` (signed).
+    pub fn eab_width(&self) -> u32 {
+        let span = 2 * self.in_fmt.max_scale().max(self.out_fmt.max_scale());
+        32 - (span as u32).leading_zeros() + 1 // magnitude bits + sign
+    }
+
+    /// Width of the S4 accumulator: Wm data bits grow by log2(N+1) for the
+    /// tree sum, plus one sign bit.
+    pub fn acc_width(&self) -> u32 {
+        self.wm + ceil_log2(self.n as u32 + 1) + 1
+    }
+
+    /// Maximum useful alignment shift: beyond this a term underflows the
+    /// Wm window entirely.
+    #[inline]
+    pub fn max_shift(&self) -> u32 {
+        self.wm
+    }
+
+    /// Number of posit decoders instantiated (2N inputs + 1 accumulator) —
+    /// the paper's "essential 2N+1 decoders" (§III-B).
+    #[inline]
+    pub fn num_decoders(&self) -> u32 {
+        2 * self.n as u32 + 1
+    }
+
+    /// Number of posit encoders instantiated (always 1 — fused output).
+    #[inline]
+    pub fn num_encoders(&self) -> u32 {
+        1
+    }
+
+    /// Depth of the exponent comparator tree over N+1 entries.
+    #[inline]
+    pub fn cmp_tree_depth(&self) -> u32 {
+        ceil_log2(self.n as u32 + 1)
+    }
+
+    /// A short human identifier like `P(13/16,2) N=4 Wm=14`.
+    pub fn label(&self) -> String {
+        if self.in_fmt == self.out_fmt {
+            format!("P({}/{},{}) N={} Wm={}", self.in_fmt.n(), self.out_fmt.n(), self.in_fmt.es(), self.n, self.wm)
+        } else {
+            format!(
+                "P({}/{},{}) N={} Wm={}",
+                self.in_fmt.n(),
+                self.out_fmt.n(),
+                self.in_fmt.es(),
+                self.n,
+                self.wm
+            )
+        }
+    }
+}
+
+/// ceil(log2(x)) for x ≥ 1.
+pub fn ceil_log2(x: u32) -> u32 {
+    debug_assert!(x >= 1);
+    32 - (x - 1).leading_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_log2_values() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(4), 2);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(8), 3);
+        assert_eq!(ceil_log2(9), 4);
+    }
+
+    #[test]
+    fn paper_default_widths() {
+        let cfg = PdpuConfig::paper_default();
+        assert_eq!(cfg.in_fmt, PositFormat::p(13, 2));
+        assert_eq!(cfg.out_fmt, PositFormat::p(16, 2));
+        assert_eq!(cfg.n, 4);
+        assert_eq!(cfg.wm, 14);
+        // P(13,2): 8 mantissa frac bits → 9-bit 1.f → 18-bit product
+        assert_eq!(cfg.in_frac_bits(), 8);
+        assert_eq!(cfg.prod_width(), 18);
+        assert_eq!(cfg.num_decoders(), 9);
+        assert_eq!(cfg.num_encoders(), 1);
+        assert_eq!(cfg.cmp_tree_depth(), 3);
+        // Wm=14 + ceil_log2(5)=3 + sign = 18
+        assert_eq!(cfg.acc_width(), 18);
+    }
+
+    #[test]
+    fn validation_rejects_bad_params() {
+        assert!(matches!(PdpuConfig::uniform(16, 2, 0, 14), Err(ConfigError::BadN(0))));
+        assert!(matches!(PdpuConfig::uniform(16, 2, 300, 14), Err(ConfigError::BadN(300))));
+        assert!(matches!(PdpuConfig::uniform(16, 2, 4, 3), Err(ConfigError::BadWm(3))));
+        assert!(matches!(PdpuConfig::uniform(16, 2, 4, 200), Err(ConfigError::BadWm(200))));
+        assert!(matches!(PdpuConfig::uniform(40, 2, 4, 14), Err(ConfigError::Posit(_))));
+        // Wm=96, N=256 → acc width 96+9+1 = 106 ≤ 127: fine
+        assert!(PdpuConfig::uniform(16, 2, 256, 96).is_ok());
+    }
+
+    #[test]
+    fn table1_configs_validate() {
+        // every PDPU row of Table I
+        for cfg in [
+            PdpuConfig::uniform(16, 2, 4, 14),
+            PdpuConfig::mixed(13, 16, 2, 4, 14),
+            PdpuConfig::mixed(13, 16, 2, 8, 14),
+            PdpuConfig::mixed(10, 16, 2, 8, 14),
+            PdpuConfig::mixed(13, 16, 2, 8, 10),
+        ] {
+            assert!(cfg.is_ok());
+        }
+    }
+
+    #[test]
+    fn label_formats() {
+        assert_eq!(PdpuConfig::paper_default().label(), "P(13/16,2) N=4 Wm=14");
+    }
+}

@@ -1,0 +1,19 @@
+//! The PDPU itself — the paper's contribution.
+//!
+//! * [`config`] — the configurable generator's parameter space (formats,
+//!   dot-product size N, alignment width Wm) and derived datapath widths.
+//! * [`stages`] — the six pipeline stages as pure functions with explicit
+//!   inter-stage records (S1 Decode … S6 Encode, Fig. 4).
+//! * [`unit`] — the composed functional unit: bit-exact `out = acc + Va·Vb`
+//!   plus chunk-based accumulation for long DNN dot products.
+//! * [`pipeline`] — cycle-level 6-stage timing model with RAW-hazard
+//!   tracking (feeds Fig. 6 and the coordinator's scheduler).
+
+pub mod config;
+pub mod pipeline;
+pub mod stages;
+pub mod unit;
+
+pub use config::{ceil_log2, ConfigError, PdpuConfig};
+pub use pipeline::{Pipeline, PipelineStats};
+pub use unit::{Pdpu, Trace};

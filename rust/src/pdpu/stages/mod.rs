@@ -1,0 +1,26 @@
+//! The six pipeline stages of PDPU (paper §III-A, Fig. 4), each as a pure
+//! function over explicit inter-stage records.
+//!
+//! Keeping the stages separate (rather than one fused routine) serves three
+//! purposes:
+//! 1. the records are exactly the pipeline registers of the RTL, so the
+//!    cycle-level model in [`super::pipeline`] and the per-stage cost
+//!    breakdown of Fig. 6 attach to real boundaries;
+//! 2. stage-local invariants (e.g. "every aligned addend fits the Wm
+//!    window") are testable in isolation;
+//! 3. the dataflow reads like the paper: S1 Decode → S2 Multiply →
+//!    S3 Align → S4 Accumulate → S5 Normalize → S6 Encode.
+
+pub mod s1_decode;
+pub mod s2_multiply;
+pub mod s3_align;
+pub mod s4_accumulate;
+pub mod s5_normalize;
+pub mod s6_encode;
+
+pub use s1_decode::{s1_decode, AccTerm, DecodedInputs, ProductTerm};
+pub use s2_multiply::{s2_multiply, MulTerm, Multiplied};
+pub use s3_align::{s3_align, Aligned};
+pub use s4_accumulate::{s4_accumulate, Accumulated};
+pub use s5_normalize::{s5_normalize, Normalized};
+pub use s6_encode::s6_encode;

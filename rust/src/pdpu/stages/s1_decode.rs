@@ -1,0 +1,170 @@
+//! S1 — Decode: parallel posit decoders extract the valid components of
+//! all 2N inputs and the accumulator; the product sign `s_ab` and product
+//! scale `e_ab` are formed here (paper §III-A, S1).
+//!
+//! Hardware correspondence: 2N+1 posit decoders (LZC + dynamic shifter
+//! each), N sign XORs, N scale adders.
+
+use crate::pdpu::PdpuConfig;
+use crate::posit::{decode, Decoded, Posit};
+
+/// One product lane after decode: the components of `aᵢ·bᵢ` before
+/// mantissa multiplication.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ProductTerm {
+    /// `s_ab = s_a ⊕ s_b`
+    pub sign: bool,
+    /// `e_ab = e_a + e_b` (combined regime+exponent scales)
+    pub e_ab: i32,
+    /// input mantissas `1.f` with `in_frac_bits` fraction bits
+    pub ma: u64,
+    pub mb: u64,
+    /// either operand was posit zero (lane contributes nothing)
+    pub zero: bool,
+}
+
+/// Decoded accumulator operand.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AccTerm {
+    pub sign: bool,
+    pub e_c: i32,
+    /// mantissa `1.f` with `acc_frac_bits` fraction bits
+    pub mc: u64,
+    pub zero: bool,
+}
+
+/// Pipeline register between S1 and S2.
+#[derive(Clone, Debug)]
+pub struct DecodedInputs {
+    pub products: Vec<ProductTerm>,
+    pub acc: AccTerm,
+    /// any operand (input or accumulator) was NaR — poisons the result
+    pub any_nar: bool,
+}
+
+/// Run stage S1 over a dot-product request.
+///
+/// `a`/`b` must each hold exactly `cfg.n` posits of `cfg.in_fmt`;
+/// `acc` must be of `cfg.out_fmt`.
+pub fn s1_decode(cfg: &PdpuConfig, acc: Posit, a: &[Posit], b: &[Posit]) -> DecodedInputs {
+    assert_eq!(a.len(), cfg.n, "Va length must equal configured N");
+    assert_eq!(b.len(), cfg.n, "Vb length must equal configured N");
+    debug_assert!(a.iter().chain(b).all(|p| p.format() == cfg.in_fmt));
+    debug_assert_eq!(acc.format(), cfg.out_fmt);
+
+    let mut any_nar = false;
+    let mut products = Vec::with_capacity(cfg.n);
+    for (&x, &y) in a.iter().zip(b) {
+        let (dx, dy) = (decode(x), decode(y));
+        match (dx, dy) {
+            (Decoded::NaR, _) | (_, Decoded::NaR) => {
+                any_nar = true;
+                products.push(ProductTerm { sign: false, e_ab: 0, ma: 0, mb: 0, zero: true });
+            }
+            (Decoded::Zero, _) | (_, Decoded::Zero) => {
+                products.push(ProductTerm { sign: false, e_ab: 0, ma: 0, mb: 0, zero: true });
+            }
+            (Decoded::Finite(fx), Decoded::Finite(fy)) => products.push(ProductTerm {
+                sign: fx.sign ^ fy.sign,
+                e_ab: fx.scale + fy.scale,
+                ma: fx.frac,
+                mb: fy.frac,
+                zero: false,
+            }),
+        }
+    }
+
+    let acc = match decode(acc) {
+        Decoded::NaR => {
+            any_nar = true;
+            AccTerm { sign: false, e_c: 0, mc: 0, zero: true }
+        }
+        Decoded::Zero => AccTerm { sign: false, e_c: 0, mc: 0, zero: true },
+        Decoded::Finite(f) => AccTerm { sign: f.sign, e_c: f.scale, mc: f.frac, zero: false },
+    };
+
+    DecodedInputs { products, acc, any_nar }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::PositFormat;
+
+    fn cfg() -> PdpuConfig {
+        PdpuConfig::paper_default()
+    }
+
+    fn pin(v: f64) -> Posit {
+        Posit::from_f64(v, PositFormat::p(13, 2))
+    }
+
+    fn pout(v: f64) -> Posit {
+        Posit::from_f64(v, PositFormat::p(16, 2))
+    }
+
+    #[test]
+    fn decodes_product_components() {
+        let c = cfg();
+        let a = [pin(2.0), pin(-3.0), pin(0.5), pin(1.0)];
+        let b = [pin(4.0), pin(5.0), pin(-0.25), pin(1.0)];
+        let d = s1_decode(&c, pout(7.0), &a, &b);
+        assert!(!d.any_nar);
+        assert_eq!(d.products.len(), 4);
+        // lane 0: 2·4 → sign +, e_ab = 1 + 2 = 3, both mantissas exactly 1.0
+        assert!(!d.products[0].sign);
+        assert_eq!(d.products[0].e_ab, 3);
+        assert_eq!(d.products[0].ma, 1 << c.in_frac_bits());
+        // lane 1: (−3)·5 → sign −, e_ab = 1 + 2
+        assert!(d.products[1].sign);
+        assert_eq!(d.products[1].e_ab, 3);
+        // lane 2: 0.5·(−0.25) → sign −, e_ab = −1 + −2 = −3
+        assert!(d.products[2].sign);
+        assert_eq!(d.products[2].e_ab, -3);
+        // acc: 7 = 2^2 · 1.75
+        assert!(!d.acc.zero);
+        assert_eq!(d.acc.e_c, 2);
+    }
+
+    #[test]
+    fn zero_lanes_marked() {
+        let c = cfg();
+        let a = [pin(0.0), pin(1.0), pin(0.0), pin(2.0)];
+        let b = [pin(1.0), pin(0.0), pin(0.0), pin(2.0)];
+        let d = s1_decode(&c, pout(0.0), &a, &b);
+        assert!(d.products[0].zero && d.products[1].zero && d.products[2].zero);
+        assert!(!d.products[3].zero);
+        assert!(d.acc.zero);
+        assert!(!d.any_nar);
+    }
+
+    #[test]
+    fn nar_poisons() {
+        let c = cfg();
+        let nar = Posit::nar(PositFormat::p(13, 2));
+        let a = [pin(1.0), nar, pin(1.0), pin(1.0)];
+        let b = [pin(1.0); 4];
+        assert!(s1_decode(&c, pout(0.0), &a, &b).any_nar);
+        let a = [pin(1.0); 4];
+        assert!(s1_decode(&c, Posit::nar(PositFormat::p(16, 2)), &a, &b).any_nar);
+    }
+
+    #[test]
+    #[should_panic(expected = "Va length")]
+    fn wrong_length_panics() {
+        let c = cfg();
+        let a = [pin(1.0); 3];
+        let b = [pin(1.0); 4];
+        s1_decode(&c, pout(0.0), &a, &b);
+    }
+
+    #[test]
+    fn mixed_precision_acc_uses_out_format() {
+        // acc mantissa must carry out_fmt's width (11 frac bits for P(16,2))
+        let c = cfg();
+        let a = [pin(1.0); 4];
+        let b = [pin(1.0); 4];
+        let d = s1_decode(&c, pout(1.5), &a, &b);
+        assert_eq!(d.acc.mc, 0b11 << (c.acc_frac_bits() - 1)); // 1.1₂ aligned to 11 frac bits
+    }
+}

@@ -1,0 +1,110 @@
+//! S2 — Multiply: mantissa multiplication (modelled functionally; the RTL
+//! uses a modified radix-4 Booth multiplier) and the exponent comparator
+//! tree that finds `e_max` over all product scales and the accumulator
+//! scale (paper §III-A, S2).
+//!
+//! Hardware correspondence: N Booth multipliers of `(mb+1)×(mb+1)` bits and
+//! a ceil(log2(N+1))-deep max tree over the scales.
+
+use super::s1_decode::DecodedInputs;
+use crate::pdpu::PdpuConfig;
+
+/// One lane after mantissa multiplication.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MulTerm {
+    pub sign: bool,
+    pub e_ab: i32,
+    /// exact product `ma·mb`: `prod_width` bits, value in [1,4) as a fixed
+    /// point with `2·in_frac_bits` fraction bits
+    pub m_ab: u128,
+    pub zero: bool,
+}
+
+/// Pipeline register between S2 and S3.
+#[derive(Clone, Debug)]
+pub struct Multiplied {
+    pub terms: Vec<MulTerm>,
+    /// decoded accumulator forwarded unchanged
+    pub acc: super::s1_decode::AccTerm,
+    /// max over all live `e_ab` and `e_c`; None when every lane and the
+    /// accumulator are zero
+    pub e_max: Option<i32>,
+    pub any_nar: bool,
+}
+
+/// Run stage S2.
+pub fn s2_multiply(cfg: &PdpuConfig, d: &DecodedInputs) -> Multiplied {
+    let mut terms = Vec::with_capacity(d.products.len());
+    let mut e_max: Option<i32> = None;
+    for p in &d.products {
+        let m_ab = (p.ma as u128) * (p.mb as u128);
+        debug_assert!(
+            p.zero || (m_ab >> (2 * cfg.in_frac_bits())) >= 1 && (m_ab >> (2 * cfg.in_frac_bits())) < 4,
+            "product out of [1,4): {m_ab:#x}"
+        );
+        if !p.zero {
+            e_max = Some(e_max.map_or(p.e_ab, |m| m.max(p.e_ab)));
+        }
+        terms.push(MulTerm { sign: p.sign, e_ab: p.e_ab, m_ab, zero: p.zero });
+    }
+    if !d.acc.zero {
+        e_max = Some(e_max.map_or(d.acc.e_c, |m| m.max(d.acc.e_c)));
+    }
+    Multiplied { terms, acc: d.acc, e_max, any_nar: d.any_nar }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::s1_decode::s1_decode;
+    use super::*;
+    use crate::posit::{Posit, PositFormat};
+
+    fn setup(vals_a: [f64; 4], vals_b: [f64; 4], acc: f64) -> (PdpuConfig, Multiplied) {
+        let cfg = PdpuConfig::paper_default();
+        let f_in = PositFormat::p(13, 2);
+        let f_out = PositFormat::p(16, 2);
+        let a: Vec<Posit> = vals_a.iter().map(|&v| Posit::from_f64(v, f_in)).collect();
+        let b: Vec<Posit> = vals_b.iter().map(|&v| Posit::from_f64(v, f_in)).collect();
+        let d = s1_decode(&cfg, Posit::from_f64(acc, f_out), &a, &b);
+        let m = s2_multiply(&cfg, &d);
+        (cfg, m)
+    }
+
+    #[test]
+    fn products_are_exact() {
+        let (cfg, m) = setup([1.5, 2.0, -3.0, 0.5], [1.5, 2.0, 3.0, 4.0], 0.0);
+        let fb2 = 2 * cfg.in_frac_bits();
+        // 1.5·1.5 = 2.25 → mantissas 1.5·1.5, e_ab 0
+        assert_eq!(m.terms[0].m_ab as f64 / (1u128 << fb2) as f64, 2.25);
+        assert_eq!(m.terms[0].e_ab, 0);
+        // 2·2: mantissas 1·1, scales 1+1
+        assert_eq!(m.terms[1].m_ab as f64 / (1u128 << fb2) as f64, 1.0);
+        assert_eq!(m.terms[1].e_ab, 2);
+        // −3·3 = −9 = −2^3·1.125: mantissa prod 1.5·1.5 = 2.25, e_ab 2
+        assert!(m.terms[2].sign);
+    }
+
+    #[test]
+    fn e_max_over_products_and_acc() {
+        // products scales: 0, 2, 2, 1 ; acc scale: 4 (16.0) → e_max = 4
+        let (_, m) = setup([1.5, 2.0, -3.0, 0.5], [1.5, 2.0, 3.0, 4.0], 16.0);
+        assert_eq!(m.e_max, Some(4));
+        // without acc: max product scale wins
+        let (_, m) = setup([1.5, 2.0, -3.0, 0.5], [1.5, 2.0, 3.0, 4.0], 0.0);
+        assert_eq!(m.e_max, Some(2));
+    }
+
+    #[test]
+    fn zero_lanes_excluded_from_emax() {
+        // large-magnitude lanes that are zeroed must not contaminate e_max
+        let (_, m) = setup([0.0, 0.0, 0.0, 1.0], [1e6, 1e6, 1e6, 1.0], 0.0);
+        assert_eq!(m.e_max, Some(0));
+    }
+
+    #[test]
+    fn all_zero_gives_no_emax() {
+        let (_, m) = setup([0.0; 4], [0.0; 4], 0.0);
+        assert_eq!(m.e_max, None);
+        assert!(m.terms.iter().all(|t| t.zero));
+    }
+}

@@ -1,0 +1,148 @@
+//! S3 — Align: shift every product mantissa (and the accumulator mantissa)
+//! onto a common fixed-point grid anchored at `e_max`, keeping only `Wm`
+//! bits, then convert to two's complement (paper §III-A, S3).
+//!
+//! This stage is where PDPU's precision/cost trade-off lives: the
+//! configurable alignment width `Wm` truncates bits that a full quire
+//! would keep. Truncation (not rounding) of the shifted magnitude matches
+//! the hardware, which simply drops shifted-out bits.
+//!
+//! Grid definition: bit `Wm-1` of an aligned word carries weight
+//! `2^(e_max+1)` (products reach values in [1,4) ⇒ 2 integer bits), so the
+//! LSB carries `2^(e_max + 2 − Wm)`.
+
+use super::s2_multiply::Multiplied;
+use crate::pdpu::PdpuConfig;
+
+/// Pipeline register between S3 and S4.
+#[derive(Clone, Debug)]
+pub struct Aligned {
+    /// N aligned product terms + 1 aligned accumulator term, two's
+    /// complement on the Wm grid (sign-extended into i128)
+    pub addends: Vec<i128>,
+    pub e_max: Option<i32>,
+    pub any_nar: bool,
+}
+
+/// Align one magnitude: `m` has `frac_bits` fraction bits and scale `e`
+/// (value `m·2^(e−frac_bits)`); place it on the grid with LSB weight
+/// `2^(e_max+2−wm)`, truncating low bits.
+fn align_one(m: u128, frac_bits: u32, e: i32, e_max: i32, wm: u32) -> u128 {
+    // target: floor( m · 2^(e − frac_bits) / 2^(e_max + 2 − wm) )
+    //       = floor( m · 2^(e − frac_bits − e_max − 2 + wm) )
+    let sh = e - frac_bits as i32 - e_max - 2 + wm as i32;
+    if sh >= 0 {
+        // grid finer than the source: shift up (never overflows — the
+        // value is ≤ 4·2^e ≤ 4·2^e_max and the grid gives it wm bits)
+        m << sh
+    } else if (-sh) as u32 >= 127 {
+        0
+    } else {
+        m >> ((-sh) as u32)
+    }
+}
+
+/// Run stage S3.
+pub fn s3_align(cfg: &PdpuConfig, m: &Multiplied) -> Aligned {
+    let Some(e_max) = m.e_max else {
+        return Aligned { addends: vec![0; m.terms.len() + 1], e_max: None, any_nar: m.any_nar };
+    };
+    let wm = cfg.wm;
+    let mut addends = Vec::with_capacity(m.terms.len() + 1);
+    for t in &m.terms {
+        if t.zero {
+            addends.push(0);
+            continue;
+        }
+        let mag = align_one(t.m_ab, 2 * cfg.in_frac_bits(), t.e_ab, e_max, wm);
+        debug_assert!(mag < (1u128 << wm), "aligned magnitude exceeds Wm window");
+        addends.push(if t.sign { -(mag as i128) } else { mag as i128 });
+    }
+    // accumulator: value < 2 ⇒ same grid, one integer bit
+    if m.acc.zero {
+        addends.push(0);
+    } else {
+        let mag = align_one(m.acc.mc as u128, cfg.acc_frac_bits(), m.acc.e_c, e_max, wm);
+        debug_assert!(mag < (1u128 << wm));
+        addends.push(if m.acc.sign { -(mag as i128) } else { mag as i128 });
+    }
+    Aligned { addends, e_max: Some(e_max), any_nar: m.any_nar }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{s1_decode, s2_multiply};
+    use super::*;
+    use crate::posit::Posit;
+
+    fn run(cfg: &PdpuConfig, va: &[f64], vb: &[f64], acc: f64) -> Aligned {
+        let a: Vec<Posit> = va.iter().map(|&v| Posit::from_f64(v, cfg.in_fmt)).collect();
+        let b: Vec<Posit> = vb.iter().map(|&v| Posit::from_f64(v, cfg.in_fmt)).collect();
+        let d = s1_decode(cfg, Posit::from_f64(acc, cfg.out_fmt), &a, &b);
+        s3_align(cfg, &s2_multiply(cfg, &d))
+    }
+
+    /// Interpret an aligned addend back as f64 on the grid.
+    fn grid_value(v: i128, e_max: i32, wm: u32) -> f64 {
+        v as f64 * 2f64.powi(e_max + 2 - wm as i32)
+    }
+
+    #[test]
+    fn dominant_term_alignment_is_exact_at_top() {
+        let cfg = PdpuConfig::paper_default();
+        let al = run(&cfg, &[2.0, 0.0, 0.0, 0.0], &[3.0, 0.0, 0.0, 0.0], 0.0);
+        let e_max = al.e_max.unwrap();
+        assert_eq!(e_max, 2); // 2·3: e_ab = 1+1 = 2 (1.5 mantissas)
+        assert_eq!(grid_value(al.addends[0], e_max, cfg.wm), 6.0);
+    }
+
+    #[test]
+    fn small_terms_truncate_toward_zero() {
+        let cfg = PdpuConfig::paper_default();
+        // lane0 dominates; lane1 = 1·(1+2^-8) needs more precision after a
+        // 14-bit shift than Wm keeps → truncated
+        let tiny = 1.0 + 2f64.powi(-8);
+        let al = run(&cfg, &[256.0, 1.0, 0.0, 0.0], &[256.0, tiny, 0.0, 0.0], 0.0);
+        let e_max = al.e_max.unwrap();
+        assert_eq!(e_max, 16);
+        let got = grid_value(al.addends[1], e_max, cfg.wm);
+        assert!(got <= tiny && got >= 0.0, "truncation must floor: {got}");
+        // dominant lane remains exact
+        assert_eq!(grid_value(al.addends[0], e_max, cfg.wm), 65536.0);
+    }
+
+    #[test]
+    fn negative_terms_are_twos_complement() {
+        let cfg = PdpuConfig::paper_default();
+        let al = run(&cfg, &[1.0, -1.0, 0.0, 0.0], &[1.0, 1.0, 0.0, 0.0], 0.0);
+        assert!(al.addends[0] > 0);
+        assert_eq!(al.addends[1], -al.addends[0]);
+    }
+
+    #[test]
+    fn far_underflow_vanishes() {
+        let cfg = PdpuConfig::paper_default();
+        // lane1 is > Wm bits below lane0 → contributes exactly 0
+        let al = run(&cfg, &[1024.0, 2f64.powi(-12), 0.0, 0.0], &[1024.0, 2f64.powi(-12), 0.0, 0.0], 0.0);
+        assert_ne!(al.addends[0], 0);
+        assert_eq!(al.addends[1], 0);
+    }
+
+    #[test]
+    fn acc_joins_the_grid() {
+        let cfg = PdpuConfig::paper_default();
+        let al = run(&cfg, &[1.0, 0.0, 0.0, 0.0], &[1.0, 0.0, 0.0, 0.0], -2.5);
+        let e_max = al.e_max.unwrap();
+        assert_eq!(e_max, 1); // acc scale (2.5 → e=1) beats product scale 0
+        assert_eq!(grid_value(al.addends[4], e_max, cfg.wm), -2.5);
+    }
+
+    #[test]
+    fn all_magnitudes_fit_wm_window() {
+        let cfg = PdpuConfig::paper_default();
+        let al = run(&cfg, &[100.0, -0.01, 7.5, 0.125], &[42.0, 3000.0, -7.5, 8.0], 12.0);
+        for &ad in &al.addends {
+            assert!(ad.unsigned_abs() < (1u128 << cfg.wm));
+        }
+    }
+}

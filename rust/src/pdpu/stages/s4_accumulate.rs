@@ -1,0 +1,126 @@
+//! S4 — Accumulate: compress the N+1 aligned two's-complement addends into
+//! sum and carry with a recursive CSA tree (3:2 / 4:2 compressors, Fig. 5),
+//! then a final adder produces the signed sum `s_m` and final sign `f_s`
+//! (paper §III-A, S4).
+//!
+//! Functionally a CSA tree is exact integer addition; the model adds in
+//! i128 and asserts the result fits the configured accumulator width
+//! `Wm + ceil(log2(N+1)) + 1` — the invariant that sizes the RTL adder.
+//! The tree *structure* (compressor counts, depth) is reconstructed by the
+//! cost model in [`crate::cost`], and [`csa_tree_shape`] here exposes the
+//! recursion used by both.
+
+use super::s3_align::Aligned;
+use crate::pdpu::PdpuConfig;
+
+/// Pipeline register between S4 and S5.
+#[derive(Clone, Copy, Debug)]
+pub struct Accumulated {
+    /// signed accumulated mantissa on the S3 grid
+    pub sum: i128,
+    pub e_max: Option<i32>,
+    pub any_nar: bool,
+}
+
+/// Run stage S4.
+pub fn s4_accumulate(cfg: &PdpuConfig, al: &Aligned) -> Accumulated {
+    debug_assert_eq!(al.addends.len(), cfg.n + 1);
+    let sum: i128 = al.addends.iter().sum();
+    // the RTL adder is acc_width() bits wide; the functional sum must fit
+    debug_assert!(
+        sum.unsigned_abs() <= (1u128 << (cfg.acc_width() - 1)),
+        "accumulated sum overflows the modeled adder width"
+    );
+    Accumulated { sum, e_max: al.e_max, any_nar: al.any_nar }
+}
+
+/// Shape of the recursive CSA tree over `inputs` operands, as (number of
+/// 3:2 compressors, number of 4:2 compressors, depth in compressor levels).
+///
+/// Mirrors the paper's Fig. 5 recursion: at each level, group remaining
+/// operands into 4:2 compressors (4 → 2) while at least 4 remain, use one
+/// 3:2 (3 → 2) for a leftover group of 3, pass smaller leftovers through.
+/// Terminates when 2 operands remain (fed to the final carry-propagate
+/// adder).
+pub fn csa_tree_shape(inputs: usize) -> CsaShape {
+    let mut count = inputs;
+    let (mut c32, mut c42, mut depth) = (0u32, 0u32, 0u32);
+    while count > 2 {
+        let mut next = 0;
+        let mut rem = count;
+        while rem >= 4 {
+            c42 += 1;
+            next += 2;
+            rem -= 4;
+        }
+        if rem == 3 {
+            c32 += 1;
+            next += 2;
+            rem = 0;
+        }
+        next += rem;
+        count = next;
+        depth += 1;
+    }
+    CsaShape { c32, c42, depth }
+}
+
+/// CSA tree structure summary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CsaShape {
+    /// number of 3:2 compressors
+    pub c32: u32,
+    /// number of 4:2 compressors
+    pub c42: u32,
+    /// levels of compression before the final adder
+    pub depth: u32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sum_is_exact_signed() {
+        let cfg = PdpuConfig::paper_default();
+        let al = Aligned { addends: vec![100, -30, 7, -80, 3], e_max: Some(0), any_nar: false };
+        let acc = s4_accumulate(&cfg, &al);
+        assert_eq!(acc.sum, 0);
+        let al = Aligned { addends: vec![1 << 13, 1 << 13, 1 << 13, 1 << 13, 1 << 13], e_max: Some(0), any_nar: false };
+        // 5 × 2^13 = 40960 < 2^17 (acc_width 18 → magnitude < 2^17) ✓
+        assert_eq!(s4_accumulate(&cfg, &al).sum, 5 << 13);
+    }
+
+    #[test]
+    fn csa_shape_small_cases() {
+        // 2 inputs: no compression needed
+        assert_eq!(csa_tree_shape(2), CsaShape { c32: 0, c42: 0, depth: 0 });
+        // 3 inputs: one 3:2
+        assert_eq!(csa_tree_shape(3), CsaShape { c32: 1, c42: 0, depth: 1 });
+        // 4 inputs: one 4:2
+        assert_eq!(csa_tree_shape(4), CsaShape { c32: 0, c42: 1, depth: 1 });
+        // 5 inputs (paper N=4 + acc): 4:2 → (2 + 1 leftover) = 3 → one 3:2
+        assert_eq!(csa_tree_shape(5), CsaShape { c32: 1, c42: 1, depth: 2 });
+        // 9 inputs (N=8 + acc): level1: two 4:2 + 1 left = 5; level2: 4:2 +1 = 3; level3: 3:2
+        assert_eq!(csa_tree_shape(9), CsaShape { c32: 1, c42: 3, depth: 3 });
+    }
+
+    #[test]
+    fn csa_shape_reduces_to_two() {
+        // simulate the reduction count for many sizes: compressors must
+        // shrink the operand count to exactly 2 in `depth` levels
+        for n in 2..200usize {
+            let shape = csa_tree_shape(n);
+            // each 4:2 removes 2 operands, each 3:2 removes 1
+            let removed = (2 * shape.c42 + shape.c32) as usize;
+            assert_eq!(n - removed, 2, "n={n}");
+        }
+    }
+
+    #[test]
+    fn csa_depth_is_logarithmic() {
+        assert!(csa_tree_shape(17).depth <= 4);
+        assert!(csa_tree_shape(65).depth <= 6);
+        assert!(csa_tree_shape(5).depth == 2);
+    }
+}

@@ -1,0 +1,102 @@
+//! S5 — Normalize: leading-zero count on the accumulated magnitude,
+//! mantissa normalization and exponent adjustment producing the final
+//! exponent `f_e` and mantissa `f_m` (paper §III-A, S5).
+//!
+//! Hardware correspondence: an `acc_width`-bit LZC plus a dynamic left
+//! shifter; the adjustment folds the S3 grid origin (`e_max + 2 − Wm`)
+//! into the final scale.
+
+use super::s4_accumulate::Accumulated;
+use crate::pdpu::PdpuConfig;
+
+/// Pipeline register between S5 and S6: a sign/scale/significand triple
+/// ready for posit encoding, or an exact zero.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Normalized {
+    Zero { any_nar: bool },
+    Value { sign: bool, scale: i32, sig: u128, sig_frac_bits: u32, any_nar: bool },
+}
+
+/// Run stage S5.
+pub fn s5_normalize(cfg: &PdpuConfig, a: &Accumulated) -> Normalized {
+    let Some(e_max) = a.e_max else {
+        return Normalized::Zero { any_nar: a.any_nar };
+    };
+    if a.sum == 0 {
+        return Normalized::Zero { any_nar: a.any_nar };
+    }
+    let sign = a.sum < 0;
+    let mag = a.sum.unsigned_abs();
+    let msb = 127 - mag.leading_zeros(); // LZC equivalent
+    // grid LSB weight is 2^(e_max + 2 − Wm) ⇒ value = mag · 2^(e_max+2−Wm)
+    // normalized: 1.f with `msb` fraction bits, scale = msb + e_max + 2 − Wm
+    let scale = msb as i32 + e_max + 2 - cfg.wm as i32;
+    Normalized::Value { sign, scale, sig: mag, sig_frac_bits: msb, any_nar: a.any_nar }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> PdpuConfig {
+        PdpuConfig::paper_default()
+    }
+
+    fn value_of(n: &Normalized) -> f64 {
+        match *n {
+            Normalized::Zero { .. } => 0.0,
+            Normalized::Value { sign, scale, sig, sig_frac_bits, .. } => {
+                let v = sig as f64 * 2f64.powi(scale - sig_frac_bits as i32);
+                if sign {
+                    -v
+                } else {
+                    v
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_sum_normalizes_to_zero() {
+        let c = cfg();
+        let n = s5_normalize(&c, &Accumulated { sum: 0, e_max: Some(5), any_nar: false });
+        assert_eq!(n, Normalized::Zero { any_nar: false });
+        let n = s5_normalize(&c, &Accumulated { sum: 0, e_max: None, any_nar: false });
+        assert_eq!(n, Normalized::Zero { any_nar: false });
+    }
+
+    #[test]
+    fn grid_value_reconstructed() {
+        let c = cfg(); // wm = 14
+        // sum = 1 on grid with e_max = 0 → value = 2^(0+2−14) = 2^-12
+        let n = s5_normalize(&c, &Accumulated { sum: 1, e_max: Some(0), any_nar: false });
+        assert_eq!(value_of(&n), 2f64.powi(-12));
+        // sum = −6 on grid e_max = 3 → −6·2^(3+2−14) = −6·2^-9
+        let n = s5_normalize(&c, &Accumulated { sum: -6, e_max: Some(3), any_nar: false });
+        assert_eq!(value_of(&n), -6.0 * 2f64.powi(-9));
+    }
+
+    #[test]
+    fn significand_is_normalized() {
+        let c = cfg();
+        for sum in [1i128, 3, 7, 100, -100, 4096, -4097, (1 << 17) - 1] {
+            match s5_normalize(&c, &Accumulated { sum, e_max: Some(2), any_nar: false }) {
+                Normalized::Zero { .. } => panic!("nonzero sum normalized to zero"),
+                Normalized::Value { sig, sig_frac_bits, .. } => {
+                    assert_eq!(sig >> sig_frac_bits, 1, "hidden bit must be the MSB");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nar_flag_propagates() {
+        let c = cfg();
+        let n = s5_normalize(&c, &Accumulated { sum: 5, e_max: Some(0), any_nar: true });
+        matches!(n, Normalized::Value { any_nar: true, .. })
+            .then_some(())
+            .expect("nar flag lost");
+        let n = s5_normalize(&c, &Accumulated { sum: 0, e_max: None, any_nar: true });
+        assert_eq!(n, Normalized::Zero { any_nar: true });
+    }
+}

@@ -1,0 +1,71 @@
+//! S6 — Encode: the single posit encoder performs rounding and packs the
+//! final sign/exponent/mantissa into the output posit (paper §III-A, S6).
+//!
+//! This is the *only* rounding in the whole PDPU datapath — the fused
+//! property of §III-B. (The S3 alignment truncation is a precision loss
+//! but not a posit rounding/encoding step; it is the price of Wm < quire.)
+
+use super::s5_normalize::Normalized;
+use crate::pdpu::PdpuConfig;
+use crate::posit::{encode, Posit, Unpacked};
+
+/// Run stage S6, producing the final output posit in `cfg.out_fmt`.
+pub fn s6_encode(cfg: &PdpuConfig, n: &Normalized) -> Posit {
+    match *n {
+        Normalized::Zero { any_nar } => {
+            if any_nar {
+                Posit::nar(cfg.out_fmt)
+            } else {
+                Posit::zero(cfg.out_fmt)
+            }
+        }
+        Normalized::Value { any_nar, .. } if any_nar => Posit::nar(cfg.out_fmt),
+        Normalized::Value { sign, scale, sig, sig_frac_bits, .. } => {
+            let bits = encode(
+                Unpacked { sign, scale, sig, sig_frac_bits, sticky: false },
+                cfg.out_fmt,
+            );
+            Posit::from_bits(bits, cfg.out_fmt)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::PositFormat;
+
+    fn cfg() -> PdpuConfig {
+        PdpuConfig::paper_default()
+    }
+
+    #[test]
+    fn zero_and_nar_paths() {
+        let c = cfg();
+        assert!(s6_encode(&c, &Normalized::Zero { any_nar: false }).is_zero());
+        assert!(s6_encode(&c, &Normalized::Zero { any_nar: true }).is_nar());
+        let poisoned = Normalized::Value { sign: false, scale: 0, sig: 1, sig_frac_bits: 0, any_nar: true };
+        assert!(s6_encode(&c, &poisoned).is_nar());
+    }
+
+    #[test]
+    fn encodes_in_output_format() {
+        let c = cfg();
+        // 2^3 · 1.375 = 11 must encode in P(16,2), not P(13,2)
+        let n = Normalized::Value { sign: false, scale: 3, sig: 0b1011, sig_frac_bits: 3, any_nar: false };
+        let p = s6_encode(&c, &n);
+        assert_eq!(p.format(), PositFormat::p(16, 2));
+        assert_eq!(p.to_f64(), 11.0);
+    }
+
+    #[test]
+    fn rounding_happens_here() {
+        let c = cfg();
+        // a 30-bit significand cannot fit P(16,2): S6 must round it
+        let sig = (1u128 << 30) | 0x1234_5677;
+        let n = Normalized::Value { sign: true, scale: 0, sig, sig_frac_bits: 30, any_nar: false };
+        let p = s6_encode(&c, &n);
+        let exact = -(sig as f64) * 2f64.powi(-30);
+        assert_eq!(p.bits(), Posit::from_f64(exact, PositFormat::p(16, 2)).bits());
+    }
+}

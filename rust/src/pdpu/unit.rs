@@ -1,0 +1,293 @@
+//! The PDPU functional unit: composition of the six stages into the
+//! combinational dot-product operation of Eq. (2):
+//!
+//! ```text
+//! out = acc + Va·Vb = acc + a₀·b₀ + a₁·b₁ + … + a_{N−1}·b_{N−1}
+//! ```
+//!
+//! Bit-exact: this computes exactly what the RTL computes, including the
+//! S3 alignment truncation at `Wm` bits and the single S6 rounding.
+
+use super::config::PdpuConfig;
+use super::stages::*;
+use crate::posit::Posit;
+
+/// A PDPU instance (one hardware unit of a fixed configuration).
+#[derive(Clone, Debug)]
+pub struct Pdpu {
+    cfg: PdpuConfig,
+}
+
+/// Every inter-stage record of one operation — the pipeline registers the
+/// RTL would latch. Used by stage-invariant tests and debugging.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub s1: DecodedInputs,
+    pub s2: Multiplied,
+    pub s3: Aligned,
+    pub s4: Accumulated,
+    pub s5: Normalized,
+    pub out: Posit,
+}
+
+impl Pdpu {
+    pub fn new(cfg: PdpuConfig) -> Self {
+        Self { cfg }
+    }
+
+    #[inline]
+    pub fn config(&self) -> &PdpuConfig {
+        &self.cfg
+    }
+
+    /// One fused dot-product-accumulate: `acc + Σᵢ aᵢ·bᵢ`, rounded once.
+    ///
+    /// `a`/`b` must hold exactly `N` posits of the input format; `acc` and
+    /// the result are in the output format.
+    pub fn dot(&self, acc: Posit, a: &[Posit], b: &[Posit]) -> Posit {
+        let s1 = s1_decode(&self.cfg, acc, a, b);
+        let s2 = s2_multiply(&self.cfg, &s1);
+        let s3 = s3_align(&self.cfg, &s2);
+        let s4 = s4_accumulate(&self.cfg, &s3);
+        let s5 = s5_normalize(&self.cfg, &s4);
+        s6_encode(&self.cfg, &s5)
+    }
+
+    /// Like [`Self::dot`] but returning all intermediate stage records.
+    pub fn dot_trace(&self, acc: Posit, a: &[Posit], b: &[Posit]) -> Trace {
+        let s1 = s1_decode(&self.cfg, acc, a, b);
+        let s2 = s2_multiply(&self.cfg, &s1);
+        let s3 = s3_align(&self.cfg, &s2);
+        let s4 = s4_accumulate(&self.cfg, &s3);
+        let s5 = s5_normalize(&self.cfg, &s4);
+        let out = s6_encode(&self.cfg, &s5);
+        Trace { s1, s2, s3, s4, s5, out }
+    }
+
+    /// Chunk-based accumulation over arbitrary-length vectors (paper
+    /// §III-C: "dot-product operations in DNNs are usually divided into
+    /// smaller chunks and performed by chunk-based accumulation").
+    ///
+    /// Splits `a`/`b` into chunks of `N` (zero-padding the tail), feeding
+    /// each chunk's result back as the next accumulator. The intermediate
+    /// accumulator stays in the output format — this round-trip through
+    /// `out_fmt` per chunk is exactly the hardware's behaviour and the
+    /// source of chunked accumulation's residual error vs. one giant quire.
+    pub fn dot_chunked(&self, acc: Posit, a: &[Posit], b: &[Posit]) -> Posit {
+        assert_eq!(a.len(), b.len(), "vector length mismatch");
+        let n = self.cfg.n;
+        let zero = Posit::zero(self.cfg.in_fmt);
+        let mut acc = acc;
+        let mut buf_a = vec![zero; n];
+        let mut buf_b = vec![zero; n];
+        for (ca, cb) in a.chunks(n).zip(b.chunks(n)) {
+            if ca.len() == n {
+                acc = self.dot(acc, ca, cb);
+            } else {
+                buf_a[..ca.len()].copy_from_slice(ca);
+                buf_a[ca.len()..].fill(zero);
+                buf_b[..cb.len()].copy_from_slice(cb);
+                buf_b[cb.len()..].fill(zero);
+                acc = self.dot(acc, &buf_a, &buf_b);
+            }
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::quire::exact_dot;
+    use crate::posit::{p_fma, PositFormat};
+    use crate::testing::{check, Rng};
+
+    fn rand_posit(rng: &mut Rng, fmt: PositFormat) -> Posit {
+        // random finite posit over the full pattern space
+        loop {
+            let p = Posit::from_bits(rng.next_u64() as u32 & fmt.mask(), fmt);
+            if !p.is_nar() {
+                return p;
+            }
+        }
+    }
+
+    fn rand_moderate(rng: &mut Rng, fmt: PositFormat, log2_span: f64) -> Posit {
+        Posit::from_f64(rng.log_uniform_signed(-log2_span, log2_span), fmt)
+    }
+
+    /// With Wm large enough to cover the whole alignment span of the data,
+    /// PDPU must agree with the exact quire bit-for-bit: the fused
+    /// architecture with unbounded Wm IS a quire.
+    #[test]
+    fn matches_quire_when_wm_covers_span() {
+        let cfg = PdpuConfig::mixed(8, 16, 2, 4, 96).unwrap();
+        let unit = Pdpu::new(cfg);
+        check("pdpu≡quire @ wm=96", 0x51AB, 2_000, |rng, _| {
+            // data within 2^±10 ⇒ product scales within ±20+…; span ≪ 96
+            let a: Vec<Posit> = (0..4).map(|_| rand_moderate(rng, cfg.in_fmt, 10.0)).collect();
+            let b: Vec<Posit> = (0..4).map(|_| rand_moderate(rng, cfg.in_fmt, 10.0)).collect();
+            let acc = rand_moderate(rng, cfg.out_fmt, 15.0);
+            let got = unit.dot(acc, &a, &b);
+            let want = exact_dot(acc, &a, &b, cfg.out_fmt);
+            assert_eq!(got.bits(), want.bits(), "a={a:?} b={b:?} acc={acc:?}");
+        });
+    }
+
+    /// N=1, large Wm: PDPU degenerates to a fused multiply-add.
+    #[test]
+    fn n1_equals_fma() {
+        let cfg = PdpuConfig::uniform(16, 2, 1, 96).unwrap();
+        let unit = Pdpu::new(cfg);
+        check("pdpu(n=1)≡fma", 0xF1A, 3_000, |rng, _| {
+            let a = rand_moderate(rng, cfg.in_fmt, 14.0);
+            let b = rand_moderate(rng, cfg.in_fmt, 14.0);
+            let c = rand_moderate(rng, cfg.out_fmt, 20.0);
+            let got = unit.dot(c, &[a], &[b]);
+            let want = p_fma(a, b, c, cfg.out_fmt);
+            assert_eq!(got.bits(), want.bits(), "{a:?}·{b:?}+{c:?}");
+        });
+    }
+
+    /// Analytic error bound of the Wm truncation: each of the N+1 aligned
+    /// addends truncates toward zero by less than one grid ulp
+    /// (2^(e_max+2−Wm)), and S6 adds at most half an output ulp. The
+    /// Wm=14 paper configuration must respect this bound on every input.
+    #[test]
+    fn paper_config_respects_truncation_bound() {
+        let cfg = PdpuConfig::paper_default();
+        let unit = Pdpu::new(cfg);
+        check("pdpu(wm=14) within (N+1) grid ulps of quire", 0xCAFE, 3_000, |rng, _| {
+            let a: Vec<Posit> = (0..4).map(|_| Posit::from_f64(rng.normal(), cfg.in_fmt)).collect();
+            let b: Vec<Posit> = (0..4).map(|_| Posit::from_f64(rng.normal(), cfg.in_fmt)).collect();
+            let acc = Posit::from_f64(rng.normal(), cfg.out_fmt);
+            let t = unit.dot_trace(acc, &a, &b);
+            let got = t.out;
+            let want = exact_dot(acc, &a, &b, cfg.out_fmt);
+            let Some(e_max) = t.s2.e_max else {
+                assert_eq!(got.bits(), want.bits());
+                return;
+            };
+            let grid_ulp = 2f64.powi(e_max + 2 - cfg.wm as i32);
+            let truncation = (cfg.n as f64 + 1.0) * grid_ulp;
+            // want is the correctly-rounded exact value: distance between
+            // the two f64 readings is ≤ truncation + one output rounding
+            // step each side. Output ulp near `want`:
+            let out_ulp = (want.succ().to_f64() - want.to_f64()).abs().max(f64::MIN_POSITIVE);
+            let diff = (got.to_f64() - want.to_f64()).abs();
+            assert!(
+                diff <= truncation + out_ulp,
+                "diff {diff:.3e} > bound {:.3e} (got {got:?} want {want:?} a={a:?} b={b:?} acc={acc:?})",
+                truncation + out_ulp
+            );
+        });
+    }
+
+    /// Wm monotonicity: increasing the alignment width can only move the
+    /// result closer to (or keep it at) the exact quire value.
+    #[test]
+    fn wm_monotonically_improves_accuracy() {
+        let mut rng = Rng::seeded(0x3141);
+        let mut err = std::collections::HashMap::<u32, f64>::new();
+        for _ in 0..800 {
+            let a: Vec<Posit> =
+                (0..4).map(|_| Posit::from_f64(rng.normal_ms(0.0, 2.0), PositFormat::p(13, 2))).collect();
+            let b: Vec<Posit> =
+                (0..4).map(|_| Posit::from_f64(rng.normal_ms(0.0, 2.0), PositFormat::p(13, 2))).collect();
+            let acc = Posit::zero(PositFormat::p(16, 2));
+            let exact = exact_dot(acc, &a, &b, PositFormat::p(16, 2)).to_f64();
+            for wm in [6u32, 10, 14, 20, 30] {
+                let cfg = PdpuConfig::mixed(13, 16, 2, 4, wm).unwrap();
+                let got = Pdpu::new(cfg).dot(acc, &a, &b).to_f64();
+                *err.entry(wm).or_insert(0.0) += (got - exact).abs();
+            }
+        }
+        assert!(err[&6] >= err[&10] && err[&10] >= err[&14], "{err:?}");
+        assert!(err[&14] >= err[&20] && err[&20] >= err[&30], "{err:?}");
+        assert!(err[&30] < 1e-12, "wm=30 should be exact on this data: {err:?}");
+    }
+
+    #[test]
+    fn nar_and_zero_semantics() {
+        let cfg = PdpuConfig::paper_default();
+        let unit = Pdpu::new(cfg);
+        let zero_in = Posit::zero(cfg.in_fmt);
+        let zero_out = Posit::zero(cfg.out_fmt);
+        let one = Posit::one(cfg.in_fmt);
+        // all zeros → zero
+        assert!(unit.dot(zero_out, &[zero_in; 4], &[zero_in; 4]).is_zero());
+        // NaR anywhere → NaR
+        let nar_in = Posit::nar(cfg.in_fmt);
+        assert!(unit.dot(zero_out, &[one, nar_in, one, one], &[one; 4]).is_nar());
+        assert!(unit.dot(Posit::nar(cfg.out_fmt), &[one; 4], &[one; 4]).is_nar());
+        // 1·1 ×4 + 0 = 4
+        assert_eq!(unit.dot(zero_out, &[one; 4], &[one; 4]).to_f64(), 4.0);
+    }
+
+    #[test]
+    fn perfect_cancellation_yields_zero() {
+        let cfg = PdpuConfig::paper_default();
+        let unit = Pdpu::new(cfg);
+        let x = Posit::from_f64(1.7, cfg.in_fmt);
+        let y = Posit::from_f64(-1.7, cfg.in_fmt);
+        let one = Posit::one(cfg.in_fmt);
+        let z = Posit::zero(cfg.in_fmt);
+        let out = unit.dot(Posit::zero(cfg.out_fmt), &[x, y, z, z], &[one, one, z, z]);
+        assert!(out.is_zero(), "{out:?}");
+    }
+
+    #[test]
+    fn dot_chunked_matches_manual_loop() {
+        let cfg = PdpuConfig::paper_default();
+        let unit = Pdpu::new(cfg);
+        let mut rng = Rng::seeded(0xC0DE);
+        for len in [1usize, 3, 4, 5, 8, 11, 147] {
+            let a: Vec<Posit> = (0..len).map(|_| Posit::from_f64(rng.normal(), cfg.in_fmt)).collect();
+            let b: Vec<Posit> = (0..len).map(|_| Posit::from_f64(rng.normal(), cfg.in_fmt)).collect();
+            let chunked = unit.dot_chunked(Posit::zero(cfg.out_fmt), &a, &b);
+            // manual: pad to multiple of N, loop dot()
+            let zero = Posit::zero(cfg.in_fmt);
+            let mut pa = a.clone();
+            let mut pb = b.clone();
+            while pa.len() % cfg.n != 0 {
+                pa.push(zero);
+                pb.push(zero);
+            }
+            let mut acc = Posit::zero(cfg.out_fmt);
+            for i in (0..pa.len()).step_by(cfg.n) {
+                acc = unit.dot(acc, &pa[i..i + cfg.n], &pb[i..i + cfg.n]);
+            }
+            assert_eq!(chunked.bits(), acc.bits(), "len={len}");
+        }
+    }
+
+    /// Stage invariants on random traces.
+    #[test]
+    fn trace_invariants() {
+        let cfg = PdpuConfig::paper_default();
+        let unit = Pdpu::new(cfg);
+        check("stage invariants", 0x7ACE, 1_500, |rng, _| {
+            let a: Vec<Posit> = (0..4).map(|_| rand_posit(rng, cfg.in_fmt)).collect();
+            let b: Vec<Posit> = (0..4).map(|_| rand_posit(rng, cfg.in_fmt)).collect();
+            let acc = rand_posit(rng, cfg.out_fmt);
+            let t = unit.dot_trace(acc, &a, &b);
+            // e_max dominates every live scale
+            if let Some(emax) = t.s2.e_max {
+                for term in &t.s2.terms {
+                    if !term.zero {
+                        assert!(term.e_ab <= emax);
+                    }
+                }
+                if !t.s2.acc.zero {
+                    assert!(t.s2.acc.e_c <= emax);
+                }
+            }
+            // aligned magnitudes fit the window
+            for &ad in &t.s3.addends {
+                assert!(ad.unsigned_abs() < (1u128 << cfg.wm));
+            }
+            // accumulated sum fits the modeled adder
+            assert!(t.s4.sum.unsigned_abs() <= (1u128 << (cfg.acc_width() - 1)));
+        });
+    }
+}

@@ -1,0 +1,494 @@
+//! Correctly-rounded scalar posit arithmetic: add, sub, mul, fma.
+//!
+//! Each operation performs exactly **one** rounding (decode → exact
+//! compute with sticky → encode). These are the building blocks of the
+//! *discrete* dot-product units PDPU is compared against in Table I: a
+//! discrete DPU rounds after every multiply and every add, which is
+//! precisely the per-op rounding implemented here.
+//!
+//! Mixed formats are allowed everywhere: inputs may differ from each other
+//! and from the output format, mirroring the paper's mixed-precision
+//! P(n_in / n_out, es) notation.
+
+use super::{decode, encode, Decoded, Posit, PositFormat, Unpacked};
+
+/// Negate (exact; posits are symmetric under negation).
+pub fn p_neg(a: Posit) -> Posit {
+    let fmt = a.format();
+    Posit::from_bits(a.bits().wrapping_neg(), fmt)
+}
+
+/// Correctly-rounded multiplication into `out_fmt`.
+pub fn p_mul(a: Posit, b: Posit, out_fmt: PositFormat) -> Posit {
+    match (decode(a), decode(b)) {
+        (Decoded::NaR, _) | (_, Decoded::NaR) => Posit::nar(out_fmt),
+        (Decoded::Zero, _) | (_, Decoded::Zero) => Posit::zero(out_fmt),
+        (Decoded::Finite(fa), Decoded::Finite(fb)) => {
+            let sig = (fa.frac as u128) * (fb.frac as u128);
+            let fb_bits = fa.frac_bits + fb.frac_bits;
+            // product of 1.x × 1.y ∈ [1,4): normalize may shift by one
+            let u = Unpacked::normalize(fa.sign ^ fb.sign, fa.scale + fb.scale, sig, fb_bits, false)
+                .expect("nonzero product");
+            Posit::from_bits(encode(u, out_fmt), out_fmt)
+        }
+    }
+}
+
+/// Correctly-rounded addition into `out_fmt`.
+pub fn p_add(a: Posit, b: Posit, out_fmt: PositFormat) -> Posit {
+    match (decode(a), decode(b)) {
+        (Decoded::NaR, _) | (_, Decoded::NaR) => Posit::nar(out_fmt),
+        (Decoded::Zero, Decoded::Zero) => Posit::zero(out_fmt),
+        (Decoded::Zero, Decoded::Finite(f)) | (Decoded::Finite(f), Decoded::Zero) => {
+            // still a rounding: the surviving operand may not be
+            // representable in out_fmt
+            let u = Unpacked {
+                sign: f.sign,
+                scale: f.scale,
+                sig: f.frac as u128,
+                sig_frac_bits: f.frac_bits,
+                sticky: false,
+            };
+            Posit::from_bits(encode(u, out_fmt), out_fmt)
+        }
+        (Decoded::Finite(fa), Decoded::Finite(fb)) => {
+            add_fields(fa.sign, fa.scale, fa.frac as u128, fa.frac_bits, fb.sign, fb.scale, fb.frac as u128, fb.frac_bits, out_fmt)
+        }
+    }
+}
+
+/// Correctly-rounded subtraction into `out_fmt`.
+pub fn p_sub(a: Posit, b: Posit, out_fmt: PositFormat) -> Posit {
+    p_add(a, p_neg(b), out_fmt)
+}
+
+/// Correctly-rounded fused multiply-add `a·b + c` into `out_fmt` — the
+/// single-rounding FMA semantics of the posit FMA baselines [17][35].
+pub fn p_fma(a: Posit, b: Posit, c: Posit, out_fmt: PositFormat) -> Posit {
+    let (da, db, dc) = (decode(a), decode(b), decode(c));
+    if da.is_nar() || db.is_nar() || dc.is_nar() {
+        return Posit::nar(out_fmt);
+    }
+    match (da, db) {
+        (Decoded::Zero, _) | (_, Decoded::Zero) => match dc {
+            Decoded::Zero => Posit::zero(out_fmt),
+            Decoded::Finite(f) => {
+                let u = Unpacked {
+                    sign: f.sign,
+                    scale: f.scale,
+                    sig: f.frac as u128,
+                    sig_frac_bits: f.frac_bits,
+                    sticky: false,
+                };
+                Posit::from_bits(encode(u, out_fmt), out_fmt)
+            }
+            Decoded::NaR => unreachable!(),
+        },
+        (Decoded::Finite(fa), Decoded::Finite(fb)) => {
+            let psig = (fa.frac as u128) * (fb.frac as u128);
+            let pfb = fa.frac_bits + fb.frac_bits;
+            let psign = fa.sign ^ fb.sign;
+            let pscale = fa.scale + fb.scale;
+            match dc {
+                Decoded::Zero => {
+                    let u = Unpacked::normalize(psign, pscale, psig, pfb, false).unwrap();
+                    Posit::from_bits(encode(u, out_fmt), out_fmt)
+                }
+                Decoded::Finite(fc) => add_fields(
+                    psign, pscale, psig, pfb, fc.sign, fc.scale, fc.frac as u128, fc.frac_bits, out_fmt,
+                ),
+                Decoded::NaR => unreachable!(),
+            }
+        }
+        _ => unreachable!(),
+    }
+}
+
+/// Exact signed addition of two unpacked magnitudes followed by a single
+/// rounding. Shared by add and fma.
+///
+/// Strategy: bring both to a common fixed-point grid inside a u128 with
+/// headroom; shifts that would fall off the bottom fold into sticky.
+#[allow(clippy::too_many_arguments)]
+fn add_fields(
+    s1: bool,
+    e1: i32,
+    m1: u128,
+    f1: u32,
+    s2: bool,
+    e2: i32,
+    m2: u128,
+    f2: u32,
+    out_fmt: PositFormat,
+) -> Posit {
+    // Normalize operand order so |op1| has the larger scale (for equal
+    // scales order doesn't matter for exactness).
+    let (s1, e1, m1, f1, s2, e2, m2, f2) =
+        if e1 >= e2 { (s1, e1, m1, f1, s2, e2, m2, f2) } else { (s2, e2, m2, f2, s1, e1, m1, f1) };
+
+    // Put m1 at a fixed reference: value = m1 · 2^(e1 - f1). Align m2 to the
+    // same grid: shift by (e1 - f1) - (e2 - f2) relative bit positions.
+    //
+    // Give both operands a common fraction width F = max(f1, f2) + headroom,
+    // keeping everything ≤ 127 bits: significands are ≤ 61 bits (mantissa
+    // products), so F ≤ 64 leaves ≥ 63 bits of alignment room; larger
+    // alignment distances collapse into sticky.
+    let fmax = f1.max(f2);
+    let a1 = m1 << (fmax - f1); // exact
+    let a2 = m2 << (fmax - f2);
+    let diff = (e1 - e2) as u32; // ≥ 0 by the swap above
+
+    let headroom = a1.leading_zeros().saturating_sub(1);
+    let (lhs, rhs, grid_fb, sticky) = if diff <= headroom {
+        // shift the larger operand up — fully exact
+        (a1 << diff, a2, fmax + diff, false)
+    } else {
+        // shift the larger up as far as possible, the smaller down with sticky
+        let up = headroom;
+        let down = diff - up;
+        let lhs = a1 << up;
+        if down >= 127 {
+            (lhs, 0u128, fmax + up, m2 != 0)
+        } else {
+            let sticky = a2 & ((1u128 << down) - 1) != 0;
+            (lhs, a2 >> down, fmax + up, sticky)
+        }
+    };
+
+    // signed add in i128-like arithmetic over u128 magnitudes
+    let (sum_sign, sum_mag, borrow_sticky) = if s1 == s2 {
+        (s1, lhs.checked_add(rhs).expect("headroom guaranteed"), false)
+    } else if lhs >= rhs {
+        (s1, lhs - rhs, false)
+    } else {
+        (s2, rhs - lhs, false)
+    };
+    let _ = borrow_sticky;
+
+    // NOTE on sticky during effective subtraction: the discarded bits of the
+    // smaller operand belong to the value being subtracted. Folding them
+    // into a plain sticky flag can mis-round by one ulp in the borrow case
+    // (sticky says "a bit more magnitude below", but subtraction means the
+    // true result is *smaller*). Handle by biasing: when signs differ and
+    // sticky is set, subtract one ulp from the grid and set sticky — the
+    // true value lies strictly between (sum_mag - 1) and sum_mag.
+    let (sum_mag, sticky) = if sticky && s1 != s2 {
+        (sum_mag - 1, true)
+    } else {
+        (sum_mag, sticky)
+    };
+
+    match Unpacked::normalize(sum_sign, 0 /* adjusted below */, sum_mag, grid_fb, sticky) {
+        None => Posit::zero(out_fmt),
+        Some(mut u) => {
+            // normalize() computed scale relative to "1.0 at grid_fb"; the
+            // grid's 1.0 sits at value 2^(e1 - f1 + (grid_fb - ...)) — easier:
+            // value = sum_mag · 2^(e1 - f1 - (grid_fb - fmax) - (fmax - f1))
+            //       = sum_mag · 2^(e1 - grid_fb + (grid_fb - fmax) ... )
+            // Work it out directly: a1 was m1 · 2^(fmax-f1) on a grid where
+            // one grid-ulp = 2^(e1 - f1 - (fmax - f1) - up) = 2^(e1 - fmax - up)
+            // with up = grid_fb - fmax. So value = sum_mag · 2^(e1 - grid_fb).
+            u.scale += e1;
+            Posit::from_bits(encode(u, out_fmt), out_fmt)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Posit, PositFormat};
+    use super::*;
+    use crate::posit::quire::exact_dot;
+    use crate::testing::Rng;
+
+    fn fmt(n: u32, es: u32) -> PositFormat {
+        PositFormat::p(n, es)
+    }
+
+    /// Oracle for small formats: compute in f64 (exact for P(8,·) operands
+    /// and results fit far inside f64), then convert with a single rounding.
+    fn f64_op(a: Posit, b: Posit, out: PositFormat, op: fn(f64, f64) -> f64) -> Posit {
+        Posit::from_f64(op(a.to_f64(), b.to_f64()), out)
+    }
+
+    #[test]
+    fn add_exhaustive_p8_all_es() {
+        for es in 0..=2 {
+            let f = fmt(8, es);
+            for x in 0..256u32 {
+                for y in 0..256u32 {
+                    let (a, b) = (Posit::from_bits(x, f), Posit::from_bits(y, f));
+                    let got = p_add(a, b, f);
+                    let want = if a.is_nar() || b.is_nar() {
+                        Posit::nar(f)
+                    } else {
+                        f64_op(a, b, f, |u, v| u + v)
+                    };
+                    assert_eq!(got.bits(), want.bits(), "P(8,{es}) {x:#x}+{y:#x}: {a:?} + {b:?} got {got:?} want {want:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mul_exhaustive_p8_all_es() {
+        for es in 0..=2 {
+            let f = fmt(8, es);
+            for x in 0..256u32 {
+                for y in 0..256u32 {
+                    let (a, b) = (Posit::from_bits(x, f), Posit::from_bits(y, f));
+                    let got = p_mul(a, b, f);
+                    let want = if a.is_nar() || b.is_nar() {
+                        Posit::nar(f)
+                    } else {
+                        f64_op(a, b, f, |u, v| u * v)
+                    };
+                    assert_eq!(got.bits(), want.bits(), "P(8,{es}) {x:#x}·{y:#x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_precision_widening_is_exact() {
+        // P(8,2) → P(16,2) add: every operand pair is exactly representable
+        // in the wider format, so the result equals the f64 computation.
+        let (f8, f16) = (fmt(8, 2), fmt(16, 2));
+        for x in (0..256u32).step_by(3) {
+            for y in (0..256u32).step_by(7) {
+                let (a, b) = (Posit::from_bits(x, f8), Posit::from_bits(y, f8));
+                if a.is_nar() || b.is_nar() {
+                    continue;
+                }
+                let got = p_add(a, b, f16);
+                let want = Posit::from_f64(a.to_f64() + b.to_f64(), f16);
+                assert_eq!(got.bits(), want.bits());
+                let got = p_mul(a, b, f16);
+                let want = Posit::from_f64(a.to_f64() * b.to_f64(), f16);
+                assert_eq!(got.bits(), want.bits());
+            }
+        }
+    }
+
+    /// fma must agree with the exact quire on a single product + addend —
+    /// both are single-rounding semantics of the same value.
+    #[test]
+    fn fma_matches_quire_randomized() {
+        let f = fmt(16, 2);
+        let mut rng = Rng::seeded(0xF3A);
+        for i in 0..20_000 {
+            let a = Posit::from_bits(rng.next_u64() as u32 & 0xFFFF, f);
+            let b = Posit::from_bits(rng.next_u64() as u32 & 0xFFFF, f);
+            let c = Posit::from_bits(rng.next_u64() as u32 & 0xFFFF, f);
+            if a.is_nar() || b.is_nar() || c.is_nar() {
+                continue;
+            }
+            let got = p_fma(a, b, c, f);
+            let want = exact_dot(c, &[a], &[b], f);
+            assert_eq!(got.bits(), want.bits(), "iter {i}: {a:?}·{b:?}+{c:?}");
+        }
+    }
+
+    /// add must agree with the quire too (quire of a·1 + c).
+    #[test]
+    fn add_matches_quire_randomized_p16() {
+        let f = fmt(16, 2);
+        let one = Posit::one(f);
+        let mut rng = Rng::seeded(0xADD);
+        for _ in 0..20_000 {
+            let a = Posit::from_bits(rng.next_u64() as u32 & 0xFFFF, f);
+            let c = Posit::from_bits(rng.next_u64() as u32 & 0xFFFF, f);
+            if a.is_nar() || c.is_nar() {
+                continue;
+            }
+            assert_eq!(p_add(a, c, f).bits(), exact_dot(c, &[a], &[one], f).bits(), "{a:?}+{c:?}");
+        }
+    }
+
+    #[test]
+    fn algebraic_identities() {
+        let f = fmt(16, 2);
+        let mut rng = Rng::seeded(7);
+        for _ in 0..5_000 {
+            let a = Posit::from_bits(rng.next_u64() as u32 & 0xFFFF, f);
+            if a.is_nar() {
+                continue;
+            }
+            let zero = Posit::zero(f);
+            let one = Posit::one(f);
+            // identity elements
+            assert_eq!(p_add(a, zero, f).bits(), a.bits());
+            assert_eq!(p_mul(a, one, f).bits(), a.bits());
+            // x - x == 0
+            assert!(p_sub(a, a, f).is_zero());
+            // x · 0 == 0
+            assert!(p_mul(a, zero, f).is_zero());
+            // commutativity
+            let b = Posit::from_bits(rng.next_u64() as u32 & 0xFFFF, f);
+            if b.is_nar() {
+                continue;
+            }
+            assert_eq!(p_add(a, b, f).bits(), p_add(b, a, f).bits());
+            assert_eq!(p_mul(a, b, f).bits(), p_mul(b, a, f).bits());
+            // negation symmetry: -(a+b) == (-a)+(-b)
+            assert_eq!(p_neg(p_add(a, b, f)).bits(), p_add(p_neg(a), p_neg(b), f).bits());
+        }
+    }
+
+    #[test]
+    fn nar_propagation() {
+        let f = fmt(16, 2);
+        let nar = Posit::nar(f);
+        let one = Posit::one(f);
+        assert!(p_add(nar, one, f).is_nar());
+        assert!(p_mul(nar, one, f).is_nar());
+        assert!(p_fma(one, nar, one, f).is_nar());
+        assert!(p_fma(one, one, nar, f).is_nar());
+        assert!(p_neg(nar).is_nar());
+    }
+
+    #[test]
+    fn saturation_behaviour() {
+        let f = fmt(8, 2);
+        let maxpos = Posit::maxpos(f);
+        // maxpos + maxpos saturates to maxpos (never NaR)
+        assert_eq!(p_add(maxpos, maxpos, f).bits(), maxpos.bits());
+        // minpos · minpos saturates to minpos (never zero)
+        let minpos = Posit::minpos(f);
+        assert_eq!(p_mul(minpos, minpos, f).bits(), minpos.bits());
+    }
+
+    /// Catastrophic-cancellation regression: operands whose difference
+    /// needs the sticky-borrow correction in add_fields.
+    #[test]
+    fn subtraction_sticky_borrow() {
+        let f = fmt(16, 2);
+        // big − tiny where tiny's bits fall entirely below the grid
+        let big = Posit::from_f64(2f64.powi(40), f);
+        let tiny = Posit::from_f64(2f64.powi(-40), f);
+        let got = p_sub(big, tiny, f);
+        // exact result is just under 2^40: must round back to 2^40's
+        // neighbour per RNE — compare against the quire
+        let want = exact_dot(big, &[tiny], &[p_neg(Posit::one(f))], f);
+        assert_eq!(got.bits(), want.bits());
+    }
+}
+
+/// Correctly-rounded division `a / b` into `out_fmt`.
+///
+/// Posit semantics: `x / 0 = NaR` for every x (no infinities), `0 / y = 0`
+/// for finite nonzero y, NaR propagates. Downstream DNN code needs this
+/// for softmax/normalization in the posit domain; the discrete baselines
+/// don't use it (the paper's DPUs are MAC-only).
+pub fn p_div(a: Posit, b: Posit, out_fmt: PositFormat) -> Posit {
+    match (decode(a), decode(b)) {
+        (Decoded::NaR, _) | (_, Decoded::NaR) => Posit::nar(out_fmt),
+        (_, Decoded::Zero) => Posit::nar(out_fmt), // x/0 = NaR per the standard
+        (Decoded::Zero, _) => Posit::zero(out_fmt),
+        (Decoded::Finite(fa), Decoded::Finite(fb)) => {
+            // Fixed-point long division with enough quotient bits that the
+            // remainder only feeds the sticky bit: Q = 64 quotient fraction
+            // bits ≥ n_out + regime + round margin for every format.
+            const Q_BITS: u32 = 64;
+            let num = (fa.frac as u128) << Q_BITS;
+            let den = fb.frac as u128;
+            let quot = num / den; // nonzero: num ≥ 2^Q_BITS > den ⇒ quot ≥ 1
+            let rem = num % den;
+            // value = quot · 2^(scale_a − scale_b − fb_net) with
+            // fb_net = Q_BITS + fa.frac_bits − fb.frac_bits fraction bits
+            let scale = fa.scale - fb.scale;
+            let fb_net = Q_BITS as i32 + fa.frac_bits as i32 - fb.frac_bits as i32;
+            let msb = 127 - quot.leading_zeros();
+            let u = Unpacked {
+                sign: fa.sign ^ fb.sign,
+                scale: scale - fb_net + msb as i32,
+                sig: quot,
+                sig_frac_bits: msb,
+                sticky: rem != 0,
+            };
+            Posit::from_bits(encode(u, out_fmt), out_fmt)
+        }
+    }
+}
+
+#[cfg(test)]
+mod div_tests {
+    use super::super::{Posit, PositFormat};
+    use super::*;
+    use crate::testing::Rng;
+
+    /// Exhaustive P(8,es) division vs the f64 oracle (a single f64
+    /// division of two P(8) values is exactly representable-roundable:
+    /// 53 ≥ 2·p + 2 for p ≤ 6 significand bits).
+    #[test]
+    fn div_exhaustive_p8() {
+        for es in 0..=2 {
+            let f = PositFormat::p(8, es);
+            for x in 0..256u32 {
+                for y in 0..256u32 {
+                    let (a, b) = (Posit::from_bits(x, f), Posit::from_bits(y, f));
+                    let got = p_div(a, b, f);
+                    if a.is_nar() || b.is_nar() || b.is_zero() {
+                        assert!(got.is_nar(), "P(8,{es}) {x:#x}/{y:#x}");
+                        continue;
+                    }
+                    if a.is_zero() {
+                        assert!(got.is_zero());
+                        continue;
+                    }
+                    let want = Posit::from_f64(a.to_f64() / b.to_f64(), f);
+                    assert_eq!(got.bits(), want.bits(), "P(8,{es}) {a:?}/{b:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn div_identities() {
+        let f = PositFormat::p(16, 2);
+        let mut rng = Rng::seeded(0xD1F);
+        for _ in 0..5_000 {
+            let a = Posit::from_bits(rng.next_u64() as u32 & 0xFFFF, f);
+            if a.is_nar() || a.is_zero() {
+                continue;
+            }
+            // x / 1 == x ; x / x == 1
+            assert_eq!(p_div(a, Posit::one(f), f).bits(), a.bits());
+            assert_eq!(p_div(a, a, f).bits(), Posit::one(f).bits());
+            // sign algebra: (−x)/y == −(x/y)
+            let b = Posit::from_bits(rng.next_u64() as u32 & 0xFFFF, f);
+            if b.is_nar() || b.is_zero() {
+                continue;
+            }
+            assert_eq!(p_div(p_neg(a), b, f).bits(), p_neg(p_div(a, b, f)).bits());
+        }
+    }
+
+    /// mul∘div round trip stays within 1 ulp (two roundings).
+    #[test]
+    fn div_mul_roundtrip_close() {
+        let f = PositFormat::p(16, 2);
+        let mut rng = Rng::seeded(0x0DD);
+        for _ in 0..5_000 {
+            let a = Posit::from_f64(rng.log_uniform_signed(-10.0, 10.0), f);
+            let b = Posit::from_f64(rng.log_uniform_signed(-10.0, 10.0), f);
+            let q = p_div(a, b, f);
+            let back = p_mul(q, b, f);
+            // two roundings, each ≤ 2^-7 relative at the coarsest regime a
+            // ratio of ±2^±10 values can reach in P(16,2) (≥ 6 frac bits)
+            let rel = ((back.to_f64() - a.to_f64()) / a.to_f64()).abs();
+            assert!(rel < 2f64.powi(-6), "{a:?}/{b:?} -> {q:?} -> {back:?} (rel {rel})");
+        }
+    }
+
+    #[test]
+    fn div_specials() {
+        let f = PositFormat::p(16, 2);
+        let one = Posit::one(f);
+        assert!(p_div(one, Posit::zero(f), f).is_nar());
+        assert!(p_div(Posit::nar(f), one, f).is_nar());
+        assert!(p_div(Posit::zero(f), one, f).is_zero());
+        // maxpos / minpos saturates to maxpos
+        assert_eq!(p_div(Posit::maxpos(f), Posit::minpos(f), f).bits(), Posit::maxpos(f).bits());
+    }
+}

@@ -1,0 +1,159 @@
+//! Exact conversions between posits and `f64`.
+//!
+//! For every supported format (n ≤ 32, es ≤ 4) the posit value set is a
+//! strict subset of f64: mantissas carry at most 29 bits (< 52) and scales
+//! stay within ±480 (< 1022), so `to_f64` is exact and `from_f64` performs
+//! a single correct rounding. These conversions are the bridge between the
+//! bit-exact hardware models and the FP64 reference workloads (the paper
+//! extracts its conv1 tensors in FP64 for exactly this role).
+
+use super::{decode, encode, Decoded, Posit, PositFormat, Unpacked};
+
+/// Exact value of a posit as `f64`. NaR maps to NaN.
+pub fn to_f64(p: Posit) -> f64 {
+    match decode(p) {
+        Decoded::Zero => 0.0,
+        Decoded::NaR => f64::NAN,
+        Decoded::Finite(f) => {
+            let mag = (f.frac as f64) * ((f.scale - f.frac_bits as i32) as f64).exp2();
+            if f.sign {
+                -mag
+            } else {
+                mag
+            }
+        }
+    }
+}
+
+/// Nearest posit to `v` (round to nearest, ties to even pattern; a nonzero
+/// finite `v` never becomes zero or NaR). NaN and ±∞ map to NaR, matching
+/// the posit standard's conversion rule.
+pub fn from_f64(v: f64, fmt: PositFormat) -> Posit {
+    if v == 0.0 {
+        return Posit::zero(fmt);
+    }
+    if v.is_nan() || v.is_infinite() {
+        return Posit::nar(fmt);
+    }
+    let bits = v.to_bits();
+    let sign = bits >> 63 == 1;
+    let biased = ((bits >> 52) & 0x7FF) as i32;
+    let mantissa = bits & ((1u64 << 52) - 1);
+
+    let (scale, sig, fb): (i32, u128, u32) = if biased == 0 {
+        // subnormal f64: value = mantissa · 2^-1074, normalized so the MSB
+        // of the mantissa becomes the hidden bit
+        let msb = 63 - mantissa.leading_zeros();
+        (msb as i32 - 1074, mantissa as u128, msb)
+    } else {
+        (biased - 1023, ((1u64 << 52) | mantissa) as u128, 52)
+    };
+    Posit::from_bits(
+        encode(Unpacked { sign, scale, sig, sig_frac_bits: fb, sticky: false }, fmt),
+        fmt,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Posit, PositFormat};
+    use super::*;
+
+    #[test]
+    fn specials() {
+        let fmt = PositFormat::p(16, 2);
+        assert_eq!(from_f64(0.0, fmt), Posit::zero(fmt));
+        assert_eq!(from_f64(-0.0, fmt), Posit::zero(fmt));
+        assert!(from_f64(f64::NAN, fmt).is_nar());
+        assert!(from_f64(f64::INFINITY, fmt).is_nar());
+        assert!(from_f64(f64::NEG_INFINITY, fmt).is_nar());
+        assert!(to_f64(Posit::nar(fmt)).is_nan());
+        assert_eq!(to_f64(Posit::zero(fmt)), 0.0);
+    }
+
+    #[test]
+    fn known_values_p8_2() {
+        let fmt = PositFormat::p(8, 2);
+        for &(v, bits) in &[
+            (1.0, 0x40u32),
+            (-1.0, 0xC0),
+            (11.0, 0b0101_1011),
+            (16.0, 0b0110_0000),
+            (0.5, 0b0011_1000),
+        ] {
+            assert_eq!(from_f64(v, fmt).bits(), bits, "from_f64({v})");
+            assert_eq!(to_f64(Posit::from_bits(bits, fmt)), v, "to_f64({bits:#x})");
+        }
+    }
+
+    /// Exhaustive exact round-trip for a spread of formats: every finite
+    /// posit → f64 → posit must be the identity (f64 is strictly wider).
+    #[test]
+    fn roundtrip_via_f64_exhaustive() {
+        for &(n, es) in &[(8u32, 0u32), (8, 1), (8, 2), (8, 3), (10, 2), (13, 2), (16, 2), (16, 1), (12, 0)] {
+            let fmt = PositFormat::p(n, es);
+            for bits in 0..fmt.cardinality() as u32 {
+                let p = Posit::from_bits(bits, fmt);
+                if p.is_nar() {
+                    continue;
+                }
+                let back = from_f64(to_f64(p), fmt);
+                assert_eq!(back.bits(), bits, "{fmt} bits={bits:#x} v={}", to_f64(p));
+            }
+        }
+    }
+
+    /// from_f64 must pick the nearest posit under the posit rounding rule.
+    /// Within a regime (fraction-linear region) the bit-field midpoint
+    /// equals the arithmetic midpoint, so nearest-by-value holds there;
+    /// across regime boundaries (where posit rounding is defined on the
+    /// encoding field, as in SoftPosit) we check the weaker guarantee that
+    /// any point in the open gap maps to one of the two endpoints.
+    #[test]
+    fn from_f64_nearest_p8() {
+        let fmt = PositFormat::p(8, 2);
+        for bits in 0..255u32 {
+            let a = Posit::from_bits(bits, fmt);
+            let b = a.succ();
+            if a.is_nar() || b.is_nar() || a.is_zero() || b.is_zero() {
+                continue;
+            }
+            let (va, vb) = (to_f64(a), to_f64(b));
+            let mid = va + (vb - va) / 2.0;
+            let eps = (vb - va) / 64.0;
+            // The gap is fraction-linear (arithmetic midpoint == encoding
+            // midpoint) only when both endpoints share regime AND exponent;
+            // otherwise exponent/regime bits were cut and posit rounding is
+            // defined on the encoding field.
+            let (fa, fb2) = (a.decode().fields(), b.decode().fields());
+            if fa.k == fb2.k && fa.exp == fb2.exp {
+                assert_eq!(from_f64(mid - eps, fmt).bits(), a.bits(), "left half near {va}..{vb}");
+                assert_eq!(from_f64(mid + eps, fmt).bits(), b.bits(), "right half near {va}..{vb}");
+            } else {
+                for v in [mid - eps, mid, mid + eps] {
+                    let got = from_f64(v, fmt).bits();
+                    assert!(got == a.bits() || got == b.bits(), "{v} escaped gap {va}..{vb}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn saturation() {
+        let fmt = PositFormat::p(8, 2);
+        assert_eq!(from_f64(1e30, fmt), Posit::maxpos(fmt));
+        assert_eq!(from_f64(1e-30, fmt), Posit::minpos(fmt));
+        assert_eq!(from_f64(-1e30, fmt).bits(), Posit::maxpos(fmt).bits().wrapping_neg() & 0xFF);
+        // f64 subnormals still round to minpos, not zero
+        assert_eq!(from_f64(f64::MIN_POSITIVE / 8.0, fmt), Posit::minpos(fmt));
+    }
+
+    #[test]
+    fn p32_precision_preserved() {
+        let fmt = PositFormat::p(32, 2);
+        let v = 3.141592653589793f64;
+        let p = from_f64(v, fmt);
+        // P(32,2) near 1.0 has 27 fraction bits → relative error ≤ 2^-28
+        assert!((to_f64(p) - v).abs() / v < 2f64.powi(-27));
+    }
+}

@@ -1,0 +1,230 @@
+//! Posit field extraction — the software twin of PDPU pipeline stage S1.
+//!
+//! Decoding follows Eq. (1) of the paper: an n-bit pattern splits into
+//! sign, regime (run-length coded `k`), `es`-bit exponent and mantissa.
+//! Negative patterns are two's-complemented before field extraction.
+//! The extracted mantissa is left-aligned to the format's maximum fraction
+//! width so every decoded value shares one fixed-point Q format — exactly
+//! what the hardware decoder does so downstream datapath widths are static.
+
+use super::Posit;
+
+/// A decoded finite posit (or zero / NaR).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decoded {
+    Zero,
+    NaR,
+    Finite(Fields),
+}
+
+/// Components of a finite posit value: `(-1)^sign · 2^scale · frac/2^frac_bits`
+/// with `frac` normalized to `[2^frac_bits, 2^(frac_bits+1))` — i.e. `1.m`
+/// with the hidden bit explicit at position `frac_bits`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fields {
+    pub sign: bool,
+    /// Combined scale `k·2^es + e` (regime and exponent merged).
+    pub scale: i32,
+    /// Normalized significand `1.m`, left-aligned: exactly `frac_bits + 1`
+    /// significant bits, hidden bit at bit position `frac_bits`.
+    pub frac: u64,
+    /// Number of fractional bits in `frac` (== `fmt.max_frac_bits()`).
+    pub frac_bits: u32,
+    /// Regime value `k` (kept for cost-model / pipeline introspection).
+    pub k: i32,
+    /// Exponent field value `e` (after zero-fill of truncated bits).
+    pub exp: u32,
+}
+
+impl Decoded {
+    /// Unwrap finite fields, panicking on zero/NaR. Test convenience.
+    pub fn fields(&self) -> Fields {
+        match self {
+            Decoded::Finite(f) => *f,
+            other => panic!("expected finite posit, got {other:?}"),
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        matches!(self, Decoded::Zero)
+    }
+
+    pub fn is_nar(&self) -> bool {
+        matches!(self, Decoded::NaR)
+    }
+}
+
+/// Decode an n-bit posit pattern into [`Decoded`] fields.
+pub fn decode(p: Posit) -> Decoded {
+    let fmt = p.format();
+    let n = fmt.n();
+    let es = fmt.es();
+    let bits = p.bits();
+
+    if bits == 0 {
+        return Decoded::Zero;
+    }
+    if bits == fmt.nar_bits() {
+        return Decoded::NaR;
+    }
+
+    let sign = (bits >> (n - 1)) & 1 == 1;
+    // two's complement within the n-bit ring for negative values
+    let mag = if sign { bits.wrapping_neg() & fmt.mask() } else { bits };
+
+    // Left-align the n-1 body bits (regime | exponent | fraction) in a u32
+    // so leading_zeros() gives us the regime run length directly.
+    let body_len = n - 1;
+    let body = mag << (32 - body_len); // sign bit shifted out; top bit = first regime bit
+
+    let r0 = body >> 31; // first regime bit
+    let run = if r0 == 1 {
+        (!body).leading_zeros().min(body_len)
+    } else {
+        body.leading_zeros().min(body_len)
+    };
+    let k: i32 = if r0 == 1 { run as i32 - 1 } else { -(run as i32) };
+
+    // Regime consumes `run` identical bits plus one terminator bit, unless
+    // the run fills the entire body (maxpos/minpos-like patterns).
+    let consumed = (run + 1).min(body_len);
+    let rem = body_len - consumed;
+
+    // Remaining bits hold exponent then fraction. Truncated exponent bits
+    // are zero-filled on the right (posit standard 2022 semantics).
+    let rest: u32 = if rem == 0 { 0 } else { (body << consumed) >> (32 - rem) };
+    let e_bits = rem.min(es);
+    let exp: u32 = if es == 0 || e_bits == 0 {
+        0
+    } else {
+        (rest >> (rem - e_bits)) << (es - e_bits)
+    };
+    let fb = rem - e_bits; // fraction bits actually present
+    let frac_raw: u64 = if fb == 0 { 0 } else { (rest & ((1u32 << fb) - 1)) as u64 };
+
+    // Left-align the mantissa to the format's max fraction width, hidden
+    // bit explicit — fixed Q format for the whole datapath.
+    let mb = fmt.max_frac_bits();
+    debug_assert!(fb <= mb, "fraction bits {fb} exceed max {mb} for {fmt}");
+    let frac = ((1u64 << fb) | frac_raw) << (mb - fb);
+
+    let scale = k * fmt.useed_log2() + exp as i32;
+    Decoded::Finite(Fields { sign, scale, frac, frac_bits: mb, k, exp })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::PositFormat;
+    use super::*;
+
+    fn dec(bits: u32, n: u32, es: u32) -> Decoded {
+        decode(Posit::from_bits(bits, PositFormat::p(n, es)))
+    }
+
+    #[test]
+    fn specials() {
+        assert_eq!(dec(0, 16, 2), Decoded::Zero);
+        assert_eq!(dec(0x8000, 16, 2), Decoded::NaR);
+        assert_eq!(dec(0, 8, 0), Decoded::Zero);
+        assert_eq!(dec(0x80, 8, 0), Decoded::NaR);
+    }
+
+    #[test]
+    fn one_decodes_to_scale_zero() {
+        for &(n, es) in &[(8u32, 0u32), (8, 2), (16, 1), (16, 2), (32, 2), (5, 2)] {
+            let fmt = PositFormat::p(n, es);
+            let f = decode(Posit::one(fmt)).fields();
+            assert!(!f.sign);
+            assert_eq!(f.scale, 0, "P({n},{es})");
+            assert_eq!(f.frac, 1u64 << f.frac_bits); // exactly 1.0
+        }
+    }
+
+    /// Paper Fig. 2 decoding instance: P(8,2) pattern 0b0_10_11_011.
+    /// regime 10 → k=0, exponent 11 → e=3, mantissa 011 → 1.375;
+    /// value = 2^(0·4+3) · 1.375 = 11.
+    #[test]
+    fn paper_fig2_instance_positive() {
+        let f = dec(0b0_10_11_011, 8, 2).fields();
+        assert!(!f.sign);
+        assert_eq!(f.k, 0);
+        assert_eq!(f.exp, 3);
+        assert_eq!(f.scale, 3);
+        assert_eq!(f.frac_bits, 3);
+        assert_eq!(f.frac, 0b1011); // 1.011₂ = 1.375
+        let p = Posit::from_bits(0b0_10_11_011, PositFormat::p(8, 2));
+        assert_eq!(p.to_f64(), 11.0);
+    }
+
+    /// Negative instance: two's complement then decode. -(11) pattern is
+    /// the two's complement of the +11 pattern.
+    #[test]
+    fn paper_fig2_instance_negative() {
+        let pos = 0b0_10_11_011u32;
+        let neg = pos.wrapping_neg() & 0xFF;
+        let f = dec(neg, 8, 2).fields();
+        assert!(f.sign);
+        assert_eq!(f.scale, 3);
+        assert_eq!(f.frac, 0b1011);
+        let p = Posit::from_bits(neg, PositFormat::p(8, 2));
+        assert_eq!(p.to_f64(), -11.0);
+    }
+
+    #[test]
+    fn maxpos_minpos_scales() {
+        for &(n, es) in &[(8u32, 0u32), (8, 2), (16, 2), (13, 2), (10, 2), (32, 2)] {
+            let fmt = PositFormat::p(n, es);
+            let f = decode(Posit::maxpos(fmt)).fields();
+            assert_eq!(f.scale, fmt.max_scale(), "maxpos {fmt}");
+            assert_eq!(f.frac, 1u64 << f.frac_bits, "maxpos mantissa is 1.0");
+            let f = decode(Posit::minpos(fmt)).fields();
+            assert_eq!(f.scale, fmt.min_scale(), "minpos {fmt}");
+        }
+    }
+
+    #[test]
+    fn regime_run_without_terminator() {
+        // P(8,2) pattern 0b0_1111111: run fills the body, k = run-1 = 6.
+        let f = dec(0b0111_1111, 8, 2).fields();
+        assert_eq!(f.k, 6);
+        assert_eq!(f.exp, 0);
+        // P(8,2) pattern 0b0_0000001: run of 6 zeros + terminator, k = -6.
+        let f = dec(0b0000_0001, 8, 2).fields();
+        assert_eq!(f.k, -6);
+    }
+
+    #[test]
+    fn truncated_exponent_zero_fill() {
+        // P(8,2) 0b0_000001_1: regime 5 zeros+term (k=-5), one exponent bit
+        // '1' present out of es=2 → e = 0b10 = 2 (zero-filled LSB).
+        let f = dec(0b0000_0011, 8, 2).fields();
+        assert_eq!(f.k, -5);
+        assert_eq!(f.exp, 2);
+        assert_eq!(f.scale, -5 * 4 + 2);
+    }
+
+    #[test]
+    fn mantissa_alignment_is_uniform() {
+        let fmt = PositFormat::p(16, 2);
+        // Every finite decode must land in [2^mb, 2^(mb+1))
+        for bits in (1u32..0x1_0000).step_by(97) {
+            let p = Posit::from_bits(bits, fmt);
+            if p.is_nar() {
+                continue;
+            }
+            let f = decode(p).fields();
+            assert_eq!(f.frac_bits, 11);
+            assert!(f.frac >= (1 << 11) && f.frac < (1 << 12), "bits={bits:#x}");
+        }
+    }
+
+    #[test]
+    fn n32_roundtrip_sane() {
+        let fmt = PositFormat::p(32, 2);
+        let f = decode(Posit::one(fmt)).fields();
+        assert_eq!(f.frac_bits, 27);
+        assert_eq!(f.scale, 0);
+        let f = decode(Posit::maxpos(fmt)).fields();
+        assert_eq!(f.scale, 120);
+    }
+}

@@ -1,0 +1,285 @@
+//! Posit rounding + packing — the software twin of PDPU pipeline stage S6.
+//!
+//! [`encode`] takes an *unpacked* real value (sign, scale, normalized
+//! significand + sticky) and produces the nearest n-bit posit pattern under
+//! the posit rounding rule: round to nearest, ties to even **bit pattern**,
+//! with saturation — a nonzero real never rounds to zero (clamps to minpos)
+//! and never overflows to NaR (clamps to maxpos). Because posit patterns
+//! are monotone in value, round-to-nearest-even applied to the composed
+//! regime|exponent|fraction bit string implements the standard's rounding;
+//! this is the same trick hardware encoders (and SoftPosit) use.
+
+use super::PositFormat;
+
+/// An unpacked real value ready for encoding.
+///
+/// Value represented: `(-1)^sign · 2^scale · sig / 2^sig_frac_bits`, where
+/// `sig` is normalized: `2^sig_frac_bits ≤ sig < 2^(sig_frac_bits+1)`
+/// (i.e. `1.xxx` with the hidden bit explicit). `sticky` records whether
+/// any nonzero bits were discarded below `sig`'s LSB by earlier datapath
+/// steps (alignment shifts, truncation) and participates in the rounding
+/// decision exactly as a hardware sticky bit would.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Unpacked {
+    pub sign: bool,
+    pub scale: i32,
+    pub sig: u128,
+    pub sig_frac_bits: u32,
+    pub sticky: bool,
+}
+
+impl Unpacked {
+    /// Construct and normalize from a possibly-unnormalized significand
+    /// (any nonzero `sig` with its binary point at `sig_frac_bits`).
+    /// Normalization shifts so the MSB of `sig` becomes the hidden bit,
+    /// adjusting `scale`; right shifts fold discarded bits into `sticky`.
+    pub fn normalize(sign: bool, scale: i32, sig: u128, sig_frac_bits: u32, sticky: bool) -> Option<Self> {
+        if sig == 0 {
+            return None;
+        }
+        let msb = 127 - sig.leading_zeros(); // position of the leading 1
+        let scale = scale + msb as i32 - sig_frac_bits as i32;
+        Some(Self { sign, scale, sig, sig_frac_bits: msb, sticky })
+    }
+}
+
+/// Encode an unpacked value to the nearest posit pattern of `fmt`.
+///
+/// Returns the n-bit pattern (in the low bits of the u32).
+pub fn encode(u: Unpacked, fmt: PositFormat) -> u32 {
+    debug_assert!(
+        u.sig >> u.sig_frac_bits == 1,
+        "significand not normalized: sig={:#x} fb={}",
+        u.sig,
+        u.sig_frac_bits
+    );
+    let n = fmt.n();
+    let es = fmt.es();
+    let useed_log2 = fmt.useed_log2();
+
+    // Saturate on scale before constructing fields: regime k outside
+    // [-(n-2), n-2] cannot be represented; the standard clamps (no
+    // underflow-to-zero, no overflow-to-NaR).
+    //
+    // NOTE on the upper boundary: scale == max_scale with frac > 1.0 still
+    // rounds to maxpos via the bit-field RNE below, so only k > n-2 is
+    // clamped here.
+    let k = u.scale.div_euclid(useed_log2);
+    let e = u.scale.rem_euclid(useed_log2) as u32;
+    let mag = if k > fmt.max_k() {
+        fmt.maxpos_bits()
+    } else if k < -fmt.max_k() {
+        fmt.minpos_bits()
+    } else {
+        // Compose the unbounded field expansion: regime | exponent | fraction.
+        // Widths: regime ≤ n bits here (k ≤ n-2 ⇒ rl ≤ n), es ≤ 4,
+        // fraction = sig_frac_bits ≤ 127 — sum < 160, so build in a u256-ish
+        // two-limb scheme... in practice sig_frac_bits ≤ ~120 and we only
+        // need the top n-1 bits plus round/sticky; we stream instead of
+        // materializing: compute the body as a u128 after pre-truncating the
+        // fraction to what can possibly matter (n + 2 bits + sticky).
+        let (sig, fb, pre_sticky) = shrink_sig(u.sig, u.sig_frac_bits, n + 2);
+        let frac = sig & ((1u128 << fb) - 1); // drop hidden bit
+
+        let rl: u32 = if k >= 0 { k as u32 + 2 } else { (-k) as u32 + 1 };
+        // regime pattern: k >= 0 → (k+1) ones then 0; k < 0 → (-k) zeros then 1
+        let regime: u128 = if k >= 0 { ((1u128 << (k + 1)) - 1) << 1 } else { 1 };
+
+        let body_len = rl + es + fb; // total bits after the sign position
+        let body: u128 = (regime << (es + fb)) | ((e as u128) << fb) | frac;
+
+        let avail = n - 1;
+        if body_len <= avail {
+            // exact fit: pad fraction with zeros on the right
+            let mag = (body << (avail - body_len)) as u32;
+            // sticky bits below still matter only for... nothing: value is
+            // exactly representable except for pre_sticky/u.sticky, which
+            // lie strictly below the last kept bit with a zero round bit —
+            // they can never flip RNE. Still, assert the invariant cheaply.
+            debug_assert!(mag <= fmt.maxpos_bits());
+            let _ = pre_sticky;
+            mag
+        } else {
+            // round at the n-1 bit boundary (RNE on the monotone pattern)
+            let cut = body_len - avail;
+            let keep = (body >> cut) as u32;
+            let round = (body >> (cut - 1)) & 1 == 1;
+            let sticky = (body & ((1u128 << (cut - 1)) - 1)) != 0 || pre_sticky || u.sticky;
+            let mut mag = keep;
+            if round && (sticky || (keep & 1) == 1) {
+                mag += 1;
+            }
+            // post-clamp: never round a nonzero value to zero or to NaR
+            if mag == 0 {
+                mag = fmt.minpos_bits();
+            } else if mag >= fmt.nar_bits() {
+                mag = fmt.maxpos_bits();
+            }
+            mag
+        }
+    };
+
+    if u.sign {
+        mag.wrapping_neg() & fmt.mask()
+    } else {
+        mag
+    }
+}
+
+/// Reduce a normalized significand to at most `max_fb` fraction bits,
+/// folding everything below into a sticky flag. Keeps normalization.
+fn shrink_sig(sig: u128, fb: u32, max_fb: u32) -> (u128, u32, bool) {
+    if fb <= max_fb {
+        (sig, fb, false)
+    } else {
+        let drop = fb - max_fb;
+        let sticky = sig & ((1u128 << drop) - 1) != 0;
+        (sig >> drop, max_fb, sticky)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{decode, Decoded, Posit, PositFormat};
+    use super::*;
+
+    fn enc(sign: bool, scale: i32, sig: u128, fb: u32, sticky: bool, n: u32, es: u32) -> u32 {
+        encode(Unpacked { sign, scale, sig, sig_frac_bits: fb, sticky }, PositFormat::p(n, es))
+    }
+
+    #[test]
+    fn encode_one() {
+        for &(n, es) in &[(8u32, 0u32), (8, 2), (16, 2), (13, 2), (32, 2), (4, 1)] {
+            let fmt = PositFormat::p(n, es);
+            assert_eq!(enc(false, 0, 1, 0, false, n, es), Posit::one(fmt).bits(), "{fmt}");
+        }
+    }
+
+    #[test]
+    fn paper_fig2_value_11() {
+        // 11 = 2^3 · 1.375 = 2^3 · 0b1.011
+        assert_eq!(enc(false, 3, 0b1011, 3, false, 8, 2), 0b0_10_11_011);
+        assert_eq!(enc(true, 3, 0b1011, 3, false, 8, 2), (0b0_10_11_011u32).wrapping_neg() & 0xFF);
+    }
+
+    /// Round-trip: decode → encode must reproduce every finite pattern
+    /// exactly (encode of an exactly-representable value is the identity).
+    #[test]
+    fn roundtrip_exhaustive_p16_2() {
+        roundtrip_exhaustive(16, 2);
+    }
+
+    #[test]
+    fn roundtrip_exhaustive_small_formats() {
+        for n in 3..=12 {
+            for es in 0..=3 {
+                roundtrip_exhaustive(n, es);
+            }
+        }
+    }
+
+    fn roundtrip_exhaustive(n: u32, es: u32) {
+        let fmt = PositFormat::p(n, es);
+        for bits in 0..fmt.cardinality() as u32 {
+            let p = Posit::from_bits(bits, fmt);
+            match decode(p) {
+                Decoded::Zero | Decoded::NaR => continue,
+                Decoded::Finite(f) => {
+                    let back = encode(
+                        Unpacked {
+                            sign: f.sign,
+                            scale: f.scale,
+                            sig: f.frac as u128,
+                            sig_frac_bits: f.frac_bits,
+                            sticky: false,
+                        },
+                        fmt,
+                    );
+                    assert_eq!(back, bits, "roundtrip failed for {fmt} bits={bits:#x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn saturation_never_zero_never_nar() {
+        let fmt = PositFormat::p(8, 2);
+        let _ = fmt;
+        // far below minpos → minpos
+        assert_eq!(enc(false, -1000, 1, 0, false, 8, 2), fmt.minpos_bits());
+        // far above maxpos → maxpos
+        assert_eq!(enc(false, 1000, 1, 0, false, 8, 2), fmt.maxpos_bits());
+        // negative saturation
+        assert_eq!(enc(true, 1000, 1, 0, false, 8, 2), fmt.maxpos_bits().wrapping_neg() & 0xFF);
+        assert_eq!(enc(true, -1000, 1, 0, false, 8, 2), fmt.minpos_bits().wrapping_neg() & 0xFF);
+    }
+
+    #[test]
+    fn just_below_minpos_rounds_to_minpos() {
+        // minpos/2 must round UP to minpos, not to zero (posit rule).
+        let fmt = PositFormat::p(8, 2);
+        let minpos_scale = fmt.min_scale();
+        assert_eq!(enc(false, minpos_scale - 1, 1, 0, false, 8, 2), fmt.minpos_bits());
+        // Even minpos/4 rounds to minpos.
+        assert_eq!(enc(false, minpos_scale - 2, 1, 0, false, 8, 2), fmt.minpos_bits());
+    }
+
+    #[test]
+    fn rne_ties_to_even_pattern() {
+        // Take two adjacent posits around 1.0 and test the midpoint.
+        // one = 0x40 (1.0), succ = 0x41 = 1 + 2^-3 · ... : P(8,2) one has
+        // 3 fraction bits → succ = 1.125. Midpoint 1.0625 = 2^0 · 1.0001₂.
+        let mid = enc(false, 0, 0b10001, 4, false, 8, 2);
+        assert_eq!(mid, 0x40, "tie must go to even pattern 0x40");
+        // Just above the midpoint must go up.
+        let above = enc(false, 0, 0b10001, 4, true, 8, 2);
+        assert_eq!(above, 0x41);
+        // Midpoint between 0x41 (1.125) and 0x42 (1.25): 1.1875 → odd keep
+        // (0x41) + tie → rounds up to even 0x42.
+        let mid2 = enc(false, 0, 0b10011, 4, false, 8, 2);
+        assert_eq!(mid2, 0x42);
+    }
+
+    #[test]
+    fn sticky_breaks_tie_upward() {
+        // same as rne test but sticky set: rounds away from even-down
+        let above = enc(false, 0, 0b10001, 4, true, 8, 2);
+        assert_eq!(above, 0x41);
+    }
+
+    #[test]
+    fn rounding_carry_into_regime() {
+        // P(8,2): largest value with k=0 region is just below 2^4; a value
+        // like 1.9999·2^3 must carry-round into the next regime cleanly.
+        let fmt = PositFormat::p(8, 2);
+        let bits = enc(false, 3, 0xFFFF, 15, false, 8, 2); // ≈ 2^4
+        let p = Posit::from_bits(bits, fmt);
+        assert_eq!(p.to_f64(), 16.0);
+    }
+
+    #[test]
+    fn normalize_helper() {
+        // 0b0110 with fb=3 → value 0.75 → normalized 1.1₂ · 2^-1
+        let u = Unpacked::normalize(false, 0, 0b0110, 3, false).unwrap();
+        assert_eq!(u.scale, -1);
+        assert_eq!(u.sig >> u.sig_frac_bits, 1);
+        assert_eq!(Unpacked::normalize(false, 0, 0, 3, false), None);
+        // large value: 0b101 with fb=0 → 5 = 2^2 · 1.25
+        let u = Unpacked::normalize(false, 0, 0b101, 0, false).unwrap();
+        assert_eq!(u.scale, 2);
+    }
+
+    #[test]
+    fn long_significand_shrink_is_correct() {
+        // A significand wider than n+2 bits must still round correctly via
+        // the pre-truncation path: compare against direct f64 conversion.
+        let fmt = PositFormat::p(16, 2);
+        let sig: u128 = (1u128 << 100) | 0x3FFF_FFFF; // 1.0000...0111... (100 fb)
+        let bits = encode(
+            Unpacked { sign: false, scale: 7, sig, sig_frac_bits: 100, sticky: false },
+            fmt,
+        );
+        let v = (sig as f64 / 2f64.powi(100)) * 2f64.powi(7);
+        assert_eq!(bits, Posit::from_f64(v, fmt).bits());
+    }
+}

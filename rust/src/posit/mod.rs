@@ -1,0 +1,378 @@
+//! Bit-exact posit arithmetic for any format P(n, es) with 3 ≤ n ≤ 32 and
+//! 0 ≤ es ≤ 4.
+//!
+//! This module is the repo's replacement for the extended SoftPosit library
+//! the paper used to generate test vectors: a from-scratch, format-generic
+//! posit implementation with correctly-rounded (round-to-nearest, ties to
+//! even bit pattern, never underflow-to-zero / overflow-to-NaR) scalar
+//! arithmetic, exact wide-fixed-point accumulation (the *quire*), and exact
+//! conversions to/from `f64`.
+//!
+//! Submodules:
+//! * [`decode`] — field extraction (sign / regime / exponent / mantissa),
+//!   the software twin of PDPU pipeline stage S1.
+//! * [`encode`] — rounding + packing, the software twin of stage S6.
+//! * [`convert`] — exact `f64` interchange (exact because n ≤ 32, es ≤ 4
+//!   keeps every posit value inside f64's dynamic range and mantissa).
+//! * [`arith`] — correctly-rounded add/sub/mul/fma (one rounding per op —
+//!   these model the *discrete* units PDPU is compared against).
+//! * [`quire`] — exact dot-product accumulator over [`wide`] fixed point.
+//! * [`wide`] — fixed-width signed big integer used by the quire and by the
+//!   exact reference oracle in tests.
+
+pub mod arith;
+pub mod convert;
+pub mod decode;
+pub mod encode;
+pub mod quire;
+pub mod wide;
+
+pub use arith::{p_add, p_div, p_fma, p_mul, p_neg, p_sub};
+pub use decode::{decode, Decoded};
+pub use encode::{encode, Unpacked};
+pub use quire::Quire;
+
+use std::fmt;
+
+/// A posit format P(n, es).
+///
+/// `n` is the total word size in bits (3..=32) and `es` the exponent field
+/// size (0..=4). The 2022 posit standard fixes `es = 2`; the PDPU generator
+/// (and hence this library) keeps it configurable, matching the paper's
+/// "supporting custom posit formats" requirement.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PositFormat {
+    n: u32,
+    es: u32,
+}
+
+/// Errors produced by format construction and parsing.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum PositError {
+    #[error("word size n={0} out of supported range 3..=32")]
+    BadWordSize(u32),
+    #[error("exponent size es={0} out of supported range 0..=4")]
+    BadExpSize(u32),
+    #[error("cannot represent NaR as a real value")]
+    NaR,
+}
+
+impl PositFormat {
+    /// Construct a format, validating the supported ranges.
+    pub fn new(n: u32, es: u32) -> Result<Self, PositError> {
+        if !(3..=32).contains(&n) {
+            return Err(PositError::BadWordSize(n));
+        }
+        if es > 4 {
+            return Err(PositError::BadExpSize(es));
+        }
+        Ok(Self { n, es })
+    }
+
+    /// Construct a format, panicking on invalid parameters. Convenience for
+    /// tests and compile-time-known formats.
+    pub fn p(n: u32, es: u32) -> Self {
+        Self::new(n, es).expect("invalid posit format")
+    }
+
+    /// The standard 2022 format P(n, 2).
+    pub fn standard(n: u32) -> Self {
+        Self::p(n, 2)
+    }
+
+    #[inline]
+    pub fn n(&self) -> u32 {
+        self.n
+    }
+
+    #[inline]
+    pub fn es(&self) -> u32 {
+        self.es
+    }
+
+    /// Bit mask covering the n-bit word.
+    #[inline]
+    pub fn mask(&self) -> u32 {
+        if self.n == 32 {
+            u32::MAX
+        } else {
+            (1u32 << self.n) - 1
+        }
+    }
+
+    /// `useed = 2^(2^es)`: the regime radix.
+    #[inline]
+    pub fn useed_log2(&self) -> i32 {
+        1i32 << self.es
+    }
+
+    /// Maximum number of mantissa (fraction) bits a finite value of this
+    /// format can carry: `n - 3 - es`, clamped at 0. The `-3` accounts for
+    /// the sign bit and the shortest possible regime (2 bits).
+    #[inline]
+    pub fn max_frac_bits(&self) -> u32 {
+        (self.n as i32 - 3 - self.es as i32).max(0) as u32
+    }
+
+    /// Largest regime run value `k` of a finite posit: `n - 2`.
+    #[inline]
+    pub fn max_k(&self) -> i32 {
+        self.n as i32 - 2
+    }
+
+    /// Scale (base-2 exponent) of `maxpos`: `(n-2) * 2^es`.
+    #[inline]
+    pub fn max_scale(&self) -> i32 {
+        self.max_k() * self.useed_log2()
+    }
+
+    /// Scale (base-2 exponent) of `minpos`: `-(n-2) * 2^es`.
+    #[inline]
+    pub fn min_scale(&self) -> i32 {
+        -self.max_scale()
+    }
+
+    /// Bit pattern of Not-a-Real: `1 0…0`.
+    #[inline]
+    pub fn nar_bits(&self) -> u32 {
+        1u32 << (self.n - 1)
+    }
+
+    /// Bit pattern of the largest positive value `maxpos`: `0 1…1`.
+    #[inline]
+    pub fn maxpos_bits(&self) -> u32 {
+        self.nar_bits() - 1
+    }
+
+    /// Bit pattern of the smallest positive value `minpos`: `0 0…01`.
+    #[inline]
+    pub fn minpos_bits(&self) -> u32 {
+        1
+    }
+
+    /// Number of distinct bit patterns (2^n) as u64 (safe for n = 32).
+    #[inline]
+    pub fn cardinality(&self) -> u64 {
+        1u64 << self.n
+    }
+}
+
+impl fmt::Debug for PositFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "P({},{})", self.n, self.es)
+    }
+}
+
+impl fmt::Display for PositFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "P({},{})", self.n, self.es)
+    }
+}
+
+/// A posit value: an n-bit pattern tagged with its format.
+///
+/// The pattern lives in the low `n` bits of `bits`; upper bits are zero.
+/// Ordering of the two's-complement interpretation of the pattern matches
+/// ordering of the represented values (the classic posit monotonicity
+/// property), which `cmp_value` exploits.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Posit {
+    bits: u32,
+    fmt: PositFormat,
+}
+
+impl Posit {
+    /// Wrap raw bits (masked to n bits) in a format.
+    #[inline]
+    pub fn from_bits(bits: u32, fmt: PositFormat) -> Self {
+        Self { bits: bits & fmt.mask(), fmt }
+    }
+
+    #[inline]
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    #[inline]
+    pub fn format(&self) -> PositFormat {
+        self.fmt
+    }
+
+    /// Positive zero (the only zero).
+    #[inline]
+    pub fn zero(fmt: PositFormat) -> Self {
+        Self { bits: 0, fmt }
+    }
+
+    /// Not-a-Real.
+    #[inline]
+    pub fn nar(fmt: PositFormat) -> Self {
+        Self { bits: fmt.nar_bits(), fmt }
+    }
+
+    #[inline]
+    pub fn maxpos(fmt: PositFormat) -> Self {
+        Self { bits: fmt.maxpos_bits(), fmt }
+    }
+
+    #[inline]
+    pub fn minpos(fmt: PositFormat) -> Self {
+        Self { bits: fmt.minpos_bits(), fmt }
+    }
+
+    /// One: `0 10…0`.
+    #[inline]
+    pub fn one(fmt: PositFormat) -> Self {
+        Self { bits: 1u32 << (fmt.n - 2), fmt }
+    }
+
+    #[inline]
+    pub fn is_zero(&self) -> bool {
+        self.bits == 0
+    }
+
+    #[inline]
+    pub fn is_nar(&self) -> bool {
+        self.bits == self.fmt.nar_bits()
+    }
+
+    /// Sign bit of the pattern (true ⇒ negative value, unless NaR).
+    #[inline]
+    pub fn sign_bit(&self) -> bool {
+        (self.bits >> (self.fmt.n - 1)) & 1 == 1
+    }
+
+    /// Exact value as `f64` (exact for every supported format).
+    pub fn to_f64(&self) -> f64 {
+        convert::to_f64(*self)
+    }
+
+    /// Nearest posit to an `f64` value (round to nearest, ties to even
+    /// pattern; saturating, never underflowing to zero).
+    pub fn from_f64(v: f64, fmt: PositFormat) -> Self {
+        convert::from_f64(v, fmt)
+    }
+
+    /// Decode into sign/scale/fraction components (stage-S1 semantics).
+    pub fn decode(&self) -> Decoded {
+        decode::decode(*self)
+    }
+
+    /// Compare by represented value. NaR sorts below everything (it is the
+    /// most-negative two's-complement pattern), matching the posit standard
+    /// total order on patterns.
+    pub fn cmp_value(&self, other: &Posit) -> std::cmp::Ordering {
+        debug_assert_eq!(self.fmt, other.fmt);
+        let sext = |p: &Posit| -> i32 {
+            // sign-extend the n-bit pattern to i32
+            let sh = 32 - p.fmt.n;
+            ((p.bits << sh) as i32) >> sh
+        };
+        sext(self).cmp(&sext(other))
+    }
+
+    /// The next representable posit (pattern + 1), wrapping NaR→minpos-of-
+    /// negatives etc. Used by tests for neighbour/monotonicity checks.
+    pub fn succ(&self) -> Posit {
+        Posit::from_bits(self.bits.wrapping_add(1), self.fmt)
+    }
+
+    /// The previous representable posit (pattern − 1).
+    pub fn pred(&self) -> Posit {
+        Posit::from_bits(self.bits.wrapping_sub(1), self.fmt)
+    }
+}
+
+impl fmt::Debug for Posit {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "Posit({:#0width$b} {} = {})",
+            self.bits,
+            self.fmt,
+            if self.is_nar() { "NaR".to_string() } else { format!("{}", self.to_f64()) },
+            width = self.fmt.n as usize + 2
+        )
+    }
+}
+
+impl fmt::Display for Posit {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_nar() {
+            write!(f, "NaR")
+        } else {
+            write!(f, "{}", self.to_f64())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_validation() {
+        assert!(PositFormat::new(2, 2).is_err());
+        assert!(PositFormat::new(33, 2).is_err());
+        assert!(PositFormat::new(16, 5).is_err());
+        assert!(PositFormat::new(3, 0).is_ok());
+        assert!(PositFormat::new(32, 4).is_ok());
+    }
+
+    #[test]
+    fn format_derived_quantities() {
+        let p16 = PositFormat::p(16, 2);
+        assert_eq!(p16.max_frac_bits(), 11); // 1.f has 12 significant bits
+        assert_eq!(p16.max_scale(), 56);
+        assert_eq!(p16.min_scale(), -56);
+        assert_eq!(p16.useed_log2(), 4);
+        assert_eq!(p16.nar_bits(), 0x8000);
+        assert_eq!(p16.maxpos_bits(), 0x7FFF);
+
+        let p8 = PositFormat::p(8, 0);
+        assert_eq!(p8.max_frac_bits(), 5);
+        assert_eq!(p8.max_scale(), 6);
+
+        // degenerate: fewer bits than sign+regime+es
+        let p4 = PositFormat::p(4, 2);
+        assert_eq!(p4.max_frac_bits(), 0);
+    }
+
+    #[test]
+    fn special_patterns() {
+        let fmt = PositFormat::p(8, 1);
+        assert!(Posit::zero(fmt).is_zero());
+        assert!(Posit::nar(fmt).is_nar());
+        assert_eq!(Posit::one(fmt).bits(), 0b0100_0000);
+        assert_eq!(Posit::one(fmt).to_f64(), 1.0);
+        assert!(!Posit::zero(fmt).sign_bit());
+        assert!(Posit::nar(fmt).sign_bit());
+    }
+
+    #[test]
+    fn from_bits_masks() {
+        let fmt = PositFormat::p(8, 2);
+        let p = Posit::from_bits(0xFFFF_FF42, fmt);
+        assert_eq!(p.bits(), 0x42);
+    }
+
+    #[test]
+    fn cmp_value_total_order_p8() {
+        // exhaust P(8,1): two's-complement pattern order == value order
+        let fmt = PositFormat::p(8, 1);
+        let mut last: Option<f64> = None;
+        // iterate patterns in two's complement order: NaR (0x80) .. 0x7F
+        for i in 0..256u32 {
+            let bits = (0x80 + i) & 0xFF;
+            let p = Posit::from_bits(bits, fmt);
+            if p.is_nar() {
+                continue;
+            }
+            let v = p.to_f64();
+            if let Some(l) = last {
+                assert!(v > l, "pattern order broke value order at {bits:#x}: {l} !< {v}");
+            }
+            last = Some(v);
+        }
+    }
+}

@@ -1,0 +1,282 @@
+//! Exact dot-product accumulation (the posit *quire*).
+//!
+//! A quire is a wide fixed-point register that holds sums of posit products
+//! **exactly** — no rounding or overflow until the final conversion back to
+//! posit. The posit standard sizes the quire at `n²/2` bits; here the
+//! register is a [`Wide`] two's-complement value wide enough for the
+//! format's full product scale span plus `2^carry_guard` accumulations.
+//!
+//! Two roles in this repo:
+//! * the **Quire PDPU** baseline of Table I (`Wm = 256` row) builds on it;
+//! * it is the *exact oracle* against which every rounded datapath
+//!   (PDPU, discrete DPUs, FMAs) is validated in tests.
+
+use super::wide::Wide;
+use super::{decode, encode, Decoded, Posit, PositFormat, PositError, Unpacked};
+
+/// Number of 64-bit limbs in the quire register (1024 bits): enough for
+/// P(32,4) products (scale span 4·30·16 = 1920... see `fits` check) — we
+/// validate capacity at construction instead of sizing generically.
+const LIMBS: usize = 16;
+
+/// Exact accumulator for products of `a_fmt` × `b_fmt` posits.
+///
+/// Fixed-point layout: bit `origin` is weight 2^0; products land at
+/// `origin + scale - 2·mb` … The register keeps `2·max_scale + mb` bits on
+/// each side of the origin plus `carry_guard` headroom bits.
+#[derive(Clone)]
+pub struct Quire {
+    acc: Wide<LIMBS>,
+    a_fmt: PositFormat,
+    b_fmt: PositFormat,
+    /// bit position of weight 2^0
+    origin: u32,
+    /// true once a NaR entered the accumulation (poisons the result)
+    nar: bool,
+}
+
+impl Quire {
+    /// Create an empty quire for products of `a_fmt` and `b_fmt` values.
+    ///
+    /// Returns an error if the format pair needs more span than the
+    /// register provides (cannot happen for n ≤ 32, es ≤ 2; P(32,4) would).
+    pub fn new(a_fmt: PositFormat, b_fmt: PositFormat) -> Result<Self, PositError> {
+        let span_hi = (a_fmt.max_scale() + b_fmt.max_scale() + 2) as u32; // product < 2^(hi)
+        let span_lo =
+            (-(a_fmt.min_scale() + b_fmt.min_scale()) + (a_fmt.max_frac_bits() + b_fmt.max_frac_bits()) as i32) as u32;
+        let carry_guard = 64; // up to 2^64 accumulations without overflow
+        let need = span_hi + span_lo + carry_guard + 1;
+        if need > Wide::<LIMBS>::BITS {
+            // formats too wide for the fixed register — treat as a format error
+            return Err(PositError::BadWordSize(a_fmt.n().max(b_fmt.n())));
+        }
+        Ok(Self { acc: Wide::zero(), a_fmt, b_fmt, origin: span_lo, nar: false })
+    }
+
+    /// Quire width in bits actually required by this format pair — the
+    /// "prohibitive hardware overhead" quantity the paper cites ([34]).
+    pub fn required_bits(&self) -> u32 {
+        let span_hi = (self.a_fmt.max_scale() + self.b_fmt.max_scale() + 2) as u32;
+        self.origin + span_hi + 1
+    }
+
+    pub fn is_nar(&self) -> bool {
+        self.nar
+    }
+
+    /// Add the exact product `a·b` into the accumulator.
+    pub fn add_product(&mut self, a: Posit, b: Posit) {
+        debug_assert_eq!(a.format(), self.a_fmt);
+        debug_assert_eq!(b.format(), self.b_fmt);
+        let (da, db) = (decode(a), decode(b));
+        match (da, db) {
+            (Decoded::NaR, _) | (_, Decoded::NaR) => self.nar = true,
+            (Decoded::Zero, _) | (_, Decoded::Zero) => {}
+            (Decoded::Finite(fa), Decoded::Finite(fb)) => {
+                let prod = (fa.frac as u128) * (fb.frac as u128); // exact, ≤ 60 bits
+                let pfb = fa.frac_bits + fb.frac_bits; // fraction bits of the product
+                let scale = fa.scale + fb.scale;
+                // product = prod · 2^(scale - pfb); place at origin + scale - pfb
+                let pos = self.origin as i32 + scale - pfb as i32;
+                debug_assert!(pos >= 0, "quire origin too high");
+                let w = Wide::from_u128_shifted(prod, pos as u32);
+                let w = if fa.sign ^ fb.sign { w.neg() } else { w };
+                self.acc = self.acc.wrapping_add(&w);
+            }
+        }
+    }
+
+    /// Add a single posit value (format `out_fmt` of the caller's choosing)
+    /// exactly — used to fold a previous accumulator value into the quire.
+    pub fn add_posit(&mut self, p: Posit) {
+        match decode(p) {
+            Decoded::NaR => self.nar = true,
+            Decoded::Zero => {}
+            Decoded::Finite(f) => {
+                let pos = self.origin as i32 + f.scale - f.frac_bits as i32;
+                debug_assert!(pos >= 0);
+                let w = Wide::from_u128_shifted(f.frac as u128, pos as u32);
+                let w = if f.sign { w.neg() } else { w };
+                self.acc = self.acc.wrapping_add(&w);
+            }
+        }
+    }
+
+    /// Exact value as f64 (for oracles; may round if the sum needs more
+    /// than 53 bits, but sign/magnitude are exact).
+    pub fn to_f64(&self) -> f64 {
+        if self.nar {
+            return f64::NAN;
+        }
+        let neg = self.acc.is_negative();
+        let mag = self.acc.abs();
+        match mag.msb() {
+            None => 0.0,
+            Some(msb) => {
+                // take the top ≤ 53 bits
+                let take = msb.min(52);
+                let top = mag.extract_u128(msb - take) as u64;
+                let v = top as f64 * 2f64.powi(msb as i32 - take as i32 - self.origin as i32);
+                if neg {
+                    -v
+                } else {
+                    v
+                }
+            }
+        }
+    }
+
+    /// Round the accumulated value to the nearest posit of `out_fmt`
+    /// (single rounding — the whole point of the quire).
+    pub fn to_posit(&self, out_fmt: PositFormat) -> Posit {
+        if self.nar {
+            return Posit::nar(out_fmt);
+        }
+        let neg = self.acc.is_negative();
+        let mag = self.acc.abs();
+        let Some(msb) = mag.msb() else {
+            return Posit::zero(out_fmt);
+        };
+        // take up to 127 significant bits, sticky the rest
+        let take = msb.min(126);
+        let lo = msb - take;
+        let sig = mag.extract_u128(lo);
+        let sticky = mag.any_below(lo);
+        let scale = msb as i32 - self.origin as i32;
+        let u = Unpacked { sign: neg, scale, sig, sig_frac_bits: take, sticky };
+        Posit::from_bits(encode(u, out_fmt), out_fmt)
+    }
+}
+
+/// Exact dot product `acc + Σ aᵢ·bᵢ` with one final rounding to `out_fmt` —
+/// Eq. (2) of the paper computed the quire way. This is the reference
+/// semantics every fused unit in this repo is tested against.
+pub fn exact_dot(acc: Posit, a: &[Posit], b: &[Posit], out_fmt: PositFormat) -> Posit {
+    assert_eq!(a.len(), b.len());
+    let a_fmt = a.first().map(|p| p.format()).unwrap_or(out_fmt);
+    let b_fmt = b.first().map(|p| p.format()).unwrap_or(out_fmt);
+    let mut q = Quire::new(a_fmt, b_fmt).expect("format pair exceeds quire capacity");
+    q.add_posit(acc);
+    for (&x, &y) in a.iter().zip(b) {
+        q.add_product(x, y);
+    }
+    q.to_posit(out_fmt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Posit, PositFormat};
+    use super::*;
+    use crate::testing::Rng;
+
+    fn p16() -> PositFormat {
+        PositFormat::p(16, 2)
+    }
+    fn p8() -> PositFormat {
+        PositFormat::p(8, 2)
+    }
+
+    #[test]
+    fn empty_quire_is_zero() {
+        let q = Quire::new(p16(), p16()).unwrap();
+        assert!(q.to_posit(p16()).is_zero());
+        assert_eq!(q.to_f64(), 0.0);
+    }
+
+    #[test]
+    fn single_product_matches_f64() {
+        let fmt = p8();
+        let mut q = Quire::new(fmt, fmt).unwrap();
+        let a = Posit::from_f64(3.0, fmt);
+        let b = Posit::from_f64(-5.0, fmt);
+        q.add_product(a, b);
+        assert_eq!(q.to_f64(), -15.0);
+        assert_eq!(q.to_posit(p16()).to_f64(), -15.0);
+    }
+
+    #[test]
+    fn cancellation_is_exact() {
+        // x·y − x·y == exactly 0, even when the products are irrational in
+        // the output format.
+        let fmt = p16();
+        let mut q = Quire::new(fmt, fmt).unwrap();
+        let x = Posit::from_f64(1.0 / 3.0, fmt);
+        let y = Posit::from_f64(7.0 / 11.0, fmt);
+        q.add_product(x, y);
+        let nx = Posit::from_f64(-x.to_f64(), fmt);
+        q.add_product(nx, y);
+        assert!(q.to_posit(fmt).is_zero());
+    }
+
+    #[test]
+    fn tiny_plus_huge_not_lost() {
+        // quire keeps minpos² alive next to maxpos² — the FP64 oracle
+        // cannot even represent this sum; check via structural probes.
+        let fmt = p8();
+        let mut q = Quire::new(fmt, fmt).unwrap();
+        q.add_product(Posit::maxpos(fmt), Posit::maxpos(fmt));
+        q.add_product(Posit::minpos(fmt), Posit::minpos(fmt));
+        // subtract maxpos² again: the surviving value must be minpos²
+        let mut q2 = q.clone();
+        q2.add_product(Posit::maxpos(fmt), Posit::from_f64(-Posit::maxpos(fmt).to_f64(), fmt));
+        let survivor = q2.to_posit(p16());
+        assert!(!survivor.is_zero(), "minpos² was lost in the quire");
+        assert_eq!(survivor.to_f64().log2(), 2.0 * fmt.min_scale() as f64);
+    }
+
+    #[test]
+    fn nar_poisons() {
+        let fmt = p8();
+        let mut q = Quire::new(fmt, fmt).unwrap();
+        q.add_product(Posit::nar(fmt), Posit::one(fmt));
+        q.add_product(Posit::one(fmt), Posit::one(fmt));
+        assert!(q.to_posit(fmt).is_nar());
+    }
+
+    #[test]
+    fn required_bits_matches_paper_ballpark() {
+        // The paper's quire row uses Wm = 256 for P(13/16,2): our required
+        // width for P(13,2)×P(13,2) products must be in that ballpark.
+        let q = Quire::new(PositFormat::p(13, 2), PositFormat::p(13, 2)).unwrap();
+        let bits = q.required_bits();
+        assert!((150..320).contains(&bits), "quire width {bits}");
+    }
+
+    /// Randomized: exact_dot against an f64 oracle on well-conditioned data
+    /// (values ~1, short vectors ⇒ f64 is exact enough to agree after
+    /// rounding to P(16,2)).
+    #[test]
+    fn exact_dot_matches_f64_on_benign_data() {
+        let fmt = p16();
+        let mut rng = Rng::seeded(0xD07);
+        for _ in 0..500 {
+            let n = 1 + (rng.next_u64() % 8) as usize;
+            let a: Vec<Posit> = (0..n).map(|_| Posit::from_f64(rng.uniform(-2.0, 2.0), fmt)).collect();
+            let b: Vec<Posit> = (0..n).map(|_| Posit::from_f64(rng.uniform(-2.0, 2.0), fmt)).collect();
+            let acc = Posit::from_f64(rng.uniform(-4.0, 4.0), fmt);
+            let exact = exact_dot(acc, &a, &b, fmt);
+            let f64_ref: f64 = acc.to_f64()
+                + a.iter().zip(&b).map(|(x, y)| x.to_f64() * y.to_f64()).sum::<f64>();
+            let direct = Posit::from_f64(f64_ref, fmt);
+            // f64 has ≥ 52-12·2 = 28 spare mantissa bits on this data: the
+            // only disagreement possible is a 1-ulp double-rounding, which
+            // cannot occur with this much slack.
+            assert_eq!(exact.bits(), direct.bits(), "a={a:?} b={b:?} acc={acc:?}");
+        }
+    }
+
+    #[test]
+    fn accumulation_order_invariance() {
+        // quire sums are exact ⇒ order cannot matter
+        let fmt = p16();
+        let mut rng = Rng::seeded(42);
+        let n = 32;
+        let a: Vec<Posit> = (0..n).map(|_| Posit::from_f64(rng.uniform(-100.0, 100.0), fmt)).collect();
+        let b: Vec<Posit> = (0..n).map(|_| Posit::from_f64(rng.uniform(-100.0, 100.0), fmt)).collect();
+        let fwd = exact_dot(Posit::zero(fmt), &a, &b, fmt);
+        let (ra, rb): (Vec<Posit>, Vec<Posit>) =
+            (a.iter().rev().cloned().collect(), b.iter().rev().cloned().collect());
+        let rev = exact_dot(Posit::zero(fmt), &ra, &rb, fmt);
+        assert_eq!(fwd.bits(), rev.bits());
+    }
+}

@@ -1,0 +1,276 @@
+//! Fixed-width signed big integers for exact accumulation.
+//!
+//! `Wide<L>` is an `L·64`-bit two's-complement integer. It is the storage
+//! type behind the [`super::quire::Quire`] exact accumulator and the exact
+//! dot-product oracle used throughout the test suite. The width is a const
+//! generic so the quire can be sized to the format: P(16,2) needs ~280 bits
+//! of span for arbitrarily long dot products, comfortably inside
+//! `Wide<8>` (512 bits); wider formats use `Wide<16>`.
+//!
+//! Only the operations the accumulator needs are implemented (add, neg,
+//! shifts, comparisons, bit scan) — this is a datapath model, not a bignum
+//! library.
+
+/// `L·64`-bit two's-complement integer, little-endian limbs.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct Wide<const L: usize> {
+    pub limbs: [u64; L],
+}
+
+impl<const L: usize> Wide<L> {
+    pub const BITS: u32 = 64 * L as u32;
+
+    #[inline]
+    pub fn zero() -> Self {
+        Self { limbs: [0; L] }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.limbs.iter().all(|&l| l == 0)
+    }
+
+    /// Sign of the two's-complement value (true = negative).
+    #[inline]
+    pub fn is_negative(&self) -> bool {
+        self.limbs[L - 1] >> 63 == 1
+    }
+
+    /// Construct from a u128 magnitude placed at bit offset `shift`.
+    /// Panics (debug) if the value would overflow the width.
+    pub fn from_u128_shifted(v: u128, shift: u32) -> Self {
+        let mut out = Self::zero();
+        if v == 0 {
+            return out;
+        }
+        debug_assert!(
+            shift + (128 - v.leading_zeros()) <= Self::BITS - 1,
+            "value overflows Wide<{L}>: {} bits at shift {shift}",
+            128 - v.leading_zeros()
+        );
+        let limb = (shift / 64) as usize;
+        let off = shift % 64;
+        // spread the (up to) 128-bit value across up to 3 limbs
+        let parts = if off == 0 {
+            [(limb, v as u64), (limb + 1, (v >> 64) as u64), (limb + 2, 0)]
+        } else {
+            [
+                (limb, (v as u64) << off),
+                (limb + 1, (v >> (64 - off)) as u64),
+                (limb + 2, (v >> 64 >> (64 - off)) as u64),
+            ]
+        };
+        for (i, part) in parts {
+            if i < L && part != 0 {
+                out.limbs[i] = part;
+            }
+        }
+        out
+    }
+
+    /// Wrapping two's-complement addition.
+    pub fn wrapping_add(&self, rhs: &Self) -> Self {
+        let mut out = Self::zero();
+        let mut carry = 0u64;
+        for i in 0..L {
+            let (s1, c1) = self.limbs[i].overflowing_add(rhs.limbs[i]);
+            let (s2, c2) = s1.overflowing_add(carry);
+            out.limbs[i] = s2;
+            carry = (c1 as u64) + (c2 as u64);
+        }
+        out
+    }
+
+    /// Two's-complement negation.
+    pub fn neg(&self) -> Self {
+        let mut out = Self::zero();
+        let mut carry = 1u64;
+        for i in 0..L {
+            let (s, c) = (!self.limbs[i]).overflowing_add(carry);
+            out.limbs[i] = s;
+            carry = c as u64;
+        }
+        out
+    }
+
+    /// Absolute value (as the same unsigned width; MIN negates to itself,
+    /// which cannot occur for accumulator values with headroom).
+    pub fn abs(&self) -> Self {
+        if self.is_negative() {
+            self.neg()
+        } else {
+            *self
+        }
+    }
+
+    /// Position of the most significant set bit, or None if zero.
+    pub fn msb(&self) -> Option<u32> {
+        for i in (0..L).rev() {
+            if self.limbs[i] != 0 {
+                return Some(i as u32 * 64 + 63 - self.limbs[i].leading_zeros());
+            }
+        }
+        None
+    }
+
+    /// Extract 128 bits starting at bit `lo` (bits above the width read 0).
+    pub fn extract_u128(&self, lo: u32) -> u128 {
+        let limb = lo / 64;
+        let off = lo % 64;
+        let l0 = self.limb_or_zero(limb) as u128;
+        let l1 = self.limb_or_zero(limb + 1) as u128;
+        let l2 = self.limb_or_zero(limb + 2) as u128;
+        if off == 0 {
+            l0 | (l1 << 64)
+        } else {
+            (l0 >> off) | (l1 << (64 - off)) | (l2 << (128 - off))
+        }
+    }
+
+    #[inline]
+    fn limb_or_zero(&self, i: u32) -> u64 {
+        if (i as usize) < L {
+            self.limbs[i as usize]
+        } else {
+            0
+        }
+    }
+
+    /// True if any bit strictly below position `lo` is set (sticky probe).
+    pub fn any_below(&self, lo: u32) -> bool {
+        let limb = (lo / 64) as usize;
+        let off = lo % 64;
+        for i in 0..limb.min(L) {
+            if self.limbs[i] != 0 {
+                return true;
+            }
+        }
+        if limb < L && off > 0 {
+            if self.limbs[limb] & ((1u64 << off) - 1) != 0 {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Compare as two's-complement signed values.
+    pub fn signed_cmp(&self, rhs: &Self) -> std::cmp::Ordering {
+        use std::cmp::Ordering;
+        match (self.is_negative(), rhs.is_negative()) {
+            (true, false) => Ordering::Less,
+            (false, true) => Ordering::Greater,
+            _ => {
+                for i in (0..L).rev() {
+                    match self.limbs[i].cmp(&rhs.limbs[i]) {
+                        Ordering::Equal => continue,
+                        ord => return ord,
+                    }
+                }
+                Ordering::Equal
+            }
+        }
+    }
+}
+
+impl<const L: usize> std::fmt::Debug for Wide<L> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Wide<{L}>[0x")?;
+        for i in (0..L).rev() {
+            write!(f, "{:016x}", self.limbs[i])?;
+            if i > 0 {
+                write!(f, "_")?;
+            }
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cmp::Ordering;
+
+    type W = Wide<4>;
+
+    #[test]
+    fn zero_and_sign() {
+        assert!(W::zero().is_zero());
+        assert!(!W::zero().is_negative());
+        let neg_one = W::zero().wrapping_add(&W::from_u128_shifted(1, 0)).neg();
+        assert!(neg_one.is_negative());
+        assert_eq!(neg_one.limbs, [u64::MAX; 4]);
+    }
+
+    #[test]
+    fn from_u128_shifted_placements() {
+        // simple placement at offset 0
+        let w = W::from_u128_shifted(0xDEAD_BEEF, 0);
+        assert_eq!(w.limbs[0], 0xDEAD_BEEF);
+        // offset inside a limb
+        let w = W::from_u128_shifted(0xFF, 4);
+        assert_eq!(w.limbs[0], 0xFF0);
+        // straddling limb boundaries
+        let w = W::from_u128_shifted(u128::MAX >> 1, 60);
+        assert_eq!(w.msb(), Some(60 + 126));
+        assert!(!w.any_below(60));
+        assert!(w.any_below(61));
+        // exact limb boundary
+        let w = W::from_u128_shifted(1, 64);
+        assert_eq!(w.limbs, [0, 1, 0, 0]);
+        let w = W::from_u128_shifted(1, 128);
+        assert_eq!(w.limbs, [0, 0, 1, 0]);
+    }
+
+    #[test]
+    fn add_neg_roundtrip() {
+        let a = W::from_u128_shifted(0x1234_5678_9ABC_DEF0_1111, 50);
+        let b = W::from_u128_shifted(0xFFFF_FFFF_FFFF_FFFF, 10);
+        let s = a.wrapping_add(&b);
+        let back = s.wrapping_add(&b.neg());
+        assert_eq!(back, a);
+        // a + (-a) == 0
+        assert!(a.wrapping_add(&a.neg()).is_zero());
+    }
+
+    #[test]
+    fn carry_propagation() {
+        // all-ones + 1 ripples through every limb
+        let ones = W { limbs: [u64::MAX; 4] };
+        let one = W::from_u128_shifted(1, 0);
+        assert!(ones.wrapping_add(&one).is_zero());
+    }
+
+    #[test]
+    fn msb_and_extract() {
+        let w = W::from_u128_shifted(0b1011, 100);
+        assert_eq!(w.msb(), Some(103));
+        assert_eq!(w.extract_u128(100) & 0xF, 0b1011);
+        assert_eq!(w.extract_u128(101) & 0x7, 0b101);
+        assert_eq!(W::zero().msb(), None);
+    }
+
+    #[test]
+    fn extract_across_limbs() {
+        let w = W::from_u128_shifted(0xABCD_EF01_2345_6789_ABCD_EF01, 37);
+        assert_eq!(w.extract_u128(37) & ((1u128 << 96) - 1), 0xABCD_EF01_2345_6789_ABCD_EF01);
+    }
+
+    #[test]
+    fn signed_cmp_cases() {
+        let one = W::from_u128_shifted(1, 0);
+        let minus = one.neg();
+        let big = W::from_u128_shifted(1, 200);
+        assert_eq!(minus.signed_cmp(&one), Ordering::Less);
+        assert_eq!(one.signed_cmp(&minus), Ordering::Greater);
+        assert_eq!(one.signed_cmp(&one), Ordering::Equal);
+        assert_eq!(big.signed_cmp(&one), Ordering::Greater);
+        assert_eq!(big.neg().signed_cmp(&minus), Ordering::Less);
+    }
+
+    #[test]
+    fn any_below_boundaries() {
+        let w = W::from_u128_shifted(1, 64);
+        assert!(!w.any_below(64));
+        assert!(w.any_below(65));
+        assert!(!W::zero().any_below(255));
+    }
+}

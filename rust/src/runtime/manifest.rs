@@ -1,0 +1,208 @@
+//! Artifacts manifest — the contract between `python/compile/aot.py` and
+//! the Rust runtime: entry-point signatures, posit format, MLP layout,
+//! and the initial-parameter blob.
+
+use crate::coordinator::json::{parse, Json};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one tensor argument.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorMeta {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT entry point.
+#[derive(Clone, Debug)]
+pub struct EntrySig {
+    pub name: String,
+    pub file: PathBuf,
+    pub args: Vec<TensorMeta>,
+    pub outputs: usize,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub n_in: u32,
+    pub n_out: u32,
+    pub es: u32,
+    pub batch: usize,
+    pub layer_sizes: Vec<usize>,
+    pub gemm_mkn: (usize, usize, usize),
+    pub entries: Vec<EntrySig>,
+    pub param_shapes: Vec<Vec<usize>>,
+    params_file: PathBuf,
+    param_offsets: Vec<usize>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let v = parse(&text).map_err(|e| anyhow::anyhow!("manifest parse error: {e}"))?;
+
+        let fmt = v.get("format").context("manifest: format")?;
+        let gemm = v.get("gemm").context("manifest: gemm")?;
+        let need = |o: &Json, k: &str| -> Result<usize> {
+            o.get(k).and_then(Json::as_usize).with_context(|| format!("manifest key {k}"))
+        };
+
+        let mut entries = Vec::new();
+        if let Some(Json::Obj(m)) = v.get("entries") {
+            for (name, e) in m {
+                let args = e
+                    .get("args")
+                    .and_then(Json::as_arr)
+                    .context("entry args")?
+                    .iter()
+                    .map(|a| {
+                        Ok(TensorMeta {
+                            shape: a
+                                .get("shape")
+                                .and_then(Json::as_f64_vec)
+                                .context("arg shape")?
+                                .into_iter()
+                                .map(|d| d as usize)
+                                .collect(),
+                            dtype: a.get("dtype").and_then(Json::as_str).unwrap_or("float32").to_string(),
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                entries.push(EntrySig {
+                    name: name.clone(),
+                    file: dir.join(e.get("file").and_then(Json::as_str).context("entry file")?),
+                    args,
+                    outputs: e.get("outputs").and_then(Json::as_usize).unwrap_or(1),
+                });
+            }
+        }
+
+        let pb = v.get("params_bin").context("manifest: params_bin")?;
+        let params_file = dir.join(pb.get("file").and_then(Json::as_str).context("params file")?);
+        let mut param_shapes = Vec::new();
+        let mut param_offsets = Vec::new();
+        for t in pb.get("tensors").and_then(Json::as_arr).context("params tensors")? {
+            param_offsets.push(t.get("offset").and_then(Json::as_usize).context("offset")?);
+            param_shapes.push(
+                t.get("shape")
+                    .and_then(Json::as_f64_vec)
+                    .context("shape")?
+                    .into_iter()
+                    .map(|d| d as usize)
+                    .collect(),
+            );
+        }
+
+        Ok(Self {
+            dir,
+            n_in: need(fmt, "n_in")? as u32,
+            n_out: need(fmt, "n_out")? as u32,
+            es: need(fmt, "es")? as u32,
+            batch: v.get("batch").and_then(Json::as_usize).unwrap_or(32),
+            layer_sizes: v
+                .get("layer_sizes")
+                .and_then(Json::as_f64_vec)
+                .context("layer_sizes")?
+                .into_iter()
+                .map(|d| d as usize)
+                .collect(),
+            gemm_mkn: (need(gemm, "m")?, need(gemm, "k")?, need(gemm, "n")?),
+            entries,
+            param_shapes,
+            params_file,
+            param_offsets,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySig> {
+        self.entries.iter().find(|e| e.name == name).with_context(|| format!("no entry '{name}' in manifest"))
+    }
+
+    /// Load the initial parameters as per-tensor f32 vectors.
+    pub fn load_params(&self) -> Result<Vec<Vec<f32>>> {
+        let bytes = std::fs::read(&self.params_file)
+            .with_context(|| format!("reading {}", self.params_file.display()))?;
+        let mut out = Vec::with_capacity(self.param_shapes.len());
+        for (shape, &off) in self.param_shapes.iter().zip(&self.param_offsets) {
+            let numel: usize = shape.iter().product();
+            let end = off + numel * 4;
+            anyhow::ensure!(end <= bytes.len(), "params blob truncated");
+            let mut v = Vec::with_capacity(numel);
+            for chunk in bytes[off..end].chunks_exact(4) {
+                v.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests exercise the real artifacts when present (built by
+    /// `make artifacts`); they are skipped in a fresh checkout.
+    fn manifest() -> Option<ArtifactManifest> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        ArtifactManifest::load(dir).ok()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert_eq!((m.n_in, m.n_out, m.es), (13, 16, 2));
+        assert_eq!(m.layer_sizes, vec![784, 256, 128, 10]);
+        assert_eq!(m.entries.len(), 3);
+        assert!(m.entry("mlp_infer").is_ok());
+        assert!(m.entry("mlp_train_step").is_ok());
+        assert!(m.entry("posit_gemm").is_ok());
+        assert!(m.entry("nonexistent").is_err());
+    }
+
+    #[test]
+    fn entry_signatures_consistent() {
+        let Some(m) = manifest() else {
+            return;
+        };
+        let infer = m.entry("mlp_infer").unwrap();
+        // 6 params + 1 input
+        assert_eq!(infer.args.len(), 7);
+        assert_eq!(infer.args[0].shape, vec![784, 256]);
+        assert_eq!(infer.args[6].shape, vec![m.batch, 784]);
+        let train = m.entry("mlp_train_step").unwrap();
+        assert_eq!(train.args.len(), 8);
+        assert_eq!(train.outputs, 7);
+    }
+
+    #[test]
+    fn params_blob_loads() {
+        let Some(m) = manifest() else {
+            return;
+        };
+        let params = m.load_params().unwrap();
+        assert_eq!(params.len(), 6);
+        assert_eq!(params[0].len(), 784 * 256);
+        assert_eq!(params[5].len(), 10);
+        // He init: first weight matrix has plausible std
+        let w0 = &params[0];
+        let var = w0.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>() / w0.len() as f64;
+        assert!((var / (2.0 / 784.0) - 1.0).abs() < 0.2, "w0 var {var}");
+        // biases start at zero
+        assert!(params[1].iter().all(|&b| b == 0.0));
+    }
+}

@@ -1,0 +1,81 @@
+//! PJRT runtime — loads the AOT-compiled HLO-text artifacts and executes
+//! them on the request path. Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//!
+//! Python never runs here: after `make artifacts` the Rust binary is
+//! self-contained (HLO text + `params_init.bin` + `manifest.json`).
+
+pub mod manifest;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+pub use manifest::{ArtifactManifest, EntrySig, TensorMeta};
+
+/// A PJRT CPU client (one per process).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { client: xla::PjRtClient::cpu().context("creating PJRT CPU client")? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<LoadedModel> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {}", path.display()))?;
+        Ok(LoadedModel { exe, name: path.file_stem().unwrap_or_default().to_string_lossy().into_owned() })
+    }
+}
+
+/// A compiled executable (one model variant / entry point).
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl LoadedModel {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with positional literal arguments; returns the flattened
+    /// tuple elements (aot.py lowers everything with `return_tuple=True`).
+    pub fn execute(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(args).context("PJRT execute")?;
+        let tuple = result[0][0].to_literal_sync().context("fetching result")?;
+        tuple.to_tuple().context("decomposing result tuple")
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = shape.iter().product();
+    anyhow::ensure!(numel == data.len(), "shape {:?} wants {} elements, got {}", shape, numel, data.len());
+    let lit = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = shape.iter().product();
+    anyhow::ensure!(numel == data.len(), "shape {:?} wants {} elements, got {}", shape, numel, data.len());
+    let lit = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Read back an f32 literal as a flat Vec.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}

@@ -1,0 +1,169 @@
+//! Lightweight property-testing support.
+//!
+//! The offline build image carries no `proptest`/`quickcheck`, so this
+//! module provides the two pieces the test suite actually needs:
+//!
+//! * [`Rng`] — a small, fast, seedable SplitMix64 PRNG (deterministic test
+//!   vectors, no `rand` dependency);
+//! * [`check`] — a randomized property runner with minimal failure
+//!   reporting (seed + iteration), so a red run is reproducible by pasting
+//!   the printed seed into `Rng::seeded`.
+
+/// SplitMix64: tiny, high-quality-enough, seedable PRNG.
+/// (Sebastiano Vigna's public-domain generator.)
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Deterministic generator from a seed.
+    pub fn seeded(seed: u64) -> Self {
+        Self { state: seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1) }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn unit(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.unit()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        // modulo bias is irrelevant at test scale
+        self.next_u64() % n.max(1)
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    #[inline]
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + self.below((hi - lo + 1) as u64) as i64
+    }
+
+    /// Standard normal via Box–Muller (pairs discarded; test-grade).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.unit().max(1e-300);
+        let u2 = self.unit();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Normal with mean/sigma.
+    pub fn normal_ms(&mut self, mean: f64, sigma: f64) -> f64 {
+        mean + sigma * self.normal()
+    }
+
+    /// Log-uniform magnitude with random sign — a posit-friendly stress
+    /// distribution covering the whole dynamic range.
+    pub fn log_uniform_signed(&mut self, log2_lo: f64, log2_hi: f64) -> f64 {
+        let mag = self.uniform(log2_lo, log2_hi).exp2();
+        if self.next_u64() & 1 == 0 {
+            mag
+        } else {
+            -mag
+        }
+    }
+
+    /// Random boolean.
+    #[inline]
+    pub fn flip(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+}
+
+/// Run `prop` for `iters` random iterations. On failure the panic message
+/// includes the seed and iteration index for exact reproduction.
+pub fn check<F: FnMut(&mut Rng, usize)>(name: &str, seed: u64, iters: usize, mut prop: F) {
+    for i in 0..iters {
+        // fresh, addressable sub-generator per iteration: failures
+        // reproduce without replaying the whole sequence
+        let mut rng = Rng::seeded(seed ^ (i as u64).wrapping_mul(0xA24B_AED4_963E_E407));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng, i)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at iter {i} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::seeded(1);
+        let mut b = Rng::seeded(1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        assert_ne!(Rng::seeded(1).next_u64(), Rng::seeded(2).next_u64());
+    }
+
+    #[test]
+    fn unit_in_range() {
+        let mut r = Rng::seeded(3);
+        for _ in 0..10_000 {
+            let v = r.unit();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn normal_moments_sane() {
+        let mut r = Rng::seeded(4);
+        let n = 50_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let v = r.normal();
+            sum += v;
+            sq += v * v;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn check_reports_seed_on_failure() {
+        let r = std::panic::catch_unwind(|| {
+            check("always-fails", 0xBEEF, 10, |_rng, _i| panic!("boom"));
+        });
+        let msg = format!("{:?}", r.unwrap_err().downcast_ref::<String>().unwrap());
+        assert!(msg.contains("0xbeef"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn check_passes_quietly() {
+        check("trivial", 1, 50, |rng, _| {
+            let v = rng.uniform(-1.0, 1.0);
+            assert!(v.abs() <= 1.0);
+        });
+    }
+}

@@ -1,0 +1,82 @@
+//! Cross-layer consistency: the Rust bit-exact posit library (L3 ground
+//! truth) vs the functional contracts the Python layers rely on. These
+//! tests run without artifacts — they pin the *rust side* of the
+//! agreement that `python/tests/test_posit_emu.py` checks from the other
+//! direction.
+
+use pdpu::baselines::{DotArch, PdpuArch};
+use pdpu::pdpu::PdpuConfig;
+use pdpu::posit::{Posit, PositFormat};
+use pdpu::testing::Rng;
+
+/// The jnp quantizer (value-level) and the Rust encoder (bit-level) must
+/// produce the same *value grid*: quantizing any f64 twice through
+/// from_f64 is idempotent, and the grid is closed under the kernel's
+/// Q_out(Q_in·Q_in accumulation) discipline.
+#[test]
+fn quantization_grid_is_idempotent_and_closed() {
+    let mut rng = Rng::seeded(1);
+    for &(n, es) in &[(8u32, 2u32), (10, 2), (13, 2), (16, 2)] {
+        let fmt = PositFormat::p(n, es);
+        for _ in 0..2_000 {
+            let x = rng.log_uniform_signed(-30.0, 30.0);
+            let q1 = Posit::from_f64(x, fmt).to_f64();
+            let q2 = Posit::from_f64(q1, fmt).to_f64();
+            assert_eq!(q1, q2, "P({n},{es}) x={x}");
+        }
+    }
+}
+
+/// The L1 kernel contract: Q_out(Σ Q_in(a)·Q_in(b)) over f32 accumulation
+/// differs from the bit-exact PDPU (Wm-truncated) by bounded ulps. This is
+/// what lets the serving stack (Pallas artifact) and the accuracy
+/// experiments (Rust functional model) describe the same hardware.
+#[test]
+fn kernel_semantics_close_to_pdpu_functional_model() {
+    let in_fmt = PositFormat::p(13, 2);
+    let out_fmt = PositFormat::p(16, 2);
+    let pdpu = PdpuArch::new(PdpuConfig::mixed(13, 16, 2, 4, 14).unwrap());
+    let mut rng = Rng::seeded(7);
+    let mut max_rel = 0f64;
+    for _ in 0..300 {
+        let k = 32;
+        let a: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+        // kernel semantics (f32 accumulate, one output rounding)
+        let mut acc = 0f32;
+        for (x, y) in a.iter().zip(&b) {
+            let qx = Posit::from_f64(*x, in_fmt).to_f64() as f32;
+            let qy = Posit::from_f64(*y, in_fmt).to_f64() as f32;
+            acc += qx * qy;
+        }
+        let kernel = Posit::from_f64(acc as f64, out_fmt).to_f64();
+        // hardware semantics (Wm=14 fused chunks)
+        let hw = pdpu.dot_f64(0.0, &a, &b);
+        // The two accumulators legitimately differ by their truncation
+        // grids; on cancellation-heavy sums the OUTPUT-relative error is
+        // unbounded, so bound the divergence against the dot product's
+        // magnitude scale Σ|aᵢbᵢ| instead: chunked Wm=14 truncation loses
+        // < chunks·(N+1) grid-ulps ≈ Σ|ab|·2^-9 worst case.
+        let scale: f64 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum();
+        let rel = (kernel - hw).abs() / scale.max(1e-9);
+        max_rel = max_rel.max(rel);
+    }
+    assert!(max_rel < 2f64.powi(-9), "kernel vs PDPU functional model diverged: {max_rel}");
+}
+
+/// Golden vectors: the exact values the `pdpu quantize` CLI (used by the
+/// Python cross-layer test) must print.
+#[test]
+fn quantize_golden_vectors() {
+    let p8 = PositFormat::p(8, 2);
+    for (x, want) in [
+        (11.0, 11.0),
+        (1.06, 1.0),
+        (3.7, 3.75),
+        (1e30, 16777216.0),
+        (-1e30, -16777216.0),
+        (3150529.25, 1048576.0), // the (e, frac) joint-rounding regression
+    ] {
+        assert_eq!(Posit::from_f64(x, p8).to_f64(), want, "x={x}");
+    }
+}

@@ -1,0 +1,177 @@
+//! Full-stack integration tests: AOT artifacts → PJRT runtime → engine →
+//! batcher → TCP server. Every test skips gracefully when `artifacts/`
+//! has not been built (`make artifacts`).
+//!
+//! NOTE: PJRT state is process-global-ish (one CPU client per engine
+//! thread), so all tests share one engine via OnceLock.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, OnceLock};
+
+use pdpu::coordinator::{json, Metrics, Server, ServiceHandle};
+
+fn artifacts_dir() -> &'static str {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")
+}
+
+fn engine() -> Option<&'static ServiceHandle> {
+    static ENGINE: OnceLock<Option<ServiceHandle>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| {
+            if !std::path::Path::new(artifacts_dir()).join("manifest.json").exists() {
+                eprintln!("skipping integration tests: run `make artifacts` first");
+                return None;
+            }
+            Some(ServiceHandle::start(artifacts_dir()).expect("engine start"))
+        })
+        .as_ref()
+}
+
+#[test]
+fn model_info_matches_manifest() {
+    let Some(e) = engine() else { return };
+    let info = e.info();
+    assert_eq!(info.batch, 32);
+    assert_eq!(info.input_dim, 784);
+    assert_eq!(info.classes, 10);
+    assert_eq!((info.n_in, info.n_out, info.es), (13, 16, 2));
+}
+
+#[test]
+fn infer_batch_produces_finite_logits() {
+    let Some(e) = engine() else { return };
+    let images: Vec<Vec<f32>> = (0..5).map(|i| vec![0.1 * i as f32; 784]).collect();
+    let out = e.infer_batch(images).expect("infer");
+    assert_eq!(out.len(), 5);
+    for logits in &out {
+        assert_eq!(logits.len(), 10);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+    // identical inputs → identical outputs (deterministic path)
+    let a = e.infer_batch(vec![vec![0.25; 784]]).unwrap();
+    let b = e.infer_batch(vec![vec![0.25; 784]]).unwrap();
+    assert_eq!(a, b);
+}
+
+/// The AOT GEMM must agree with the *Rust* posit semantics: quantize
+/// inputs to P(13,2), f32-accumulate, quantize the result to P(16,2).
+/// This is the cross-layer equivalence at tensor level.
+#[test]
+fn gemm_matches_rust_posit_semantics() {
+    use pdpu::posit::{Posit, PositFormat};
+    let Some(e) = engine() else { return };
+    let (m, k, n) = e.info().gemm_mkn;
+    let mut rng = pdpu::testing::Rng::seeded(0x6E44);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+    let c = e.gemm(a.clone(), b.clone()).expect("gemm");
+
+    let p13 = PositFormat::p(13, 2);
+    let p16 = PositFormat::p(16, 2);
+    let qa: Vec<f32> = a.iter().map(|&v| Posit::from_f64(v as f64, p13).to_f64() as f32).collect();
+    let qb: Vec<f32> = b.iter().map(|&v| Posit::from_f64(v as f64, p13).to_f64() as f32).collect();
+    let mut exact_match = 0usize;
+    let samples = 400usize;
+    for s in 0..samples {
+        let (i, j) = ((s * 7919) % m, (s * 104729) % n);
+        let mut acc = 0f32;
+        for kk in 0..k {
+            acc += qa[i * k + kk] * qb[kk * n + j];
+        }
+        let want = Posit::from_f64(acc as f64, p16).to_f64() as f32;
+        let got = c[i * n + j];
+        let rel = ((got - want) / want.abs().max(1e-6)).abs();
+        // tile-blocked f32 accumulation reassociates: allow ~P(16,2)-ulp
+        assert!(rel < 3e-3, "c[{i},{j}] = {got}, want {want} (rel {rel})");
+        if got == want {
+            exact_match += 1;
+        }
+    }
+    assert!(
+        exact_match as f64 / samples as f64 > 0.8,
+        "only {exact_match}/{samples} bit-identical with the Rust oracle"
+    );
+}
+
+#[test]
+fn train_step_reduces_loss_on_fixed_batch() {
+    let Some(e) = engine() else { return };
+    let mut rng = pdpu::testing::Rng::seeded(0x7EA);
+    // blob batch like dnn::dataset::mnist_like
+    let data = pdpu::dnn::mnist_like(99, 32, 10);
+    let images: Vec<Vec<f32>> = data.images.iter().map(|im| im.iter().map(|&v| v as f32).collect()).collect();
+    let labels: Vec<u32> = data.labels.iter().map(|&l| l as u32).collect();
+    let first = e.train_step(images.clone(), labels.clone()).expect("train");
+    let mut last = first;
+    for _ in 0..15 {
+        last = e.train_step(images.clone(), labels.clone()).expect("train");
+    }
+    assert!(last < first * 0.9, "loss {first} → {last} (no learning on a fixed batch)");
+    let _ = rng;
+}
+
+#[test]
+fn tcp_server_roundtrip_and_batching() {
+    let Some(e) = engine() else { return };
+    let metrics = Arc::new(Metrics::new());
+    let server = Server::start("127.0.0.1:0", e.clone(), metrics.clone()).expect("server");
+    let addr = server.addr;
+
+    // concurrent clients
+    let mut handles = Vec::new();
+    for t in 0..6 {
+        handles.push(std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).expect("connect");
+            let mut writer = stream.try_clone().unwrap();
+            let mut reader = BufReader::new(stream);
+
+            // ping
+            writer.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let v = json::parse(&line).unwrap();
+            assert_eq!(v.get("pong"), Some(&json::Json::Bool(true)));
+
+            // a few inferences
+            for i in 0..4 {
+                let img: Vec<f64> = (0..784).map(|p| ((p + i + t) % 7) as f64 / 7.0).collect();
+                let req = json::Json::obj(vec![
+                    ("op", json::Json::Str("infer".into())),
+                    ("image", json::Json::arr_f64(&img)),
+                ]);
+                writer.write_all((req.to_string() + "\n").as_bytes()).unwrap();
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                let v = json::parse(&line).unwrap();
+                assert_eq!(v.get("ok"), Some(&json::Json::Bool(true)), "{line}");
+                assert_eq!(v.get("logits").unwrap().as_arr().unwrap().len(), 10);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // error paths
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    for (req, frag) in [
+        ("{\"op\":\"bogus\"}", "unknown op"),
+        ("not json", "bad json"),
+        ("{\"op\":\"infer\",\"image\":[1,2,3]}", "784"),
+    ] {
+        writer.write_all((req.to_string() + "\n").as_bytes()).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains(frag), "req {req} → {line}");
+    }
+
+    // stats reflect the traffic
+    writer.write_all(b"{\"op\":\"stats\"}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = json::parse(&line).unwrap();
+    assert!(v.get("responses").unwrap().as_f64().unwrap() >= 24.0, "{line}");
+}
