@@ -24,6 +24,38 @@ pub trait DotArch {
     /// `acc + Σ aᵢ·bᵢ` over arbitrary-length vectors with this
     /// architecture's quantization and internal rounding behaviour.
     fn dot_f64(&self, acc: f64, a: &[f64], b: &[f64]) -> f64;
+
+    /// Batched dot products (a GEMM tile): `w` holds `rows` weight vectors
+    /// of length `k` (row-major) and `x` holds `cols` activation vectors
+    /// of length `k` (row-major — i.e. the transposed right-hand matrix,
+    /// which is exactly the im2col patch-matrix layout). Returns
+    /// `rows·cols` values, row-major:
+    ///
+    /// ```text
+    /// out[r·cols + c] = dot_f64(acc[r], w[r·k..], x[c·k..])
+    /// ```
+    ///
+    /// The default implementation is the scalar loop above, so every
+    /// architecture keeps its exact numerical behaviour; fused units that
+    /// can do better (see [`crate::engine`]) override it with a batched
+    /// path that MUST stay bit-identical to this default — that
+    /// equivalence is property-tested in `rust/tests/engine_equivalence.rs`.
+    fn dot_batch(&self, acc: &[f64], w: &[f64], x: &[f64], k: usize) -> Vec<f64> {
+        assert!(k > 0, "inner dimension k must be positive");
+        assert_eq!(w.len() % k, 0, "w length {} not a multiple of k={k}", w.len());
+        assert_eq!(x.len() % k, 0, "x length {} not a multiple of k={k}", x.len());
+        let rows = w.len() / k;
+        let cols = x.len() / k;
+        assert_eq!(acc.len(), rows, "one accumulator seed per output row");
+        let mut out = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            let wrow = &w[r * k..(r + 1) * k];
+            for c in 0..cols {
+                out.push(self.dot_f64(acc[r], wrow, &x[c * k..(c + 1) * k]));
+            }
+        }
+        out
+    }
 }
 
 /// Scalar multiply/add/fma in some number system — the building block of

@@ -2,6 +2,7 @@
 //! and the quire-equipped PDPU baseline (Table I's "Quire PDPU" row).
 
 use super::arch::DotArch;
+use crate::engine::{BatchEngine, PreparedOperands};
 use crate::pdpu::{Pdpu, PdpuConfig};
 use crate::posit::{quire::Quire, Posit, PositFormat};
 
@@ -36,6 +37,20 @@ impl DotArch for PdpuArch {
         let qb: Vec<Posit> = b.iter().map(|&v| Posit::from_f64(v, cfg.in_fmt)).collect();
         let acc = Posit::from_f64(acc, cfg.out_fmt);
         self.unit.dot_chunked(acc, &qa, &qb).to_f64()
+    }
+
+    /// Batched override: quantize + pre-decode each operand matrix once
+    /// (instead of once per output element) and execute row-parallel
+    /// through [`BatchEngine`]. Bit-identical to the default scalar loop —
+    /// see `rust/tests/engine_equivalence.rs`.
+    fn dot_batch(&self, acc: &[f64], w: &[f64], x: &[f64], k: usize) -> Vec<f64> {
+        let cfg = *self.unit.config();
+        let wp = PreparedOperands::quantize(cfg.in_fmt, w, k);
+        let xp = PreparedOperands::quantize(cfg.in_fmt, x, k);
+        assert_eq!(acc.len(), wp.rows(), "one accumulator seed per output row");
+        let accp: Vec<Posit> = acc.iter().map(|&v| Posit::from_f64(v, cfg.out_fmt)).collect();
+        let engine = BatchEngine::new(cfg);
+        engine.gemm_posit(&accp, &wp, &xp).iter().map(|p| p.to_f64()).collect()
     }
 }
 

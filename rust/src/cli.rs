@@ -81,8 +81,10 @@ COMMANDS
                                   one fused dot product (bit-exact)
   schedule [--outputs N] [--dot-len K] [--units U] [--n N] [--interleave I]
                                   PDPU-array cycle-accurate schedule
-  serve [--addr HOST:PORT] [--artifacts DIR]
+  serve [--addr HOST:PORT] [--artifacts DIR] [--software] [--batch N]
                                   start the batched inference server
+                                  (--software, or missing PJRT artifacts,
+                                  serves the batched bit-exact PDPU engine)
   selftest [--artifacts DIR]      load artifacts, run a PJRT smoke batch
 ";
 
@@ -247,7 +249,27 @@ fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
     use std::sync::Arc;
     let addr = args.flag("addr").unwrap_or("127.0.0.1:7878");
     let dir = args.flag("artifacts").unwrap_or("artifacts");
-    let service = ServiceHandle::start(dir)?;
+    let software = || {
+        ServiceHandle::start_software(
+            PdpuConfig::paper_default(),
+            vec![784, 128, 10],
+            args.flag_usize("batch", 32).max(1),
+            (32, 147, 32),
+            2023,
+        )
+    };
+    let service = if args.flag("software").is_some() {
+        println!("backend: software PDPU engine (batched bit-exact functional model)");
+        software()
+    } else {
+        match ServiceHandle::start(dir) {
+            Ok(s) => s,
+            Err(e) => {
+                println!("PJRT backend unavailable ({e:#}); serving via the software PDPU engine");
+                software()
+            }
+        }
+    };
     let metrics = Arc::new(Metrics::new());
     let server = Server::start(addr, service, metrics)?;
     println!("pdpu coordinator listening on {}", server.addr);

@@ -229,6 +229,38 @@ mod tests {
         assert_eq!(results.len(), 4);
     }
 
+    /// The serving configuration end-to-end: a Batcher whose backend is
+    /// the engine-thread handle over the software (batched PDPU GEMM)
+    /// service — formed batches run as one engine call, not scalar loops.
+    #[test]
+    fn batches_run_through_software_engine() {
+        use super::super::engine::ServiceHandle;
+        use crate::pdpu::PdpuConfig;
+        let svc =
+            ServiceHandle::start_software(PdpuConfig::paper_default(), vec![6, 3], 8, (2, 2, 2), 1);
+        let m = Arc::new(Metrics::new());
+        let backend_svc = svc.clone();
+        let b: Batcher<Vec<f32>, Vec<f32>> = Batcher::spawn(
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+            m.clone(),
+            move |images: Vec<Vec<f32>>| {
+                let n = images.len();
+                match backend_svc.infer_batch(images) {
+                    Ok(outs) => outs.into_iter().map(Ok).collect::<Vec<_>>(),
+                    Err(e) => (0..n).map(|_| Err(e.clone())).collect(),
+                }
+            },
+        );
+        let rxs: Vec<_> = (0..8).map(|i| b.submit(vec![i as f32 / 8.0; 6])).collect();
+        for rx in rxs {
+            let logits = rx.recv().unwrap().unwrap();
+            assert_eq!(logits.len(), 3);
+            assert!(logits.iter().all(|v| v.is_finite()));
+        }
+        assert!(m.snapshot().batches >= 1);
+        svc.shutdown();
+    }
+
     #[test]
     fn metrics_track_batching() {
         let m = Arc::new(Metrics::new());

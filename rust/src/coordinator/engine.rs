@@ -8,7 +8,8 @@
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 
-use super::service::PositService;
+use super::service::{PositService, SoftwareService};
+use crate::pdpu::PdpuConfig;
 
 enum EngineReq {
     InferBatch(Vec<Vec<f32>>, Sender<Result<Vec<Vec<f32>>, String>>),
@@ -86,6 +87,60 @@ impl ServiceHandle {
             .map_err(|_| anyhow::anyhow!("engine thread died during startup"))?
             .map_err(|e| anyhow::anyhow!(e))?;
         Ok(ServiceHandle { tx, info, joiner: Arc::new(Mutex::new(Some(joiner))) })
+    }
+
+    /// Spawn an engine thread over the pure-Rust [`SoftwareService`]: the
+    /// batched-PDPU-engine backend that needs neither artifacts nor PJRT.
+    /// Inference and GEMM are served; train-step requests report that they
+    /// need the AOT artifacts.
+    ///
+    /// The service is constructed (and its configuration validated) on the
+    /// caller's thread *before* the engine thread spawns, so an invalid
+    /// configuration panics here with its real message instead of killing
+    /// the engine thread and turning every later request into an opaque
+    /// "engine gone" error.
+    ///
+    /// # Panics
+    /// If `layer_sizes` has fewer than two entries or contains a zero, or
+    /// if `batch == 0` (the [`SoftwareService::new`] invariants).
+    pub fn start_software(
+        cfg: PdpuConfig,
+        layer_sizes: Vec<usize>,
+        batch: usize,
+        gemm_mkn: (usize, usize, usize),
+        seed: u64,
+    ) -> ServiceHandle {
+        let service = SoftwareService::new(cfg, &layer_sizes, batch, gemm_mkn, seed);
+        let info = ModelInfo {
+            batch,
+            input_dim: layer_sizes[0],
+            classes: *layer_sizes.last().unwrap(),
+            gemm_mkn,
+            n_in: cfg.in_fmt.n(),
+            n_out: cfg.out_fmt.n(),
+            es: cfg.in_fmt.es(),
+        };
+        let (tx, rx) = channel::<EngineReq>();
+        let joiner = std::thread::spawn(move || {
+            while let Ok(req) = rx.recv() {
+                match req {
+                    EngineReq::InferBatch(images, reply) => {
+                        let _ = reply.send(service.infer_batch(&images));
+                    }
+                    EngineReq::TrainStep(_images, _labels, reply) => {
+                        let _ = reply.send(Err(
+                            "train_step needs PJRT artifacts; the software backend is inference-only"
+                                .to_string(),
+                        ));
+                    }
+                    EngineReq::Gemm(a, b, reply) => {
+                        let _ = reply.send(service.gemm(&a, &b));
+                    }
+                    EngineReq::Shutdown => return,
+                }
+            }
+        });
+        ServiceHandle { tx, info, joiner: Arc::new(Mutex::new(Some(joiner))) }
     }
 
     pub fn info(&self) -> &ModelInfo {

@@ -23,4 +23,4 @@ pub use engine::{ModelInfo, ServiceHandle};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use scheduler::{conv_jobs, schedule, DotJob, ScheduleReport};
 pub use server::Server;
-pub use service::PositService;
+pub use service::{PositService, SoftwareService};

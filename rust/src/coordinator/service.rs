@@ -6,7 +6,12 @@ use anyhow::{Context, Result};
 use std::path::Path;
 use std::sync::Mutex;
 
+use crate::baselines::{DotArch, PdpuArch};
+use crate::dnn::layers::{linear_batch, relu};
+use crate::dnn::Tensor;
+use crate::pdpu::PdpuConfig;
 use crate::runtime::{literal_f32, literal_i32, to_vec_f32, ArtifactManifest, LoadedModel, Runtime};
+use crate::testing::Rng;
 
 /// Loaded artifacts + parameter state.
 pub struct PositService {
@@ -116,5 +121,188 @@ impl PositService {
     /// Snapshot of current parameters (for checkpoint-style inspection).
     pub fn params_snapshot(&self) -> Vec<Vec<f32>> {
         self.params.lock().unwrap().clone()
+    }
+}
+
+/// Pure-Rust fallback backend: a posit MLP with deterministic (seeded)
+/// He-initialized weights plus a posit GEMM, both executed through the
+/// batched PDPU engine ([`DotArch::dot_batch`] → [`crate::engine`]) — no
+/// PJRT, no artifacts. This is what serves when the AOT artifacts or the
+/// XLA runtime are unavailable (e.g. this offline build), and it is the
+/// offline test surface for the batcher/server stack.
+///
+/// Batch ops run as whole GEMM tiles: one `dot_batch` call per layer for
+/// an entire inference batch, one per GEMM request — never a scalar
+/// per-output loop.
+pub struct SoftwareService {
+    arch: PdpuArch,
+    weights: Vec<Tensor>,
+    biases: Vec<Vec<f64>>,
+    layer_sizes: Vec<usize>,
+    batch: usize,
+    gemm_mkn: (usize, usize, usize),
+}
+
+impl SoftwareService {
+    /// Build a software model: `layer_sizes` = [input, hidden…, classes].
+    pub fn new(
+        cfg: PdpuConfig,
+        layer_sizes: &[usize],
+        batch: usize,
+        gemm_mkn: (usize, usize, usize),
+        seed: u64,
+    ) -> Self {
+        assert!(layer_sizes.len() >= 2, "need at least input and output layer sizes");
+        assert!(layer_sizes.iter().all(|&s| s > 0));
+        assert!(batch >= 1);
+        let mut rng = Rng::seeded(seed);
+        let mut weights = Vec::new();
+        let mut biases = Vec::new();
+        for win in layer_sizes.windows(2) {
+            let (fan_in, fan_out) = (win[0], win[1]);
+            let sigma = (2.0 / fan_in as f64).sqrt();
+            let data: Vec<f64> = (0..fan_out * fan_in).map(|_| rng.normal() * sigma).collect();
+            weights.push(Tensor::from_vec(&[fan_out, fan_in], data));
+            biases.push(vec![0.0; fan_out]);
+        }
+        Self {
+            arch: PdpuArch::new(cfg),
+            weights,
+            biases,
+            layer_sizes: layer_sizes.to_vec(),
+            batch,
+            gemm_mkn,
+        }
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.layer_sizes[0]
+    }
+
+    pub fn classes(&self) -> usize {
+        *self.layer_sizes.last().unwrap()
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    pub fn layer_sizes(&self) -> &[usize] {
+        &self.layer_sizes
+    }
+
+    pub fn gemm_mkn(&self) -> (usize, usize, usize) {
+        self.gemm_mkn
+    }
+
+    /// Run a batch of images through the posit MLP: one batched GEMM per
+    /// layer, ReLU between layers. Deterministic.
+    pub fn infer_batch(&self, images: &[Vec<f32>]) -> std::result::Result<Vec<Vec<f32>>, String> {
+        let d = self.input_dim();
+        if images.is_empty() || images.len() > self.batch {
+            return Err(format!("batch of {} exceeds configured size {}", images.len(), self.batch));
+        }
+        let b = images.len();
+        let mut flat = Vec::with_capacity(b * d);
+        for (i, img) in images.iter().enumerate() {
+            if img.len() != d {
+                return Err(format!("image {i} has {} pixels, want {d}", img.len()));
+            }
+            flat.extend(img.iter().map(|&v| v as f64));
+        }
+        let mut acts = Tensor::from_vec(&[b, d], flat);
+        let last = self.weights.len() - 1;
+        for (l, (w, bias)) in self.weights.iter().zip(&self.biases).enumerate() {
+            acts = linear_batch(&self.arch, &acts, w, bias);
+            if l != last {
+                relu(acts.data_mut());
+            }
+        }
+        let c = self.classes();
+        Ok((0..b)
+            .map(|i| acts.data()[i * c..(i + 1) * c].iter().map(|&v| v as f32).collect())
+            .collect())
+    }
+
+    /// Posit GEMM at the configured (M, K, N): quantize once per operand,
+    /// run one batched tile.
+    pub fn gemm(&self, a: &[f32], b: &[f32]) -> std::result::Result<Vec<f32>, String> {
+        let (m, k, n) = self.gemm_mkn;
+        if a.len() != m * k {
+            return Err(format!("A must be {m}x{k}"));
+        }
+        if b.len() != k * n {
+            return Err(format!("B must be {k}x{n}"));
+        }
+        let af: Vec<f64> = a.iter().map(|&v| v as f64).collect();
+        // transpose B so each right-hand vector is contiguous (the layout
+        // dot_batch wants)
+        let mut bt = vec![0.0f64; n * k];
+        for kk in 0..k {
+            for j in 0..n {
+                bt[j * k + kk] = b[kk * n + j] as f64;
+            }
+        }
+        let out = self.arch.dot_batch(&vec![0.0; m], &af, &bt, k);
+        Ok(out.into_iter().map(|v| v as f32).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn svc() -> SoftwareService {
+        SoftwareService::new(PdpuConfig::paper_default(), &[12, 8, 3], 4, (4, 6, 5), 0x5EED)
+    }
+
+    #[test]
+    fn software_infer_shapes_and_determinism() {
+        let s = svc();
+        let images: Vec<Vec<f32>> = (0..3).map(|i| vec![0.1 * (i + 1) as f32; 12]).collect();
+        let out = s.infer_batch(&images).unwrap();
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|l| l.len() == 3 && l.iter().all(|v| v.is_finite())));
+        assert_eq!(out, s.infer_batch(&images).unwrap());
+        // same image alone or in a batch → same logits (batched GEMM is
+        // per-column independent)
+        let solo = s.infer_batch(&images[..1]).unwrap();
+        assert_eq!(solo[0], out[0]);
+    }
+
+    #[test]
+    fn software_infer_rejects_bad_shapes() {
+        let s = svc();
+        assert!(s.infer_batch(&[]).is_err());
+        assert!(s.infer_batch(&vec![vec![0.0f32; 12]; 5]).is_err());
+        assert!(s.infer_batch(&[vec![0.0f32; 7]]).unwrap_err().contains("pixels"));
+    }
+
+    #[test]
+    fn software_gemm_matches_dot_batch_oracle() {
+        let s = svc();
+        let (m, k, n) = s.gemm_mkn();
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.37).sin()).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.53).cos()).collect();
+        let c = s.gemm(&a, &b).unwrap();
+        assert_eq!(c.len(), m * n);
+        // scalar oracle: per-element chunked dot through the same arch
+        let arch = PdpuArch::new(PdpuConfig::paper_default());
+        for i in 0..m {
+            for j in 0..n {
+                let row: Vec<f64> = (0..k).map(|kk| a[i * k + kk] as f64).collect();
+                let col: Vec<f64> = (0..k).map(|kk| b[kk * n + j] as f64).collect();
+                let want = arch.dot_f64(0.0, &row, &col) as f32;
+                assert_eq!(c[i * n + j], want, "c[{i},{j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn software_gemm_rejects_bad_shapes() {
+        let s = svc();
+        assert!(s.gemm(&[0.0; 3], &[0.0; 30]).is_err());
+        let (m, k, n) = s.gemm_mkn();
+        assert!(s.gemm(&vec![0.0; m * k], &vec![0.0; k * n + 1]).is_err());
     }
 }

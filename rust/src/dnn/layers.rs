@@ -5,11 +5,18 @@
 //! PDPU vs. a discrete DPU exercises exactly the hardware difference the
 //! paper measures. `conv2d_f64`/`linear_f64` are the FP64 references.
 
-use super::tensor::{im2col_patch, Tensor};
+use super::tensor::{im2col_matrix, Tensor};
 use crate::baselines::DotArch;
 
 /// 2-D convolution of a CHW image with OIHW weights on `unit`.
 /// Returns [out_ch, oh, ow].
+///
+/// Routed through [`DotArch::dot_batch`] over the im2col patch matrix:
+/// one GEMM tile of `oc` weight rows × `oh·ow` patch columns. For
+/// architectures with a batched override (the PDPU engine) the weight
+/// tensor is quantized and decoded once per layer instead of once per
+/// output pixel; for everything else the defaulted `dot_batch` reproduces
+/// the scalar loop bit-for-bit.
 pub fn conv2d(
     unit: &dyn DotArch,
     img: &Tensor,
@@ -28,19 +35,12 @@ pub fn conv2d(
     let ow = (w + 2 * pad - kw) / stride + 1;
     let klen = weights.shape()[1] * kh * kw;
 
-    let mut out = Tensor::zeros(&[oc, oh, ow]);
-    let mut patch = Vec::with_capacity(klen);
-    for o in 0..oc {
-        let wrow = &weights.data()[o * klen..(o + 1) * klen];
-        for oy in 0..oh {
-            for ox in 0..ow {
-                im2col_patch(img, oy, ox, kh, kw, stride, pad, &mut patch);
-                let v = unit.dot_f64(0.0, &patch, wrow);
-                out.data_mut()[(o * oh + oy) * ow + ox] = v;
-            }
-        }
-    }
-    out
+    let patches = im2col_matrix(img, kh, kw, stride, pad);
+    debug_assert_eq!(patches.shape(), &[oh * ow, klen]);
+    // out[o·(oh·ow) + p] = dot(W[o,:], patch[p,:]) — already the [oc, oh, ow]
+    // row-major layout.
+    let out = unit.dot_batch(&vec![0.0; oc], weights.data(), patches.data(), klen);
+    Tensor::from_vec(&[oc, oh, ow], out)
 }
 
 /// FP64 reference convolution (the paper's baseline representation).
@@ -61,13 +61,32 @@ pub fn conv2d_f64(img: &Tensor, weights: &Tensor, stride: usize, pad: usize) -> 
 }
 
 /// Fully-connected layer `y = W·x + b` on `unit`; `w` is [out, in].
+/// One-column [`DotArch::dot_batch`] call (bit-identical to the scalar
+/// per-row loop).
 pub fn linear(unit: &dyn DotArch, x: &[f64], w: &Tensor, b: &[f64]) -> Vec<f64> {
     let (out_dim, in_dim) = (w.shape()[0], w.shape()[1]);
     assert_eq!(x.len(), in_dim);
     assert_eq!(b.len(), out_dim);
-    (0..out_dim)
-        .map(|o| unit.dot_f64(b[o], &w.data()[o * in_dim..(o + 1) * in_dim], x))
-        .collect()
+    unit.dot_batch(b, w.data(), x, in_dim)
+}
+
+/// Batched fully-connected layer: `xs` is a [batch, in] activation matrix
+/// (row-major); returns [batch, out]. The whole batch runs as one
+/// [`DotArch::dot_batch`] tile — the serving-path entry point.
+pub fn linear_batch(unit: &dyn DotArch, xs: &Tensor, w: &Tensor, b: &[f64]) -> Tensor {
+    let (out_dim, in_dim) = (w.shape()[0], w.shape()[1]);
+    let batch = xs.shape()[0];
+    assert_eq!(xs.shape()[1], in_dim);
+    assert_eq!(b.len(), out_dim);
+    // dot_batch yields [out, batch]; transpose into [batch, out]
+    let ob = unit.dot_batch(b, w.data(), xs.data(), in_dim);
+    let mut out = Tensor::zeros(&[batch, out_dim]);
+    for o in 0..out_dim {
+        for i in 0..batch {
+            out.data_mut()[i * out_dim + o] = ob[o * batch + i];
+        }
+    }
+    out
 }
 
 /// FP64 reference fully-connected layer.

@@ -126,6 +126,32 @@ pub fn im2col_patch(
     }
 }
 
+/// Full im2col: the patch matrix `[oh·ow, klen]` whose row `oy·ow + ox`
+/// is exactly `im2col_patch(img, oy, ox, ..)`. Building it once per
+/// (layer, image) lets the batched GEMM engine treat a convolution as one
+/// `weights [oc, klen] × patchesᵀ` tile instead of oh·ow·oc scalar calls.
+pub fn im2col_matrix(
+    img: &Tensor, // [C, H, W]
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> Tensor {
+    let (c, h, w) = (img.shape()[0], img.shape()[1], img.shape()[2]);
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (w + 2 * pad - kw) / stride + 1;
+    let klen = c * kh * kw;
+    let mut data = Vec::with_capacity(oh * ow * klen);
+    let mut patch = Vec::with_capacity(klen);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            im2col_patch(img, oy, ox, kh, kw, stride, pad, &mut patch);
+            data.extend_from_slice(&patch);
+        }
+    }
+    Tensor::from_vec(&[oh * ow, klen], data)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -188,5 +214,23 @@ mod tests {
         im2col_patch(&img, 1, 1, 2, 2, 2, 0, &mut patch);
         // stride-2 position (1,1) → rows 2..3, cols 2..3
         assert_eq!(patch, vec![10.0, 11.0, 14.0, 15.0]);
+    }
+
+    #[test]
+    fn im2col_matrix_rows_equal_patches() {
+        let img = Tensor::from_vec(&[2, 5, 5], (0..50).map(|i| (i as f64).sin()).collect());
+        let (kh, kw, stride, pad) = (3, 3, 2, 1);
+        let m = im2col_matrix(&img, kh, kw, stride, pad);
+        let (oh, ow) = ((5 + 2 * pad - kh) / stride + 1, (5 + 2 * pad - kw) / stride + 1);
+        let klen = 2 * kh * kw;
+        assert_eq!(m.shape(), &[oh * ow, klen]);
+        let mut patch = Vec::new();
+        for oy in 0..oh {
+            for ox in 0..ow {
+                im2col_patch(&img, oy, ox, kh, kw, stride, pad, &mut patch);
+                let row = &m.data()[(oy * ow + ox) * klen..(oy * ow + ox + 1) * klen];
+                assert_eq!(row, &patch[..], "row ({oy},{ox})");
+            }
+        }
     }
 }

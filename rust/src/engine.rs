@@ -1,0 +1,376 @@
+//! Batched GEMM/im2col execution engine for the PDPU array.
+//!
+//! The accuracy experiments and the serving stack both reduce to the same
+//! computation: many chunked dot products of a small set of *weight* rows
+//! against a large set of *activation* columns. Driving that through
+//! scalar [`crate::baselines::DotArch::dot_f64`] calls (the seed's path)
+//! re-quantizes and re-decodes the same weight row once per output pixel
+//! and allocates fresh inter-stage `Vec`s inside every pipeline stage.
+//!
+//! This module removes both costs while keeping the result **bit-exact**
+//! with the scalar path:
+//!
+//! * [`PreparedOperands`] quantizes an f64 tensor to the input posit
+//!   format and runs the S1 per-value decode **once**, storing the
+//!   [`Decoded`] planes; every subsequent operation reuses them (the
+//!   paper's S1 decoders run once per value instead of once per use —
+//!   exactly what a systolic deployment of PDPU would do with its
+//!   stationary operand).
+//! * [`BatchEngine::gemm_posit`] executes the whole output tile through a
+//!   per-worker reusable [`DotScratch`], with **row-parallel** execution
+//!   across `std::thread` workers. Every output element is an independent
+//!   chunked accumulation, so results are deterministic and invariant to
+//!   the worker count (property-tested in `rust/tests/engine_equivalence.rs`).
+//!
+//! Bit-exactness invariant: for every output element the engine performs
+//! the *same* S1–S6 stage sequence as [`Pdpu::dot_chunked`] — the lane and
+//! accumulator semantics live in one place
+//! ([`crate::pdpu::stages::product_term`] / [`crate::pdpu::stages::acc_term`],
+//! shared with `s1_decode`), and pre-decoding only hoists the pure
+//! per-value posit decode out of the loop. The equivalence is enforced by
+//! tests at three levels (stage, unit, GEMM).
+
+use crate::pdpu::stages::{acc_term, product_term};
+use crate::pdpu::{DotScratch, Pdpu, PdpuConfig};
+use crate::posit::{decode, Decoded, Posit, PositFormat};
+
+/// A matrix of operands quantized to a posit format and pre-decoded into
+/// S1 [`Decoded`] planes, laid out as `rows` contiguous vectors of length
+/// `k` (row-major).
+///
+/// For a conv layer this is built **once per layer** from the OIHW weight
+/// tensor (rows = output channels, k = in_ch·kh·kw) and once per image
+/// from the im2col patch matrix (rows = output pixels), then reused across
+/// every output element.
+#[derive(Clone, Debug)]
+pub struct PreparedOperands {
+    fmt: PositFormat,
+    rows: usize,
+    k: usize,
+    elems: Vec<Decoded>,
+}
+
+impl PreparedOperands {
+    /// Quantize `data` (rows·k values, row-major) to `fmt` and pre-decode.
+    pub fn quantize(fmt: PositFormat, data: &[f64], k: usize) -> Self {
+        assert!(k > 0, "inner dimension k must be positive");
+        assert_eq!(data.len() % k, 0, "data length {} not a multiple of k={k}", data.len());
+        let elems = data.iter().map(|&v| decode(Posit::from_f64(v, fmt))).collect();
+        Self { fmt, rows: data.len() / k, k, elems }
+    }
+
+    /// Pre-decode already-quantized posits (rows·k values, row-major).
+    pub fn from_posits(fmt: PositFormat, posits: &[Posit], k: usize) -> Self {
+        assert!(k > 0, "inner dimension k must be positive");
+        assert_eq!(posits.len() % k, 0);
+        debug_assert!(posits.iter().all(|p| p.format() == fmt));
+        let elems = posits.iter().map(|&p| decode(p)).collect();
+        Self { fmt, rows: posits.len() / k, k, elems }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    #[inline]
+    pub fn format(&self) -> PositFormat {
+        self.fmt
+    }
+
+    /// Pre-decoded row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[Decoded] {
+        &self.elems[r * self.k..(r + 1) * self.k]
+    }
+}
+
+/// Below this many MACs (rows·cols·k) a tile runs sequentially in auto
+/// mode: thread spawn/join would cost more than the dot products.
+const AUTO_PARALLEL_MIN_MACS: usize = 16 * 1024;
+
+/// The batched executor: one PDPU configuration plus a worker-thread
+/// policy. `threads == 0` means "auto": scale to the available
+/// parallelism, but run small tiles sequentially. An explicit
+/// `with_threads(n)` always uses `n` workers (capped at the row count).
+#[derive(Clone, Debug)]
+pub struct BatchEngine {
+    unit: Pdpu,
+    threads: usize,
+}
+
+impl BatchEngine {
+    pub fn new(cfg: PdpuConfig) -> Self {
+        Self { unit: Pdpu::new(cfg), threads: 0 }
+    }
+
+    /// Fix the worker count (useful for benchmarking and for the
+    /// thread-count-invariance property tests). `0` restores auto.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    #[inline]
+    pub fn config(&self) -> &PdpuConfig {
+        self.unit.config()
+    }
+
+    fn effective_threads(&self, rows: usize, cols: usize, k: usize) -> usize {
+        let t = if self.threads > 0 {
+            self.threads
+        } else if rows * cols * k < AUTO_PARALLEL_MIN_MACS {
+            1
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
+        };
+        t.clamp(1, rows.max(1))
+    }
+
+    /// One chunked dot product over pre-decoded planes: bit-identical to
+    /// `Pdpu::dot_chunked(acc, row_posits, col_posits)` — same chunking,
+    /// same zero-padded tail, same single rounding per chunk.
+    pub fn dot_prepared(
+        &self,
+        acc: Posit,
+        row: &[Decoded],
+        col: &[Decoded],
+        scratch: &mut DotScratch,
+    ) -> Posit {
+        assert_eq!(row.len(), col.len(), "vector length mismatch");
+        let n = self.unit.config().n;
+        let len = row.len();
+        let mut acc = acc;
+        let mut i = 0;
+        while i < len {
+            let m = (len - i).min(n);
+            // fuse the cached per-value decodes into the S1 record (the
+            // only S1 work left is the per-chunk accumulator decode)
+            {
+                let s1 = &mut scratch.s1;
+                s1.products.clear();
+                s1.products.reserve(n);
+                let mut any_nar = false;
+                for j in i..i + m {
+                    let (term, nar) = product_term(row[j], col[j]);
+                    any_nar |= nar;
+                    s1.products.push(term);
+                }
+                // zero-padded tail lanes, exactly as dot_chunked pads
+                for _ in m..n {
+                    s1.products.push(product_term(Decoded::Zero, Decoded::Zero).0);
+                }
+                let (at, nar) = acc_term(acc);
+                any_nar |= nar;
+                s1.acc = at;
+                s1.any_nar = any_nar;
+            }
+            acc = self.unit.finish_from_s1(scratch);
+            i += n;
+        }
+        acc
+    }
+
+    /// Batched GEMM over prepared operands:
+    /// `out[r·cols + c] = dot_chunked(acc[r], w.row(r), x.row(c))`,
+    /// computed row-parallel across worker threads. `x` holds the
+    /// right-hand vectors contiguously (i.e. it is the transposed B
+    /// matrix / the im2col patch matrix).
+    ///
+    /// Deterministic and invariant to the worker count: every output
+    /// element is an independent accumulation chain.
+    pub fn gemm_posit(
+        &self,
+        acc: &[Posit],
+        w: &PreparedOperands,
+        x: &PreparedOperands,
+    ) -> Vec<Posit> {
+        assert_eq!(w.k, x.k, "inner dimensions must match ({} vs {})", w.k, x.k);
+        assert_eq!(acc.len(), w.rows, "one accumulator seed per output row");
+        let (rows, cols, k) = (w.rows, x.rows, w.k);
+        let out_fmt = self.unit.config().out_fmt;
+        let mut out = vec![Posit::zero(out_fmt); rows * cols];
+        if rows == 0 || cols == 0 {
+            return out;
+        }
+        let threads = self.effective_threads(rows, cols, k);
+        if threads == 1 {
+            let mut scratch = DotScratch::new();
+            for r in 0..rows {
+                let wrow = &w.elems[r * k..(r + 1) * k];
+                for c in 0..cols {
+                    out[r * cols + c] =
+                        self.dot_prepared(acc[r], wrow, &x.elems[c * k..(c + 1) * k], &mut scratch);
+                }
+            }
+            return out;
+        }
+        let rows_per = rows.div_ceil(threads);
+        std::thread::scope(|s| {
+            for (t, out_block) in out.chunks_mut(rows_per * cols).enumerate() {
+                let r0 = t * rows_per;
+                s.spawn(move || {
+                    let mut scratch = DotScratch::new();
+                    for (ri, out_row) in out_block.chunks_mut(cols).enumerate() {
+                        let r = r0 + ri;
+                        let wrow = &w.elems[r * k..(r + 1) * k];
+                        for (c, slot) in out_row.iter_mut().enumerate() {
+                            *slot = self.dot_prepared(
+                                acc[r],
+                                wrow,
+                                &x.elems[c * k..(c + 1) * k],
+                                &mut scratch,
+                            );
+                        }
+                    }
+                });
+            }
+        });
+        out
+    }
+
+    /// f64-facing convenience: quantize both operand matrices once, run
+    /// the batched GEMM, read the outputs back as f64 — the batched
+    /// equivalent of looping `DotArch::dot_f64`.
+    pub fn gemm_f64(&self, acc: &[f64], w: &[f64], x: &[f64], k: usize) -> Vec<f64> {
+        let cfg = self.unit.config();
+        let wp = PreparedOperands::quantize(cfg.in_fmt, w, k);
+        let xp = PreparedOperands::quantize(cfg.in_fmt, x, k);
+        let accp: Vec<Posit> = acc.iter().map(|&v| Posit::from_f64(v, cfg.out_fmt)).collect();
+        self.gemm_posit(&accp, &wp, &xp).iter().map(|p| p.to_f64()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::Rng;
+
+    fn rand_posit(rng: &mut Rng, fmt: PositFormat) -> Posit {
+        Posit::from_bits(rng.next_u64() as u32 & fmt.mask(), fmt)
+    }
+
+    #[test]
+    fn dot_prepared_matches_dot_chunked_bitwise() {
+        for cfg in [
+            PdpuConfig::paper_default(),
+            PdpuConfig::uniform(16, 2, 1, 20).unwrap(),
+            PdpuConfig::mixed(8, 16, 2, 8, 6).unwrap(),
+        ] {
+            let unit = Pdpu::new(cfg);
+            let engine = BatchEngine::new(cfg);
+            let mut rng = Rng::seeded(0x9E9);
+            let mut scratch = DotScratch::new();
+            for len in [0usize, 1, 3, 4, 5, 9, 147] {
+                // full random patterns, NaR included: specials must agree too
+                let a: Vec<Posit> = (0..len).map(|_| rand_posit(&mut rng, cfg.in_fmt)).collect();
+                let b: Vec<Posit> = (0..len).map(|_| rand_posit(&mut rng, cfg.in_fmt)).collect();
+                let acc = rand_posit(&mut rng, cfg.out_fmt);
+                let pa: Vec<Decoded> = a.iter().map(|&p| decode(p)).collect();
+                let pb: Vec<Decoded> = b.iter().map(|&p| decode(p)).collect();
+                assert_eq!(
+                    unit.dot_chunked(acc, &a, &b).bits(),
+                    engine.dot_prepared(acc, &pa, &pb, &mut scratch).bits(),
+                    "cfg={} len={len}",
+                    cfg.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_matches_scalar_loop_bitwise() {
+        let cfg = PdpuConfig::paper_default();
+        let unit = Pdpu::new(cfg);
+        let engine = BatchEngine::new(cfg).with_threads(3);
+        let mut rng = Rng::seeded(0x6E3);
+        let (rows, cols, k) = (5usize, 7usize, 11usize);
+        let w: Vec<f64> = (0..rows * k).map(|_| rng.normal()).collect();
+        let x: Vec<f64> = (0..cols * k).map(|_| rng.normal()).collect();
+        let acc: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+        let got = engine.gemm_f64(&acc, &w, &x, k);
+        for r in 0..rows {
+            for c in 0..cols {
+                let qa: Vec<Posit> =
+                    w[r * k..(r + 1) * k].iter().map(|&v| Posit::from_f64(v, cfg.in_fmt)).collect();
+                let qb: Vec<Posit> =
+                    x[c * k..(c + 1) * k].iter().map(|&v| Posit::from_f64(v, cfg.in_fmt)).collect();
+                let want = unit
+                    .dot_chunked(Posit::from_f64(acc[r], cfg.out_fmt), &qa, &qb)
+                    .to_f64();
+                assert_eq!(
+                    got[r * cols + c].to_bits(),
+                    want.to_bits(),
+                    "out[{r},{c}] = {} want {want}",
+                    got[r * cols + c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let cfg = PdpuConfig::mixed(13, 16, 2, 4, 14).unwrap();
+        let mut rng = Rng::seeded(0x7123);
+        let (rows, cols, k) = (9usize, 6usize, 23usize);
+        let w: Vec<f64> = (0..rows * k).map(|_| rng.normal()).collect();
+        let x: Vec<f64> = (0..cols * k).map(|_| rng.normal()).collect();
+        let acc = vec![0.0; rows];
+        let one = BatchEngine::new(cfg).with_threads(1).gemm_f64(&acc, &w, &x, k);
+        // explicit thread counts AND the auto policy must all agree
+        for t in [0usize, 2, 3, 8, 64] {
+            let many = BatchEngine::new(cfg).with_threads(t).gemm_f64(&acc, &w, &x, k);
+            assert_eq!(one, many, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn prepared_operands_reuse_is_stable() {
+        let cfg = PdpuConfig::paper_default();
+        let engine = BatchEngine::new(cfg);
+        let mut rng = Rng::seeded(0xAB);
+        let k = 8;
+        let w = PreparedOperands::quantize(cfg.in_fmt, &(0..3 * k).map(|_| rng.normal()).collect::<Vec<_>>(), k);
+        let x = PreparedOperands::quantize(cfg.in_fmt, &(0..2 * k).map(|_| rng.normal()).collect::<Vec<_>>(), k);
+        let acc = vec![Posit::zero(cfg.out_fmt); 3];
+        let first = engine.gemm_posit(&acc, &w, &x);
+        let second = engine.gemm_posit(&acc, &w, &x);
+        assert_eq!(
+            first.iter().map(Posit::bits).collect::<Vec<_>>(),
+            second.iter().map(Posit::bits).collect::<Vec<_>>()
+        );
+        assert_eq!(w.rows(), 3);
+        assert_eq!(w.k(), k);
+        assert_eq!(w.row(1).len(), k);
+        assert_eq!(w.format(), cfg.in_fmt);
+    }
+
+    #[test]
+    fn from_posits_equals_quantize_route() {
+        let cfg = PdpuConfig::paper_default();
+        let mut rng = Rng::seeded(0x9A4);
+        let k = 17;
+        let data: Vec<f64> = (0..4 * k).map(|_| rng.log_uniform_signed(-10.0, 10.0)).collect();
+        let via_f64 = PreparedOperands::quantize(cfg.in_fmt, &data, k);
+        let posits: Vec<Posit> = data.iter().map(|&v| Posit::from_f64(v, cfg.in_fmt)).collect();
+        let via_posits = PreparedOperands::from_posits(cfg.in_fmt, &posits, k);
+        for r in 0..4 {
+            assert_eq!(via_f64.row(r), via_posits.row(r), "row {r}");
+        }
+    }
+
+    #[test]
+    fn empty_shapes_are_fine() {
+        let cfg = PdpuConfig::paper_default();
+        let engine = BatchEngine::new(cfg);
+        let w = PreparedOperands::quantize(cfg.in_fmt, &[], 4);
+        let x = PreparedOperands::quantize(cfg.in_fmt, &[1.0, 2.0, 3.0, 4.0], 4);
+        let out = engine.gemm_posit(&[], &w, &x);
+        assert!(out.is_empty());
+    }
+}

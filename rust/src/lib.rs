@@ -18,10 +18,39 @@
 //!   posit quantization, synthetic conv1/MNIST-like datasets, metrics).
 //! * [`experiments`] — drivers that regenerate every table and figure.
 //! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts.
+//! * [`engine`] — the batched GEMM/im2col execution engine: pre-decoded
+//!   operand planes + allocation-free stage path + row-parallel workers.
 //! * [`coordinator`] — the L3 serving layer: router, dynamic batcher,
-//!   PDPU-array scheduler with pipeline-occupancy modelling, TCP server.
+//!   PDPU-array scheduler with pipeline-occupancy modelling, TCP server,
+//!   and the software (batched-engine) serving backend.
 //! * [`testing`] — in-repo property-testing support (offline image has no
 //!   proptest).
+//!
+//! # Batched execution
+//!
+//! DNN layers never issue one dot product at a time. [`dnn::layers::conv2d`]
+//! and [`dnn::layers::linear`] route through
+//! [`baselines::DotArch::dot_batch`] — a GEMM tile of weight rows ×
+//! im2col patch columns. The default `dot_batch` is the scalar
+//! `dot_f64` loop (so every Table I baseline keeps its exact numerics),
+//! while the PDPU itself overrides it with [`engine::BatchEngine`]:
+//!
+//! 1. **Prepare once** — [`engine::PreparedOperands`] quantizes f64 →
+//!    posit and runs the S1 per-value decode *once per tensor*, not once
+//!    per use;
+//! 2. **Allocation-free stages** — each worker reuses one
+//!    [`pdpu::DotScratch`] across every chunk instead of allocating
+//!    inter-stage `Vec`s per call;
+//! 3. **Row-parallel** — output rows are partitioned across `std::thread`
+//!    workers; results are deterministic and invariant to the worker
+//!    count.
+//!
+//! The engine is **bit-identical** to the scalar path by construction and
+//! by property test (`rust/tests/engine_equivalence.rs`): same chunking,
+//! same zero-padded tail, same single rounding per chunk. The coordinator
+//! serves this engine when PJRT artifacts are absent
+//! ([`coordinator::SoftwareService`]), and `cargo bench --bench
+//! bench_kernels` reports its speedup over the scalar path.
 
 pub mod baselines;
 pub mod bench_harness;
@@ -29,6 +58,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod cost;
 pub mod dnn;
+pub mod engine;
 pub mod experiments;
 pub mod runtime;
 pub mod pdpu;

@@ -26,17 +26,40 @@ pub struct PdpuConfig {
 }
 
 /// Errors from configuration validation.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ConfigError {
-    #[error(transparent)]
-    Posit(#[from] PositError),
-    #[error("dot-product size N={0} out of supported range 1..=256")]
+    Posit(PositError),
     BadN(usize),
-    #[error("alignment width Wm={0} out of supported range 4..=96 (use the quire baseline beyond)")]
     BadWm(u32),
-    #[error("accumulator width {0} exceeds the 127-bit functional-model limit; reduce Wm or N")]
     AccTooWide(u32),
 }
+
+impl From<PositError> for ConfigError {
+    fn from(e: PositError) -> Self {
+        ConfigError::Posit(e)
+    }
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Posit(e) => std::fmt::Display::fmt(e, f),
+            ConfigError::BadN(n) => {
+                write!(f, "dot-product size N={n} out of supported range 1..=256")
+            }
+            ConfigError::BadWm(wm) => write!(
+                f,
+                "alignment width Wm={wm} out of supported range 4..=96 (use the quire baseline beyond)"
+            ),
+            ConfigError::AccTooWide(w) => write!(
+                f,
+                "accumulator width {w} exceeds the 127-bit functional-model limit; reduce Wm or N"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 impl PdpuConfig {
     /// Uniform-precision configuration `P(n,es)`, like the Table I

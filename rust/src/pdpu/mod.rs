@@ -16,4 +16,4 @@ pub mod unit;
 
 pub use config::{ceil_log2, ConfigError, PdpuConfig};
 pub use pipeline::{Pipeline, PipelineStats};
-pub use unit::{Pdpu, Trace};
+pub use unit::{DotScratch, Pdpu, Trace};

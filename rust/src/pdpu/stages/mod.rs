@@ -18,9 +18,9 @@ pub mod s4_accumulate;
 pub mod s5_normalize;
 pub mod s6_encode;
 
-pub use s1_decode::{s1_decode, AccTerm, DecodedInputs, ProductTerm};
-pub use s2_multiply::{s2_multiply, MulTerm, Multiplied};
-pub use s3_align::{s3_align, Aligned};
+pub use s1_decode::{acc_term, product_term, s1_decode, s1_decode_into, AccTerm, DecodedInputs, ProductTerm};
+pub use s2_multiply::{s2_multiply, s2_multiply_into, MulTerm, Multiplied};
+pub use s3_align::{s3_align, s3_align_into, Aligned};
 pub use s4_accumulate::{s4_accumulate, Accumulated};
 pub use s5_normalize::{s5_normalize, Normalized};
 pub use s6_encode::s6_encode;

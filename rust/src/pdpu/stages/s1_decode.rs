@@ -42,48 +42,87 @@ pub struct DecodedInputs {
     pub any_nar: bool,
 }
 
+impl DecodedInputs {
+    /// An empty record for use as reusable scratch space with
+    /// [`s1_decode_into`] (capacity grows on first use, then stays).
+    pub fn empty() -> Self {
+        Self {
+            products: Vec::new(),
+            acc: AccTerm { sign: false, e_c: 0, mc: 0, zero: true },
+            any_nar: false,
+        }
+    }
+}
+
 /// Run stage S1 over a dot-product request.
 ///
 /// `a`/`b` must each hold exactly `cfg.n` posits of `cfg.in_fmt`;
 /// `acc` must be of `cfg.out_fmt`.
 pub fn s1_decode(cfg: &PdpuConfig, acc: Posit, a: &[Posit], b: &[Posit]) -> DecodedInputs {
+    let mut out = DecodedInputs::empty();
+    s1_decode_into(cfg, acc, a, b, &mut out);
+    out
+}
+
+/// Build one product lane from two decoded operands. Returns the lane term
+/// plus whether either operand was NaR. This is the single definition of
+/// S1's lane semantics — shared by [`s1_decode_into`] and the batched GEMM
+/// engine's pre-decoded path ([`crate::engine`]).
+#[inline]
+pub fn product_term(dx: Decoded, dy: Decoded) -> (ProductTerm, bool) {
+    match (dx, dy) {
+        (Decoded::NaR, _) | (_, Decoded::NaR) => {
+            (ProductTerm { sign: false, e_ab: 0, ma: 0, mb: 0, zero: true }, true)
+        }
+        (Decoded::Zero, _) | (_, Decoded::Zero) => {
+            (ProductTerm { sign: false, e_ab: 0, ma: 0, mb: 0, zero: true }, false)
+        }
+        (Decoded::Finite(fx), Decoded::Finite(fy)) => (
+            ProductTerm {
+                sign: fx.sign ^ fy.sign,
+                e_ab: fx.scale + fy.scale,
+                ma: fx.frac,
+                mb: fy.frac,
+                zero: false,
+            },
+            false,
+        ),
+    }
+}
+
+/// Decode the accumulator operand. Returns the record plus whether it was
+/// NaR. Shared by [`s1_decode_into`] and the batched GEMM engine.
+#[inline]
+pub fn acc_term(acc: Posit) -> (AccTerm, bool) {
+    match decode(acc) {
+        Decoded::NaR => (AccTerm { sign: false, e_c: 0, mc: 0, zero: true }, true),
+        Decoded::Zero => (AccTerm { sign: false, e_c: 0, mc: 0, zero: true }, false),
+        Decoded::Finite(f) => (AccTerm { sign: f.sign, e_c: f.scale, mc: f.frac, zero: false }, false),
+    }
+}
+
+/// Allocation-free S1: like [`s1_decode`] but writing into a reusable
+/// record (the hot path of the batched GEMM engine). Bit-identical to the
+/// allocating wrapper — it *is* the implementation.
+pub fn s1_decode_into(cfg: &PdpuConfig, acc: Posit, a: &[Posit], b: &[Posit], out: &mut DecodedInputs) {
     assert_eq!(a.len(), cfg.n, "Va length must equal configured N");
     assert_eq!(b.len(), cfg.n, "Vb length must equal configured N");
     debug_assert!(a.iter().chain(b).all(|p| p.format() == cfg.in_fmt));
     debug_assert_eq!(acc.format(), cfg.out_fmt);
 
     let mut any_nar = false;
-    let mut products = Vec::with_capacity(cfg.n);
+    out.products.clear();
+    out.products.reserve(cfg.n);
     for (&x, &y) in a.iter().zip(b) {
-        let (dx, dy) = (decode(x), decode(y));
-        match (dx, dy) {
-            (Decoded::NaR, _) | (_, Decoded::NaR) => {
-                any_nar = true;
-                products.push(ProductTerm { sign: false, e_ab: 0, ma: 0, mb: 0, zero: true });
-            }
-            (Decoded::Zero, _) | (_, Decoded::Zero) => {
-                products.push(ProductTerm { sign: false, e_ab: 0, ma: 0, mb: 0, zero: true });
-            }
-            (Decoded::Finite(fx), Decoded::Finite(fy)) => products.push(ProductTerm {
-                sign: fx.sign ^ fy.sign,
-                e_ab: fx.scale + fy.scale,
-                ma: fx.frac,
-                mb: fy.frac,
-                zero: false,
-            }),
-        }
+        let (term, nar) = product_term(decode(x), decode(y));
+        any_nar |= nar;
+        out.products.push(term);
     }
 
-    let acc = match decode(acc) {
-        Decoded::NaR => {
-            any_nar = true;
-            AccTerm { sign: false, e_c: 0, mc: 0, zero: true }
-        }
-        Decoded::Zero => AccTerm { sign: false, e_c: 0, mc: 0, zero: true },
-        Decoded::Finite(f) => AccTerm { sign: f.sign, e_c: f.scale, mc: f.frac, zero: false },
-    };
-
-    DecodedInputs { products, acc, any_nar }
+    let (at, nar) = acc_term(acc);
+    any_nar |= nar;
+    out.acc = at;
+    out.any_nar = any_nar;
 }
 
 #[cfg(test)]

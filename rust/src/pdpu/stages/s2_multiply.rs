@@ -32,9 +32,32 @@ pub struct Multiplied {
     pub any_nar: bool,
 }
 
+impl Multiplied {
+    /// An empty record for use as reusable scratch space with
+    /// [`s2_multiply_into`].
+    pub fn empty() -> Self {
+        Self {
+            terms: Vec::new(),
+            acc: super::s1_decode::AccTerm { sign: false, e_c: 0, mc: 0, zero: true },
+            e_max: None,
+            any_nar: false,
+        }
+    }
+}
+
 /// Run stage S2.
 pub fn s2_multiply(cfg: &PdpuConfig, d: &DecodedInputs) -> Multiplied {
-    let mut terms = Vec::with_capacity(d.products.len());
+    let mut out = Multiplied::empty();
+    s2_multiply_into(cfg, d, &mut out);
+    out
+}
+
+/// Allocation-free S2: like [`s2_multiply`] but writing into a reusable
+/// record. Bit-identical to the allocating wrapper — it *is* the
+/// implementation.
+pub fn s2_multiply_into(cfg: &PdpuConfig, d: &DecodedInputs, out: &mut Multiplied) {
+    out.terms.clear();
+    out.terms.reserve(d.products.len());
     let mut e_max: Option<i32> = None;
     for p in &d.products {
         let m_ab = (p.ma as u128) * (p.mb as u128);
@@ -45,12 +68,14 @@ pub fn s2_multiply(cfg: &PdpuConfig, d: &DecodedInputs) -> Multiplied {
         if !p.zero {
             e_max = Some(e_max.map_or(p.e_ab, |m| m.max(p.e_ab)));
         }
-        terms.push(MulTerm { sign: p.sign, e_ab: p.e_ab, m_ab, zero: p.zero });
+        out.terms.push(MulTerm { sign: p.sign, e_ab: p.e_ab, m_ab, zero: p.zero });
     }
     if !d.acc.zero {
         e_max = Some(e_max.map_or(d.acc.e_c, |m| m.max(d.acc.e_c)));
     }
-    Multiplied { terms, acc: d.acc, e_max, any_nar: d.any_nar }
+    out.acc = d.acc;
+    out.e_max = e_max;
+    out.any_nar = d.any_nar;
 }
 
 #[cfg(test)]

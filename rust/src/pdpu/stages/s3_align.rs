@@ -42,31 +42,52 @@ fn align_one(m: u128, frac_bits: u32, e: i32, e_max: i32, wm: u32) -> u128 {
     }
 }
 
+impl Aligned {
+    /// An empty record for use as reusable scratch space with
+    /// [`s3_align_into`].
+    pub fn empty() -> Self {
+        Self { addends: Vec::new(), e_max: None, any_nar: false }
+    }
+}
+
 /// Run stage S3.
 pub fn s3_align(cfg: &PdpuConfig, m: &Multiplied) -> Aligned {
+    let mut out = Aligned::empty();
+    s3_align_into(cfg, m, &mut out);
+    out
+}
+
+/// Allocation-free S3: like [`s3_align`] but writing into a reusable
+/// record. Bit-identical to the allocating wrapper — it *is* the
+/// implementation.
+pub fn s3_align_into(cfg: &PdpuConfig, m: &Multiplied, out: &mut Aligned) {
+    out.addends.clear();
+    out.addends.reserve(m.terms.len() + 1);
+    out.any_nar = m.any_nar;
     let Some(e_max) = m.e_max else {
-        return Aligned { addends: vec![0; m.terms.len() + 1], e_max: None, any_nar: m.any_nar };
+        out.addends.resize(m.terms.len() + 1, 0);
+        out.e_max = None;
+        return;
     };
     let wm = cfg.wm;
-    let mut addends = Vec::with_capacity(m.terms.len() + 1);
     for t in &m.terms {
         if t.zero {
-            addends.push(0);
+            out.addends.push(0);
             continue;
         }
         let mag = align_one(t.m_ab, 2 * cfg.in_frac_bits(), t.e_ab, e_max, wm);
         debug_assert!(mag < (1u128 << wm), "aligned magnitude exceeds Wm window");
-        addends.push(if t.sign { -(mag as i128) } else { mag as i128 });
+        out.addends.push(if t.sign { -(mag as i128) } else { mag as i128 });
     }
     // accumulator: value < 2 ⇒ same grid, one integer bit
     if m.acc.zero {
-        addends.push(0);
+        out.addends.push(0);
     } else {
         let mag = align_one(m.acc.mc as u128, cfg.acc_frac_bits(), m.acc.e_c, e_max, wm);
         debug_assert!(mag < (1u128 << wm));
-        addends.push(if m.acc.sign { -(mag as i128) } else { mag as i128 });
+        out.addends.push(if m.acc.sign { -(mag as i128) } else { mag as i128 });
     }
-    Aligned { addends, e_max: Some(e_max), any_nar: m.any_nar }
+    out.e_max = Some(e_max);
 }
 
 #[cfg(test)]

@@ -30,6 +30,31 @@ pub struct Trace {
     pub out: Posit,
 }
 
+/// Reusable workspace for the allocation-free datapath: the S1–S3
+/// inter-stage records, allocated once and refilled per operation.
+///
+/// One `DotScratch` per worker thread keeps the batched GEMM engine free
+/// of per-operation heap traffic; [`Pdpu::dot_with`] is bit-identical to
+/// [`Pdpu::dot`] (both run the same stage implementations).
+#[derive(Clone, Debug)]
+pub struct DotScratch {
+    pub(crate) s1: DecodedInputs,
+    pub(crate) s2: Multiplied,
+    pub(crate) s3: Aligned,
+}
+
+impl DotScratch {
+    pub fn new() -> Self {
+        Self { s1: DecodedInputs::empty(), s2: Multiplied::empty(), s3: Aligned::empty() }
+    }
+}
+
+impl Default for DotScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl Pdpu {
     pub fn new(cfg: PdpuConfig) -> Self {
         Self { cfg }
@@ -52,6 +77,30 @@ impl Pdpu {
         let s5 = s5_normalize(&self.cfg, &s4);
         s6_encode(&self.cfg, &s5)
     }
+
+    /// Like [`Self::dot`] but running through a reusable [`DotScratch`]
+    /// instead of allocating fresh inter-stage records per call.
+    pub fn dot_with(&self, acc: Posit, a: &[Posit], b: &[Posit], scratch: &mut DotScratch) -> Posit {
+        s1_decode_into(&self.cfg, acc, a, b, &mut scratch.s1);
+        s2_multiply_into(&self.cfg, &scratch.s1, &mut scratch.s2);
+        s3_align_into(&self.cfg, &scratch.s2, &mut scratch.s3);
+        let s4 = s4_accumulate(&self.cfg, &scratch.s3);
+        let s5 = s5_normalize(&self.cfg, &s4);
+        s6_encode(&self.cfg, &s5)
+    }
+
+    /// Run S2–S6 over an already-filled S1 record in `scratch` — the entry
+    /// point the batched GEMM engine uses after fusing pre-decoded operand
+    /// planes directly into `scratch.s1` (skipping the per-call posit
+    /// decode entirely).
+    pub(crate) fn finish_from_s1(&self, scratch: &mut DotScratch) -> Posit {
+        s2_multiply_into(&self.cfg, &scratch.s1, &mut scratch.s2);
+        s3_align_into(&self.cfg, &scratch.s2, &mut scratch.s3);
+        let s4 = s4_accumulate(&self.cfg, &scratch.s3);
+        let s5 = s5_normalize(&self.cfg, &s4);
+        s6_encode(&self.cfg, &s5)
+    }
+
 
     /// Like [`Self::dot`] but returning all intermediate stage records.
     pub fn dot_trace(&self, acc: Posit, a: &[Posit], b: &[Posit]) -> Trace {
@@ -76,19 +125,44 @@ impl Pdpu {
     pub fn dot_chunked(&self, acc: Posit, a: &[Posit], b: &[Posit]) -> Posit {
         assert_eq!(a.len(), b.len(), "vector length mismatch");
         let n = self.cfg.n;
-        let zero = Posit::zero(self.cfg.in_fmt);
         let mut acc = acc;
-        let mut buf_a = vec![zero; n];
-        let mut buf_b = vec![zero; n];
+        // the zero-padded tail buffers are only needed when the length is
+        // not a multiple of N — allocate them lazily for that last chunk
+        let mut tail: Option<(Vec<Posit>, Vec<Posit>)> = None;
         for (ca, cb) in a.chunks(n).zip(b.chunks(n)) {
             if ca.len() == n {
                 acc = self.dot(acc, ca, cb);
             } else {
+                let zero = Posit::zero(self.cfg.in_fmt);
+                let (buf_a, buf_b) = tail.get_or_insert_with(|| (vec![zero; n], vec![zero; n]));
                 buf_a[..ca.len()].copy_from_slice(ca);
                 buf_a[ca.len()..].fill(zero);
                 buf_b[..cb.len()].copy_from_slice(cb);
                 buf_b[cb.len()..].fill(zero);
-                acc = self.dot(acc, &buf_a, &buf_b);
+                acc = self.dot(acc, buf_a, buf_b);
+            }
+        }
+        acc
+    }
+
+    /// [`Self::dot_chunked`] through a reusable [`DotScratch`] — the
+    /// allocation-free long-vector path (tail padding included).
+    pub fn dot_chunked_with(&self, acc: Posit, a: &[Posit], b: &[Posit], scratch: &mut DotScratch) -> Posit {
+        assert_eq!(a.len(), b.len(), "vector length mismatch");
+        let n = self.cfg.n;
+        let mut acc = acc;
+        let mut tail: Option<(Vec<Posit>, Vec<Posit>)> = None;
+        for (ca, cb) in a.chunks(n).zip(b.chunks(n)) {
+            if ca.len() == n {
+                acc = self.dot_with(acc, ca, cb, scratch);
+            } else {
+                let zero = Posit::zero(self.cfg.in_fmt);
+                let (buf_a, buf_b) = tail.get_or_insert_with(|| (vec![zero; n], vec![zero; n]));
+                buf_a[..ca.len()].copy_from_slice(ca);
+                buf_a[ca.len()..].fill(zero);
+                buf_b[..cb.len()].copy_from_slice(cb);
+                buf_b[cb.len()..].fill(zero);
+                acc = self.dot_with(acc, buf_a, buf_b, scratch);
             }
         }
         acc
@@ -258,6 +332,49 @@ mod tests {
                 acc = unit.dot(acc, &pa[i..i + cfg.n], &pb[i..i + cfg.n]);
             }
             assert_eq!(chunked.bits(), acc.bits(), "len={len}");
+        }
+    }
+
+    /// The scratch (allocation-free) path must be bit-identical to the
+    /// allocating path on every input, including NaR/zero specials and a
+    /// scratch reused across differently-shaped operations.
+    #[test]
+    fn scratch_path_matches_allocating_path() {
+        let configs = [
+            PdpuConfig::paper_default(),
+            PdpuConfig::uniform(16, 2, 1, 96).unwrap(),
+            PdpuConfig::mixed(8, 16, 2, 8, 6).unwrap(),
+        ];
+        let mut scratch = DotScratch::new();
+        for (ci, cfg) in configs.iter().enumerate() {
+            let unit = Pdpu::new(*cfg);
+            check("dot_with ≡ dot", 0xD07 ^ ci as u64, 800, |rng, _| {
+                let a: Vec<Posit> = (0..cfg.n).map(|_| rand_posit(rng, cfg.in_fmt)).collect();
+                let b: Vec<Posit> = (0..cfg.n).map(|_| rand_posit(rng, cfg.in_fmt)).collect();
+                let acc = rand_posit(rng, cfg.out_fmt);
+                assert_eq!(
+                    unit.dot(acc, &a, &b).bits(),
+                    unit.dot_with(acc, &a, &b, &mut scratch).bits()
+                );
+            });
+        }
+    }
+
+    #[test]
+    fn chunked_scratch_path_matches() {
+        let cfg = PdpuConfig::paper_default();
+        let unit = Pdpu::new(cfg);
+        let mut rng = Rng::seeded(0xC4A7);
+        let mut scratch = DotScratch::new();
+        for len in [0usize, 1, 4, 7, 147] {
+            let a: Vec<Posit> = (0..len).map(|_| Posit::from_f64(rng.normal(), cfg.in_fmt)).collect();
+            let b: Vec<Posit> = (0..len).map(|_| Posit::from_f64(rng.normal(), cfg.in_fmt)).collect();
+            let acc = Posit::from_f64(rng.normal(), cfg.out_fmt);
+            assert_eq!(
+                unit.dot_chunked(acc, &a, &b).bits(),
+                unit.dot_chunked_with(acc, &a, &b, &mut scratch).bits(),
+                "len={len}"
+            );
         }
     }
 

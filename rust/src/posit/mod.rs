@@ -47,15 +47,28 @@ pub struct PositFormat {
 }
 
 /// Errors produced by format construction and parsing.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PositError {
-    #[error("word size n={0} out of supported range 3..=32")]
     BadWordSize(u32),
-    #[error("exponent size es={0} out of supported range 0..=4")]
     BadExpSize(u32),
-    #[error("cannot represent NaR as a real value")]
     NaR,
 }
+
+impl fmt::Display for PositError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PositError::BadWordSize(n) => {
+                write!(f, "word size n={n} out of supported range 3..=32")
+            }
+            PositError::BadExpSize(es) => {
+                write!(f, "exponent size es={es} out of supported range 0..=4")
+            }
+            PositError::NaR => write!(f, "cannot represent NaR as a real value"),
+        }
+    }
+}
+
+impl std::error::Error for PositError {}
 
 impl PositFormat {
     /// Construct a format, validating the supported ranges.

@@ -111,6 +111,65 @@ fn train_step_reduces_loss_on_fixed_batch() {
     let _ = rng;
 }
 
+/// Software-backend serving: the batched PDPU engine behind the same
+/// engine-thread / batcher / TCP stack, no artifacts or PJRT required —
+/// this path always runs, even in a fresh offline checkout.
+#[test]
+fn software_backend_serves_without_artifacts() {
+    use pdpu::pdpu::PdpuConfig;
+    let e = ServiceHandle::start_software(
+        PdpuConfig::paper_default(),
+        vec![16, 10, 4],
+        8,
+        (3, 5, 2),
+        0x50F7,
+    );
+    assert_eq!(e.info().input_dim, 16);
+    assert_eq!(e.info().classes, 4);
+    assert_eq!((e.info().n_in, e.info().n_out, e.info().es), (13, 16, 2));
+
+    // inference: deterministic finite logits, batch-size independent
+    let images: Vec<Vec<f32>> = (0..3).map(|i| vec![0.2 * (i + 1) as f32; 16]).collect();
+    let out = e.infer_batch(images.clone()).expect("software infer");
+    assert_eq!(out.len(), 3);
+    assert!(out.iter().all(|l| l.len() == 4 && l.iter().all(|v| v.is_finite())));
+    let solo = e.infer_batch(images[..1].to_vec()).expect("software infer");
+    assert_eq!(solo[0], out[0]);
+
+    // gemm serves through the batched engine
+    let (m, k, n) = e.info().gemm_mkn;
+    let c = e.gemm(vec![1.0; m * k], vec![0.5; k * n]).expect("software gemm");
+    assert_eq!(c.len(), m * n);
+    assert!((c[0] - k as f32 * 0.5).abs() < 1e-2, "c[0] = {}", c[0]);
+
+    // training needs the AOT artifacts
+    let err = e.train_step(vec![vec![0.0; 16]; 8], vec![0; 8]).unwrap_err();
+    assert!(err.contains("PJRT"), "{err}");
+
+    // full TCP round trip on the software backend
+    let metrics = Arc::new(Metrics::new());
+    let server = Server::start("127.0.0.1:0", e.clone(), metrics).expect("server");
+    let stream = TcpStream::connect(server.addr).expect("connect");
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writer.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(json::parse(&line).unwrap().get("pong"), Some(&json::Json::Bool(true)));
+    let img: Vec<f64> = (0..16).map(|p| p as f64 / 16.0).collect();
+    let req = json::Json::obj(vec![
+        ("op", json::Json::Str("infer".into())),
+        ("image", json::Json::arr_f64(&img)),
+    ]);
+    writer.write_all((req.to_string() + "\n").as_bytes()).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = json::parse(&line).unwrap();
+    assert_eq!(v.get("ok"), Some(&json::Json::Bool(true)), "{line}");
+    assert_eq!(v.get("logits").unwrap().as_arr().unwrap().len(), 4);
+    e.shutdown();
+}
+
 #[test]
 fn tcp_server_roundtrip_and_batching() {
     let Some(e) = engine() else { return };

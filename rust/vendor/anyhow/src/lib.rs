@@ -1,0 +1,167 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build image carries no crates.io registry, so this vendored crate
+//! provides exactly the subset of anyhow's API the repo uses: [`Error`],
+//! [`Result`], the [`Context`] extension trait for `Result` and `Option`,
+//! and the `anyhow!` / `ensure!` / `bail!` macros. Error values carry a
+//! message chain (context frames joined with ": "), matching how the real
+//! crate renders `{:#}`.
+
+use std::fmt;
+
+/// A string-backed error value. Unlike `std` error types it deliberately
+/// does **not** implement `std::error::Error`, which is what makes the
+/// blanket `From<E: std::error::Error>` conversion below coherent — the
+/// same design the real anyhow uses.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Self { msg: msg.to_string() }
+    }
+
+    /// Prepend a context frame, anyhow-style (`context: cause`).
+    pub fn context(self, ctx: impl fmt::Display) -> Self {
+        Self { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{}` and `{:#}` both print the full chain in this stand-in.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — plain `Result` with [`Error`] as the default
+/// error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(&$err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!("condition failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+/// Return early with a formatted error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_even(s: &str) -> Result<u64> {
+        let v: u64 = s.parse().context("not a number")?;
+        ensure!(v % 2 == 0, "{v} is odd");
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse_even("4").unwrap(), 4);
+        let e = parse_even("x").unwrap_err();
+        assert!(e.to_string().starts_with("not a number"), "{e}");
+        let e = parse_even("3").unwrap_err();
+        assert_eq!(e.to_string(), "3 is odd");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing key").unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+        let v = Some(7u32).with_context(|| "unused").unwrap();
+        assert_eq!(v, 7);
+    }
+
+    #[test]
+    fn macro_forms() {
+        let a = anyhow!("plain literal");
+        assert_eq!(a.to_string(), "plain literal");
+        let who = "engine";
+        let b = anyhow!("{who} died");
+        assert_eq!(b.to_string(), "engine died");
+        let c = anyhow!("{} + {}", 1, 2);
+        assert_eq!(c.to_string(), "1 + 2");
+        let msg = String::from("passed through");
+        let d = anyhow!(msg);
+        assert_eq!(d.to_string(), "passed through");
+    }
+
+    #[test]
+    fn alternate_format_prints_chain() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert_eq!(format!("{e:?}"), "outer: inner");
+    }
+}
