@@ -1,0 +1,134 @@
+//! Bench S — serving-path throughput: cross-request GEMM fusion
+//! (`coordinator::fusion`) vs one-engine-launch-per-request, on a mixed
+//! request queue shaped like real serving traffic (most requests multiply
+//! one of a few shared weight planes; a few bring unique planes).
+//!
+//! Outputs are asserted bit-identical before timing, so the measured
+//! speedup is pure scheduling/execution efficiency at equal output bits.
+//! The measurement is **recorded**, not asserted: results go to
+//! `BENCH_serving.json` in the working directory.
+//!
+//! Run: `cargo bench --bench bench_serving`
+
+use std::time::Duration;
+
+use pdpu::bench_harness::{bench, report, report_header};
+use pdpu::coordinator::fusion::{execute_fused, execute_unfused, plan_fusion, GemmTile};
+use pdpu::coordinator::json::Json;
+use pdpu::pdpu::PdpuConfig;
+use pdpu::testing::Rng;
+
+/// The benchmark queue: `shared_planes` left operand planes reused by
+/// most requests plus `unique` requests with their own planes.
+fn build_queue(
+    cfg: PdpuConfig,
+    rng: &mut Rng,
+    m: usize,
+    k: usize,
+    n: usize,
+    shared_planes: usize,
+    per_plane: usize,
+    unique: usize,
+) -> Vec<GemmTile> {
+    let planes: Vec<Vec<f64>> = (0..shared_planes)
+        .map(|_| (0..m * k).map(|_| rng.normal()).collect())
+        .collect();
+    let mut queue = Vec::new();
+    for round in 0..per_plane {
+        for plane in &planes {
+            queue.push(GemmTile {
+                cfg,
+                k,
+                acc: vec![0.0; m],
+                a: plane.clone(),
+                bt: (0..n * k).map(|_| rng.normal()).collect(),
+            });
+        }
+        // interleave one unique-plane request per round while any remain
+        if round < unique {
+            queue.push(GemmTile {
+                cfg,
+                k,
+                acc: vec![0.0; m],
+                a: (0..m * k).map(|_| rng.normal()).collect(),
+                bt: (0..n * k).map(|_| rng.normal()).collect(),
+            });
+        }
+    }
+    queue
+}
+
+fn main() {
+    let cfg = PdpuConfig::paper_default();
+    let mut rng = Rng::seeded(0x5E44_1306);
+    let (m, k, n) = (16usize, 147usize, 8usize);
+    let (shared_planes, per_plane, unique) = (3usize, 6usize, 4usize);
+    let queue = build_queue(cfg, &mut rng, m, k, n, shared_planes, per_plane, unique);
+    let tiles = queue.len();
+    let groups = plan_fusion(&queue).len();
+    let macs_per_pass = (tiles * m * n * k) as f64;
+
+    println!(
+        "== serving queue: {} GEMM requests ({}x{}x{}), {} shared planes + {} unique → {} launches fused ==\n",
+        tiles, m, k, n, shared_planes, unique, groups
+    );
+
+    // equal output bits, checked before timing
+    let (fused_out, stats) = execute_fused(&queue);
+    let unfused_out = execute_unfused(&queue);
+    for (i, (f, u)) in fused_out.iter().zip(&unfused_out).enumerate() {
+        assert_eq!(f.len(), u.len(), "tile {i} shape");
+        for (g, w) in f.iter().zip(u) {
+            assert_eq!(g.to_bits(), w.to_bits(), "tile {i} diverged under fusion");
+        }
+    }
+
+    report_header();
+    let m_unfused = bench(
+        "serving queue: unfused (one launch per request)",
+        Duration::from_millis(1200),
+        || std::hint::black_box(execute_unfused(&queue)),
+    );
+    report(&m_unfused);
+    println!(
+        "  -> {:.2} M MACs/s, {:.1} requests/s",
+        m_unfused.per_second(macs_per_pass) / 1e6,
+        m_unfused.per_second(tiles as f64)
+    );
+
+    let m_fused = bench(
+        "serving queue: fused cross-request launches",
+        Duration::from_millis(1200),
+        || std::hint::black_box(execute_fused(&queue)),
+    );
+    report(&m_fused);
+    println!(
+        "  -> {:.2} M MACs/s, {:.1} requests/s",
+        m_fused.per_second(macs_per_pass) / 1e6,
+        m_fused.per_second(tiles as f64)
+    );
+
+    let speedup = m_unfused.mean_ns() / m_fused.mean_ns();
+    println!("\n  fused serving speedup over per-request launches: {speedup:.2}x");
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("serving".into())),
+        ("config", Json::Str(cfg.label())),
+        ("tiles", Json::Num(tiles as f64)),
+        ("gemm_m", Json::Num(m as f64)),
+        ("gemm_k", Json::Num(k as f64)),
+        ("gemm_n", Json::Num(n as f64)),
+        ("shared_planes", Json::Num(shared_planes as f64)),
+        ("unique_planes", Json::Num(unique as f64)),
+        ("fused_launches", Json::Num(stats.launches as f64)),
+        ("fused_tiles", Json::Num(stats.fused_tiles as f64)),
+        ("unfused_mean_ns", Json::Num(m_unfused.mean_ns())),
+        ("fused_mean_ns", Json::Num(m_fused.mean_ns())),
+        ("unfused_macs_per_s", Json::Num(m_unfused.per_second(macs_per_pass))),
+        ("fused_macs_per_s", Json::Num(m_fused.per_second(macs_per_pass))),
+        ("speedup", Json::Num(speedup)),
+    ]);
+    let path = "BENCH_serving.json";
+    std::fs::write(path, json.to_string() + "\n").expect("write BENCH_serving.json");
+    println!("  recorded: {path}");
+}

@@ -40,6 +40,22 @@ pub trait DotArch {
     /// can do better (see [`crate::engine`]) override it with a batched
     /// path that MUST stay bit-identical to this default — that
     /// equivalence is property-tested in `rust/tests/engine_equivalence.rs`.
+    ///
+    /// # Examples
+    ///
+    /// One batched tile equals the scalar loop element-for-element:
+    ///
+    /// ```
+    /// use pdpu::baselines::{DotArch, PdpuArch};
+    /// use pdpu::pdpu::PdpuConfig;
+    ///
+    /// let arch = PdpuArch::new(PdpuConfig::paper_default());
+    /// // one weight row (k=2) against two right-hand vectors
+    /// let out = arch.dot_batch(&[0.0], &[1.0, 2.0], &[3.0, 4.0, 0.5, -1.0], 2);
+    /// assert_eq!(out.len(), 2);
+    /// assert_eq!(out[0], arch.dot_f64(0.0, &[1.0, 2.0], &[3.0, 4.0]));
+    /// assert_eq!(out[1], arch.dot_f64(0.0, &[1.0, 2.0], &[0.5, -1.0]));
+    /// ```
     fn dot_batch(&self, acc: &[f64], w: &[f64], x: &[f64], k: usize) -> Vec<f64> {
         assert!(k > 0, "inner dimension k must be positive");
         assert_eq!(w.len() % k, 0, "w length {} not a multiple of k={k}", w.len());

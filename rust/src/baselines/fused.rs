@@ -70,6 +70,7 @@ pub struct QuirePdpuArch {
 }
 
 impl QuirePdpuArch {
+    /// Build the quire baseline: `n`-lane chunks, quire-exact inside each.
     pub fn new(in_fmt: PositFormat, out_fmt: PositFormat, n: usize) -> Self {
         assert!(n >= 1);
         Self { in_fmt, out_fmt, n }
@@ -79,6 +80,23 @@ impl QuirePdpuArch {
     /// of the quire row; P(13,2) products need 256 bits in the paper).
     pub fn quire_bits(&self) -> u32 {
         Quire::new(self.in_fmt, self.in_fmt).expect("quire capacity").required_bits()
+    }
+
+    /// The chunk-serial quire accumulation over already-quantized posits —
+    /// the single definition of this architecture's dataflow, shared by
+    /// the scalar [`DotArch::dot_f64`] entry point and the prepared-operand
+    /// [`DotArch::dot_batch`] override.
+    fn dot_posits(&self, acc: Posit, a: &[Posit], b: &[Posit]) -> Posit {
+        let mut acc = acc;
+        for (ca, cb) in a.chunks(self.n).zip(b.chunks(self.n)) {
+            let mut q = Quire::new(self.in_fmt, self.in_fmt).expect("quire capacity");
+            q.add_posit(acc);
+            for (&x, &y) in ca.iter().zip(cb) {
+                q.add_product(x, y);
+            }
+            acc = q.to_posit(self.out_fmt);
+        }
+        acc
     }
 }
 
@@ -101,16 +119,34 @@ impl DotArch for QuirePdpuArch {
         assert_eq!(a.len(), b.len());
         let qa: Vec<Posit> = a.iter().map(|&v| Posit::from_f64(v, self.in_fmt)).collect();
         let qb: Vec<Posit> = b.iter().map(|&v| Posit::from_f64(v, self.in_fmt)).collect();
-        let mut acc = Posit::from_f64(acc, self.out_fmt);
-        for (ca, cb) in qa.chunks(self.n).zip(qb.chunks(self.n)) {
-            let mut q = Quire::new(self.in_fmt, self.in_fmt).expect("quire capacity");
-            q.add_posit(acc);
-            for (&x, &y) in ca.iter().zip(cb) {
-                q.add_product(x, y);
+        self.dot_posits(Posit::from_f64(acc, self.out_fmt), &qa, &qb).to_f64()
+    }
+
+    /// Prepared-operand override: quantize each operand matrix **once**
+    /// (instead of once per output element) and run the chunk-serial quire
+    /// accumulation over the cached posit planes. Quantization is
+    /// per-value, so this is bit-identical to the defaulted scalar loop —
+    /// property-tested in `rust/tests/engine_equivalence.rs`. This lets
+    /// the quire baseline ride the same fused serving path as the PDPU
+    /// engine.
+    fn dot_batch(&self, acc: &[f64], w: &[f64], x: &[f64], k: usize) -> Vec<f64> {
+        assert!(k > 0, "inner dimension k must be positive");
+        assert_eq!(w.len() % k, 0, "w length {} not a multiple of k={k}", w.len());
+        assert_eq!(x.len() % k, 0, "x length {} not a multiple of k={k}", x.len());
+        let rows = w.len() / k;
+        let cols = x.len() / k;
+        assert_eq!(acc.len(), rows, "one accumulator seed per output row");
+        let qw: Vec<Posit> = w.iter().map(|&v| Posit::from_f64(v, self.in_fmt)).collect();
+        let qx: Vec<Posit> = x.iter().map(|&v| Posit::from_f64(v, self.in_fmt)).collect();
+        let qacc: Vec<Posit> = acc.iter().map(|&v| Posit::from_f64(v, self.out_fmt)).collect();
+        let mut out = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            let wrow = &qw[r * k..(r + 1) * k];
+            for c in 0..cols {
+                out.push(self.dot_posits(qacc[r], wrow, &qx[c * k..(c + 1) * k]).to_f64());
             }
-            acc = q.to_posit(self.out_fmt);
         }
-        acc.to_f64()
+        out
     }
 }
 
@@ -156,6 +192,23 @@ mod tests {
             err_quire += (quire.dot_f64(0.0, &a, &b) - exact).abs();
         }
         assert!(err_quire <= err_pdpu, "quire {err_quire} vs pdpu {err_pdpu}");
+    }
+
+    #[test]
+    fn quire_dot_batch_matches_scalar_loop_bitwise() {
+        let q = QuirePdpuArch::new(PositFormat::p(13, 2), PositFormat::p(16, 2), 4);
+        let mut rng = Rng::seeded(0x0B5);
+        let (rows, cols, k) = (3usize, 4usize, 11usize);
+        let w: Vec<f64> = (0..rows * k).map(|_| rng.normal()).collect();
+        let x: Vec<f64> = (0..cols * k).map(|_| rng.normal()).collect();
+        let acc: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+        let got = q.dot_batch(&acc, &w, &x, k);
+        for r in 0..rows {
+            for c in 0..cols {
+                let want = q.dot_f64(acc[r], &w[r * k..(r + 1) * k], &x[c * k..(c + 1) * k]);
+                assert_eq!(got[r * cols + c].to_bits(), want.to_bits(), "out[{r},{c}]");
+            }
+        }
     }
 
     #[test]

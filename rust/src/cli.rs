@@ -82,9 +82,12 @@ COMMANDS
   schedule [--outputs N] [--dot-len K] [--units U] [--n N] [--interleave I]
                                   PDPU-array cycle-accurate schedule
   serve [--addr HOST:PORT] [--artifacts DIR] [--software] [--batch N]
-                                  start the batched inference server
+        [--no-fuse]
+                                  start the batched inference/GEMM server
                                   (--software, or missing PJRT artifacts,
-                                  serves the batched bit-exact PDPU engine)
+                                  serves the batched bit-exact PDPU engine;
+                                  --no-fuse disables cross-request GEMM
+                                  fusion for A/B runs — outputs identical)
   selftest [--artifacts DIR]      load artifacts, run a PJRT smoke batch
 ";
 
@@ -153,14 +156,14 @@ fn cmd_exp(args: &Args) -> anyhow::Result<i32> {
         }
         Some("ablation") => {
             let (hw, oc) = (args.flag_usize("hw", 16), args.flag_usize("oc", 4));
-            print!("{}", ablation::render("Wm sweep (P(13/16,2) N=4)", &ablation::wm_sweep(&[6, 8, 10, 14, 20, 26], &tech, hw, oc)));
+            let wm = ablation::wm_sweep(&[6, 8, 10, 14, 20, 26], &tech, hw, oc);
+            print!("{}", ablation::render("Wm sweep (P(13/16,2) N=4)", &wm));
             println!();
-            print!(
-                "{}",
-                ablation::render("input-format sweep (N=4 Wm=14)", &ablation::format_sweep(&[8, 10, 13, 16], &tech, hw, oc))
-            );
+            let fmts = ablation::format_sweep(&[8, 10, 13, 16], &tech, hw, oc);
+            print!("{}", ablation::render("input-format sweep (N=4 Wm=14)", &fmts));
             println!();
-            print!("{}", ablation::render("N sweep (P(13/16,2) Wm=14)", &ablation::n_sweep(&[2, 4, 8, 16], &tech, hw, oc)));
+            let ns = ablation::n_sweep(&[2, 4, 8, 16], &tech, hw, oc);
+            print!("{}", ablation::render("N sweep (P(13/16,2) Wm=14)", &ns));
             Ok(0)
         }
         _ => {
@@ -240,15 +243,21 @@ fn cmd_schedule(args: &Args) -> anyhow::Result<i32> {
     let tech = Tech::default();
     let entry = &fig6::build(&[n as u32], &tech)[0];
     let t_us = r.cycles as f64 * entry.report.clock_ns * 1e-3;
-    println!("@ {:.2} GHz     : {:.1} us  ({:.2} GMAC/s)", entry.report.fmax_ghz, t_us, r.macs_per_cycle * entry.report.fmax_ghz);
+    println!(
+        "@ {:.2} GHz     : {:.1} us  ({:.2} GMAC/s)",
+        entry.report.fmax_ghz,
+        t_us,
+        r.macs_per_cycle * entry.report.fmax_ghz
+    );
     Ok(0)
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
-    use crate::coordinator::{Metrics, Server, ServiceHandle};
+    use crate::coordinator::{Metrics, Server, ServerPolicy, ServiceHandle};
     use std::sync::Arc;
     let addr = args.flag("addr").unwrap_or("127.0.0.1:7878");
     let dir = args.flag("artifacts").unwrap_or("artifacts");
+    let policy = ServerPolicy { fuse_gemm: args.flag("no-fuse").is_none() };
     let software = || {
         ServiceHandle::start_software(
             PdpuConfig::paper_default(),
@@ -270,10 +279,20 @@ fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
             }
         }
     };
+    let (m, k, n) = service.info().gemm_mkn;
     let metrics = Arc::new(Metrics::new());
-    let server = Server::start(addr, service, metrics)?;
+    let server = Server::start_with(addr, service, metrics, policy)?;
     println!("pdpu coordinator listening on {}", server.addr);
-    println!("protocol: JSON lines — {{\"op\":\"infer\",\"image\":[784 floats]}} | {{\"op\":\"stats\"}} | {{\"op\":\"ping\"}}");
+    println!(
+        "cross-request GEMM fusion: {}",
+        if policy.fuse_gemm { "on" } else { "off (--no-fuse)" }
+    );
+    println!(
+        "protocol: JSON lines — {{\"op\":\"infer\",\"image\":[784 floats]}} | \
+         {{\"op\":\"gemm\",\"a\":[{} floats],\"b\":[{} floats]}} | {{\"op\":\"stats\"}} | {{\"op\":\"ping\"}}",
+        m * k,
+        k * n
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

@@ -33,6 +33,7 @@ impl Default for BatchPolicy {
 
 /// Processes one formed batch. Must return exactly one output per input.
 pub trait BatchBackend<I: Send, O: Send>: Send {
+    /// Execute the batch, one result per item, in item order.
     fn run(&mut self, items: Vec<I>) -> Vec<Result<O, String>>;
 }
 
@@ -236,8 +237,7 @@ mod tests {
     fn batches_run_through_software_engine() {
         use super::super::engine::ServiceHandle;
         use crate::pdpu::PdpuConfig;
-        let svc =
-            ServiceHandle::start_software(PdpuConfig::paper_default(), vec![6, 3], 8, (2, 2, 2), 1);
+        let svc = ServiceHandle::start_software(PdpuConfig::paper_default(), vec![6, 3], 8, (2, 2, 2), 1);
         let m = Arc::new(Metrics::new());
         let backend_svc = svc.clone();
         let b: Batcher<Vec<f32>, Vec<f32>> = Batcher::spawn(
@@ -259,6 +259,58 @@ mod tests {
         }
         assert!(m.snapshot().batches >= 1);
         svc.shutdown();
+    }
+
+    /// The fused GEMM serving configuration end-to-end: a Batcher whose
+    /// backend runs formed batches through `SoftwareService::gemm_batch`
+    /// (cross-request fusion). Under concurrent submission in any
+    /// interleaving, every reply must be bit-identical to that request's
+    /// own unfused `gemm` — fusion must never cross-wire or renumber
+    /// responses.
+    #[test]
+    fn fused_gemm_replies_match_requests_under_concurrency() {
+        use super::super::service::SoftwareService;
+        use crate::pdpu::PdpuConfig;
+        let svc = Arc::new(SoftwareService::new(
+            PdpuConfig::paper_default(),
+            &[4, 3],
+            4,
+            (3, 4, 2),
+            0xFEE1,
+        ));
+        let (m, k, n) = svc.gemm_mkn();
+        let backend_svc = svc.clone();
+        let b: Arc<Batcher<(Vec<f32>, Vec<f32>), Vec<f32>>> = Arc::new(Batcher::spawn(
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+            Arc::new(Metrics::new()),
+            move |reqs: Vec<(Vec<f32>, Vec<f32>)>| backend_svc.gemm_batch(&reqs).0,
+        ));
+        // a few shared left planes so formed batches really fuse
+        let planes: Vec<Vec<f32>> = (0..2)
+            .map(|p| (0..m * k).map(|i| ((i + p) as f32 * 0.31).sin()).collect())
+            .collect();
+        let mut handles = Vec::new();
+        for t in 0..6u64 {
+            let b = b.clone();
+            let svc = svc.clone();
+            let planes = planes.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::seeded(0x6E44 ^ t);
+                for _ in 0..20 {
+                    let a = planes[rng.below(planes.len() as u64) as usize].clone();
+                    let bm: Vec<f32> = (0..k * n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+                    let got = b.call((a.clone(), bm.clone())).unwrap();
+                    let want = svc.gemm(&a, &bm).unwrap();
+                    assert_eq!(
+                        got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        want.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                    );
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 
     #[test]

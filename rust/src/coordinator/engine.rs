@@ -8,25 +8,37 @@
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 
+use super::fusion::FusionStats;
 use super::service::{PositService, SoftwareService};
 use crate::pdpu::PdpuConfig;
+
+/// One result per queued GEMM request plus the fusion outcome counters.
+pub type GemmBatchReply = (Vec<Result<Vec<f32>, String>>, FusionStats);
 
 enum EngineReq {
     InferBatch(Vec<Vec<f32>>, Sender<Result<Vec<Vec<f32>>, String>>),
     TrainStep(Vec<Vec<f32>>, Vec<u32>, Sender<Result<f32, String>>),
     Gemm(Vec<f32>, Vec<f32>, Sender<Result<Vec<f32>, String>>),
+    GemmBatch(Vec<(Vec<f32>, Vec<f32>)>, Sender<GemmBatchReply>),
     Shutdown,
 }
 
 /// Static model facts the rest of the system needs without touching PJRT.
 #[derive(Clone, Debug)]
 pub struct ModelInfo {
+    /// Compiled/configured maximum inference batch size.
     pub batch: usize,
+    /// Input feature count per image.
     pub input_dim: usize,
+    /// Output class count.
     pub classes: usize,
+    /// Fixed GEMM shape (M, K, N).
     pub gemm_mkn: (usize, usize, usize),
+    /// Posit input format width.
     pub n_in: u32,
+    /// Posit output/accumulator format width.
     pub n_out: u32,
+    /// Posit exponent-size parameter.
     pub es: u32,
 }
 
@@ -77,6 +89,17 @@ impl ServiceHandle {
                     }
                     EngineReq::Gemm(a, b, reply) => {
                         let _ = reply.send(service.gemm(&a, &b).map_err(|e| format!("{e:#}")));
+                    }
+                    EngineReq::GemmBatch(reqs, reply) => {
+                        // PJRT executables are compiled at a fixed (M, K, N),
+                        // so the AOT path runs the queue one launch per
+                        // request; only the software engine fuses.
+                        let n = reqs.len() as u64;
+                        let results = reqs
+                            .iter()
+                            .map(|(a, b)| service.gemm(a, b).map_err(|e| format!("{e:#}")))
+                            .collect();
+                        let _ = reply.send((results, FusionStats { launches: n, fused_tiles: 0 }));
                     }
                     EngineReq::Shutdown => return,
                 }
@@ -136,6 +159,9 @@ impl ServiceHandle {
                     EngineReq::Gemm(a, b, reply) => {
                         let _ = reply.send(service.gemm(&a, &b));
                     }
+                    EngineReq::GemmBatch(reqs, reply) => {
+                        let _ = reply.send(service.gemm_batch(&reqs));
+                    }
                     EngineReq::Shutdown => return,
                 }
             }
@@ -143,26 +169,41 @@ impl ServiceHandle {
         ServiceHandle { tx, info, joiner: Arc::new(Mutex::new(Some(joiner))) }
     }
 
+    /// Static model facts (shapes and posit formats).
     pub fn info(&self) -> &ModelInfo {
         &self.info
     }
 
+    /// Run one inference batch through the backend.
     pub fn infer_batch(&self, images: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>, String> {
         let (tx, rx) = channel();
         self.tx.send(EngineReq::InferBatch(images, tx)).map_err(|_| "engine gone".to_string())?;
         rx.recv().map_err(|_| "engine gone".to_string())?
     }
 
+    /// One SGD step on a full batch (PJRT backend only).
     pub fn train_step(&self, images: Vec<Vec<f32>>, labels: Vec<u32>) -> Result<f32, String> {
         let (tx, rx) = channel();
         self.tx.send(EngineReq::TrainStep(images, labels, tx)).map_err(|_| "engine gone".to_string())?;
         rx.recv().map_err(|_| "engine gone".to_string())?
     }
 
+    /// One GEMM at the compiled/configured (M, K, N).
     pub fn gemm(&self, a: Vec<f32>, b: Vec<f32>) -> Result<Vec<f32>, String> {
         let (tx, rx) = channel();
         self.tx.send(EngineReq::Gemm(a, b, tx)).map_err(|_| "engine gone".to_string())?;
         rx.recv().map_err(|_| "engine gone".to_string())?
+    }
+
+    /// A queue of GEMM requests executed in one engine-thread round trip.
+    /// The software backend coalesces compatible requests into fused
+    /// launches ([`super::fusion`]); the PJRT backend runs one compiled
+    /// launch per request. Either way the reply holds one result per
+    /// request, in order, plus the launch counters.
+    pub fn gemm_batch(&self, reqs: Vec<(Vec<f32>, Vec<f32>)>) -> Result<GemmBatchReply, String> {
+        let (tx, rx) = channel();
+        self.tx.send(EngineReq::GemmBatch(reqs, tx)).map_err(|_| "engine gone".to_string())?;
+        rx.recv().map_err(|_| "engine gone".to_string())
     }
 
     /// Ask the engine to exit once current work drains.

@@ -1,0 +1,259 @@
+//! Cross-request GEMM fusion — coalescing compatible queued GEMM tiles
+//! into single [`BatchEngine`] launches.
+//!
+//! The serving path already fuses *inside* one dot product (the PDPU
+//! datapath) and *across images* of one inference batch (the dynamic
+//! batcher). What it did not fuse, until this module, is across **queued
+//! GEMM requests**: each request executed as its own engine launch even
+//! when the queue held many requests multiplying the *same* left operand
+//! plane (the canonical serving shape: one weight matrix, many activation
+//! tiles).
+//!
+//! Fusion is a pure scheduling optimization with a hard invariant:
+//! **bit-identical outputs and unchanged per-request response order**.
+//! That holds by construction — quantization/pre-decode is per-value, and
+//! every GEMM output element depends only on its own accumulator seed,
+//! weight row, and right-hand vector — and it is property-tested in
+//! `rust/tests/engine_equivalence.rs`.
+//!
+//! Eligibility: two tiles fuse only when they agree on the [`PdpuConfig`],
+//! the inner dimension `k`, the accumulator seeds, and the shared left
+//! operand plane (compared bit-for-bit as f64 patterns). Mixed-config
+//! queues therefore never fuse (property-tested).
+
+use crate::engine::{BatchEngine, PreparedOperands};
+use crate::pdpu::PdpuConfig;
+use crate::posit::Posit;
+
+/// One queued GEMM tile: compute `acc + a · bᵀ` through the batched PDPU
+/// engine, where `a` is `m×k` row-major and `bt` holds the `n` right-hand
+/// vectors contiguously (`n×k` row-major — the transposed right matrix,
+/// i.e. the im2col layout the engine wants).
+#[derive(Clone, Debug)]
+pub struct GemmTile {
+    /// PDPU configuration the tile must execute under.
+    pub cfg: PdpuConfig,
+    /// Inner (dot-product) dimension.
+    pub k: usize,
+    /// Accumulator seeds, one per output row (`m` values).
+    pub acc: Vec<f64>,
+    /// Left operand plane, `m×k` row-major — the fusion-sharing candidate.
+    pub a: Vec<f64>,
+    /// Transposed right operand, `n×k` row-major.
+    pub bt: Vec<f64>,
+}
+
+impl GemmTile {
+    /// Output rows (`a.len() / k`).
+    pub fn m(&self) -> usize {
+        self.a.len() / self.k
+    }
+
+    /// Output columns (`bt.len() / k`).
+    pub fn n(&self) -> usize {
+        self.bt.len() / self.k
+    }
+
+    fn assert_shapes(&self) {
+        assert!(self.k > 0, "inner dimension k must be positive");
+        assert_eq!(self.a.len() % self.k, 0, "a length not a multiple of k");
+        assert_eq!(self.bt.len() % self.k, 0, "bt length not a multiple of k");
+        assert_eq!(self.acc.len(), self.m(), "one accumulator seed per output row");
+    }
+
+    /// Fusion eligibility: same config, same `k`, and bit-identical
+    /// accumulator and left-plane contents.
+    fn fuses_with(&self, other: &GemmTile) -> bool {
+        self.cfg == other.cfg
+            && self.k == other.k
+            && f64_bits_eq(&self.acc, &other.acc)
+            && f64_bits_eq(&self.a, &other.a)
+    }
+}
+
+/// Bitwise slice equality (f64 patterns, so `-0.0`/`NaN` never alias).
+fn f64_bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Outcome counters of one fused execution, for the metrics endpoint.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FusionStats {
+    /// Engine launches actually performed (= fusion groups).
+    pub launches: u64,
+    /// Tiles that shared a launch with at least one other tile.
+    pub fused_tiles: u64,
+}
+
+/// Partition a request queue into fusion groups: each group is a list of
+/// tile indices (in queue order) that are mutually fusion-eligible;
+/// groups are ordered by their first member. Singleton groups are tiles
+/// nothing else could join.
+pub fn plan_fusion(tiles: &[GemmTile]) -> Vec<Vec<usize>> {
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    for (i, t) in tiles.iter().enumerate() {
+        t.assert_shapes();
+        match groups.iter_mut().find(|g| t.fuses_with(&tiles[g[0]])) {
+            Some(g) => g.push(i),
+            None => groups.push(vec![i]),
+        }
+    }
+    groups
+}
+
+/// Execute a request queue with cross-request fusion: one engine launch
+/// per fusion group, concatenating the member tiles' right-hand planes
+/// into one prepared operand matrix. Returns one `m·n` row-major output
+/// per tile, **in queue order**, bit-identical to [`execute_unfused`].
+pub fn execute_fused(tiles: &[GemmTile]) -> (Vec<Vec<f64>>, FusionStats) {
+    let groups = plan_fusion(tiles);
+    let mut out: Vec<Vec<f64>> = vec![Vec::new(); tiles.len()];
+    let mut stats = FusionStats::default();
+    for g in &groups {
+        stats.launches += 1;
+        if g.len() > 1 {
+            stats.fused_tiles += g.len() as u64;
+        }
+        let first = &tiles[g[0]];
+        let (cfg, k) = (first.cfg, first.k);
+        let engine = BatchEngine::new(cfg);
+        let wp = PreparedOperands::quantize(cfg.in_fmt, &first.a, k);
+        // shared plane prepared once; member right-hand planes concatenated
+        // into one x matrix (quantization is per-value, so this equals the
+        // per-tile quantization bit-for-bit)
+        let cap: usize = g.iter().map(|&i| tiles[i].bt.len()).sum();
+        let mut xcat = Vec::with_capacity(cap);
+        for &i in g {
+            xcat.extend_from_slice(&tiles[i].bt);
+        }
+        let xp = PreparedOperands::quantize(cfg.in_fmt, &xcat, k);
+        let accp: Vec<Posit> = first.acc.iter().map(|&v| Posit::from_f64(v, cfg.out_fmt)).collect();
+        let fused = engine.gemm_posit(&accp, &wp, &xp);
+        // scatter the fused launch's columns back to the member tiles
+        let (m, cols_total) = (wp.rows(), xp.rows());
+        let mut off = 0usize;
+        for &i in g {
+            let n_i = tiles[i].n();
+            let mut o = Vec::with_capacity(m * n_i);
+            for r in 0..m {
+                for c in 0..n_i {
+                    o.push(fused[r * cols_total + off + c].to_f64());
+                }
+            }
+            out[i] = o;
+            off += n_i;
+        }
+    }
+    (out, stats)
+}
+
+/// Execute a request queue without fusion: one engine launch per tile (the
+/// pre-fusion serving path, kept as the A/B + equivalence baseline).
+pub fn execute_unfused(tiles: &[GemmTile]) -> Vec<Vec<f64>> {
+    tiles
+        .iter()
+        .map(|t| {
+            t.assert_shapes();
+            let engine = BatchEngine::new(t.cfg);
+            let wp = PreparedOperands::quantize(t.cfg.in_fmt, &t.a, t.k);
+            let xp = PreparedOperands::quantize(t.cfg.in_fmt, &t.bt, t.k);
+            let accp: Vec<Posit> = t.acc.iter().map(|&v| Posit::from_f64(v, t.cfg.out_fmt)).collect();
+            engine.gemm_posit(&accp, &wp, &xp).iter().map(|p| p.to_f64()).collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::Rng;
+
+    fn tile(cfg: PdpuConfig, rng: &mut Rng, m: usize, k: usize, n: usize) -> GemmTile {
+        GemmTile {
+            cfg,
+            k,
+            acc: vec![0.0; m],
+            a: (0..m * k).map(|_| rng.normal()).collect(),
+            bt: (0..n * k).map(|_| rng.normal()).collect(),
+        }
+    }
+
+    #[test]
+    fn shared_plane_tiles_fuse_into_one_launch() {
+        let cfg = PdpuConfig::paper_default();
+        let mut rng = Rng::seeded(0xF0);
+        let base = tile(cfg, &mut rng, 3, 7, 4);
+        let mut t2 = base.clone();
+        t2.bt = (0..4 * 7).map(|_| rng.normal()).collect();
+        let groups = plan_fusion(&[base.clone(), t2.clone()]);
+        assert_eq!(groups, vec![vec![0, 1]]);
+        let (outs, stats) = execute_fused(&[base, t2]);
+        assert_eq!(stats, FusionStats { launches: 1, fused_tiles: 2 });
+        assert_eq!(outs.len(), 2);
+        assert!(outs.iter().all(|o| o.len() == 3 * 4));
+    }
+
+    #[test]
+    fn distinct_planes_stay_separate() {
+        let cfg = PdpuConfig::paper_default();
+        let mut rng = Rng::seeded(0xF1);
+        let t1 = tile(cfg, &mut rng, 2, 5, 3);
+        let t2 = tile(cfg, &mut rng, 2, 5, 3);
+        let groups = plan_fusion(&[t1, t2]);
+        assert_eq!(groups, vec![vec![0], vec![1]]);
+    }
+
+    #[test]
+    fn mixed_configs_never_fuse() {
+        let cfg_a = PdpuConfig::paper_default();
+        let cfg_b = PdpuConfig::mixed(13, 16, 2, 8, 14).unwrap();
+        let mut rng = Rng::seeded(0xF2);
+        let t1 = tile(cfg_a, &mut rng, 2, 6, 3);
+        let mut t2 = t1.clone();
+        t2.cfg = cfg_b;
+        let (outs, stats) = execute_fused(&[t1.clone(), t2.clone()]);
+        assert_eq!(stats, FusionStats { launches: 2, fused_tiles: 0 });
+        assert_eq!(outs, execute_unfused(&[t1, t2]));
+    }
+
+    #[test]
+    fn fused_matches_unfused_bitwise() {
+        let cfg = PdpuConfig::paper_default();
+        let mut rng = Rng::seeded(0xF3);
+        let shared = tile(cfg, &mut rng, 4, 11, 2);
+        let mut queue = Vec::new();
+        for _ in 0..3 {
+            let mut t = shared.clone();
+            t.bt = (0..2 * 11).map(|_| rng.normal()).collect();
+            queue.push(t);
+        }
+        queue.push(tile(cfg, &mut rng, 4, 11, 2)); // unique plane, won't fuse
+        let (fused, stats) = execute_fused(&queue);
+        let unfused = execute_unfused(&queue);
+        assert_eq!(stats, FusionStats { launches: 2, fused_tiles: 3 });
+        for (i, (f, u)) in fused.iter().zip(&unfused).enumerate() {
+            assert_eq!(
+                f.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                u.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "tile {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn differing_acc_seeds_block_fusion() {
+        let cfg = PdpuConfig::paper_default();
+        let mut rng = Rng::seeded(0xF4);
+        let t1 = tile(cfg, &mut rng, 2, 4, 2);
+        let mut t2 = t1.clone();
+        t2.acc = vec![1.0; 2];
+        assert_eq!(plan_fusion(&[t1, t2]).len(), 2);
+    }
+
+    #[test]
+    fn empty_queue_is_fine() {
+        let (outs, stats) = execute_fused(&[]);
+        assert!(outs.is_empty());
+        assert_eq!(stats, FusionStats::default());
+    }
+}

@@ -18,6 +18,7 @@ pub enum Json {
 }
 
 impl Json {
+    /// Object field lookup (None on non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -25,6 +26,7 @@ impl Json {
         }
     }
 
+    /// The value as a number, if it is one.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(v) => Some(*v),
@@ -32,10 +34,12 @@ impl Json {
         }
     }
 
+    /// The value as a number truncated to usize, if it is one.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|v| v as usize)
     }
 
+    /// The value as a string, if it is one.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -43,6 +47,7 @@ impl Json {
         }
     }
 
+    /// The value as an array slice, if it is one.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -120,6 +125,7 @@ impl Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build a numeric array.
     pub fn arr_f64(vals: &[f64]) -> Json {
         Json::Arr(vals.iter().map(|&v| Json::Num(v)).collect())
     }

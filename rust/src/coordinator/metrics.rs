@@ -11,21 +11,35 @@ const BUCKETS_US: [u64; 12] = [50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 2
 /// Shared metrics registry.
 #[derive(Debug, Default)]
 pub struct Metrics {
+    /// Items submitted to any batcher.
     pub requests: AtomicU64,
+    /// Successful replies delivered.
     pub responses: AtomicU64,
+    /// Error replies delivered.
     pub errors: AtomicU64,
+    /// Batches formed by the dynamic batchers.
     pub batches: AtomicU64,
+    /// Total items across all formed batches.
     pub batched_items: AtomicU64,
+    /// MACs executed (where the backend reports them).
     pub macs: AtomicU64,
+    /// GEMM requests that reached the serving path.
+    pub gemm_requests: AtomicU64,
+    /// Engine launches performed for GEMM traffic (fused: ≤ requests).
+    pub fused_launches: AtomicU64,
+    /// GEMM requests that shared a launch with at least one other request.
+    pub fused_tiles: AtomicU64,
     latency_buckets: [AtomicU64; 13],
     latency_sum_us: AtomicU64,
 }
 
 impl Metrics {
+    /// Fresh all-zero registry.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one end-to-end request latency into the histogram.
     pub fn observe_latency(&self, d: Duration) {
         let us = d.as_micros() as u64;
         let idx = BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(BUCKETS_US.len());
@@ -33,9 +47,18 @@ impl Metrics {
         self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
     }
 
+    /// Record one formed batch of `items` requests.
     pub fn record_batch(&self, items: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_items.fetch_add(items as u64, Ordering::Relaxed);
+    }
+
+    /// Record the outcome of one fused GEMM execution: how many engine
+    /// launches served the queue slice and how many of its tiles shared a
+    /// launch (see [`super::fusion::FusionStats`]).
+    pub fn record_fusion(&self, launches: u64, fused_tiles: u64) {
+        self.fused_launches.fetch_add(launches, Ordering::Relaxed);
+        self.fused_tiles.fetch_add(fused_tiles, Ordering::Relaxed);
     }
 
     /// Mean observed latency in microseconds.
@@ -75,6 +98,7 @@ impl Metrics {
         }
     }
 
+    /// Consistent-enough point-in-time copy of every counter.
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
@@ -85,6 +109,9 @@ impl Metrics {
             mean_latency_us: self.mean_latency_us(),
             p95_latency_us: self.latency_quantile_us(0.95),
             macs: self.macs.load(Ordering::Relaxed),
+            gemm_requests: self.gemm_requests.load(Ordering::Relaxed),
+            fused_launches: self.fused_launches.load(Ordering::Relaxed),
+            fused_tiles: self.fused_tiles.load(Ordering::Relaxed),
         }
     }
 }
@@ -92,14 +119,28 @@ impl Metrics {
 /// Point-in-time view for the stats endpoint.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct MetricsSnapshot {
+    /// Items submitted to any batcher.
     pub requests: u64,
+    /// Successful replies delivered.
     pub responses: u64,
+    /// Error replies delivered.
     pub errors: u64,
+    /// Batches formed.
     pub batches: u64,
+    /// Mean items per formed batch.
     pub mean_batch_size: f64,
+    /// Mean end-to-end latency (µs).
     pub mean_latency_us: f64,
+    /// Approximate p95 latency (µs, histogram bucket bound).
     pub p95_latency_us: u64,
+    /// MACs executed.
     pub macs: u64,
+    /// GEMM requests that reached the serving path.
+    pub gemm_requests: u64,
+    /// Engine launches performed for GEMM traffic.
+    pub fused_launches: u64,
+    /// GEMM requests that shared a launch with another request.
+    pub fused_tiles: u64,
 }
 
 #[cfg(test)]
@@ -140,6 +181,18 @@ mod tests {
         m.observe_latency(Duration::from_micros(100));
         m.observe_latency(Duration::from_micros(300));
         assert_eq!(m.mean_latency_us(), 200.0);
+    }
+
+    #[test]
+    fn fusion_counters_accumulate() {
+        let m = Metrics::new();
+        m.gemm_requests.fetch_add(5, Ordering::Relaxed);
+        m.record_fusion(2, 4);
+        m.record_fusion(1, 0);
+        let s = m.snapshot();
+        assert_eq!(s.gemm_requests, 5);
+        assert_eq!(s.fused_launches, 3);
+        assert_eq!(s.fused_tiles, 4);
     }
 
     #[test]

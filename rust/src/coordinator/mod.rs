@@ -4,14 +4,19 @@
 //! * [`json`] — wire format + manifest parsing (no serde offline).
 //! * [`metrics`] — counters and latency histograms.
 //! * [`batcher`] — dynamic batching (size-or-deadline policy) feeding one
-//!   PJRT invocation per batch.
+//!   backend invocation per batch.
+//! * [`fusion`] — cross-request GEMM fusion: compatible queued tiles
+//!   (same config, same shared operand plane) coalesce into one engine
+//!   launch, bit-identically to running them one at a time.
 //! * [`scheduler`] — cycle-accurate PDPU-array scheduling with RAW-hazard
-//!   interleaving (the chunked-accumulation pipeline problem).
+//!   interleaving (the chunked-accumulation pipeline problem), including
+//!   fused-vs-unfused launch-sequence modelling.
 //! * [`service`] — compiled artifacts + parameter state, typed batch ops.
 //! * [`server`] — TCP JSON-lines front end (std::net + threads).
 
 pub mod batcher;
 pub mod engine;
+pub mod fusion;
 pub mod json;
 pub mod metrics;
 pub mod scheduler;
@@ -20,7 +25,8 @@ pub mod service;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use engine::{ModelInfo, ServiceHandle};
+pub use fusion::{execute_fused, execute_unfused, plan_fusion, FusionStats, GemmTile};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use scheduler::{conv_jobs, schedule, DotJob, ScheduleReport};
-pub use server::Server;
+pub use scheduler::{conv_jobs, fuse_launches, schedule, schedule_launches, DotJob, ScheduleReport};
+pub use server::{Server, ServerPolicy};
 pub use service::{PositService, SoftwareService};

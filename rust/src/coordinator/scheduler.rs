@@ -17,17 +17,24 @@ use crate::pdpu::pipeline::{Pipeline, STAGES};
 /// pipeline operations.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct DotJob {
+    /// Caller-chosen job identity (carried through for bookkeeping).
     pub id: u64,
+    /// Dot-product length in MACs.
     pub dot_len: usize,
 }
 
 /// Array-level schedule outcome.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ScheduleReport {
+    /// PDPU units in the array.
     pub units: usize,
+    /// Chunk size N of each unit.
     pub n: usize,
+    /// Jobs scheduled.
     pub jobs: usize,
+    /// Pipeline operations issued (chunks across all jobs).
     pub total_chunks: u64,
+    /// Cycles until the last chunk retired.
     pub cycles: u64,
     /// chunks retired per unit-cycle (1.0 = perfect)
     pub utilization: f64,
@@ -150,6 +157,47 @@ pub fn conv_jobs(outputs: usize, dot_len: usize) -> Vec<DotJob> {
     (0..outputs as u64).map(|id| DotJob { id, dot_len }).collect()
 }
 
+/// Coalesce the job lists of several queued launches into one launch —
+/// the array-level counterpart of [`super::fusion`]: a fused request
+/// queue presents the scheduler with one job pool instead of a sequence
+/// of per-request pools separated by pipeline drains.
+pub fn fuse_launches(launches: &[Vec<DotJob>]) -> Vec<DotJob> {
+    launches.iter().flat_map(|l| l.iter().copied()).collect()
+}
+
+/// Schedule a sequence of launches **without** fusion: each launch runs
+/// to completion (full pipeline drain) before the next starts — the
+/// unfused serving path's cost model. Compare against
+/// `schedule(&fuse_launches(..), ..)` to quantify what cross-request
+/// fusion recovers: the drained-pipeline and ragged-tail cycles at every
+/// launch boundary.
+pub fn schedule_launches(
+    launches: &[Vec<DotJob>],
+    units: usize,
+    n: usize,
+    interleave: usize,
+) -> ScheduleReport {
+    let mut cycles = 0u64;
+    let mut total_chunks = 0u64;
+    let mut jobs = 0usize;
+    for l in launches {
+        let r = schedule(l, units, n, interleave);
+        cycles += r.cycles;
+        total_chunks += r.total_chunks;
+        jobs += r.jobs;
+    }
+    let util = if cycles == 0 { 0.0 } else { total_chunks as f64 / (cycles * units as u64) as f64 };
+    ScheduleReport {
+        units,
+        n,
+        jobs,
+        total_chunks,
+        cycles,
+        utilization: util,
+        macs_per_cycle: util * n as f64 * units as f64,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,5 +259,40 @@ mod tests {
         let r = schedule(&[], 2, 4, 4);
         assert_eq!(r.cycles, 0);
         assert_eq!(r.total_chunks, 0);
+    }
+
+    #[test]
+    fn fused_launches_beat_serial_launches() {
+        // 8 queued requests of 8 outputs each: running them back-to-back
+        // drains the pipeline 8 times; fusing them into one job pool keeps
+        // it full. Work (chunks) is identical, cycles strictly fewer.
+        let launches: Vec<Vec<DotJob>> = (0..8).map(|_| conv_jobs(8, 147)).collect();
+        let serial = schedule_launches(&launches, 2, 4, STAGES);
+        let fused = schedule(&fuse_launches(&launches), 2, 4, STAGES);
+        assert_eq!(serial.total_chunks, fused.total_chunks);
+        assert_eq!(serial.jobs, fused.jobs);
+        assert!(
+            fused.cycles < serial.cycles,
+            "fused {} vs serial {}",
+            fused.cycles,
+            serial.cycles
+        );
+        assert!(fused.utilization > serial.utilization);
+    }
+
+    #[test]
+    fn single_launch_fusion_is_identity() {
+        let launches = vec![conv_jobs(16, 64)];
+        let serial = schedule_launches(&launches, 2, 4, STAGES);
+        let fused = schedule(&fuse_launches(&launches), 2, 4, STAGES);
+        assert_eq!(serial, fused);
+    }
+
+    #[test]
+    fn empty_launch_sequence_is_zero() {
+        let r = schedule_launches(&[], 2, 4, 4);
+        assert_eq!(r.cycles, 0);
+        assert_eq!(r.total_chunks, 0);
+        assert_eq!(r.jobs, 0);
     }
 }

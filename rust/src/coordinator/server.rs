@@ -3,14 +3,18 @@
 //! Protocol (one JSON object per line, response per line):
 //!   {"op":"ping"}                        → {"ok":true,"pong":true}
 //!   {"op":"infer","image":[784 floats]}  → {"ok":true,"logits":[10]}
+//!   {"op":"gemm","a":[M·K],"b":[K·N]}    → {"ok":true,"c":[M·N]}
 //!   {"op":"stats"}                       → {"ok":true, …counters…}
 //!
-//! Requests from all connections funnel through one [`Batcher`], so
-//! concurrent clients get batched into single PJRT invocations — the
-//! serving pattern of vLLM-style routers, at MLP scale.
+//! Requests from all connections funnel through per-op [`Batcher`]s, so
+//! concurrent clients get batched into single backend invocations — the
+//! serving pattern of vLLM-style routers, at MLP scale. Queued GEMM
+//! requests additionally go through **cross-request fusion**
+//! ([`super::fusion`]): compatible tiles in one formed batch share a
+//! single engine launch, bit-identically to running them one at a time.
 //!
 //! std::net + threads (no tokio in the offline image): one reader thread
-//! per connection, one batch-executor thread overall.
+//! per connection, one batch-executor thread per batcher.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -21,24 +25,58 @@ use super::engine::ServiceHandle;
 use super::json::{parse, Json};
 use super::metrics::Metrics;
 
+/// Serving knobs beyond the batch-formation policy.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerPolicy {
+    /// Coalesce compatible queued GEMM tiles into fused engine launches.
+    /// Off = one launch per request (the A/B baseline); outputs are
+    /// bit-identical either way.
+    pub fuse_gemm: bool,
+}
+
+impl Default for ServerPolicy {
+    fn default() -> Self {
+        Self { fuse_gemm: true }
+    }
+}
+
+/// Everything one connection handler needs, shared across connections.
+struct Shared {
+    infer: Batcher<Vec<f32>, Vec<f32>>,
+    gemm: Batcher<(Vec<f32>, Vec<f32>), Vec<f32>>,
+    metrics: Arc<Metrics>,
+    service: ServiceHandle,
+}
+
 /// Running server handle.
 pub struct Server {
+    /// The bound local address (useful with `"127.0.0.1:0"` binds).
     pub addr: std::net::SocketAddr,
     accept_thread: Option<std::thread::JoinHandle<()>>,
     shutdown: Arc<std::sync::atomic::AtomicBool>,
 }
 
 impl Server {
-    /// Bind `addr` (e.g. "127.0.0.1:0") and serve `service` forever (until
-    /// the handle is dropped).
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve `service` with the
+    /// default policy (GEMM fusion on) until the handle is dropped.
     pub fn start(addr: &str, service: ServiceHandle, metrics: Arc<Metrics>) -> anyhow::Result<Server> {
+        Self::start_with(addr, service, metrics, ServerPolicy::default())
+    }
+
+    /// Like [`Self::start`] with an explicit [`ServerPolicy`].
+    pub fn start_with(
+        addr: &str,
+        service: ServiceHandle,
+        metrics: Arc<Metrics>,
+        policy: ServerPolicy,
+    ) -> anyhow::Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
 
         let svc = service.clone();
-        let batcher: Arc<Batcher<Vec<f32>, Vec<f32>>> = Arc::new(Batcher::spawn(
+        let infer: Batcher<Vec<f32>, Vec<f32>> = Batcher::spawn(
             BatchPolicy { max_batch: service.info().batch, max_wait: std::time::Duration::from_millis(2) },
             metrics.clone(),
             move |images: Vec<Vec<f32>>| {
@@ -48,8 +86,33 @@ impl Server {
                     Err(e) => (0..n).map(|_| Err(e.clone())).collect(),
                 }
             },
-        ));
+        );
 
+        let gsvc = service.clone();
+        let gmetrics = metrics.clone();
+        let fuse = policy.fuse_gemm;
+        let gemm: Batcher<(Vec<f32>, Vec<f32>), Vec<f32>> = Batcher::spawn(
+            BatchPolicy { max_batch: 64, max_wait: std::time::Duration::from_millis(2) },
+            metrics.clone(),
+            move |reqs: Vec<(Vec<f32>, Vec<f32>)>| {
+                let n = reqs.len();
+                gmetrics.gemm_requests.fetch_add(n as u64, std::sync::atomic::Ordering::Relaxed);
+                if fuse {
+                    match gsvc.gemm_batch(reqs) {
+                        Ok((results, stats)) => {
+                            gmetrics.record_fusion(stats.launches, stats.fused_tiles);
+                            results
+                        }
+                        Err(e) => (0..n).map(|_| Err(e.clone())).collect(),
+                    }
+                } else {
+                    gmetrics.record_fusion(n as u64, 0);
+                    reqs.into_iter().map(|(a, b)| gsvc.gemm(a, b)).collect()
+                }
+            },
+        );
+
+        let shared = Arc::new(Shared { infer, gemm, metrics, service });
         let sd = shutdown.clone();
         let accept_thread = std::thread::spawn(move || {
             for stream in listener.incoming() {
@@ -58,10 +121,8 @@ impl Server {
                 }
                 match stream {
                     Ok(s) => {
-                        let b = batcher.clone();
-                        let m = metrics.clone();
-                        let svc = service.clone();
-                        std::thread::spawn(move || handle_conn(s, b, m, svc));
+                        let sh = shared.clone();
+                        std::thread::spawn(move || handle_conn(s, sh));
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         std::thread::sleep(std::time::Duration::from_millis(5));
@@ -85,12 +146,7 @@ impl Drop for Server {
     }
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    batcher: Arc<Batcher<Vec<f32>, Vec<f32>>>,
-    metrics: Arc<Metrics>,
-    service: ServiceHandle,
-) {
+fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
     let peer = stream.peer_addr().ok();
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
@@ -102,7 +158,7 @@ fn handle_conn(
         if line.trim().is_empty() {
             continue;
         }
-        let resp = handle_request(&line, &batcher, &metrics, &service);
+        let resp = handle_request(&line, &shared);
         if writer.write_all((resp.to_string() + "\n").as_bytes()).is_err() {
             break;
         }
@@ -114,12 +170,7 @@ fn err(msg: impl Into<String>) -> Json {
     Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.into()))])
 }
 
-fn handle_request(
-    line: &str,
-    batcher: &Batcher<Vec<f32>, Vec<f32>>,
-    metrics: &Metrics,
-    service: &ServiceHandle,
-) -> Json {
+fn handle_request(line: &str, shared: &Shared) -> Json {
     let req = match parse(line) {
         Ok(v) => v,
         Err(e) => return err(format!("bad json: {e}")),
@@ -130,11 +181,11 @@ fn handle_request(
             let Some(img) = req.get("image").and_then(Json::as_f64_vec) else {
                 return err("infer needs 'image': [f64]");
             };
-            if img.len() != service.info().input_dim {
-                return err(format!("image must have {} pixels", service.info().input_dim));
+            if img.len() != shared.service.info().input_dim {
+                return err(format!("image must have {} pixels", shared.service.info().input_dim));
             }
             let img: Vec<f32> = img.into_iter().map(|v| v as f32).collect();
-            match batcher.call(img) {
+            match shared.infer.call(img) {
                 Ok(logits) => Json::obj(vec![
                     ("ok", Json::Bool(true)),
                     ("logits", Json::arr_f64(&logits.iter().map(|&v| v as f64).collect::<Vec<_>>())),
@@ -142,8 +193,32 @@ fn handle_request(
                 Err(e) => err(e),
             }
         }
+        Some("gemm") => {
+            let (m, k, n) = shared.service.info().gemm_mkn;
+            let Some(a) = req.get("a").and_then(Json::as_f64_vec) else {
+                return err("gemm needs 'a': [f64]");
+            };
+            let Some(b) = req.get("b").and_then(Json::as_f64_vec) else {
+                return err("gemm needs 'b': [f64]");
+            };
+            if a.len() != m * k {
+                return err(format!("A must be {m}x{k}"));
+            }
+            if b.len() != k * n {
+                return err(format!("B must be {k}x{n}"));
+            }
+            let a: Vec<f32> = a.into_iter().map(|v| v as f32).collect();
+            let b: Vec<f32> = b.into_iter().map(|v| v as f32).collect();
+            match shared.gemm.call((a, b)) {
+                Ok(c) => Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("c", Json::arr_f64(&c.iter().map(|&v| v as f64).collect::<Vec<_>>())),
+                ]),
+                Err(e) => err(e),
+            }
+        }
         Some("stats") => {
-            let s = metrics.snapshot();
+            let s = shared.metrics.snapshot();
             Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("requests", Json::Num(s.requests as f64)),
@@ -153,6 +228,9 @@ fn handle_request(
                 ("mean_batch_size", Json::Num(s.mean_batch_size)),
                 ("mean_latency_us", Json::Num(s.mean_latency_us)),
                 ("p95_latency_us", Json::Num(s.p95_latency_us as f64)),
+                ("gemm_requests", Json::Num(s.gemm_requests as f64)),
+                ("fused_launches", Json::Num(s.fused_launches as f64)),
+                ("fused_tiles", Json::Num(s.fused_tiles as f64)),
             ])
         }
         Some(op) => err(format!("unknown op '{op}'")),

@@ -6,6 +6,7 @@ use anyhow::{Context, Result};
 use std::path::Path;
 use std::sync::Mutex;
 
+use super::fusion::{self, FusionStats, GemmTile};
 use crate::baselines::{DotArch, PdpuArch};
 use crate::dnn::layers::{linear_batch, relu};
 use crate::dnn::Tensor;
@@ -37,18 +38,22 @@ impl PositService {
         Ok(Self { manifest, infer, train, gemm, params: Mutex::new(params), param_shapes })
     }
 
+    /// The loaded artifacts manifest.
     pub fn manifest(&self) -> &ArtifactManifest {
         &self.manifest
     }
 
+    /// Compiled maximum batch size.
     pub fn batch_size(&self) -> usize {
         self.manifest.batch
     }
 
+    /// Input feature count per image.
     pub fn input_dim(&self) -> usize {
         self.manifest.layer_sizes[0]
     }
 
+    /// Output class count.
     pub fn classes(&self) -> usize {
         *self.manifest.layer_sizes.last().unwrap()
     }
@@ -175,22 +180,27 @@ impl SoftwareService {
         }
     }
 
+    /// Input feature count per image.
     pub fn input_dim(&self) -> usize {
         self.layer_sizes[0]
     }
 
+    /// Output class count.
     pub fn classes(&self) -> usize {
         *self.layer_sizes.last().unwrap()
     }
 
+    /// Configured maximum batch size.
     pub fn batch_size(&self) -> usize {
         self.batch
     }
 
+    /// MLP layer widths, input first.
     pub fn layer_sizes(&self) -> &[usize] {
         &self.layer_sizes
     }
 
+    /// The configured GEMM shape (M, K, N).
     pub fn gemm_mkn(&self) -> (usize, usize, usize) {
         self.gemm_mkn
     }
@@ -224,9 +234,11 @@ impl SoftwareService {
             .collect())
     }
 
-    /// Posit GEMM at the configured (M, K, N): quantize once per operand,
-    /// run one batched tile.
-    pub fn gemm(&self, a: &[f32], b: &[f32]) -> std::result::Result<Vec<f32>, String> {
+    /// Shared request validation for the single and batched GEMM paths:
+    /// check shapes against the configured (M, K, N), widen A to f64, and
+    /// transpose B so each right-hand vector is contiguous (the layout
+    /// `dot_batch` wants).
+    fn validate_and_transpose(&self, a: &[f32], b: &[f32]) -> std::result::Result<(Vec<f64>, Vec<f64>), String> {
         let (m, k, n) = self.gemm_mkn;
         if a.len() != m * k {
             return Err(format!("A must be {m}x{k}"));
@@ -235,16 +247,56 @@ impl SoftwareService {
             return Err(format!("B must be {k}x{n}"));
         }
         let af: Vec<f64> = a.iter().map(|&v| v as f64).collect();
-        // transpose B so each right-hand vector is contiguous (the layout
-        // dot_batch wants)
         let mut bt = vec![0.0f64; n * k];
         for kk in 0..k {
             for j in 0..n {
                 bt[j * k + kk] = b[kk * n + j] as f64;
             }
         }
+        Ok((af, bt))
+    }
+
+    /// Posit GEMM at the configured (M, K, N): quantize once per operand,
+    /// run one batched tile.
+    pub fn gemm(&self, a: &[f32], b: &[f32]) -> std::result::Result<Vec<f32>, String> {
+        let (m, k, _) = self.gemm_mkn;
+        let (af, bt) = self.validate_and_transpose(a, b)?;
         let out = self.arch.dot_batch(&vec![0.0; m], &af, &bt, k);
         Ok(out.into_iter().map(|v| v as f32).collect())
+    }
+
+    /// A whole queue of GEMM requests at the configured (M, K, N), executed
+    /// with **cross-request fusion**: requests whose left operand planes
+    /// are bit-identical share one engine launch
+    /// ([`fusion::execute_fused`]). Returns one result per request in
+    /// submission order, each bit-identical to what [`Self::gemm`] would
+    /// have produced for it alone; invalid requests get their own error
+    /// without blocking the rest of the queue.
+    pub fn gemm_batch(
+        &self,
+        reqs: &[(Vec<f32>, Vec<f32>)],
+    ) -> (Vec<std::result::Result<Vec<f32>, String>>, FusionStats) {
+        let (m, k, _) = self.gemm_mkn;
+        let mut tiles: Vec<GemmTile> = Vec::new();
+        // per-request slot: index into `tiles`, or the shape error
+        let mut slots: Vec<std::result::Result<usize, String>> = Vec::with_capacity(reqs.len());
+        for (a, b) in reqs {
+            match self.validate_and_transpose(a, b) {
+                Ok((af, bt)) => {
+                    slots.push(Ok(tiles.len()));
+                    tiles.push(GemmTile { cfg: *self.arch.config(), k, acc: vec![0.0; m], a: af, bt });
+                }
+                Err(e) => slots.push(Err(e)),
+            }
+        }
+        let (mut outs, stats) = fusion::execute_fused(&tiles);
+        let results = slots
+            .into_iter()
+            .map(|slot| {
+                slot.map(|i| std::mem::take(&mut outs[i]).into_iter().map(|v| v as f32).collect())
+            })
+            .collect();
+        (results, stats)
     }
 }
 
@@ -304,5 +356,40 @@ mod tests {
         assert!(s.gemm(&[0.0; 3], &[0.0; 30]).is_err());
         let (m, k, n) = s.gemm_mkn();
         assert!(s.gemm(&vec![0.0; m * k], &vec![0.0; k * n + 1]).is_err());
+    }
+
+    #[test]
+    fn gemm_batch_fuses_and_matches_singles_bitwise() {
+        let s = svc();
+        let (m, k, n) = s.gemm_mkn();
+        let shared_a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.41).sin()).collect();
+        let other_a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.97).cos()).collect();
+        let mk_b = |seed: usize| -> Vec<f32> {
+            (0..k * n).map(|i| ((i + seed) as f32 * 0.29).cos()).collect()
+        };
+        // 3 requests sharing one plane + 1 distinct + 1 invalid, interleaved
+        let reqs = vec![
+            (shared_a.clone(), mk_b(0)),
+            (other_a.clone(), mk_b(1)),
+            (shared_a.clone(), mk_b(2)),
+            (vec![0.0f32; 3], mk_b(3)), // bad shape
+            (shared_a.clone(), mk_b(4)),
+        ];
+        let (results, stats) = s.gemm_batch(&reqs);
+        assert_eq!(results.len(), 5);
+        assert_eq!(stats, FusionStats { launches: 2, fused_tiles: 3 });
+        assert!(results[3].as_ref().unwrap_err().contains("A must be"));
+        for (i, (a, b)) in reqs.iter().enumerate() {
+            if i == 3 {
+                continue;
+            }
+            let want = s.gemm(a, b).unwrap();
+            let got = results[i].as_ref().unwrap();
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "request {i} diverged from its unfused result"
+            );
+        }
     }
 }

@@ -159,8 +159,10 @@ mod tests {
         let reference = conv2d_f64(&wl.image, &wl.weights, wl.stride, wl.pad);
         let pdpu = PdpuArch::new(PdpuConfig::mixed(13, 16, 2, 4, 14).unwrap());
         let quire = QuirePdpuArch::new(PositFormat::p(13, 2), PositFormat::p(16, 2), 4);
-        let a_p = mean_relative_accuracy(conv2d(&pdpu, &wl.image, &wl.weights, wl.stride, wl.pad).data(), reference.data());
-        let a_q = mean_relative_accuracy(conv2d(&quire, &wl.image, &wl.weights, wl.stride, wl.pad).data(), reference.data());
+        let conv_p = conv2d(&pdpu, &wl.image, &wl.weights, wl.stride, wl.pad);
+        let conv_q = conv2d(&quire, &wl.image, &wl.weights, wl.stride, wl.pad);
+        let a_p = mean_relative_accuracy(conv_p.data(), reference.data());
+        let a_q = mean_relative_accuracy(conv_q.data(), reference.data());
         // Both units share the dominant error source (input quantization
         // to P(13,2)), so against the *unquantized* FP64 reference the gap
         // is small and either can be marginally ahead; quire must not be

@@ -18,9 +18,11 @@
 //!   stationary operand).
 //! * [`BatchEngine::gemm_posit`] executes the whole output tile through a
 //!   per-worker reusable [`DotScratch`], with **row-parallel** execution
-//!   across `std::thread` workers. Every output element is an independent
+//!   across `std::thread` workers and **column-blocked** (cache-tiled)
+//!   loop order inside each worker. Every output element is an independent
 //!   chunked accumulation, so results are deterministic and invariant to
-//!   the worker count (property-tested in `rust/tests/engine_equivalence.rs`).
+//!   both the worker count and the tile width (property-tested in
+//!   `rust/tests/engine_equivalence.rs`).
 //!
 //! Bit-exactness invariant: for every output element the engine performs
 //! the *same* S1–S6 stage sequence as [`Pdpu::dot_chunked`] — the lane and
@@ -42,6 +44,27 @@ use crate::posit::{decode, Decoded, Posit, PositFormat};
 /// tensor (rows = output channels, k = in_ch·kh·kw) and once per image
 /// from the im2col patch matrix (rows = output pixels), then reused across
 /// every output element.
+///
+/// # Examples
+///
+/// Prepare two operand planes once and run a batched GEMM tile:
+///
+/// ```
+/// use pdpu::engine::{BatchEngine, PreparedOperands};
+/// use pdpu::pdpu::PdpuConfig;
+/// use pdpu::posit::Posit;
+///
+/// let cfg = PdpuConfig::paper_default();
+/// // two weight rows of k=2, one right-hand vector of k=2
+/// let w = PreparedOperands::quantize(cfg.in_fmt, &[1.0, 2.0, -0.5, 4.0], 2);
+/// let x = PreparedOperands::quantize(cfg.in_fmt, &[3.0, 0.25], 2);
+/// assert_eq!((w.rows(), w.k()), (2, 2));
+///
+/// let acc = vec![Posit::zero(cfg.out_fmt); w.rows()];
+/// let out = BatchEngine::new(cfg).gemm_posit(&acc, &w, &x);
+/// assert_eq!(out.len(), 2);
+/// assert_eq!(out[0].to_f64(), 1.0 * 3.0 + 2.0 * 0.25);
+/// ```
 #[derive(Clone, Debug)]
 pub struct PreparedOperands {
     fmt: PositFormat,
@@ -68,16 +91,19 @@ impl PreparedOperands {
         Self { fmt, rows: posits.len() / k, k, elems }
     }
 
+    /// Number of prepared operand vectors (matrix rows).
     #[inline]
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Inner (dot-product) dimension of every row.
     #[inline]
     pub fn k(&self) -> usize {
         self.k
     }
 
+    /// The posit format the operands were quantized to.
     #[inline]
     pub fn format(&self) -> PositFormat {
         self.fmt
@@ -94,19 +120,37 @@ impl PreparedOperands {
 /// mode: thread spawn/join would cost more than the dot products.
 const AUTO_PARALLEL_MIN_MACS: usize = 16 * 1024;
 
+/// Auto column-block sizing target: keep roughly this many pre-decoded
+/// operand elements (the x-plane slice a worker revisits) live per tile,
+/// so the block of right-hand vectors stays cache-resident while the
+/// worker walks all of its rows.
+const AUTO_TILE_TARGET_ELEMS: usize = 4096;
+
 /// The batched executor: one PDPU configuration plus a worker-thread
-/// policy. `threads == 0` means "auto": scale to the available
-/// parallelism, but run small tiles sequentially. An explicit
-/// `with_threads(n)` always uses `n` workers (capped at the row count).
+/// policy and a column-blocking (tiling) policy.
+///
+/// `threads == 0` means "auto": scale to the available parallelism, but
+/// run small tiles sequentially. An explicit `with_threads(n)` always
+/// uses `n` workers (capped at the row count).
+///
+/// `col_block == 0` means "auto": size column blocks so one block of
+/// pre-decoded right-hand vectors stays cache-resident while a worker
+/// sweeps its rows. An explicit [`Self::with_col_block`] fixes the block
+/// width. Tiling is a pure loop-order change — every output element is an
+/// independent accumulation chain, so results are bit-identical for every
+/// block width (property-tested in `rust/tests/engine_equivalence.rs`).
 #[derive(Clone, Debug)]
 pub struct BatchEngine {
     unit: Pdpu,
     threads: usize,
+    col_block: usize,
 }
 
 impl BatchEngine {
+    /// Build an engine for one PDPU configuration with auto thread and
+    /// tile policies.
     pub fn new(cfg: PdpuConfig) -> Self {
-        Self { unit: Pdpu::new(cfg), threads: 0 }
+        Self { unit: Pdpu::new(cfg), threads: 0, col_block: 0 }
     }
 
     /// Fix the worker count (useful for benchmarking and for the
@@ -116,6 +160,15 @@ impl BatchEngine {
         self
     }
 
+    /// Fix the column-block (tile) width (useful for benchmarking the
+    /// cache effect and for the block-invariance property tests). `0`
+    /// restores auto sizing.
+    pub fn with_col_block(mut self, cols: usize) -> Self {
+        self.col_block = cols;
+        self
+    }
+
+    /// The PDPU configuration this engine executes.
     #[inline]
     pub fn config(&self) -> &PdpuConfig {
         self.unit.config()
@@ -130,6 +183,15 @@ impl BatchEngine {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
         };
         t.clamp(1, rows.max(1))
+    }
+
+    fn effective_col_block(&self, cols: usize, k: usize) -> usize {
+        let b = if self.col_block > 0 {
+            self.col_block
+        } else {
+            (AUTO_TILE_TARGET_ELEMS / k.max(1)).max(8)
+        };
+        b.clamp(1, cols.max(1))
     }
 
     /// One chunked dot product over pre-decoded planes: bit-identical to
@@ -182,8 +244,13 @@ impl BatchEngine {
     /// right-hand vectors contiguously (i.e. it is the transposed B
     /// matrix / the im2col patch matrix).
     ///
-    /// Deterministic and invariant to the worker count: every output
-    /// element is an independent accumulation chain.
+    /// Each worker walks cache-sized **column blocks** instead of whole
+    /// rows: for one block of right-hand vectors it sweeps every row it
+    /// owns, so the block's pre-decoded planes stay hot across the sweep.
+    ///
+    /// Deterministic and invariant to both the worker count and the
+    /// column-block width: every output element is an independent
+    /// accumulation chain.
     pub fn gemm_posit(
         &self,
         acc: &[Posit],
@@ -199,14 +266,20 @@ impl BatchEngine {
             return out;
         }
         let threads = self.effective_threads(rows, cols, k);
+        let col_block = self.effective_col_block(cols, k);
         if threads == 1 {
-            let mut scratch = DotScratch::new();
-            for r in 0..rows {
-                let wrow = &w.elems[r * k..(r + 1) * k];
-                for c in 0..cols {
-                    out[r * cols + c] =
-                        self.dot_prepared(acc[r], wrow, &x.elems[c * k..(c + 1) * k], &mut scratch);
+            let mut scratch = DotScratch::for_config(self.unit.config());
+            let mut c0 = 0;
+            while c0 < cols {
+                let c1 = (c0 + col_block).min(cols);
+                for r in 0..rows {
+                    let wrow = &w.elems[r * k..(r + 1) * k];
+                    for c in c0..c1 {
+                        out[r * cols + c] =
+                            self.dot_prepared(acc[r], wrow, &x.elems[c * k..(c + 1) * k], &mut scratch);
+                    }
                 }
+                c0 = c1;
             }
             return out;
         }
@@ -215,18 +288,19 @@ impl BatchEngine {
             for (t, out_block) in out.chunks_mut(rows_per * cols).enumerate() {
                 let r0 = t * rows_per;
                 s.spawn(move || {
-                    let mut scratch = DotScratch::new();
-                    for (ri, out_row) in out_block.chunks_mut(cols).enumerate() {
-                        let r = r0 + ri;
-                        let wrow = &w.elems[r * k..(r + 1) * k];
-                        for (c, slot) in out_row.iter_mut().enumerate() {
-                            *slot = self.dot_prepared(
-                                acc[r],
-                                wrow,
-                                &x.elems[c * k..(c + 1) * k],
-                                &mut scratch,
-                            );
+                    let mut scratch = DotScratch::for_config(self.unit.config());
+                    let mut c0 = 0;
+                    while c0 < cols {
+                        let c1 = (c0 + col_block).min(cols);
+                        for (ri, out_row) in out_block.chunks_mut(cols).enumerate() {
+                            let r = r0 + ri;
+                            let wrow = &w.elems[r * k..(r + 1) * k];
+                            for (c, slot) in out_row[c0..c1].iter_mut().enumerate() {
+                                let col = &x.elems[(c0 + c) * k..(c0 + c + 1) * k];
+                                *slot = self.dot_prepared(acc[r], wrow, col, &mut scratch);
+                            }
                         }
+                        c0 = c1;
                     }
                 });
             }
@@ -296,10 +370,8 @@ mod tests {
         let got = engine.gemm_f64(&acc, &w, &x, k);
         for r in 0..rows {
             for c in 0..cols {
-                let qa: Vec<Posit> =
-                    w[r * k..(r + 1) * k].iter().map(|&v| Posit::from_f64(v, cfg.in_fmt)).collect();
-                let qb: Vec<Posit> =
-                    x[c * k..(c + 1) * k].iter().map(|&v| Posit::from_f64(v, cfg.in_fmt)).collect();
+                let qa: Vec<Posit> = w[r * k..(r + 1) * k].iter().map(|&v| Posit::from_f64(v, cfg.in_fmt)).collect();
+                let qb: Vec<Posit> = x[c * k..(c + 1) * k].iter().map(|&v| Posit::from_f64(v, cfg.in_fmt)).collect();
                 let want = unit
                     .dot_chunked(Posit::from_f64(acc[r], cfg.out_fmt), &qa, &qb)
                     .to_f64();
@@ -326,6 +398,28 @@ mod tests {
         for t in [0usize, 2, 3, 8, 64] {
             let many = BatchEngine::new(cfg).with_threads(t).gemm_f64(&acc, &w, &x, k);
             assert_eq!(one, many, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn col_block_width_does_not_change_results() {
+        let cfg = PdpuConfig::paper_default();
+        let mut rng = Rng::seeded(0x71E5);
+        let (rows, cols, k) = (4usize, 13usize, 9usize);
+        let w: Vec<f64> = (0..rows * k).map(|_| rng.normal()).collect();
+        let x: Vec<f64> = (0..cols * k).map(|_| rng.normal()).collect();
+        let acc = vec![0.0; rows];
+        let auto = BatchEngine::new(cfg).gemm_f64(&acc, &w, &x, k);
+        // explicit block widths (including 1 and wider-than-cols) AND the
+        // auto policy must all agree, sequential and threaded alike
+        for cb in [1usize, 2, 5, 13, 64] {
+            for t in [1usize, 3] {
+                let got = BatchEngine::new(cfg)
+                    .with_threads(t)
+                    .with_col_block(cb)
+                    .gemm_f64(&acc, &w, &x, k);
+                assert_eq!(auto, got, "col_block={cb} threads={t}");
+            }
         }
     }
 

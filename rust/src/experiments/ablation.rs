@@ -59,7 +59,10 @@ pub fn n_sweep(ns: &[usize], tech: &Tech, hw: usize, oc: usize) -> Vec<AblationP
 }
 
 pub fn render(title: &str, pts: &[AblationPoint]) -> String {
-    let mut s = format!("{title}\n{:<24} {:>9} {:>10} {:>8} {:>7}\n", "config", "accuracy", "area(um2)", "power", "delay");
+    let mut s = format!(
+        "{title}\n{:<24} {:>9} {:>10} {:>8} {:>7}\n",
+        "config", "accuracy", "area(um2)", "power", "delay"
+    );
     for p in pts {
         s.push_str(&format!(
             "{:<24} {:>8.2}% {:>10.0} {:>8.2} {:>7.2}\n",

@@ -41,16 +41,27 @@
 //! 2. **Allocation-free stages** — each worker reuses one
 //!    [`pdpu::DotScratch`] across every chunk instead of allocating
 //!    inter-stage `Vec`s per call;
-//! 3. **Row-parallel** — output rows are partitioned across `std::thread`
-//!    workers; results are deterministic and invariant to the worker
-//!    count.
+//! 3. **Row-parallel, column-blocked** — output rows are partitioned
+//!    across `std::thread` workers, and each worker walks cache-sized
+//!    column tiles; results are deterministic and invariant to the worker
+//!    count and the tile width.
 //!
-//! The engine is **bit-identical** to the scalar path by construction and
-//! by property test (`rust/tests/engine_equivalence.rs`): same chunking,
-//! same zero-padded tail, same single rounding per chunk. The coordinator
-//! serves this engine when PJRT artifacts are absent
-//! ([`coordinator::SoftwareService`]), and `cargo bench --bench
-//! bench_kernels` reports its speedup over the scalar path.
+//! Above the engine, the serving layer fuses **across requests**:
+//! [`coordinator::fusion`] coalesces queued GEMM tiles that share a
+//! configuration and left operand plane into single engine launches, and
+//! the quire baseline participates through its own prepared-operand
+//! `dot_batch` override.
+//!
+//! The engine and the fusion layer are **bit-identical** to the scalar
+//! path by construction and by property test
+//! (`rust/tests/engine_equivalence.rs`): same chunking, same zero-padded
+//! tail, same single rounding per chunk, same per-element dataflow under
+//! fusion. The coordinator serves this engine when PJRT artifacts are
+//! absent ([`coordinator::SoftwareService`]); `cargo bench --bench
+//! bench_kernels` reports the engine's speedup over the scalar path and
+//! `cargo bench --bench bench_serving` records fused-vs-unfused serving
+//! throughput to `BENCH_serving.json`. See `docs/ARCHITECTURE.md` for the
+//! full module map.
 
 pub mod baselines;
 pub mod bench_harness;

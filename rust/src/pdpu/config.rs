@@ -28,9 +28,13 @@ pub struct PdpuConfig {
 /// Errors from configuration validation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ConfigError {
+    /// An invalid posit format (n/es out of supported range).
     Posit(PositError),
+    /// Dot-product size N outside 1..=256.
     BadN(usize),
+    /// Alignment width Wm outside 4..=96.
     BadWm(u32),
+    /// The derived S4 accumulator exceeds the functional model's 127 bits.
     AccTooWide(u32),
 }
 

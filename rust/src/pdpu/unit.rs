@@ -44,8 +44,21 @@ pub struct DotScratch {
 }
 
 impl DotScratch {
+    /// An empty workspace; the inter-stage vectors grow on first use.
     pub fn new() -> Self {
         Self { s1: DecodedInputs::empty(), s2: Multiplied::empty(), s3: Aligned::empty() }
+    }
+
+    /// A workspace pre-sized for `cfg`: the S1/S2 lane vectors reserve
+    /// `N` slots and the S3 addend vector `N + 1`, so the very first
+    /// operation through the scratch is already allocation-free. The
+    /// batched GEMM engine builds one of these per worker.
+    pub fn for_config(cfg: &PdpuConfig) -> Self {
+        let mut s = Self::new();
+        s.s1.products.reserve(cfg.n);
+        s.s2.terms.reserve(cfg.n);
+        s.s3.addends.reserve(cfg.n + 1);
+        s
     }
 }
 

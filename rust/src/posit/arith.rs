@@ -51,9 +51,17 @@ pub fn p_add(a: Posit, b: Posit, out_fmt: PositFormat) -> Posit {
             };
             Posit::from_bits(encode(u, out_fmt), out_fmt)
         }
-        (Decoded::Finite(fa), Decoded::Finite(fb)) => {
-            add_fields(fa.sign, fa.scale, fa.frac as u128, fa.frac_bits, fb.sign, fb.scale, fb.frac as u128, fb.frac_bits, out_fmt)
-        }
+        (Decoded::Finite(fa), Decoded::Finite(fb)) => add_fields(
+            fa.sign,
+            fa.scale,
+            fa.frac as u128,
+            fa.frac_bits,
+            fb.sign,
+            fb.scale,
+            fb.frac as u128,
+            fb.frac_bits,
+            out_fmt,
+        ),
     }
 }
 
@@ -224,7 +232,11 @@ mod tests {
                     } else {
                         f64_op(a, b, f, |u, v| u + v)
                     };
-                    assert_eq!(got.bits(), want.bits(), "P(8,{es}) {x:#x}+{y:#x}: {a:?} + {b:?} got {got:?} want {want:?}");
+                    assert_eq!(
+                        got.bits(),
+                        want.bits(),
+                        "P(8,{es}) {x:#x}+{y:#x}: {a:?} + {b:?} got {got:?} want {want:?}"
+                    );
                 }
             }
         }

@@ -1,12 +1,17 @@
-//! Property tests for the batched GEMM engine: across random PDPU
-//! configurations (uniform and mixed precision, N ∈ {1,4,8},
-//! Wm ∈ 6..=96), `dot_batch`/`gemm` must be **bit-identical** to the
-//! scalar `dot_f64`/`dot_chunked` loop, and invariant to the worker
-//! thread count. This is the acceptance invariant of the engine: batching
-//! is a scheduling optimization, never a numerics change.
+//! Property tests for the batched GEMM engine and the fused serving path:
+//! across random PDPU configurations (uniform and mixed precision,
+//! N ∈ {1,4,8}, Wm ∈ 6..=96), `dot_batch`/`gemm` must be
+//! **bit-identical** to the scalar `dot_f64`/`dot_chunked` loop, and
+//! invariant to the worker thread count and the column-block (tile)
+//! width; cross-request fusion (`coordinator::fusion`) must be
+//! bit-identical to one-launch-per-request execution, never fuse across
+//! configs, and never reorder responses. This is the acceptance invariant
+//! of the whole execution stack: batching, tiling, and fusion are
+//! scheduling optimizations, never a numerics change.
 
-use pdpu::baselines::{DotArch, IeeeArith, MulAddTreeDpu, PdpuArch};
+use pdpu::baselines::{DotArch, IeeeArith, MulAddTreeDpu, PdpuArch, QuirePdpuArch};
 use pdpu::baselines::{FmaCascadeDpu, IeeeFormat, PositArith};
+use pdpu::coordinator::fusion::{execute_fused, execute_unfused, plan_fusion, GemmTile};
 use pdpu::engine::{BatchEngine, PreparedOperands};
 use pdpu::pdpu::{Pdpu, PdpuConfig};
 use pdpu::posit::{Posit, PositFormat};
@@ -95,6 +100,168 @@ fn gemm_invariant_to_worker_thread_count() {
                 "cfg {} threads {threads}",
                 cfg.label()
             );
+        }
+    }
+}
+
+#[test]
+fn gemm_invariant_to_col_block_width() {
+    let mut rng = Rng::seeded(0xC01B10C);
+    for _ in 0..12 {
+        let cfg = random_config(&mut rng);
+        let (rows, cols, k) = (
+            1 + rng.below(8) as usize,
+            1 + rng.below(20) as usize,
+            1 + rng.below(40) as usize,
+        );
+        let w: Vec<f64> = (0..rows * k).map(|_| rng.normal()).collect();
+        let x: Vec<f64> = (0..cols * k).map(|_| rng.normal()).collect();
+        let acc: Vec<f64> = vec![0.0; rows];
+        let baseline = BatchEngine::new(cfg).with_threads(1).with_col_block(1).gemm_f64(&acc, &w, &x, k);
+        for col_block in [0usize, 2, 3, 7, 128] {
+            for threads in [1usize, 4] {
+                let got = BatchEngine::new(cfg)
+                    .with_threads(threads)
+                    .with_col_block(col_block)
+                    .gemm_f64(&acc, &w, &x, k);
+                assert_eq!(
+                    baseline.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "cfg {} col_block {col_block} threads {threads}",
+                    cfg.label()
+                );
+            }
+        }
+    }
+}
+
+/// Random request queue over at most `planes` distinct shared left
+/// operand planes: the serving shape cross-request fusion targets.
+fn random_queue(rng: &mut Rng, cfg: PdpuConfig, planes: usize, tiles: usize) -> Vec<GemmTile> {
+    let m = 1 + rng.below(4) as usize;
+    let k = 1 + rng.below(24) as usize;
+    let shared: Vec<(Vec<f64>, Vec<f64>)> = (0..planes)
+        .map(|_| {
+            (
+                (0..m).map(|_| rng.normal()).collect(),
+                (0..m * k).map(|_| rng.normal()).collect(),
+            )
+        })
+        .collect();
+    (0..tiles)
+        .map(|_| {
+            let (acc, a) = shared[rng.below(planes as u64) as usize].clone();
+            let n = 1 + rng.below(5) as usize;
+            let bt: Vec<f64> = (0..n * k).map(|_| rng.normal()).collect();
+            GemmTile { cfg, k, acc, a, bt }
+        })
+        .collect()
+}
+
+#[test]
+fn fused_cross_request_launch_bit_identical_to_unfused() {
+    let mut rng = Rng::seeded(0xF05E_D0E5);
+    for round in 0..25 {
+        let cfg = random_config(&mut rng);
+        let planes = 1 + rng.below(3) as usize;
+        let tiles = 1 + rng.below(8) as usize;
+        let queue = random_queue(&mut rng, cfg, planes, tiles);
+        let (fused, stats) = execute_fused(&queue);
+        let unfused = execute_unfused(&queue);
+        assert_eq!(fused.len(), queue.len());
+        assert!(stats.launches as usize <= queue.len());
+        for (i, (f, u)) in fused.iter().zip(&unfused).enumerate() {
+            assert_eq!(
+                f.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                u.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "round {round} cfg {} tile {i}",
+                cfg.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn fusion_preserves_response_order_against_scalar_oracle() {
+    // every fused response must be its own tile's result — checked not
+    // against the engine but against the scalar dot_chunked oracle, so a
+    // response swap between look-alike tiles cannot go unnoticed
+    let mut rng = Rng::seeded(0x0D0_0E4);
+    for _ in 0..10 {
+        let cfg = random_config(&mut rng);
+        let queue = random_queue(&mut rng, cfg, 2, 6);
+        let (fused, _) = execute_fused(&queue);
+        for (t, out) in queue.iter().zip(&fused) {
+            let (m, n) = (t.m(), t.n());
+            for r in 0..m {
+                for c in 0..n {
+                    let want = scalar_dot(
+                        &cfg,
+                        t.acc[r],
+                        &t.a[r * t.k..(r + 1) * t.k],
+                        &t.bt[c * t.k..(c + 1) * t.k],
+                    );
+                    assert_eq!(out[r * n + c].to_bits(), want.to_bits(), "cfg {}", cfg.label());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn mixed_config_queues_never_fuse() {
+    // identical operand planes but differing PdpuConfigs: the plan must
+    // keep every tile in its own launch (a fused launch would execute the
+    // wrong datapath for one of them)
+    let mut rng = Rng::seeded(0x3113);
+    for _ in 0..20 {
+        let cfg_a = random_config(&mut rng);
+        let cfg_b = random_config(&mut rng);
+        if cfg_a == cfg_b {
+            continue;
+        }
+        let mut queue = random_queue(&mut rng, cfg_a, 1, 2);
+        let mut twin = queue[0].clone();
+        twin.cfg = cfg_b;
+        queue.push(twin);
+        let groups = plan_fusion(&queue);
+        for g in &groups {
+            let c0 = queue[g[0]].cfg;
+            assert!(g.iter().all(|&i| queue[i].cfg == c0), "mixed-config group: {groups:?}");
+        }
+        // the two same-config tiles share one launch; the twin is alone
+        assert_eq!(groups.len(), 2, "{groups:?}");
+        let (fused, _) = execute_fused(&queue);
+        let unfused = execute_unfused(&queue);
+        for (f, u) in fused.iter().zip(&unfused) {
+            assert_eq!(
+                f.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                u.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    }
+}
+
+#[test]
+fn quire_dot_batch_bit_identical_to_scalar_loop() {
+    let mut rng = Rng::seeded(0x0B51);
+    for _ in 0..15 {
+        let n = [1usize, 4, 8][rng.below(3) as usize];
+        let quire = QuirePdpuArch::new(PositFormat::p(13, 2), PositFormat::p(16, 2), n);
+        let (rows, cols, k) = (
+            1 + rng.below(5) as usize,
+            1 + rng.below(5) as usize,
+            1 + rng.below(40) as usize,
+        );
+        let w: Vec<f64> = (0..rows * k).map(|_| rng.log_uniform_signed(-8.0, 8.0)).collect();
+        let x: Vec<f64> = (0..cols * k).map(|_| rng.log_uniform_signed(-8.0, 8.0)).collect();
+        let acc: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+        let got = quire.dot_batch(&acc, &w, &x, k);
+        for r in 0..rows {
+            for c in 0..cols {
+                let want = quire.dot_f64(acc[r], &w[r * k..(r + 1) * k], &x[c * k..(c + 1) * k]);
+                assert_eq!(got[r * cols + c].to_bits(), want.to_bits(), "N={n} out[{r},{c}]");
+            }
         }
     }
 }

@@ -167,6 +167,51 @@ fn software_backend_serves_without_artifacts() {
     let v = json::parse(&line).unwrap();
     assert_eq!(v.get("ok"), Some(&json::Json::Bool(true)), "{line}");
     assert_eq!(v.get("logits").unwrap().as_arr().unwrap().len(), 4);
+
+    // gemm over the wire: routed through the gemm batcher + fusion path,
+    // and identical to calling the engine handle directly
+    let ga: Vec<f64> = (0..m * k).map(|i| (i as f64) * 0.125 - 0.5).collect();
+    let gb: Vec<f64> = (0..k * n).map(|i| 1.0 - (i as f64) * 0.0625).collect();
+    let req = json::Json::obj(vec![
+        ("op", json::Json::Str("gemm".into())),
+        ("a", json::Json::arr_f64(&ga)),
+        ("b", json::Json::arr_f64(&gb)),
+    ]);
+    writer.write_all((req.to_string() + "\n").as_bytes()).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = json::parse(&line).unwrap();
+    assert_eq!(v.get("ok"), Some(&json::Json::Bool(true)), "{line}");
+    let c_wire = v.get("c").unwrap().as_f64_vec().unwrap();
+    assert_eq!(c_wire.len(), m * n);
+    let direct = e
+        .gemm(
+            ga.iter().map(|&v| v as f32).collect(),
+            gb.iter().map(|&v| v as f32).collect(),
+        )
+        .expect("direct gemm");
+    for (i, (&w, &d)) in c_wire.iter().zip(&direct).enumerate() {
+        assert_eq!(w as f32, d, "c[{i}] over the wire diverged");
+    }
+
+    // gemm shape errors surface per request
+    let bad = json::Json::obj(vec![
+        ("op", json::Json::Str("gemm".into())),
+        ("a", json::Json::arr_f64(&[1.0])),
+        ("b", json::Json::arr_f64(&gb)),
+    ]);
+    writer.write_all((bad.to_string() + "\n").as_bytes()).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("A must be"), "{line}");
+
+    // stats now carry the fusion counters
+    writer.write_all(b"{\"op\":\"stats\"}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = json::parse(&line).unwrap();
+    assert!(v.get("gemm_requests").unwrap().as_f64().unwrap() >= 1.0, "{line}");
+    assert!(v.get("fused_launches").unwrap().as_f64().unwrap() >= 1.0, "{line}");
     e.shutdown();
 }
 
