@@ -1,0 +1,77 @@
+//! Bench T — training-step throughput: one posit SGD step (forward GEMMs,
+//! softmax cross-entropy, backward GEMMs, quire-accumulated update)
+//! through the batched engine, on the bundled MNIST-like dataset.
+//!
+//! The measurement is **recorded**, not asserted: results go to
+//! `BENCH_training.json` in the working directory (the training twin of
+//! `BENCH_serving.json`).
+//!
+//! Run: `cargo bench --bench bench_training`
+
+use std::time::Duration;
+
+use pdpu::bench_harness::{bench, report, report_header};
+use pdpu::coordinator::json::Json;
+use pdpu::dnn::dataset::mnist_like;
+use pdpu::pdpu::PdpuConfig;
+use pdpu::train::Trainer;
+
+fn main() {
+    let cfg = PdpuConfig::paper_default();
+    let (hidden, classes, batch, examples) = (8usize, 4usize, 16usize, 32usize);
+    let lr = 0.05;
+    let ds = mnist_like(0x7247, examples, classes);
+    let layer_sizes = [784usize, hidden, classes];
+    // MACs of one step: forward + weight-grad + activation-grad GEMMs
+    let macs_per_step = (batch * 784 * hidden)  // forward layer 0
+        + (batch * hidden * classes)            // forward layer 1
+        + (hidden * 784 * batch)                // dW0
+        + (classes * hidden * batch)            // dW1
+        + (batch * hidden * classes); // dA0
+    let steps_per_epoch = examples.div_ceil(batch);
+
+    println!(
+        "== training: {}-{}-{} MLP on {}, batch {}, {} examples/epoch, lr {} ==\n",
+        layer_sizes[0],
+        hidden,
+        classes,
+        cfg.label(),
+        batch,
+        examples,
+        lr
+    );
+
+    let mut trainer = Trainer::new(cfg, &layer_sizes, lr, 0xBE7C);
+    let mut epoch = 0usize;
+    report_header();
+    let m_step = bench("posit SGD epoch (forward+backward+update)", Duration::from_millis(1500), || {
+        epoch += 1;
+        std::hint::black_box(trainer.run_epoch(&ds, batch, epoch))
+    });
+    report(&m_step);
+    let steps_per_s = m_step.per_second(steps_per_epoch as f64);
+    let examples_per_s = m_step.per_second(examples as f64);
+    let macs_per_s = m_step.per_second((macs_per_step * steps_per_epoch) as f64);
+    println!(
+        "  -> {:.2} steps/s, {:.1} examples/s, {:.2} M training MACs/s",
+        steps_per_s,
+        examples_per_s,
+        macs_per_s / 1e6
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("training".into())),
+        ("config", Json::Str(cfg.label())),
+        ("layers", Json::arr_f64(&layer_sizes.iter().map(|&v| v as f64).collect::<Vec<_>>())),
+        ("batch", Json::Num(batch as f64)),
+        ("examples_per_epoch", Json::Num(examples as f64)),
+        ("lr", Json::Num(lr)),
+        ("epoch_mean_ns", Json::Num(m_step.mean_ns())),
+        ("steps_per_s", Json::Num(steps_per_s)),
+        ("examples_per_s", Json::Num(examples_per_s)),
+        ("train_macs_per_s", Json::Num(macs_per_s)),
+    ]);
+    let path = "BENCH_training.json";
+    std::fs::write(path, json.to_string() + "\n").expect("write BENCH_training.json");
+    println!("  recorded: {path}");
+}

@@ -7,6 +7,7 @@
 //!   dot …                           one fused PDPU dot product
 //!   schedule …                      PDPU-array scheduling report
 //!   serve …                         start the inference server
+//!   train …                         posit SGD on the software engine
 //!   selftest                        artifact + runtime smoke check
 
 use std::collections::HashMap;
@@ -88,6 +89,10 @@ COMMANDS
                                   serves the batched bit-exact PDPU engine;
                                   --no-fuse disables cross-request GEMM
                                   fusion for A/B runs — outputs identical)
+  train [--epochs N] [--limit N] [--batch N] [--hidden N] [--classes N]
+        [--lr F] [--seed S]       mixed-precision posit SGD through the
+                                  software engine on the bundled dataset
+                                  (per-epoch loss/accuracy; no artifacts)
   selftest [--artifacts DIR]      load artifacts, run a PJRT smoke batch
 ";
 
@@ -104,6 +109,7 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<i32> {
         "dot" => cmd_dot(&args, &argv),
         "schedule" => cmd_schedule(&args),
         "serve" => cmd_serve(&args),
+        "train" => cmd_train(&args),
         "selftest" => cmd_selftest(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -289,13 +295,78 @@ fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
     );
     println!(
         "protocol: JSON lines — {{\"op\":\"infer\",\"image\":[784 floats]}} | \
-         {{\"op\":\"gemm\",\"a\":[{} floats],\"b\":[{} floats]}} | {{\"op\":\"stats\"}} | {{\"op\":\"ping\"}}",
+         {{\"op\":\"gemm\",\"a\":[{} floats],\"b\":[{} floats]}} | \
+         {{\"op\":\"train\",\"images\":[[784]…],\"labels\":[ints]}} | {{\"op\":\"stats\"}} | {{\"op\":\"ping\"}}",
         m * k,
         k * n
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<i32> {
+    use crate::dnn::dataset::mnist_like;
+    use crate::train::Trainer;
+    use std::time::Instant;
+
+    let epochs = args.flag_usize("epochs", 3).max(1);
+    let batch = args.flag_usize("batch", 32).max(1);
+    let limit = args.flag_usize("limit", 256).max(batch);
+    let classes = args.flag_usize("classes", 4).clamp(2, 16);
+    let hidden = args.flag_usize("hidden", 16).max(1);
+    let seed = args.flag_usize("seed", 2023) as u64;
+    let lr: f64 = args.flag("lr").unwrap_or("0.05").parse().map_err(|_| anyhow::anyhow!("bad --lr"))?;
+    anyhow::ensure!(lr > 0.0 && lr.is_finite(), "--lr must be a positive number");
+
+    let cfg = PdpuConfig::paper_default();
+    let layer_sizes = vec![784usize, hidden, classes];
+    println!("=== pdpu train — mixed-precision posit SGD through the batched engine ===");
+    println!("config  : {} (software backend, no PJRT artifacts)", cfg.label());
+    println!(
+        "model   : {}-{}-{} MLP, weights stored in P({},{}), lr {lr}",
+        layer_sizes[0],
+        hidden,
+        classes,
+        cfg.out_fmt.n(),
+        cfg.out_fmt.es()
+    );
+    let ds = mnist_like(seed ^ 0xDA7A, limit, classes);
+    println!("dataset : {} bundled 28×28 examples, {classes} classes, batch {batch}\n", ds.images.len());
+
+    let mut trainer = Trainer::new(cfg, &layer_sizes, lr, seed);
+    let t0 = Instant::now();
+    let mut prev: Option<f64> = None;
+    let mut monotone = true;
+    for e in 1..=epochs {
+        let te = Instant::now();
+        let s = trainer.run_epoch(&ds, batch, e);
+        let dt = te.elapsed().as_secs_f64();
+        println!(
+            "epoch {e}/{epochs}  loss {:.4}  acc {:5.1}%  ({} steps, {:.1} steps/s, {:.0} examples/s)",
+            s.mean_loss,
+            100.0 * s.accuracy,
+            s.steps,
+            s.steps as f64 / dt.max(1e-9),
+            s.examples as f64 / dt.max(1e-9)
+        );
+        if let Some(p) = prev {
+            monotone &= s.mean_loss < p;
+        }
+        prev = Some(s.mean_loss);
+    }
+    println!(
+        "\ndone in {:.1}s — epoch loss {}",
+        t0.elapsed().as_secs_f64(),
+        if epochs < 2 {
+            "trend needs --epochs ≥ 2".to_string()
+        } else if monotone {
+            "strictly decreasing".to_string()
+        } else {
+            "NOT strictly decreasing (try a smaller --lr)".to_string()
+        }
+    );
+    Ok(0)
 }
 
 fn cmd_selftest(args: &Args) -> anyhow::Result<i32> {
@@ -371,5 +442,16 @@ mod tests {
     #[test]
     fn schedule_runs() {
         assert_eq!(run(argv("schedule --outputs 16 --dot-len 32 --units 2")).unwrap(), 0);
+    }
+
+    #[test]
+    fn train_runs_a_tiny_job() {
+        assert_eq!(run(argv("train --epochs 1 --limit 16 --batch 8 --hidden 4 --classes 2")).unwrap(), 0);
+    }
+
+    #[test]
+    fn train_rejects_bad_lr() {
+        assert!(run(argv("train --lr nope")).is_err());
+        assert!(run(argv("train --lr -1")).is_err());
     }
 }

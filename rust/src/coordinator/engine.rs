@@ -114,8 +114,9 @@ impl ServiceHandle {
 
     /// Spawn an engine thread over the pure-Rust [`SoftwareService`]: the
     /// batched-PDPU-engine backend that needs neither artifacts nor PJRT.
-    /// Inference and GEMM are served; train-step requests report that they
-    /// need the AOT artifacts.
+    /// Inference, GEMM, and train steps are all served — training runs
+    /// real posit SGD through the batched engine ([`crate::train`]), the
+    /// same wire op the PJRT backend serves from its AOT artifact.
     ///
     /// The service is constructed (and its configuration validated) on the
     /// caller's thread *before* the engine thread spawns, so an invalid
@@ -150,11 +151,8 @@ impl ServiceHandle {
                     EngineReq::InferBatch(images, reply) => {
                         let _ = reply.send(service.infer_batch(&images));
                     }
-                    EngineReq::TrainStep(_images, _labels, reply) => {
-                        let _ = reply.send(Err(
-                            "train_step needs PJRT artifacts; the software backend is inference-only"
-                                .to_string(),
-                        ));
+                    EngineReq::TrainStep(images, labels, reply) => {
+                        let _ = reply.send(service.train_step(&images, &labels));
                     }
                     EngineReq::Gemm(a, b, reply) => {
                         let _ = reply.send(service.gemm(&a, &b));
@@ -181,7 +179,11 @@ impl ServiceHandle {
         rx.recv().map_err(|_| "engine gone".to_string())?
     }
 
-    /// One SGD step on a full batch (PJRT backend only).
+    /// One SGD step on a labelled batch; updates the served parameters and
+    /// returns the batch loss. The PJRT backend runs its AOT train-step
+    /// artifact (full compiled batch required); the software backend runs
+    /// posit SGD through the batched engine (any batch up to the
+    /// configured size).
     pub fn train_step(&self, images: Vec<Vec<f32>>, labels: Vec<u32>) -> Result<f32, String> {
         let (tx, rx) = channel();
         self.tx.send(EngineReq::TrainStep(images, labels, tx)).map_err(|_| "engine gone".to_string())?;

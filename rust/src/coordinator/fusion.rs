@@ -20,6 +20,19 @@
 //! the inner dimension `k`, the accumulator seeds, and the shared left
 //! operand plane (compared bit-for-bit as f64 patterns). Mixed-config
 //! queues therefore never fuse (property-tested).
+//!
+//! Planning **interns planes by content hash**: each tile hashes its
+//! accumulator seeds and left plane once (FNV-1a over the f64 bit
+//! patterns) and only full-compares against group representatives inside
+//! its own `(config, k, hash)` bucket. A tile therefore performs one
+//! O(plane) hash plus, almost always, at most one O(plane) confirm —
+//! instead of the pre-interning O(groups) bitwise compares per tile — and
+//! the grouping decisions are provably unchanged (equal planes hash
+//! equally, and the representative confirm rejects collisions;
+//! property-tested against the linear-scan reference in
+//! `rust/tests/engine_equivalence.rs`).
+
+use std::collections::HashMap;
 
 use crate::engine::{BatchEngine, PreparedOperands};
 use crate::pdpu::PdpuConfig;
@@ -76,6 +89,25 @@ fn f64_bits_eq(a: &[f64], b: &[f64]) -> bool {
     a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
 }
 
+/// FNV-1a over a tile's fusion-relevant content (accumulator seeds + left
+/// plane, as f64 bit patterns). Tiles with bit-identical content hash
+/// identically; a collision only costs one extra representative compare.
+fn plane_hash(t: &GemmTile) -> u64 {
+    const OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01B3;
+    fn feed(h: u64, v: u64) -> u64 {
+        (h ^ v).wrapping_mul(PRIME)
+    }
+    let mut h = feed(OFFSET, t.acc.len() as u64);
+    for &v in &t.acc {
+        h = feed(h, v.to_bits());
+    }
+    for &v in &t.a {
+        h = feed(h, v.to_bits());
+    }
+    h
+}
+
 /// Outcome counters of one fused execution, for the metrics endpoint.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct FusionStats {
@@ -89,13 +121,24 @@ pub struct FusionStats {
 /// tile indices (in queue order) that are mutually fusion-eligible;
 /// groups are ordered by their first member. Singleton groups are tiles
 /// nothing else could join.
+///
+/// Groups are found through the interning map (`(config, k, plane hash)`
+/// → candidate groups), so planning is O(plane) per tile instead of
+/// O(groups · plane); the decisions are identical to a linear scan
+/// because every group a tile could fuse with shares its key, and the
+/// representative compare inside the bucket rejects hash collisions.
 pub fn plan_fusion(tiles: &[GemmTile]) -> Vec<Vec<usize>> {
     let mut groups: Vec<Vec<usize>> = Vec::new();
+    let mut interned: HashMap<(PdpuConfig, usize, u64), Vec<usize>> = HashMap::new();
     for (i, t) in tiles.iter().enumerate() {
         t.assert_shapes();
-        match groups.iter_mut().find(|g| t.fuses_with(&tiles[g[0]])) {
-            Some(g) => g.push(i),
-            None => groups.push(vec![i]),
+        let bucket = interned.entry((t.cfg, t.k, plane_hash(t))).or_default();
+        match bucket.iter().copied().find(|&g| t.fuses_with(&tiles[groups[g][0]])) {
+            Some(g) => groups[g].push(i),
+            None => {
+                bucket.push(groups.len());
+                groups.push(vec![i]);
+            }
         }
     }
     groups
@@ -238,6 +281,61 @@ mod tests {
                 "tile {i}"
             );
         }
+    }
+
+    /// The pre-interning linear-scan planner, kept as the grouping oracle
+    /// for the interning equivalence property.
+    fn plan_fusion_linear(tiles: &[GemmTile]) -> Vec<Vec<usize>> {
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        for (i, t) in tiles.iter().enumerate() {
+            match groups.iter_mut().find(|g| t.fuses_with(&tiles[g[0]])) {
+                Some(g) => g.push(i),
+                None => groups.push(vec![i]),
+            }
+        }
+        groups
+    }
+
+    #[test]
+    fn interned_planning_matches_linear_scan() {
+        let cfg_a = PdpuConfig::paper_default();
+        let cfg_b = PdpuConfig::mixed(13, 16, 2, 8, 14).unwrap();
+        let mut rng = Rng::seeded(0x1A7E);
+        for round in 0..50 {
+            // a queue mixing shared planes, near-twins (same shape,
+            // different bits), differing acc seeds, and two configs
+            let (m, k) = (1 + rng.below(3) as usize, 1 + rng.below(6) as usize);
+            let planes: Vec<Vec<f64>> = (0..2).map(|_| (0..m * k).map(|_| rng.normal()).collect()).collect();
+            let tiles: Vec<GemmTile> = (0..(1 + rng.below(12) as usize))
+                .map(|_| {
+                    let mut a = planes[rng.below(2) as usize].clone();
+                    if rng.below(4) == 0 {
+                        // near-twin: flip one sign bit → must not fuse
+                        let i = rng.below(a.len() as u64) as usize;
+                        a[i] = -a[i];
+                    }
+                    GemmTile {
+                        cfg: if rng.flip() { cfg_a } else { cfg_b },
+                        k,
+                        acc: if rng.below(4) == 0 { vec![1.0; m] } else { vec![0.0; m] },
+                        a,
+                        bt: (0..k).map(|_| rng.normal()).collect(),
+                    }
+                })
+                .collect();
+            assert_eq!(plan_fusion(&tiles), plan_fusion_linear(&tiles), "round {round}");
+        }
+    }
+
+    #[test]
+    fn negated_zero_plane_does_not_alias() {
+        // 0.0 and -0.0 share a value but not a bit pattern: interning must
+        // keep them apart exactly as the bitwise compare does
+        let cfg = PdpuConfig::paper_default();
+        let t1 = GemmTile { cfg, k: 2, acc: vec![0.0], a: vec![0.0, 1.0], bt: vec![1.0, 1.0] };
+        let mut t2 = t1.clone();
+        t2.a[0] = -0.0;
+        assert_eq!(plan_fusion(&[t1, t2]).len(), 2);
     }
 
     #[test]

@@ -29,6 +29,10 @@ pub struct Metrics {
     pub fused_launches: AtomicU64,
     /// GEMM requests that shared a launch with at least one other request.
     pub fused_tiles: AtomicU64,
+    /// SGD train steps served (software or PJRT backend).
+    pub train_steps: AtomicU64,
+    /// Labelled examples consumed by served train steps.
+    pub train_examples: AtomicU64,
     latency_buckets: [AtomicU64; 13],
     latency_sum_us: AtomicU64,
 }
@@ -59,6 +63,12 @@ impl Metrics {
     pub fn record_fusion(&self, launches: u64, fused_tiles: u64) {
         self.fused_launches.fetch_add(launches, Ordering::Relaxed);
         self.fused_tiles.fetch_add(fused_tiles, Ordering::Relaxed);
+    }
+
+    /// Record one served SGD step over `examples` labelled images.
+    pub fn record_train_step(&self, examples: usize) {
+        self.train_steps.fetch_add(1, Ordering::Relaxed);
+        self.train_examples.fetch_add(examples as u64, Ordering::Relaxed);
     }
 
     /// Mean observed latency in microseconds.
@@ -112,6 +122,8 @@ impl Metrics {
             gemm_requests: self.gemm_requests.load(Ordering::Relaxed),
             fused_launches: self.fused_launches.load(Ordering::Relaxed),
             fused_tiles: self.fused_tiles.load(Ordering::Relaxed),
+            train_steps: self.train_steps.load(Ordering::Relaxed),
+            train_examples: self.train_examples.load(Ordering::Relaxed),
         }
     }
 }
@@ -141,6 +153,10 @@ pub struct MetricsSnapshot {
     pub fused_launches: u64,
     /// GEMM requests that shared a launch with another request.
     pub fused_tiles: u64,
+    /// SGD train steps served.
+    pub train_steps: u64,
+    /// Labelled examples consumed by served train steps.
+    pub train_examples: u64,
 }
 
 #[cfg(test)]
@@ -196,10 +212,22 @@ mod tests {
     }
 
     #[test]
+    fn train_counters_accumulate() {
+        let m = Metrics::new();
+        m.record_train_step(32);
+        m.record_train_step(8);
+        let s = m.snapshot();
+        assert_eq!(s.train_steps, 2);
+        assert_eq!(s.train_examples, 40);
+    }
+
+    #[test]
     fn empty_metrics_are_zero() {
         let s = Metrics::new().snapshot();
         assert_eq!(s.mean_batch_size, 0.0);
         assert_eq!(s.mean_latency_us, 0.0);
         assert_eq!(s.p95_latency_us, 0);
+        assert_eq!(s.train_steps, 0);
+        assert_eq!(s.train_examples, 0);
     }
 }

@@ -4,6 +4,8 @@
 //!   {"op":"ping"}                        → {"ok":true,"pong":true}
 //!   {"op":"infer","image":[784 floats]}  → {"ok":true,"logits":[10]}
 //!   {"op":"gemm","a":[M·K],"b":[K·N]}    → {"ok":true,"c":[M·N]}
+//!   {"op":"train","images":[[784]…],"labels":[ints]}
+//!                                        → {"ok":true,"loss":L}
 //!   {"op":"stats"}                       → {"ok":true, …counters…}
 //!
 //! Requests from all connections funnel through per-op [`Batcher`]s, so
@@ -12,6 +14,9 @@
 //! requests additionally go through **cross-request fusion**
 //! ([`super::fusion`]): compatible tiles in one formed batch share a
 //! single engine launch, bit-identically to running them one at a time.
+//! Train steps bypass the batchers on purpose: SGD mutates the served
+//! parameters, so steps execute in arrival order on the engine thread
+//! (which already serializes them), one step per request.
 //!
 //! std::net + threads (no tokio in the offline image): one reader thread
 //! per connection, one batch-executor thread per batcher.
@@ -217,6 +222,51 @@ fn handle_request(line: &str, shared: &Shared) -> Json {
                 Err(e) => err(e),
             }
         }
+        Some("train") => {
+            let info = shared.service.info();
+            let Some(rows) = req.get("images").and_then(Json::as_arr) else {
+                return err("train needs 'images': [[f64]]");
+            };
+            let Some(labels) = req.get("labels").and_then(Json::as_f64_vec) else {
+                return err("train needs 'labels': [int]");
+            };
+            if rows.len() != labels.len() {
+                return err(format!("{} labels for {} images", labels.len(), rows.len()));
+            }
+            let mut images: Vec<Vec<f32>> = Vec::with_capacity(rows.len());
+            for (i, row) in rows.iter().enumerate() {
+                let Some(img) = row.as_f64_vec() else {
+                    return err(format!("images[{i}] must be [f64]"));
+                };
+                if img.len() != info.input_dim {
+                    return err(format!("images[{i}] must have {} pixels", info.input_dim));
+                }
+                images.push(img.into_iter().map(|v| v as f32).collect());
+            }
+            let mut checked: Vec<u32> = Vec::with_capacity(labels.len());
+            for (i, l) in labels.into_iter().enumerate() {
+                if l.fract() != 0.0 || !(0.0..=u32::MAX as f64).contains(&l) {
+                    return err(format!("labels[{i}] must be a non-negative integer, got {l}"));
+                }
+                checked.push(l as u32);
+            }
+            let labels = checked;
+            let n = images.len();
+            let t0 = std::time::Instant::now();
+            shared.metrics.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            match shared.service.train_step(images, labels) {
+                Ok(loss) => {
+                    shared.metrics.record_train_step(n);
+                    shared.metrics.responses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    shared.metrics.observe_latency(t0.elapsed());
+                    Json::obj(vec![("ok", Json::Bool(true)), ("loss", Json::Num(loss as f64))])
+                }
+                Err(e) => {
+                    shared.metrics.errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    err(e)
+                }
+            }
+        }
         Some("stats") => {
             let s = shared.metrics.snapshot();
             Json::obj(vec![
@@ -231,6 +281,8 @@ fn handle_request(line: &str, shared: &Shared) -> Json {
                 ("gemm_requests", Json::Num(s.gemm_requests as f64)),
                 ("fused_launches", Json::Num(s.fused_launches as f64)),
                 ("fused_tiles", Json::Num(s.fused_tiles as f64)),
+                ("train_steps", Json::Num(s.train_steps as f64)),
+                ("train_examples", Json::Num(s.train_examples as f64)),
             ])
         }
         Some(op) => err(format!("unknown op '{op}'")),

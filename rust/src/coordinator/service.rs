@@ -8,11 +8,11 @@ use std::sync::Mutex;
 
 use super::fusion::{self, FusionStats, GemmTile};
 use crate::baselines::{DotArch, PdpuArch};
-use crate::dnn::layers::{linear_batch, relu};
+use crate::dnn::layers::with_zero_seeds;
 use crate::dnn::Tensor;
 use crate::pdpu::PdpuConfig;
 use crate::runtime::{literal_f32, literal_i32, to_vec_f32, ArtifactManifest, LoadedModel, Runtime};
-use crate::testing::Rng;
+use crate::train::{softmax_xent_batch, Sgd, TrainGraph};
 
 /// Loaded artifacts + parameter state.
 pub struct PositService {
@@ -129,6 +129,11 @@ impl PositService {
     }
 }
 
+/// Default SGD learning rate of the software backend's train step (the
+/// PJRT train artifact bakes its own; this is the software twin's knob,
+/// overridable with [`SoftwareService::with_train_lr`]).
+const SOFTWARE_TRAIN_LR: f64 = 0.05;
+
 /// Pure-Rust fallback backend: a posit MLP with deterministic (seeded)
 /// He-initialized weights plus a posit GEMM, both executed through the
 /// batched PDPU engine ([`DotArch::dot_batch`] → [`crate::engine`]) — no
@@ -138,11 +143,13 @@ impl PositService {
 ///
 /// Batch ops run as whole GEMM tiles: one `dot_batch` call per layer for
 /// an entire inference batch, one per GEMM request — never a scalar
-/// per-output loop.
+/// per-output loop. The MLP is held as a [`TrainGraph`], so the backend
+/// also serves real SGD train steps ([`Self::train_step`]) whose backward
+/// passes ride the same batched engine.
 pub struct SoftwareService {
     arch: PdpuArch,
-    weights: Vec<Tensor>,
-    biases: Vec<Vec<f64>>,
+    graph: Mutex<TrainGraph>,
+    sgd: Sgd,
     layer_sizes: Vec<usize>,
     batch: usize,
     gemm_mkn: (usize, usize, usize),
@@ -157,27 +164,21 @@ impl SoftwareService {
         gemm_mkn: (usize, usize, usize),
         seed: u64,
     ) -> Self {
-        assert!(layer_sizes.len() >= 2, "need at least input and output layer sizes");
-        assert!(layer_sizes.iter().all(|&s| s > 0));
         assert!(batch >= 1);
-        let mut rng = Rng::seeded(seed);
-        let mut weights = Vec::new();
-        let mut biases = Vec::new();
-        for win in layer_sizes.windows(2) {
-            let (fan_in, fan_out) = (win[0], win[1]);
-            let sigma = (2.0 / fan_in as f64).sqrt();
-            let data: Vec<f64> = (0..fan_out * fan_in).map(|_| rng.normal() * sigma).collect();
-            weights.push(Tensor::from_vec(&[fan_out, fan_in], data));
-            biases.push(vec![0.0; fan_out]);
-        }
         Self {
             arch: PdpuArch::new(cfg),
-            weights,
-            biases,
+            graph: Mutex::new(TrainGraph::new(cfg, layer_sizes, seed)),
+            sgd: Sgd::new(SOFTWARE_TRAIN_LR, &cfg),
             layer_sizes: layer_sizes.to_vec(),
             batch,
             gemm_mkn,
         }
+    }
+
+    /// Override the train-step learning rate (builder style).
+    pub fn with_train_lr(mut self, lr: f64) -> Self {
+        self.sgd = Sgd::new(lr, self.arch.config());
+        self
     }
 
     /// Input feature count per image.
@@ -205,9 +206,8 @@ impl SoftwareService {
         self.gemm_mkn
     }
 
-    /// Run a batch of images through the posit MLP: one batched GEMM per
-    /// layer, ReLU between layers. Deterministic.
-    pub fn infer_batch(&self, images: &[Vec<f32>]) -> std::result::Result<Vec<Vec<f32>>, String> {
+    /// Validate a request batch and widen it into a `[b, d]` f64 tensor.
+    fn images_tensor(&self, images: &[Vec<f32>]) -> std::result::Result<Tensor, String> {
         let d = self.input_dim();
         if images.is_empty() || images.len() > self.batch {
             return Err(format!("batch of {} exceeds configured size {}", images.len(), self.batch));
@@ -220,18 +220,43 @@ impl SoftwareService {
             }
             flat.extend(img.iter().map(|&v| v as f64));
         }
-        let mut acts = Tensor::from_vec(&[b, d], flat);
-        let last = self.weights.len() - 1;
-        for (l, (w, bias)) in self.weights.iter().zip(&self.biases).enumerate() {
-            acts = linear_batch(&self.arch, &acts, w, bias);
-            if l != last {
-                relu(acts.data_mut());
-            }
-        }
+        Ok(Tensor::from_vec(&[b, d], flat))
+    }
+
+    /// Run a batch of images through the posit MLP: one batched GEMM per
+    /// layer, ReLU between layers. Deterministic between train steps.
+    pub fn infer_batch(&self, images: &[Vec<f32>]) -> std::result::Result<Vec<Vec<f32>>, String> {
+        let xs = self.images_tensor(images)?;
+        let b = xs.shape()[0];
+        let logits = self.graph.lock().unwrap().infer(&xs);
         let c = self.classes();
         Ok((0..b)
-            .map(|i| acts.data()[i * c..(i + 1) * c].iter().map(|&v| v as f32).collect())
+            .map(|i| logits.data()[i * c..(i + 1) * c].iter().map(|&v| v as f32).collect())
             .collect())
+    }
+
+    /// One SGD step on a batch of labelled images through the posit
+    /// training graph: forward → softmax cross-entropy → backward GEMMs →
+    /// quire-accumulated posit update ([`crate::train`]). Updates the
+    /// served parameters in place and returns the batch loss — the
+    /// software twin of [`PositService::train_step`], same wire op, no
+    /// PJRT artifacts required.
+    pub fn train_step(&self, images: &[Vec<f32>], labels: &[u32]) -> std::result::Result<f32, String> {
+        if labels.len() != images.len() {
+            return Err(format!("{} labels for {} images", labels.len(), images.len()));
+        }
+        let c = self.classes();
+        if let Some(&bad) = labels.iter().find(|&&l| (l as usize) >= c) {
+            return Err(format!("label {bad} out of range for {c} classes"));
+        }
+        let xs = self.images_tensor(images)?;
+        let labels: Vec<usize> = labels.iter().map(|&l| l as usize).collect();
+        let mut graph = self.graph.lock().unwrap();
+        let trace = graph.forward(&xs);
+        let (loss, dlogits) = softmax_xent_batch(trace.logits(), &labels);
+        let grads = graph.backward(&trace, &dlogits);
+        self.sgd.step(&mut graph, &grads);
+        Ok(loss as f32)
     }
 
     /// Shared request validation for the single and batched GEMM paths:
@@ -261,7 +286,7 @@ impl SoftwareService {
     pub fn gemm(&self, a: &[f32], b: &[f32]) -> std::result::Result<Vec<f32>, String> {
         let (m, k, _) = self.gemm_mkn;
         let (af, bt) = self.validate_and_transpose(a, b)?;
-        let out = self.arch.dot_batch(&vec![0.0; m], &af, &bt, k);
+        let out = with_zero_seeds(m, |seeds| self.arch.dot_batch(seeds, &af, &bt, k));
         Ok(out.into_iter().map(|v| v as f32).collect())
     }
 
@@ -356,6 +381,35 @@ mod tests {
         assert!(s.gemm(&[0.0; 3], &[0.0; 30]).is_err());
         let (m, k, n) = s.gemm_mkn();
         assert!(s.gemm(&vec![0.0; m * k], &vec![0.0; k * n + 1]).is_err());
+    }
+
+    #[test]
+    fn software_train_step_learns_and_moves_the_served_model() {
+        let s = svc().with_train_lr(0.2);
+        let images: Vec<Vec<f32>> = (0..4)
+            .map(|i| (0..12).map(|p| if p % 4 == i { 1.0 } else { 0.05 }).collect())
+            .collect();
+        let labels: Vec<u32> = vec![0, 1, 2, 0];
+        let before = s.infer_batch(&images).unwrap();
+        let first = s.train_step(&images, &labels).unwrap();
+        let mut last = first;
+        for _ in 0..14 {
+            last = s.train_step(&images, &labels).unwrap();
+        }
+        assert!(last.is_finite() && first.is_finite());
+        assert!(last < first, "loss {first} → {last} (no learning on a fixed batch)");
+        // the served parameters actually moved
+        assert_ne!(before, s.infer_batch(&images).unwrap());
+    }
+
+    #[test]
+    fn software_train_step_rejects_bad_requests() {
+        let s = svc();
+        let img = vec![0.1f32; 12];
+        assert!(s.train_step(&[], &[]).unwrap_err().contains("batch"));
+        assert!(s.train_step(&[img.clone()], &[0, 1]).unwrap_err().contains("labels"));
+        assert!(s.train_step(&[img.clone()], &[7]).unwrap_err().contains("out of range"));
+        assert!(s.train_step(&[vec![0.0; 3]], &[0]).unwrap_err().contains("pixels"));
     }
 
     #[test]

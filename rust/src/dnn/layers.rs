@@ -8,6 +8,30 @@
 use super::tensor::{im2col_matrix, Tensor};
 use crate::baselines::DotArch;
 
+/// Run `f` over a zero accumulator-seed slice of length `len`, reusing one
+/// thread-local buffer instead of allocating a fresh `vec![0.0; len]` per
+/// call — the hot layers ([`conv2d`], the training backward kernels, the
+/// serving GEMM) all seed `dot_batch` with zeros on every invocation.
+///
+/// The buffer only ever holds zeros (callers receive `&[f64]`), so growth
+/// is the only mutation. Re-entrant calls (e.g. `f` itself running a
+/// layer) fall back to a fresh allocation rather than aliasing.
+pub(crate) fn with_zero_seeds<R>(len: usize, f: impl FnOnce(&[f64]) -> R) -> R {
+    use std::cell::RefCell;
+    thread_local! {
+        static ZERO_SEEDS: RefCell<Vec<f64>> = RefCell::new(Vec::new());
+    }
+    ZERO_SEEDS.with(|cell| {
+        let mut buf = cell.replace(Vec::new());
+        if buf.len() < len {
+            buf.resize(len, 0.0);
+        }
+        let out = f(&buf[..len]);
+        cell.replace(buf);
+        out
+    })
+}
+
 /// 2-D convolution of a CHW image with OIHW weights on `unit`.
 /// Returns [out_ch, oh, ow].
 ///
@@ -39,7 +63,7 @@ pub fn conv2d(
     debug_assert_eq!(patches.shape(), &[oh * ow, klen]);
     // out[o·(oh·ow) + p] = dot(W[o,:], patch[p,:]) — already the [oc, oh, ow]
     // row-major layout.
-    let out = unit.dot_batch(&vec![0.0; oc], weights.data(), patches.data(), klen);
+    let out = with_zero_seeds(oc, |seeds| unit.dot_batch(seeds, weights.data(), patches.data(), klen));
     Tensor::from_vec(&[oc, oh, ow], out)
 }
 
@@ -180,6 +204,30 @@ mod tests {
         assert_eq!(want, vec![2.0 + 2.0 - 1.0 + 0.5, 4.0 + 1.0 - 1.0]);
         let unit = PdpuArch::new(PdpuConfig::paper_default());
         assert_eq!(linear(&unit, &x, &w, &b), want);
+    }
+
+    #[test]
+    fn zero_seed_reuse_survives_interleaved_sizes() {
+        // grow the thread-local buffer, then reuse a shorter prefix, then
+        // grow again: every conv must still match the per-call-alloc oracle
+        let unit = PdpuArch::new(PdpuConfig::paper_default());
+        let wl_big = conv1_workload(9, 12, 6);
+        let wl_small = conv1_workload(10, 8, 2);
+        for wl in [&wl_big, &wl_small, &wl_big] {
+            let got = conv2d(&unit, &wl.image, &wl.weights, wl.stride, wl.pad);
+            let klen = wl.dot_len();
+            let oc = wl.out_channels();
+            let patches = im2col_matrix(&wl.image, wl.kernel().0, wl.kernel().1, wl.stride, wl.pad);
+            let oracle = unit.dot_batch(&vec![0.0; oc], wl.weights.data(), patches.data(), klen);
+            assert_eq!(got.data(), &oracle[..]);
+        }
+        // nested use must not corrupt the outer borrow
+        let v = with_zero_seeds(4, |outer| {
+            let inner = with_zero_seeds(2, |s| s.to_vec());
+            assert_eq!(inner, vec![0.0; 2]);
+            outer.to_vec()
+        });
+        assert_eq!(v, vec![0.0; 4]);
     }
 
     #[test]

@@ -23,6 +23,9 @@
 //! * [`coordinator`] — the L3 serving layer: router, dynamic batcher,
 //!   PDPU-array scheduler with pipeline-occupancy modelling, TCP server,
 //!   and the software (batched-engine) serving backend.
+//! * [`train`] — mixed-precision posit training: GEMM-shaped backward
+//!   kernels through the batched engine, softmax cross-entropy, SGD with
+//!   posit quantization-on-update and quire-accumulated gradient sums.
 //! * [`testing`] — in-repo property-testing support (offline image has no
 //!   proptest).
 //!
@@ -75,6 +78,7 @@ pub mod runtime;
 pub mod pdpu;
 pub mod posit;
 pub mod testing;
+pub mod train;
 
 pub use pdpu::{Pdpu, PdpuConfig};
 pub use posit::{Posit, PositFormat};

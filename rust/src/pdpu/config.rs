@@ -12,7 +12,7 @@
 use crate::posit::{PositError, PositFormat};
 
 /// Full parameterization of one PDPU instance.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct PdpuConfig {
     /// Format of the elements of `Va` and `Vb`.
     pub in_fmt: PositFormat,

@@ -1,0 +1,394 @@
+//! The training graph: an MLP whose forward *and* backward passes are
+//! GEMM tiles through [`DotArch::dot_batch`].
+//!
+//! Backpropagation through a fully-connected layer `Z = A·Wᵀ + b` is three
+//! GEMMs, and all three are expressed here as `dot_batch` calls over
+//! transposed operand planes (the row-contiguous layout the batched engine
+//! wants), so the backward pass reuses the tiled, prepared-operand
+//! [`crate::engine::BatchEngine`] path exactly as inference does:
+//!
+//! ```text
+//! forward          Z  = A · Wᵀ          dot_batch(b,  W,   A,  k=in)
+//! weight grad      dW = dZᵀ · A         dot_batch(0,  dZᵀ, Aᵀ, k=B)
+//! activation grad  dA = dZ · W          dot_batch(0,  dZ,  Wᵀ, k=out)
+//! bias grad        db = Σ_batch dZ      quire-accumulated column sums
+//! ```
+//!
+//! The bias gradient is a pure reduction (no products), so instead of a
+//! degenerate GEMM it uses [`quire_sum`] — the wide exact accumulator with
+//! a single rounding, mirroring the paper's S4 mixed-precision
+//! accumulation at the optimizer boundary.
+//!
+//! [`TrainGraph::backward_f64`] is the independent FP64 analytic
+//! reference (plain loops, no `DotArch`), the oracle the property tests in
+//! `rust/tests/train_stack.rs` compare both the FP64-routed and the
+//! posit-routed backward passes against.
+
+use super::sgd::quire_sum;
+use crate::baselines::{DotArch, PdpuArch};
+use crate::dnn::layers::{linear_batch, relu, with_zero_seeds};
+use crate::dnn::Tensor;
+use crate::pdpu::PdpuConfig;
+use crate::posit::PositFormat;
+use crate::testing::Rng;
+
+/// FP64 reference dot-product architecture: exact `acc + Σ aᵢ·bᵢ` in f64.
+/// Running a [`TrainGraph`] over this arch gives the analytic FP64
+/// training semantics through the *same* GEMM-shaped code path as the
+/// posit graph — the comparison that isolates posit quantization effects.
+#[derive(Clone, Copy, Debug)]
+pub struct Fp64Ref;
+
+impl DotArch for Fp64Ref {
+    fn name(&self) -> String {
+        "FP64 reference".into()
+    }
+
+    fn chunk(&self) -> usize {
+        usize::MAX
+    }
+
+    fn dot_f64(&self, acc: f64, a: &[f64], b: &[f64]) -> f64 {
+        acc + a.iter().zip(b).map(|(x, y)| x * y).sum::<f64>()
+    }
+}
+
+/// Everything the backward pass needs from one forward pass: the input to
+/// every layer and every pre-activation output.
+#[derive(Clone, Debug)]
+pub struct ForwardTrace {
+    /// `acts[l]` is the input to layer `l` (`acts[0]` = the batch input,
+    /// later entries are post-ReLU activations).
+    acts: Vec<Tensor>,
+    /// `zs[l]` is the pre-activation output of layer `l`; the last entry
+    /// is the logits.
+    zs: Vec<Tensor>,
+}
+
+impl ForwardTrace {
+    /// The network output (pre-softmax logits), `[B, classes]`.
+    pub fn logits(&self) -> &Tensor {
+        self.zs.last().expect("trace of a network with at least one layer")
+    }
+
+    /// Batch size of the traced pass.
+    pub fn batch(&self) -> usize {
+        self.acts[0].shape()[0]
+    }
+}
+
+/// Parameter gradients of one backward pass, shaped like the parameters.
+#[derive(Clone, Debug)]
+pub struct Grads {
+    /// One `[out, in]` tensor per layer.
+    pub dw: Vec<Tensor>,
+    /// One `[out]` vector per layer.
+    pub db: Vec<Vec<f64>>,
+}
+
+/// An MLP (the seed serving model's shape) with a forward pass and
+/// GEMM-shaped backward kernels, both routed through a [`DotArch`].
+pub struct TrainGraph {
+    arch: Box<dyn DotArch + Send + Sync>,
+    /// Posit format for the wide-accumulated gradient sums (bias grads);
+    /// `None` keeps those reductions in exact f64 (the reference graph).
+    sum_fmt: Option<PositFormat>,
+    weights: Vec<Tensor>,
+    biases: Vec<Vec<f64>>,
+    layer_sizes: Vec<usize>,
+}
+
+impl TrainGraph {
+    /// Posit training graph over the batched PDPU engine: weights He-
+    /// initialized from `seed` (the same init the serving model uses),
+    /// gradient sums wide-accumulated in `cfg.out_fmt`.
+    pub fn new(cfg: PdpuConfig, layer_sizes: &[usize], seed: u64) -> Self {
+        Self::with_arch(Box::new(PdpuArch::new(cfg)), Some(cfg.out_fmt), layer_sizes, seed)
+    }
+
+    /// FP64 analytic twin: same layers, same init, exact f64 arithmetic
+    /// end-to-end. The oracle the posit graph is measured against.
+    pub fn fp64_reference(layer_sizes: &[usize], seed: u64) -> Self {
+        Self::with_arch(Box::new(Fp64Ref), None, layer_sizes, seed)
+    }
+
+    /// Build over any dot-product architecture. `layer_sizes` =
+    /// `[input, hidden…, classes]`; weights are He-initialized from `seed`
+    /// with the exact RNG sequence the software serving model uses, so a
+    /// graph and a `SoftwareService` built from the same seed agree.
+    pub fn with_arch(
+        arch: Box<dyn DotArch + Send + Sync>,
+        sum_fmt: Option<PositFormat>,
+        layer_sizes: &[usize],
+        seed: u64,
+    ) -> Self {
+        assert!(layer_sizes.len() >= 2, "need at least input and output layer sizes");
+        assert!(layer_sizes.iter().all(|&s| s > 0));
+        let mut rng = Rng::seeded(seed);
+        let mut weights = Vec::new();
+        let mut biases = Vec::new();
+        for win in layer_sizes.windows(2) {
+            let (fan_in, fan_out) = (win[0], win[1]);
+            let sigma = (2.0 / fan_in as f64).sqrt();
+            let data: Vec<f64> = (0..fan_out * fan_in).map(|_| rng.normal() * sigma).collect();
+            weights.push(Tensor::from_vec(&[fan_out, fan_in], data));
+            biases.push(vec![0.0; fan_out]);
+        }
+        Self { arch, sum_fmt, weights, biases, layer_sizes: layer_sizes.to_vec() }
+    }
+
+    /// Layer widths, input first.
+    pub fn layer_sizes(&self) -> &[usize] {
+        &self.layer_sizes
+    }
+
+    /// Input feature count.
+    pub fn input_dim(&self) -> usize {
+        self.layer_sizes[0]
+    }
+
+    /// Output class count.
+    pub fn classes(&self) -> usize {
+        *self.layer_sizes.last().unwrap()
+    }
+
+    /// Per-layer `[out, in]` weight tensors.
+    pub fn weights(&self) -> &[Tensor] {
+        &self.weights
+    }
+
+    /// Per-layer bias vectors.
+    pub fn biases(&self) -> &[Vec<f64>] {
+        &self.biases
+    }
+
+    /// Mutable weights (the optimizer's write handle).
+    pub fn weights_mut(&mut self) -> &mut [Tensor] {
+        &mut self.weights
+    }
+
+    /// Mutable biases (the optimizer's write handle).
+    pub fn biases_mut(&mut self) -> &mut [Vec<f64>] {
+        &mut self.biases
+    }
+
+    /// Inference-only forward pass: one `dot_batch` GEMM per layer, ReLU
+    /// between layers, logits out. Identical numerics to the serving
+    /// model's `infer_batch`.
+    pub fn infer(&self, xs: &Tensor) -> Tensor {
+        let last = self.weights.len() - 1;
+        let mut acts = xs.clone();
+        for (l, (w, b)) in self.weights.iter().zip(&self.biases).enumerate() {
+            acts = linear_batch(self.arch.as_ref(), &acts, w, b);
+            if l != last {
+                relu(acts.data_mut());
+            }
+        }
+        acts
+    }
+
+    /// Forward pass recording everything the backward pass needs. The
+    /// logits of the trace are bit-identical to [`Self::infer`] on the
+    /// same input (same GEMMs in the same order).
+    pub fn forward(&self, xs: &Tensor) -> ForwardTrace {
+        assert_eq!(xs.shape()[1], self.input_dim(), "input feature mismatch");
+        let last = self.weights.len() - 1;
+        let mut acts = vec![xs.clone()];
+        let mut zs = Vec::with_capacity(self.weights.len());
+        for (l, (w, b)) in self.weights.iter().zip(&self.biases).enumerate() {
+            let z = linear_batch(self.arch.as_ref(), acts.last().unwrap(), w, b);
+            zs.push(z.clone());
+            if l != last {
+                let mut a = z;
+                relu(a.data_mut());
+                acts.push(a);
+            }
+        }
+        ForwardTrace { acts, zs }
+    }
+
+    /// Backward pass from `dlogits` (`∂loss/∂logits`, `[B, classes]`):
+    /// weight and activation gradients as `dot_batch` GEMM tiles over
+    /// transposed planes, bias gradients as wide-accumulated column sums.
+    pub fn backward(&self, trace: &ForwardTrace, dlogits: &Tensor) -> Grads {
+        let layers = self.weights.len();
+        let b = trace.batch();
+        assert_eq!(dlogits.shape(), &[b, self.classes()], "dlogits shape");
+        let arch = self.arch.as_ref();
+        let mut dw_rev: Vec<Tensor> = Vec::with_capacity(layers);
+        let mut db_rev: Vec<Vec<f64>> = Vec::with_capacity(layers);
+        let mut dz = dlogits.clone();
+        let mut col = vec![0.0; b];
+        for l in (0..layers).rev() {
+            let w = &self.weights[l];
+            let (out_dim, in_dim) = (w.shape()[0], w.shape()[1]);
+            let a_prev = &trace.acts[l]; // [B, in]
+
+            // dW = dZᵀ · A: `out` rows of length B against `in` columns of
+            // length B — both planes transposed into row-contiguous form
+            let dzt = transpose(dz.data(), b, out_dim); // [out, B]
+            let apt = transpose(a_prev.data(), b, in_dim); // [in, B]
+            let dwl = with_zero_seeds(out_dim, |seeds| arch.dot_batch(seeds, &dzt, &apt, b));
+            dw_rev.push(Tensor::from_vec(&[out_dim, in_dim], dwl));
+
+            // db = Σ_batch dZ — a pure reduction through the wide
+            // accumulator (single rounding per sum), or exact f64 for the
+            // reference graph
+            let dbl: Vec<f64> = (0..out_dim)
+                .map(|o| {
+                    for (i, slot) in col.iter_mut().enumerate() {
+                        *slot = dz.data()[i * out_dim + o];
+                    }
+                    match self.sum_fmt {
+                        Some(fmt) => quire_sum(&col, fmt),
+                        None => col.iter().sum(),
+                    }
+                })
+                .collect();
+            db_rev.push(dbl);
+
+            if l > 0 {
+                // dA = dZ · W: B rows of length `out` against `in` columns
+                // of length `out` (Wᵀ is the row-contiguous plane)
+                let wt = transpose(w.data(), out_dim, in_dim); // [in, out]
+                let da = with_zero_seeds(b, |seeds| arch.dot_batch(seeds, dz.data(), &wt, out_dim));
+                // ReLU gate: the previous layer's pre-activation sign
+                let zprev = &trace.zs[l - 1];
+                let masked: Vec<f64> = da
+                    .iter()
+                    .zip(zprev.data())
+                    .map(|(&g, &z)| if z > 0.0 { g } else { 0.0 })
+                    .collect();
+                dz = Tensor::from_vec(&[b, in_dim], masked);
+            }
+        }
+        dw_rev.reverse();
+        db_rev.reverse();
+        Grads { dw: dw_rev, db: db_rev }
+    }
+
+    /// FP64 analytic backward reference: the same math as
+    /// [`Self::backward`] written as plain f64 loops with no [`DotArch`]
+    /// in the path — the independent oracle for the gradient property
+    /// tests.
+    pub fn backward_f64(&self, trace: &ForwardTrace, dlogits: &Tensor) -> Grads {
+        let layers = self.weights.len();
+        let b = trace.batch();
+        assert_eq!(dlogits.shape(), &[b, self.classes()], "dlogits shape");
+        let mut dw_rev: Vec<Tensor> = Vec::with_capacity(layers);
+        let mut db_rev: Vec<Vec<f64>> = Vec::with_capacity(layers);
+        let mut dz = dlogits.clone();
+        for l in (0..layers).rev() {
+            let w = &self.weights[l];
+            let (out_dim, in_dim) = (w.shape()[0], w.shape()[1]);
+            let a_prev = &trace.acts[l];
+            let mut dwl = vec![0.0; out_dim * in_dim];
+            for o in 0..out_dim {
+                for j in 0..in_dim {
+                    let mut s = 0.0;
+                    for i in 0..b {
+                        s += dz.data()[i * out_dim + o] * a_prev.data()[i * in_dim + j];
+                    }
+                    dwl[o * in_dim + j] = s;
+                }
+            }
+            dw_rev.push(Tensor::from_vec(&[out_dim, in_dim], dwl));
+            let dbl: Vec<f64> = (0..out_dim)
+                .map(|o| (0..b).map(|i| dz.data()[i * out_dim + o]).sum())
+                .collect();
+            db_rev.push(dbl);
+            if l > 0 {
+                let zprev = &trace.zs[l - 1];
+                let mut da = vec![0.0; b * in_dim];
+                for i in 0..b {
+                    for j in 0..in_dim {
+                        let mut s = 0.0;
+                        for o in 0..out_dim {
+                            s += dz.data()[i * out_dim + o] * w.data()[o * in_dim + j];
+                        }
+                        da[i * in_dim + j] = if zprev.data()[i * in_dim + j] > 0.0 { s } else { 0.0 };
+                    }
+                }
+                dz = Tensor::from_vec(&[b, in_dim], da);
+            }
+        }
+        dw_rev.reverse();
+        db_rev.reverse();
+        Grads { dw: dw_rev, db: db_rev }
+    }
+}
+
+/// Row-major transpose: `data` is `[rows, cols]`, result is `[cols, rows]`.
+pub(crate) fn transpose(data: &[f64], rows: usize, cols: usize) -> Vec<f64> {
+    debug_assert_eq!(data.len(), rows * cols);
+    let mut out = vec![0.0; data.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = data[r * cols + c];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transpose_roundtrips() {
+        let data: Vec<f64> = (0..6).map(|i| i as f64).collect();
+        let t = transpose(&data, 2, 3);
+        assert_eq!(t, vec![0.0, 3.0, 1.0, 4.0, 2.0, 5.0]);
+        assert_eq!(transpose(&t, 3, 2), data);
+    }
+
+    #[test]
+    fn forward_trace_matches_infer_bitwise() {
+        let g = TrainGraph::new(PdpuConfig::paper_default(), &[6, 5, 3], 0x7EA1);
+        let mut rng = Rng::seeded(0x11);
+        let xs = Tensor::from_vec(&[4, 6], (0..24).map(|_| rng.normal()).collect());
+        let trace = g.forward(&xs);
+        let logits = g.infer(&xs);
+        assert_eq!(trace.logits().shape(), &[4, 3]);
+        assert_eq!(trace.batch(), 4);
+        let a: Vec<u64> = trace.logits().data().iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u64> = logits.data().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn same_seed_graphs_share_init() {
+        let g1 = TrainGraph::new(PdpuConfig::paper_default(), &[4, 3], 9);
+        let g2 = TrainGraph::fp64_reference(&[4, 3], 9);
+        assert_eq!(g1.weights()[0], g2.weights()[0]);
+        assert_eq!(g1.biases()[0], g2.biases()[0]);
+    }
+
+    #[test]
+    fn fp64_graph_backward_matches_plain_loop_reference() {
+        // the dot_batch-routed backward over the FP64 arch and the plain-
+        // loop analytic reference compute the same sums in the same order
+        let g = TrainGraph::fp64_reference(&[5, 4, 3], 0xB0B);
+        let mut rng = Rng::seeded(0x22);
+        let xs = Tensor::from_vec(&[3, 5], (0..15).map(|_| rng.normal()).collect());
+        let trace = g.forward(&xs);
+        let dlogits = Tensor::from_vec(&[3, 3], (0..9).map(|_| rng.normal()).collect());
+        let got = g.backward(&trace, &dlogits);
+        let want = g.backward_f64(&trace, &dlogits);
+        for l in 0..2 {
+            for (a, b) in got.dw[l].data().iter().zip(want.dw[l].data()) {
+                assert!((a - b).abs() < 1e-12, "dw[{l}]: {a} vs {b}");
+            }
+            for (a, b) in got.db[l].iter().zip(&want.db[l]) {
+                assert!((a - b).abs() < 1e-12, "db[{l}]: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "input feature mismatch")]
+    fn wrong_input_width_panics() {
+        let g = TrainGraph::new(PdpuConfig::paper_default(), &[6, 3], 1);
+        g.forward(&Tensor::zeros(&[2, 5]));
+    }
+}

@@ -1,0 +1,120 @@
+//! Softmax cross-entropy in FP64 — the loss head of the posit training
+//! stack.
+//!
+//! The loss (and its gradient w.r.t. the logits) is computed in FP64, the
+//! repo's reference representation: the paper extracts its DNN tensors in
+//! FP64, and keeping the scalar loss head exact isolates every posit
+//! rounding effect inside the GEMM kernels where the hardware actually
+//! operates. The logits *feeding* this head already carry the posit
+//! datapath's quantization.
+
+use crate::dnn::Tensor;
+
+/// Numerically-stable softmax of one logits row into `out`.
+pub fn softmax_row(logits: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(logits.len(), out.len());
+    let max = logits.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let mut denom = 0.0;
+    for (o, &z) in out.iter_mut().zip(logits) {
+        *o = (z - max).exp();
+        denom += *o;
+    }
+    for o in out.iter_mut() {
+        *o /= denom;
+    }
+}
+
+/// Mean softmax cross-entropy over a batch of logits `[B, C]` with one
+/// class label per row, plus the gradient w.r.t. the logits:
+///
+/// ```text
+/// loss       = mean_b ( −log softmax(z_b)[y_b] )
+/// dlogits_bj = ( softmax(z_b)[j] − 1{j == y_b} ) / B
+/// ```
+///
+/// Returns `(loss, dlogits)` with `dlogits` shaped like `logits`. This is
+/// the FP64 analytic form the backward GEMMs start from.
+pub fn softmax_xent_batch(logits: &Tensor, labels: &[usize]) -> (f64, Tensor) {
+    let (b, c) = (logits.shape()[0], logits.shape()[1]);
+    assert_eq!(labels.len(), b, "one label per logits row");
+    assert!(b > 0, "empty batch");
+    assert!(labels.iter().all(|&l| l < c), "label out of range for {c} classes");
+    let mut dlogits = Tensor::zeros(&[b, c]);
+    let mut probs = vec![0.0; c];
+    let mut loss = 0.0;
+    for i in 0..b {
+        let row = &logits.data()[i * c..(i + 1) * c];
+        softmax_row(row, &mut probs);
+        loss += -(probs[labels[i]].max(f64::MIN_POSITIVE)).ln();
+        let drow = &mut dlogits.data_mut()[i * c..(i + 1) * c];
+        for (j, (d, &p)) in drow.iter_mut().zip(&probs).enumerate() {
+            *d = (p - if j == labels[i] { 1.0 } else { 0.0 }) / b as f64;
+        }
+    }
+    (loss / b as f64, dlogits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_row_is_a_distribution() {
+        let mut p = vec![0.0; 3];
+        softmax_row(&[1.0, 2.0, 3.0], &mut p);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+        // shift invariance (the stability trick is exact)
+        let mut q = vec![0.0; 3];
+        softmax_row(&[1001.0, 1002.0, 1003.0], &mut q);
+        for (a, b) in p.iter().zip(&q) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn uniform_logits_give_log_c_loss() {
+        let logits = Tensor::zeros(&[2, 4]);
+        let (loss, d) = softmax_xent_batch(&logits, &[0, 3]);
+        assert!((loss - 4f64.ln()).abs() < 1e-12, "{loss}");
+        // gradient rows sum to zero and point away from the label
+        for i in 0..2 {
+            let row = &d.data()[i * 4..(i + 1) * 4];
+            assert!(row.iter().sum::<f64>().abs() < 1e-12);
+        }
+        assert!(d.data()[0] < 0.0); // label entry of row 0
+    }
+
+    #[test]
+    fn perfect_prediction_has_tiny_loss_and_gradient() {
+        let logits = Tensor::from_vec(&[1, 3], vec![30.0, 0.0, 0.0]);
+        let (loss, d) = softmax_xent_batch(&logits, &[0]);
+        assert!(loss < 1e-10, "{loss}");
+        assert!(d.data().iter().all(|g| g.abs() < 1e-10));
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let base = vec![0.3, -1.2, 0.7, 0.1, 2.0, -0.4];
+        let labels = [2usize, 0];
+        let logits = Tensor::from_vec(&[2, 3], base.clone());
+        let (_, d) = softmax_xent_batch(&logits, &labels);
+        let eps = 1e-6;
+        for i in 0..base.len() {
+            let mut hi = base.clone();
+            let mut lo = base.clone();
+            hi[i] += eps;
+            lo[i] -= eps;
+            let (lh, _) = softmax_xent_batch(&Tensor::from_vec(&[2, 3], hi), &labels);
+            let (ll, _) = softmax_xent_batch(&Tensor::from_vec(&[2, 3], lo), &labels);
+            let fd = (lh - ll) / (2.0 * eps);
+            assert!((fd - d.data()[i]).abs() < 1e-8, "dlogits[{i}]: fd {fd} vs analytic {}", d.data()[i]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "label out of range")]
+    fn bad_label_panics() {
+        softmax_xent_batch(&Tensor::zeros(&[1, 2]), &[2]);
+    }
+}

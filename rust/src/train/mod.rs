@@ -1,0 +1,42 @@
+//! Posit training subsystem — SGD through the batched PDPU engine.
+//!
+//! The paper positions PDPU as the computing core of posit-based DNN
+//! accelerators, and prior work (Lu et al., *Training DNNs Using the Posit
+//! Number System*; Carmichael et al., *Deep Positron*) shows posit
+//! arithmetic carries training, not just inference. This module closes the
+//! ROADMAP's "software-backend training" item: mixed-precision posit SGD
+//! end-to-end through the existing batched engine, no PJRT artifacts.
+//!
+//! * [`graph`] — [`TrainGraph`]: an MLP whose forward pass *and* backward
+//!   pass are GEMM tiles through [`crate::baselines::DotArch::dot_batch`].
+//!   The activation-grad and weight-grad kernels are expressed over
+//!   transposed operand planes, so backprop rides the same tiled,
+//!   prepared-operand engine path ([`crate::engine::BatchEngine`]) as
+//!   inference — never an ad-hoc scalar loop.
+//! * [`loss`] — softmax cross-entropy in FP64 (the reference
+//!   representation, exactly as the paper extracts its tensors in FP64).
+//! * [`sgd`] — the [`Sgd`] optimizer: posit weight
+//!   **quantization-on-update** with the update `w − lr·g` computed in a
+//!   wide exact accumulator and rounded **once** — the optimizer-level
+//!   mirror of the paper's mixed-precision S4 accumulation (many exact
+//!   partial terms, a single rounding at the boundary). [`quire_sum`]
+//!   provides the same single-rounding wide accumulation for gradient
+//!   sums (bias gradients, cross-batch reductions).
+//! * [`trainer`] — [`Trainer`]: epochs over [`crate::dnn::dataset`], with
+//!   per-epoch loss/accuracy reporting for the `pdpu train` CLI.
+//!
+//! The gradient math is property-tested against an FP64 analytic
+//! reference and a finite-difference oracle in
+//! `rust/tests/train_stack.rs`; the coordinator serves the same step via
+//! `SoftwareService::train_step` (the software `EngineReq::TrainStep` arm
+//! no longer errors).
+
+pub mod graph;
+pub mod loss;
+pub mod sgd;
+pub mod trainer;
+
+pub use graph::{ForwardTrace, Grads, TrainGraph};
+pub use loss::softmax_xent_batch;
+pub use sgd::{quire_sum, Sgd};
+pub use trainer::{EpochStats, Trainer};

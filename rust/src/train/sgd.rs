@@ -1,0 +1,172 @@
+//! SGD with posit quantization-on-update and wide exact accumulation.
+//!
+//! The paper's S4 stage sums many aligned product terms in one wide
+//! accumulator and rounds **once** at the output boundary. This optimizer
+//! applies the same discipline at the parameter-update boundary: the
+//! update `w − lr·g` is accumulated exactly in the posit quire
+//! ([`crate::posit::Quire`]) — the posit value of `w`, plus the exact
+//! product of the quantized learning rate and gradient — and rounded once
+//! into the stored weight format. No intermediate rounding between the
+//! multiply and the add, and weights land back on the posit grid after
+//! every step (**quantization-on-update**), exactly the state a
+//! posit-weight accelerator would hold.
+//!
+//! [`quire_sum`] is the reduction counterpart: a gradient sum accumulated
+//! exactly with a single final rounding, used by
+//! [`super::graph::TrainGraph::backward`] for bias gradients and available
+//! for cross-microbatch gradient accumulation.
+
+use super::graph::{Grads, TrainGraph};
+use crate::pdpu::PdpuConfig;
+use crate::posit::{Posit, PositFormat, Quire};
+
+/// Sum `vals` exactly in the quire after quantizing each addend to `fmt`,
+/// rounding the total once back to `fmt` — the S4-style wide accumulation
+/// for gradient reductions (one rounding per *sum*, not per addend).
+pub fn quire_sum(vals: &[f64], fmt: PositFormat) -> f64 {
+    let mut q = Quire::new(fmt, fmt).expect("format within quire capacity");
+    for &v in vals {
+        q.add_posit(Posit::from_f64(v, fmt));
+    }
+    q.to_posit(fmt).to_f64()
+}
+
+/// Plain SGD over a [`TrainGraph`]'s parameters, posit-quantized.
+#[derive(Clone, Copy, Debug)]
+pub struct Sgd {
+    lr: f64,
+    /// Storage format the updated parameters are rounded into.
+    weight_fmt: PositFormat,
+    /// Format the learning rate and gradient are quantized to before the
+    /// exact `lr·g` product enters the quire.
+    grad_fmt: PositFormat,
+}
+
+impl Sgd {
+    /// SGD at learning rate `lr` for a PDPU configuration: parameters are
+    /// stored in the accumulator format `cfg.out_fmt` (the wider side of
+    /// the mixed-precision pair — master weights, like the FP32 master
+    /// copy of IEEE mixed-precision training), and gradients enter the
+    /// update in the same format. The engine re-quantizes weights to
+    /// `cfg.in_fmt` at every GEMM, so compute stays narrow while the
+    /// stored parameters keep enough resolution for small updates to
+    /// survive rounding.
+    pub fn new(lr: f64, cfg: &PdpuConfig) -> Self {
+        assert!(lr > 0.0 && lr.is_finite(), "learning rate must be positive");
+        Self { lr, weight_fmt: cfg.out_fmt, grad_fmt: cfg.out_fmt }
+    }
+
+    /// The configured learning rate.
+    pub fn lr(&self) -> f64 {
+        self.lr
+    }
+
+    /// The posit format updated parameters are quantized into.
+    pub fn weight_fmt(&self) -> PositFormat {
+        self.weight_fmt
+    }
+
+    /// Apply one step: `p ← round_fmt(p − lr·g)` for every parameter, each
+    /// update computed exactly in the quire with a single rounding.
+    pub fn step(&self, graph: &mut TrainGraph, grads: &Grads) {
+        assert_eq!(grads.dw.len(), graph.weights().len(), "one weight gradient per layer");
+        assert_eq!(grads.db.len(), graph.biases().len(), "one bias gradient per layer");
+        for (w, gw) in graph.weights_mut().iter_mut().zip(&grads.dw) {
+            self.update_slice(w.data_mut(), gw.data());
+        }
+        for (b, gb) in graph.biases_mut().iter_mut().zip(&grads.db) {
+            self.update_slice(b, gb);
+        }
+    }
+
+    /// `w[i] ← round(w[i] − lr·g[i])`, single-rounded through the quire.
+    fn update_slice(&self, w: &mut [f64], g: &[f64]) {
+        assert_eq!(w.len(), g.len(), "parameter/gradient shape mismatch");
+        let neg_lr = Posit::from_f64(-self.lr, self.grad_fmt);
+        for (wi, &gi) in w.iter_mut().zip(g) {
+            let mut q = Quire::new(self.grad_fmt, self.grad_fmt).expect("format within quire capacity");
+            q.add_posit(Posit::from_f64(*wi, self.weight_fmt));
+            q.add_product(neg_lr, Posit::from_f64(gi, self.grad_fmt));
+            *wi = q.to_posit(self.weight_fmt).to_f64();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::Rng;
+
+    #[test]
+    fn quire_sum_is_exact_on_representable_data() {
+        let fmt = PositFormat::p(16, 2);
+        // exactly representable values with heavy cancellation: the wide
+        // accumulator must not lose the small survivor
+        let vals = [1024.0, -1024.0, 0.0078125];
+        assert_eq!(quire_sum(&vals, fmt), 0.0078125);
+        assert_eq!(quire_sum(&[], fmt), 0.0);
+    }
+
+    #[test]
+    fn quire_sum_single_rounding_beats_serial_rounding() {
+        let fmt = PositFormat::p(13, 2);
+        let mut rng = Rng::seeded(0x5D4);
+        let (mut err_wide, mut err_serial) = (0.0, 0.0);
+        for _ in 0..200 {
+            let vals: Vec<f64> = (0..32).map(|_| rng.normal()).collect();
+            let exact: f64 = vals.iter().map(|&v| Posit::from_f64(v, fmt).to_f64()).sum();
+            let wide = quire_sum(&vals, fmt);
+            let serial = vals
+                .iter()
+                .fold(0.0, |acc, &v| Posit::from_f64(acc + Posit::from_f64(v, fmt).to_f64(), fmt).to_f64());
+            err_wide += (wide - exact).abs();
+            err_serial += (serial - exact).abs();
+        }
+        assert!(err_wide <= err_serial, "wide {err_wide} vs serial {err_serial}");
+    }
+
+    #[test]
+    fn step_moves_weights_down_the_gradient() {
+        let cfg = PdpuConfig::paper_default();
+        let mut g = TrainGraph::new(cfg, &[2, 2], 3);
+        let before = g.weights()[0].data().to_vec();
+        let grads = Grads {
+            dw: vec![crate::dnn::Tensor::from_vec(&[2, 2], vec![1.0, -1.0, 0.5, 0.0])],
+            db: vec![vec![2.0, -2.0]],
+        };
+        let sgd = Sgd::new(0.25, &cfg);
+        sgd.step(&mut g, &grads);
+        let after = g.weights()[0].data();
+        assert!(after[0] < before[0], "positive gradient must decrease the weight");
+        assert!(after[1] > before[1]);
+        assert_eq!(g.biases()[0], vec![-0.5, 0.5]);
+        // every updated parameter sits on the storage-format posit grid
+        let fmt = sgd.weight_fmt();
+        for &v in after.iter().chain(&g.biases()[0]) {
+            assert_eq!(v, Posit::from_f64(v, fmt).to_f64(), "{v} off the {fmt} grid");
+        }
+    }
+
+    #[test]
+    fn update_is_single_rounded_fma() {
+        // w − lr·g with one rounding: must equal the exact f64 value
+        // rounded once, on data where the f64 computation is exact
+        let cfg = PdpuConfig::paper_default();
+        let sgd = Sgd::new(0.5, &cfg);
+        let mut w = [1.0, -0.25];
+        let g = [0.5, 1.0];
+        sgd.update_slice(&mut w, &g);
+        assert_eq!(w[0], 0.75); // 1 − 0.5·0.5
+        assert_eq!(w[1], -0.75); // −0.25 − 0.5
+    }
+
+    #[test]
+    fn zero_gradient_only_requantizes() {
+        let cfg = PdpuConfig::paper_default();
+        let sgd = Sgd::new(0.1, &cfg);
+        let raw = 0.1234567890123; // not on the p16 grid
+        let mut w = [raw];
+        sgd.update_slice(&mut w, &[0.0]);
+        assert_eq!(w[0], Posit::from_f64(raw, sgd.weight_fmt()).to_f64());
+    }
+}

@@ -243,6 +243,38 @@ fn mixed_config_queues_never_fuse() {
 }
 
 #[test]
+fn interned_fusion_planning_groups_like_a_linear_scan() {
+    // plan_fusion interns planes by content hash; its grouping decisions
+    // must match a from-scratch linear scan that compares every tile
+    // against every existing group representative bit-for-bit
+    let mut rng = Rng::seeded(0x17E4);
+    for round in 0..30 {
+        let cfg = random_config(&mut rng);
+        let planes = 1 + rng.below(3) as usize;
+        let tiles = 1 + rng.below(10) as usize;
+        let queue = random_queue(&mut rng, cfg, planes, tiles);
+        let groups = plan_fusion(&queue);
+        // reference: first-fit linear scan over full bitwise equality
+        let eq = |x: &GemmTile, y: &GemmTile| {
+            x.cfg == y.cfg
+                && x.k == y.k
+                && x.acc.len() == y.acc.len()
+                && x.acc.iter().zip(&y.acc).all(|(p, q)| p.to_bits() == q.to_bits())
+                && x.a.len() == y.a.len()
+                && x.a.iter().zip(&y.a).all(|(p, q)| p.to_bits() == q.to_bits())
+        };
+        let mut want: Vec<Vec<usize>> = Vec::new();
+        for (i, t) in queue.iter().enumerate() {
+            match want.iter_mut().find(|g| eq(t, &queue[g[0]])) {
+                Some(g) => g.push(i),
+                None => want.push(vec![i]),
+            }
+        }
+        assert_eq!(groups, want, "round {round} cfg {}", cfg.label());
+    }
+}
+
+#[test]
 fn quire_dot_batch_bit_identical_to_scalar_loop() {
     let mut rng = Rng::seeded(0x0B51);
     for _ in 0..15 {

@@ -1,0 +1,271 @@
+//! Property tests for the posit training subsystem (`rust/src/train/`):
+//! gradient correctness against an FP64 analytic reference and a
+//! finite-difference oracle, bit-equality of the GEMM-shaped backward
+//! kernels with a scalar `dot_f64` backprop loop (the proof that backprop
+//! rides `dot_batch`), loss-monotone training on the bundled dataset, and
+//! bit-level parity of `SoftwareService::train_step` called directly vs.
+//! through the coordinator wire path (engine thread and TCP server).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use pdpu::baselines::DotArch;
+use pdpu::baselines::PdpuArch;
+use pdpu::coordinator::{json, Metrics, Server, ServiceHandle, SoftwareService};
+use pdpu::dnn::dataset::mnist_like;
+use pdpu::dnn::layers::{linear_batch, relu};
+use pdpu::dnn::Tensor;
+use pdpu::pdpu::PdpuConfig;
+use pdpu::testing::Rng;
+use pdpu::train::{softmax_xent_batch, TrainGraph, Trainer};
+
+fn random_batch(rng: &mut Rng, b: usize, d: usize, classes: usize) -> (Tensor, Vec<usize>) {
+    let xs = Tensor::from_vec(&[b, d], (0..b * d).map(|_| rng.normal()).collect());
+    let labels = (0..b).map(|_| rng.below(classes as u64) as usize).collect();
+    (xs, labels)
+}
+
+/// The FP64 analytic backward must match central finite differences of the
+/// FP64 loss — the ground-truth check that the backward math (transposes,
+/// ReLU gating, bias reduction) is the gradient of the forward pass.
+#[test]
+fn fp64_backward_matches_finite_differences() {
+    let mut rng = Rng::seeded(0xFD_01);
+    for round in 0..5 {
+        let sizes = [5usize, 4, 3];
+        let mut g = TrainGraph::fp64_reference(&sizes, 0x90 + round);
+        let (xs, labels) = random_batch(&mut rng, 3, 5, 3);
+        let trace = g.forward(&xs);
+        let (_, dlogits) = softmax_xent_batch(trace.logits(), &labels);
+        let grads = g.backward_f64(&trace, &dlogits);
+        let eps = 1e-6;
+        for l in 0..2 {
+            let n_params = g.weights()[l].len();
+            for idx in 0..n_params {
+                let orig = g.weights()[l].data()[idx];
+                let loss_at = |v: f64, g: &mut TrainGraph| {
+                    g.weights_mut()[l].data_mut()[idx] = v;
+                    let t = g.forward(&xs);
+                    softmax_xent_batch(t.logits(), &labels).0
+                };
+                let hi = loss_at(orig + eps, &mut g);
+                let lo = loss_at(orig - eps, &mut g);
+                g.weights_mut()[l].data_mut()[idx] = orig;
+                let fd = (hi - lo) / (2.0 * eps);
+                let analytic = grads.dw[l].data()[idx];
+                assert!(
+                    (fd - analytic).abs() < 1e-4 * analytic.abs().max(1.0),
+                    "round {round} dW[{l}][{idx}]: fd {fd} vs analytic {analytic}"
+                );
+            }
+            // bias gradients the same way
+            for o in 0..g.biases()[l].len() {
+                let orig = g.biases()[l][o];
+                g.biases_mut()[l][o] = orig + eps;
+                let hi = softmax_xent_batch(g.forward(&xs).logits(), &labels).0;
+                g.biases_mut()[l][o] = orig - eps;
+                let lo = softmax_xent_batch(g.forward(&xs).logits(), &labels).0;
+                g.biases_mut()[l][o] = orig;
+                let fd = (hi - lo) / (2.0 * eps);
+                let analytic = grads.db[l][o];
+                assert!(
+                    (fd - analytic).abs() < 1e-4 * analytic.abs().max(1.0),
+                    "round {round} db[{l}][{o}]: fd {fd} vs analytic {analytic}"
+                );
+            }
+        }
+    }
+}
+
+/// The posit-routed backward (GEMMs through the batched PDPU engine,
+/// quire-summed bias gradients) must track the FP64 analytic reference
+/// within the quantization tolerance of the P(13/16,2) datapath.
+#[test]
+fn posit_backward_tracks_fp64_reference_within_tolerance() {
+    let cfg = PdpuConfig::paper_default();
+    let mut rng = Rng::seeded(0x90517_3A7);
+    for round in 0..8 {
+        let sizes = [12usize, 8, 4];
+        let seed = 0x1000 + round;
+        let gp = TrainGraph::new(cfg, &sizes, seed);
+        let gf = TrainGraph::fp64_reference(&sizes, seed);
+        let (xs, labels) = random_batch(&mut rng, 6, 12, 4);
+        let tp = gp.forward(&xs);
+        let tf = gf.forward(&xs);
+        let (_, dp) = softmax_xent_batch(tp.logits(), &labels);
+        let (_, df) = softmax_xent_batch(tf.logits(), &labels);
+        let grads_p = gp.backward(&tp, &dp);
+        let grads_f = gf.backward_f64(&tf, &df);
+        for l in 0..2 {
+            let num: f64 =
+                grads_p.dw[l].data().iter().zip(grads_f.dw[l].data()).map(|(a, b)| (a - b).abs()).sum();
+            let den: f64 = grads_f.dw[l].data().iter().map(|v| v.abs()).sum::<f64>().max(1e-3);
+            assert!(num / den < 0.1, "round {round} dW[{l}] aggregate rel err {}", num / den);
+            let bnum: f64 = grads_p.db[l].iter().zip(&grads_f.db[l]).map(|(a, b)| (a - b).abs()).sum();
+            let bden: f64 = grads_f.db[l].iter().map(|v| v.abs()).sum::<f64>().max(1e-3);
+            assert!(bnum / bden < 0.1, "round {round} db[{l}] aggregate rel err {}", bnum / bden);
+        }
+    }
+}
+
+/// The backward kernels must be *bit-identical* to a from-scratch scalar
+/// backprop written with `dot_f64` calls: weight-grad and activation-grad
+/// really are `dot_batch` tiles over transposed planes (and `dot_batch`
+/// itself is engine-vs-scalar property-tested in engine_equivalence.rs).
+#[test]
+fn backward_kernels_bit_equal_scalar_dot_loop() {
+    let cfg = PdpuConfig::paper_default();
+    let arch = PdpuArch::new(cfg);
+    let mut rng = Rng::seeded(0xB17_6AD);
+    for round in 0..5 {
+        let (din, dh, dout, b) = (7usize, 5usize, 3usize, 4usize);
+        let g = TrainGraph::new(cfg, &[din, dh, dout], 0x2000 + round);
+        let (xs, labels) = random_batch(&mut rng, b, din, dout);
+        let trace = g.forward(&xs);
+        let (_, dlogits) = softmax_xent_batch(trace.logits(), &labels);
+        let grads = g.backward(&trace, &dlogits);
+
+        // recompute the hidden activations with the public layer ops
+        let z_hidden = linear_batch(&arch, &xs, &g.weights()[0], &g.biases()[0]);
+        let mut a_hidden = z_hidden.clone();
+        relu(a_hidden.data_mut());
+
+        // scalar-loop backprop, layer 1 (dz = dlogits):
+        // dW1[o,j] = dot(dlogits[:,o], a_hidden[:,j])
+        for o in 0..dout {
+            for j in 0..dh {
+                let col_dz: Vec<f64> = (0..b).map(|i| dlogits.data()[i * dout + o]).collect();
+                let col_a: Vec<f64> = (0..b).map(|i| a_hidden.data()[i * dh + j]).collect();
+                let want = arch.dot_f64(0.0, &col_dz, &col_a);
+                assert_eq!(
+                    grads.dw[1].data()[o * dh + j].to_bits(),
+                    want.to_bits(),
+                    "round {round} dW1[{o},{j}]"
+                );
+            }
+        }
+        // activation grad + ReLU gate: dz0[i,j] = 1{z>0}·dot(dlogits[i,:], W1[:,j])
+        let mut dz0 = vec![0.0; b * dh];
+        for i in 0..b {
+            for j in 0..dh {
+                let row: Vec<f64> = (0..dout).map(|o| dlogits.data()[i * dout + o]).collect();
+                let wcol: Vec<f64> = (0..dout).map(|o| g.weights()[1].data()[o * dh + j]).collect();
+                let da = arch.dot_f64(0.0, &row, &wcol);
+                dz0[i * dh + j] = if z_hidden.data()[i * dh + j] > 0.0 { da } else { 0.0 };
+            }
+        }
+        // scalar-loop layer 0 weight grad from the reconstructed dz0
+        for o in 0..dh {
+            for j in 0..din {
+                let col_dz: Vec<f64> = (0..b).map(|i| dz0[i * dh + o]).collect();
+                let col_x: Vec<f64> = (0..b).map(|i| xs.data()[i * din + j]).collect();
+                let want = arch.dot_f64(0.0, &col_dz, &col_x);
+                assert_eq!(
+                    grads.dw[0].data()[o * din + j].to_bits(),
+                    want.to_bits(),
+                    "round {round} dW0[{o},{j}]"
+                );
+            }
+        }
+    }
+}
+
+/// Loss-monotone smoke: epochs of posit SGD over the bundled dataset
+/// generator must strictly decrease the epoch loss.
+#[test]
+fn epoch_loss_strictly_decreases_on_bundled_dataset() {
+    let ds = mnist_like(5, 32, 2);
+    let mut t = Trainer::new(PdpuConfig::paper_default(), &[784, 4, 2], 0.08, 0x5EED);
+    let stats = t.fit(&ds, 2, 8);
+    assert!(
+        stats[1].mean_loss < stats[0].mean_loss,
+        "epoch loss must decrease: {} → {}",
+        stats[0].mean_loss,
+        stats[1].mean_loss
+    );
+    assert!(stats.iter().all(|s| s.mean_loss.is_finite()));
+}
+
+/// Bit-level parity: the same train-step sequence must produce bitwise
+/// identical losses (and leave bitwise identical served models) whether
+/// `SoftwareService::train_step` is called directly, through the engine
+/// thread (`ServiceHandle`), or over the TCP `train` wire op.
+#[test]
+fn train_step_direct_vs_wire_paths_bit_identical() {
+    let cfg = PdpuConfig::paper_default();
+    let (sizes, batch, mkn, seed) = (vec![8usize, 6, 3], 4usize, (2usize, 2usize, 2usize), 0xAB5Eu64);
+    let direct = SoftwareService::new(cfg, &sizes, batch, mkn, seed);
+    let handle = ServiceHandle::start_software(cfg, sizes.clone(), batch, mkn, seed);
+    let metrics = Arc::new(Metrics::new());
+    let tcp_backend = ServiceHandle::start_software(cfg, sizes.clone(), batch, mkn, seed);
+    let server = Server::start("127.0.0.1:0", tcp_backend.clone(), metrics.clone()).expect("server");
+    let stream = TcpStream::connect(server.addr).expect("connect");
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    let mut rng = Rng::seeded(0x7E57_AB);
+    for step in 0..6 {
+        let images: Vec<Vec<f32>> =
+            (0..batch).map(|_| (0..8).map(|_| rng.uniform(-1.0, 1.0) as f32).collect()).collect();
+        let labels: Vec<u32> = (0..batch).map(|_| rng.below(3) as u32).collect();
+
+        let want = direct.train_step(&images, &labels).expect("direct step");
+        let via_engine = handle.train_step(images.clone(), labels.clone()).expect("engine step");
+        assert_eq!(want.to_bits(), via_engine.to_bits(), "step {step}: engine wire path diverged");
+
+        let rows: Vec<json::Json> = images
+            .iter()
+            .map(|im| json::Json::arr_f64(&im.iter().map(|&v| v as f64).collect::<Vec<_>>()))
+            .collect();
+        let req = json::Json::obj(vec![
+            ("op", json::Json::Str("train".into())),
+            ("images", json::Json::Arr(rows)),
+            ("labels", json::Json::arr_f64(&labels.iter().map(|&l| l as f64).collect::<Vec<_>>())),
+        ]);
+        writer.write_all((req.to_string() + "\n").as_bytes()).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let v = json::parse(&line).unwrap();
+        assert_eq!(v.get("ok"), Some(&json::Json::Bool(true)), "{line}");
+        let via_tcp = v.get("loss").unwrap().as_f64().unwrap() as f32;
+        assert_eq!(want.to_bits(), via_tcp.to_bits(), "step {step}: TCP wire path diverged");
+    }
+
+    // all three served models ended in the same state: identical logits
+    let probe: Vec<Vec<f32>> = (0..2).map(|i| vec![0.25 * (i + 1) as f32; 8]).collect();
+    let a = direct.infer_batch(&probe).unwrap();
+    let b = handle.infer_batch(probe.clone()).unwrap();
+    let c = tcp_backend.infer_batch(probe).unwrap();
+    let bits = |v: &Vec<Vec<f32>>| -> Vec<u32> { v.iter().flatten().map(|x| x.to_bits()).collect() };
+    assert_eq!(bits(&a), bits(&b));
+    assert_eq!(bits(&a), bits(&c));
+
+    // the stats wire op reports the train counters
+    writer.write_all(b"{\"op\":\"stats\"}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = json::parse(&line).unwrap();
+    assert_eq!(v.get("train_steps").unwrap().as_f64(), Some(6.0), "{line}");
+    assert_eq!(v.get("train_examples").unwrap().as_f64(), Some(24.0), "{line}");
+
+    // malformed train requests error without killing the connection
+    writer.write_all(b"{\"op\":\"train\",\"images\":[[1,2]],\"labels\":[0,1]}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("labels"), "{line}");
+    // negative / fractional labels are rejected, not saturated into class 0
+    for bad in ["-1", "2.5"] {
+        let req = format!(
+            "{{\"op\":\"train\",\"images\":[[{}]],\"labels\":[{bad}]}}\n",
+            vec!["0.1"; 8].join(",")
+        );
+        writer.write_all(req.as_bytes()).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("non-negative integer"), "label {bad}: {line}");
+    }
+
+    handle.shutdown();
+    tcp_backend.shutdown();
+}
