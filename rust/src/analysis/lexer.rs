@@ -1,0 +1,578 @@
+//! A comment/string-aware Rust lexer for the `pdpu lint` pass.
+//!
+//! The offline image carries no `syn`/`proc-macro2`, so the analysis
+//! tokenizes source text itself. The lexer is deliberately *not* a full
+//! Rust grammar: the rules only need a token stream with line numbers
+//! where comments and string/char literals can never masquerade as code
+//! (so `"unwrap"` in a string or a doc comment never trips a rule), plus
+//! three structural overlays recovered by brace matching:
+//!
+//! * **test regions** — token ranges under `#[test]` / `#[cfg(test)]`
+//!   items, which every rule skips;
+//! * **function spans** — `fn name … { body }` token ranges, so rules can
+//!   scope to specific kernels;
+//! * **pragmas** — `// pdpu-lint: …` directives (suppressions and the
+//!   `hot-path` marker), collected with their line numbers.
+
+/// Token classes the rules distinguish.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`unwrap`, `fn`, `crate`, …).
+    Ident,
+    /// Numeric literal (possibly just the integer part of a float —
+    /// `1.5` lexes as `1` `.` `5`, which is fine for every rule).
+    Num,
+    /// String literal. `text` holds the verbatim inner contents (used by
+    /// the wire-op rule); identifier matching never looks at `Str`
+    /// tokens, so string contents can never trip a code rule.
+    Str,
+    /// Char literal.
+    Char,
+    /// Lifetime (`'a`), kept distinct from char literals.
+    Lifetime,
+    /// Any single punctuation byte (`.`, `[`, `!`, `:`, …).
+    Punct,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+impl Token {
+    /// Is this the identifier `s`? (Full-token match: `unwrap_or_else`
+    /// never matches `unwrap`.)
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    /// Is this the punctuation character `c`?
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == c.len_utf8() && self.text.chars().next() == Some(c)
+    }
+}
+
+/// A `// pdpu-lint: …` directive.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Pragma {
+    /// `// pdpu-lint: allow(<rule>) — <reason>`: suppress `<rule>`
+    /// diagnostics on this line and the next. The reason is mandatory.
+    Allow { rule: String, reason: String },
+    /// `// pdpu-lint: hot-path`: the next `fn` below this line is an
+    /// allocation-free hot kernel; the alloc-freedom rule must check it.
+    HotPath,
+    /// Anything else after `pdpu-lint:` — reported as its own diagnostic
+    /// so typoed suppressions fail loudly instead of silently not
+    /// suppressing.
+    Malformed(String),
+}
+
+/// A pragma plus the line it sits on.
+#[derive(Clone, Debug)]
+pub struct PragmaAt {
+    pub line: usize,
+    pub pragma: Pragma,
+}
+
+/// A `fn` item found in the token stream.
+#[derive(Clone, Debug)]
+pub struct FnSpan {
+    /// Function name.
+    pub name: String,
+    /// Line of the `fn` keyword.
+    pub line: usize,
+    /// Token-index range of the body including its braces, or `None` for
+    /// body-less declarations.
+    pub body: Option<(usize, usize)>,
+}
+
+/// One lexed source file plus the structural overlays the rules consume.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Path relative to `rust/src` (e.g. `coordinator/service.rs`).
+    pub rel: String,
+    pub tokens: Vec<Token>,
+    /// `is_test[i]` — token `i` lies inside a `#[test]`/`#[cfg(test)]`
+    /// item and is exempt from every rule.
+    pub is_test: Vec<bool>,
+    pub pragmas: Vec<PragmaAt>,
+    pub fns: Vec<FnSpan>,
+}
+
+impl SourceFile {
+    /// Lex `text` and recover the overlays.
+    pub fn parse(rel: &str, text: &str) -> SourceFile {
+        let (tokens, pragmas) = lex(text);
+        let is_test = mark_test_regions(&tokens);
+        let fns = find_fns(&tokens);
+        SourceFile { rel: rel.to_string(), tokens, is_test, pragmas, fns }
+    }
+
+    /// Is there an `allow(<rule>)` pragma covering `line` (same line or
+    /// the line directly above)?
+    pub fn allows(&self, rule: &str, line: usize) -> bool {
+        self.pragmas.iter().any(|p| match &p.pragma {
+            Pragma::Allow { rule: r, .. } => r == rule && (p.line == line || p.line + 1 == line),
+            _ => false,
+        })
+    }
+
+    /// Token-index ranges of functions the `hot-path` marker applies to:
+    /// for each marker, the first `fn` at or below the marker's line.
+    pub fn hot_fn_bodies(&self) -> Vec<(String, usize, usize)> {
+        let mut out = Vec::new();
+        for p in &self.pragmas {
+            if p.pragma != Pragma::HotPath {
+                continue;
+            }
+            if let Some(f) = self.fns.iter().find(|f| f.line >= p.line) {
+                if let Some((a, b)) = f.body {
+                    out.push((f.name.clone(), a, b));
+                }
+            }
+        }
+        out
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Lex `text` into tokens + pragmas. Comments and literals are consumed
+/// here so no rule ever sees their contents as code.
+fn lex(text: &str) -> (Vec<Token>, Vec<PragmaAt>) {
+    let b: Vec<char> = text.chars().collect();
+    let mut tokens = Vec::new();
+    let mut pragmas = Vec::new();
+    let mut i = 0;
+    let mut line = 1;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_whitespace() => i += 1,
+            '/' if b.get(i + 1) == Some(&'/') => {
+                // line comment — scan to EOL, checking for a pragma
+                let start = i + 2;
+                let mut j = start;
+                while j < b.len() && b[j] != '\n' {
+                    j += 1;
+                }
+                let body: String = b[start..j].iter().collect();
+                if let Some(p) = parse_pragma(&body) {
+                    pragmas.push(PragmaAt { line, pragma: p });
+                }
+                i = j;
+            }
+            '/' if b.get(i + 1) == Some(&'*') => {
+                // block comment, nesting per Rust
+                let mut depth = 1;
+                let mut j = i + 2;
+                while j < b.len() && depth > 0 {
+                    if b[j] == '\n' {
+                        line += 1;
+                        j += 1;
+                    } else if b[j] == '/' && b.get(j + 1) == Some(&'*') {
+                        depth += 1;
+                        j += 2;
+                    } else if b[j] == '*' && b.get(j + 1) == Some(&'/') {
+                        depth -= 1;
+                        j += 2;
+                    } else {
+                        j += 1;
+                    }
+                }
+                i = j;
+            }
+            '"' => {
+                let (j, nl) = scan_string(&b, i);
+                let inner: String = b[i + 1..j.saturating_sub(1).max(i + 1)].iter().collect();
+                tokens.push(Token { kind: TokKind::Str, text: inner, line });
+                line += nl;
+                i = j;
+            }
+            'r' | 'b' if starts_raw_or_byte_string(&b, i) => {
+                let (j, nl) = scan_raw_or_byte_string(&b, i);
+                tokens.push(Token { kind: TokKind::Str, text: String::new(), line });
+                line += nl;
+                i = j;
+            }
+            '\'' => {
+                // lifetime vs char literal: 'a (no closing quote soon)
+                // vs 'x' / '\n'
+                let next = b.get(i + 1).copied();
+                let after = b.get(i + 2).copied();
+                if next.map(is_ident_start) == Some(true) && after != Some('\'') {
+                    let mut j = i + 1;
+                    while j < b.len() && is_ident_cont(b[j]) {
+                        j += 1;
+                    }
+                    tokens.push(Token { kind: TokKind::Lifetime, text: b[i..j].iter().collect(), line });
+                    i = j;
+                } else {
+                    // char literal: skip escape or single char, then `'`
+                    let mut j = i + 1;
+                    if b.get(j) == Some(&'\\') {
+                        j += 2; // backslash + escaped char (u{…} handled below)
+                        if b.get(j - 1) == Some(&'u') && b.get(j) == Some(&'{') {
+                            while j < b.len() && b[j] != '}' {
+                                j += 1;
+                            }
+                            j += 1;
+                        }
+                    } else {
+                        j += 1;
+                    }
+                    while j < b.len() && b[j] != '\'' {
+                        j += 1;
+                    }
+                    tokens.push(Token { kind: TokKind::Char, text: String::new(), line });
+                    i = j + 1;
+                }
+            }
+            c if is_ident_start(c) => {
+                let mut j = i + 1;
+                while j < b.len() && is_ident_cont(b[j]) {
+                    j += 1;
+                }
+                tokens.push(Token { kind: TokKind::Ident, text: b[i..j].iter().collect(), line });
+                i = j;
+            }
+            c if c.is_ascii_digit() => {
+                let mut j = i + 1;
+                while j < b.len() && is_ident_cont(b[j]) {
+                    j += 1;
+                }
+                tokens.push(Token { kind: TokKind::Num, text: b[i..j].iter().collect(), line });
+                i = j;
+            }
+            c => {
+                tokens.push(Token { kind: TokKind::Punct, text: c.to_string(), line });
+                i += 1;
+            }
+        }
+    }
+    (tokens, pragmas)
+}
+
+/// Does position `i` (at `r` or `b`) start a raw/byte string (`r"`,
+/// `r#"`, `b"`, `br#"` …) rather than an identifier?
+fn starts_raw_or_byte_string(b: &[char], i: usize) -> bool {
+    let mut j = i;
+    if b[j] == 'b' {
+        j += 1;
+    }
+    if b.get(j) == Some(&'r') {
+        j += 1;
+    }
+    if j == i {
+        return false;
+    }
+    while b.get(j) == Some(&'#') {
+        j += 1;
+    }
+    b.get(j) == Some(&'"')
+}
+
+/// Scan a normal string literal starting at the opening quote. Returns
+/// (index past the closing quote, newlines consumed).
+fn scan_string(b: &[char], i: usize) -> (usize, usize) {
+    let mut j = i + 1;
+    let mut nl = 0;
+    while j < b.len() {
+        match b[j] {
+            '\\' => j += 2,
+            '\n' => {
+                nl += 1;
+                j += 1;
+            }
+            '"' => return (j + 1, nl),
+            _ => j += 1,
+        }
+    }
+    (j, nl)
+}
+
+/// Scan a raw or byte string (`r#"…"#`, `b"…"`, `br##"…"##`). Returns
+/// (index past the close, newlines consumed).
+fn scan_raw_or_byte_string(b: &[char], i: usize) -> (usize, usize) {
+    let mut j = i;
+    if b[j] == 'b' {
+        j += 1;
+    }
+    let raw = b.get(j) == Some(&'r');
+    if raw {
+        j += 1;
+    }
+    let mut hashes = 0;
+    while b.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    j += 1; // opening quote
+    let mut nl = 0;
+    while j < b.len() {
+        match b[j] {
+            '\n' => {
+                nl += 1;
+                j += 1;
+            }
+            '\\' if !raw => j += 2,
+            '"' => {
+                let mut k = 0;
+                while k < hashes && b.get(j + 1 + k) == Some(&'#') {
+                    k += 1;
+                }
+                if k == hashes {
+                    return (j + 1 + hashes, nl);
+                }
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    (j, nl)
+}
+
+/// Parse the body of a `//` comment into a pragma, if it is one.
+fn parse_pragma(comment: &str) -> Option<Pragma> {
+    let rest = comment.trim().strip_prefix("pdpu-lint:")?.trim();
+    if rest == "hot-path" {
+        return Some(Pragma::HotPath);
+    }
+    if let Some(inner) = rest.strip_prefix("allow(") {
+        let Some(close) = inner.find(')') else {
+            return Some(Pragma::Malformed("allow pragma missing ')'".to_string()));
+        };
+        let rule = inner[..close].trim().to_string();
+        let reason = inner[close + 1..]
+            .trim_start_matches(|c: char| c.is_whitespace() || matches!(c, '-' | '—' | '–' | ':'))
+            .trim()
+            .to_string();
+        if reason.is_empty() {
+            return Some(Pragma::Malformed(format!("allow({rule}) needs a reason: `allow({rule}) — why`")));
+        }
+        return Some(Pragma::Allow { rule, reason });
+    }
+    Some(Pragma::Malformed(format!("unknown pdpu-lint directive '{rest}'")))
+}
+
+/// Mark every token under a `#[test]` / `#[cfg(test)]` item. The item is
+/// the attribute plus the following item, delimited by its matching outer
+/// braces (or a `;` for brace-less items like `use`).
+fn mark_test_regions(tokens: &[Token]) -> Vec<bool> {
+    let mut marked = vec![false; tokens.len()];
+    let mut i = 0;
+    while i < tokens.len() {
+        if tokens[i].is_punct('#') && tokens.get(i + 1).is_some_and(|t| t.is_punct('[')) {
+            let attr_start = i;
+            let Some(attr_end) = matching(tokens, i + 1, '[', ']') else {
+                break;
+            };
+            if attr_is_test(&tokens[i + 2..attr_end]) {
+                let mut j = attr_end + 1;
+                // skip further attributes on the same item
+                while tokens.get(j).is_some_and(|t| t.is_punct('#'))
+                    && tokens.get(j + 1).is_some_and(|t| t.is_punct('['))
+                {
+                    match matching(tokens, j + 1, '[', ']') {
+                        Some(e) => j = e + 1,
+                        None => break,
+                    }
+                }
+                // item body: first top-level `{` … matching `}`, or `;`
+                let mut end = tokens.len().saturating_sub(1);
+                let mut k = j;
+                while k < tokens.len() {
+                    if tokens[k].is_punct(';') {
+                        end = k;
+                        break;
+                    }
+                    if tokens[k].is_punct('{') {
+                        end = matching(tokens, k, '{', '}').unwrap_or(tokens.len() - 1);
+                        break;
+                    }
+                    k += 1;
+                }
+                for slot in marked.iter_mut().take(end + 1).skip(attr_start) {
+                    *slot = true;
+                }
+                i = end + 1;
+                continue;
+            }
+            i = attr_end + 1;
+            continue;
+        }
+        i += 1;
+    }
+    marked
+}
+
+/// Is this attribute token slice `test`, or `cfg(… test …)` without a
+/// `not`? (`#[cfg(not(test))]` guards *non*-test code.)
+fn attr_is_test(attr: &[Token]) -> bool {
+    let idents: Vec<&str> =
+        attr.iter().filter(|t| t.kind == TokKind::Ident).map(|t| t.text.as_str()).collect();
+    if idents == ["test"] {
+        return true;
+    }
+    idents.first() == Some(&"cfg") && idents.contains(&"test") && !idents.contains(&"not")
+}
+
+/// Index of the token closing the bracket opened at `open_idx`.
+fn matching(tokens: &[Token], open_idx: usize, open: char, close: char) -> Option<usize> {
+    let mut depth = 0usize;
+    for (j, t) in tokens.iter().enumerate().skip(open_idx) {
+        if t.is_punct(open) {
+            depth += 1;
+        } else if t.is_punct(close) {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j);
+            }
+        }
+    }
+    None
+}
+
+/// Find every `fn` item and its body span. `fn` pointer types (`fn(…)`)
+/// are skipped because they have no name identifier after the keyword.
+fn find_fns(tokens: &[Token]) -> Vec<FnSpan> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < tokens.len() {
+        if tokens[i].is_ident("fn") && tokens.get(i + 1).is_some_and(|t| t.kind == TokKind::Ident) {
+            let name = tokens[i + 1].text.clone();
+            let line = tokens[i].line;
+            // body = first `{` before a top-level `;` (trait decls end at `;`)
+            let mut body = None;
+            let mut j = i + 2;
+            while j < tokens.len() {
+                if tokens[j].is_punct(';') {
+                    break;
+                }
+                if tokens[j].is_punct('{') {
+                    if let Some(e) = matching(tokens, j, '{', '}') {
+                        body = Some((j, e));
+                    }
+                    break;
+                }
+                j += 1;
+            }
+            out.push(FnSpan { name, line, body });
+            i = body.map_or(j + 1, |(_, e)| e + 1);
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_hide_code() {
+        let src = "fn f() { let s = \"a.unwrap()\"; /* .unwrap() */ // .unwrap()\n }";
+        let f = SourceFile::parse("x.rs", src);
+        assert!(!f.tokens.iter().any(|t| t.is_ident("unwrap")));
+    }
+
+    #[test]
+    fn raw_strings_and_chars_lex() {
+        let src = "fn g() { let r = r#\"panic!(\"x\")\"#; let c = '\\n'; let q = 'q'; }";
+        let f = SourceFile::parse("x.rs", src);
+        assert!(!f.tokens.iter().any(|t| t.is_ident("panic")));
+        assert_eq!(f.tokens.iter().filter(|t| t.kind == TokKind::Char).count(), 2);
+    }
+
+    #[test]
+    fn lifetimes_are_not_chars() {
+        let f = SourceFile::parse("x.rs", "fn h<'a>(x: &'a str) -> &'a str { x }");
+        assert_eq!(f.tokens.iter().filter(|t| t.kind == TokKind::Lifetime).count(), 3);
+        assert!(!f.tokens.iter().any(|t| t.kind == TokKind::Char));
+    }
+
+    #[test]
+    fn line_numbers_track() {
+        let f = SourceFile::parse("x.rs", "a\nb\n  c");
+        let lines: Vec<usize> = f.tokens.iter().map(|t| t.line).collect();
+        assert_eq!(lines, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn test_regions_marked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests { fn t() { x.unwrap(); } }";
+        let f = SourceFile::parse("x.rs", src);
+        for (t, &m) in f.tokens.iter().zip(&f.is_test) {
+            if t.is_ident("unwrap") {
+                assert!(m, "unwrap inside #[cfg(test)] must be marked");
+            }
+            if t.is_ident("live") {
+                assert!(!m);
+            }
+        }
+    }
+
+    #[test]
+    fn cfg_not_test_is_live_code() {
+        let f = SourceFile::parse("x.rs", "#[cfg(not(test))]\nfn live() { x.unwrap(); }");
+        assert!(f.tokens.iter().zip(&f.is_test).all(|(_, &m)| !m));
+    }
+
+    #[test]
+    fn fn_spans_found() {
+        let src = "pub fn one() { a(); }\nfn two(x: usize) -> usize { x }\ntrait T { fn decl(&self); }";
+        let f = SourceFile::parse("x.rs", src);
+        let names: Vec<&str> = f.fns.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["one", "two", "decl"]);
+        assert!(f.fns[0].body.is_some());
+        assert!(f.fns[2].body.is_none());
+    }
+
+    #[test]
+    fn pragmas_parse() {
+        let src = "// pdpu-lint: allow(panic-freedom) — test fixture needs it\n\
+                   // pdpu-lint: hot-path\n\
+                   // pdpu-lint: allow(determinism)\n\
+                   // pdpu-lint: frobnicate\n";
+        let f = SourceFile::parse("x.rs", src);
+        assert_eq!(f.pragmas.len(), 4);
+        assert!(matches!(&f.pragmas[0].pragma, Pragma::Allow { rule, reason }
+            if rule == "panic-freedom" && reason == "test fixture needs it"));
+        assert_eq!(f.pragmas[1].pragma, Pragma::HotPath);
+        assert!(matches!(&f.pragmas[2].pragma, Pragma::Malformed(m) if m.contains("reason")));
+        assert!(matches!(&f.pragmas[3].pragma, Pragma::Malformed(_)));
+    }
+
+    #[test]
+    fn allow_covers_own_and_next_line() {
+        let src = "// pdpu-lint: allow(panic-freedom) - covered below\nlet x = v.unwrap();\nlet y = 1;";
+        let f = SourceFile::parse("x.rs", src);
+        assert!(f.allows("panic-freedom", 1));
+        assert!(f.allows("panic-freedom", 2));
+        assert!(!f.allows("panic-freedom", 3));
+        assert!(!f.allows("determinism", 2));
+    }
+
+    #[test]
+    fn hot_path_marks_next_fn() {
+        let src = "fn cold() {}\n// pdpu-lint: hot-path\nfn hot(x: usize) -> usize { x + 1 }";
+        let f = SourceFile::parse("x.rs", src);
+        let hot = f.hot_fn_bodies();
+        assert_eq!(hot.len(), 1);
+        assert_eq!(hot[0].0, "hot");
+    }
+}

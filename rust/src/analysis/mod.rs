@@ -1,0 +1,216 @@
+//! `pdpu lint` — a domain-specific static-analysis pass over the crate's
+//! own sources.
+//!
+//! The PDPU paper's value is structural: a fused pipeline whose
+//! correctness and efficiency come from invariants (stages feed forward
+//! only, the hot path is allocation-free, accumulation is exactly
+//! reproducible, the serving tier never panics). The test suite proves
+//! those properties hold *today*; this pass keeps future changes from
+//! quietly un-proving them. Five rules (see [`rules`]):
+//!
+//! | rule | invariant |
+//! |---|---|
+//! | `panic-freedom`   | coordinator request paths return errors, never panic |
+//! | `alloc-freedom`   | `*_into` stage kernels and `hot-path` fns don't allocate |
+//! | `determinism`     | result-affecting code: no unordered-map iteration, no clocks/entropy |
+//! | `stage-isolation` | `pdpu/stages/sN_*` depends only on earlier stages + config |
+//! | `wire-ops`        | server match arms ≡ the `docs/ARCHITECTURE.md` op table |
+//!
+//! Implementation constraint: the offline image has no `syn`, so the pass
+//! runs on a comment/string-aware token stream ([`lexer`]) rather than an
+//! AST — rules are narrow, syntactic, and documented per module so their
+//! (deliberate) blind spots are explicit.
+//!
+//! A violation is suppressed only by an inline pragma on its own line or
+//! the line above, and the reason is mandatory:
+//!
+//! ```text
+//! // pdpu-lint: allow(panic-freedom) — seeded at startup, cannot be empty
+//! ```
+//!
+//! Entry points: [`run_lint`] (the whole tree — used by the `pdpu lint`
+//! CLI, the `lint_clean` tier-1 test, and CI), [`lint_source`] (one file
+//! from a string — used by the fixture tests), and
+//! [`rules::r5_wire_ops::check`] (the cross-file wire-op rule).
+
+pub mod lexer;
+pub mod rules;
+
+use lexer::{Pragma, SourceFile};
+use std::path::Path;
+
+/// One rule violation (or pragma problem) at a source location.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    /// Rule identifier (`panic-freedom`, …, or `pragma`).
+    pub rule: &'static str,
+    /// Repo-relative path (`rust/src/…` or `docs/…`).
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// The five rule identifiers an `allow(…)` pragma may name.
+pub const RULE_IDS: [&str; 5] = [
+    rules::r1_panic_freedom::RULE,
+    rules::r2_alloc_freedom::RULE,
+    rules::r3_determinism::RULE,
+    rules::r4_stage_isolation::RULE,
+    rules::r5_wire_ops::RULE,
+];
+
+/// Lint one source file given as text. `rel` is the path relative to
+/// `rust/src` and drives rule scoping (e.g. `coordinator/x.rs` gets the
+/// panic-freedom rule). Suppression pragmas are applied; pragma problems
+/// (missing reason, unknown rule) are themselves diagnostics.
+pub fn lint_source(rel: &str, text: &str) -> Vec<Diagnostic> {
+    let file = SourceFile::parse(rel, text);
+    file_diags(&file)
+}
+
+fn file_diags(file: &SourceFile) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    // pragma hygiene first — these are never suppressible
+    for p in &file.pragmas {
+        match &p.pragma {
+            Pragma::Malformed(msg) => out.push(Diagnostic {
+                rule: "pragma",
+                file: format!("rust/src/{}", file.rel),
+                line: p.line,
+                message: msg.clone(),
+            }),
+            Pragma::Allow { rule, .. } if !RULE_IDS.contains(&rule.as_str()) => out.push(Diagnostic {
+                rule: "pragma",
+                file: format!("rust/src/{}", file.rel),
+                line: p.line,
+                message: format!("allow({rule}) names no rule; known rules: {}", RULE_IDS.join(", ")),
+            }),
+            _ => {}
+        }
+    }
+    let mut findings = Vec::new();
+    if rules::r1_panic_freedom::applies(&file.rel) {
+        findings.extend(rules::r1_panic_freedom::check(file));
+    }
+    if rules::r2_alloc_freedom::applies(&file.rel) {
+        findings.extend(rules::r2_alloc_freedom::check(file));
+    }
+    if rules::r3_determinism::applies(&file.rel) {
+        findings.extend(rules::r3_determinism::check(file));
+    }
+    if rules::r4_stage_isolation::applies(&file.rel) {
+        findings.extend(rules::r4_stage_isolation::check(file));
+    }
+    out.extend(findings.into_iter().filter(|d| !file.allows(d.rule, d.line)));
+    out
+}
+
+/// Run every rule over `repo_root/rust/src` (plus the wire-op doc check
+/// against `repo_root/docs/ARCHITECTURE.md`). Returns all unsuppressed
+/// diagnostics, sorted by file and line; `Err` only for I/O problems.
+pub fn run_lint(repo_root: &Path) -> Result<Vec<Diagnostic>, String> {
+    let src_root = repo_root.join("rust").join("src");
+    let mut paths = Vec::new();
+    collect_rs(&src_root, &mut paths)?;
+    let mut out = Vec::new();
+    let mut server: Option<SourceFile> = None;
+    for path in &paths {
+        let rel = path
+            .strip_prefix(&src_root)
+            .map_err(|e| e.to_string())?
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = std::fs::read_to_string(path).map_err(|e| format!("reading {}: {e}", path.display()))?;
+        let parsed = SourceFile::parse(&rel, &text);
+        out.extend(file_diags(&parsed));
+        if rel == "coordinator/server.rs" {
+            server = Some(parsed);
+        }
+    }
+    let docs_path = repo_root.join("docs").join("ARCHITECTURE.md");
+    match server {
+        Some(s) => {
+            let docs = std::fs::read_to_string(&docs_path)
+                .map_err(|e| format!("reading {}: {e}", docs_path.display()))?;
+            let wire = rules::r5_wire_ops::check(&s, &docs, "docs/ARCHITECTURE.md");
+            out.extend(wire.into_iter().filter(|d| !s.allows(d.rule, d.line) || d.file.starts_with("docs/")));
+        }
+        None => out.push(Diagnostic {
+            rule: rules::r5_wire_ops::RULE,
+            file: "rust/src/coordinator/server.rs".to_string(),
+            line: 1,
+            message: "server source not found under rust/src".to_string(),
+        }),
+    }
+    out.sort_by(|a, b| (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule)));
+    Ok(out)
+}
+
+/// Recursively collect `.rs` files, sorted for deterministic output.
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<(), String> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .map_err(|e| format!("reading {}: {e}", dir.display()))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_source_has_no_diags() {
+        let src = "pub fn ok(v: &[u64]) -> Option<u64> { v.first().copied() }";
+        assert!(lint_source("coordinator/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn suppression_needs_matching_rule_and_reason() {
+        let bad = "fn f(v: Vec<u64>) -> u64 { v.first().copied().unwrap() }";
+        assert_eq!(lint_source("coordinator/x.rs", bad).len(), 1);
+        let allowed = "// pdpu-lint: allow(panic-freedom) — fixture proves suppression works\n\
+                       fn f(v: Vec<u64>) -> u64 { v.first().copied().unwrap() }";
+        assert!(lint_source("coordinator/x.rs", allowed).is_empty());
+        let wrong_rule = "// pdpu-lint: allow(determinism) — wrong rule, must not suppress\n\
+                          fn f(v: Vec<u64>) -> u64 { v.first().copied().unwrap() }";
+        assert_eq!(lint_source("coordinator/x.rs", wrong_rule).len(), 1);
+    }
+
+    #[test]
+    fn unknown_rule_in_pragma_is_reported() {
+        let src = "// pdpu-lint: allow(no-such-rule) — typo\nfn f() {}";
+        let diags = lint_source("coordinator/x.rs", src);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].rule, "pragma");
+    }
+
+    #[test]
+    fn rules_do_not_fire_outside_their_scope() {
+        // literal indexing outside coordinator/ is R1-out-of-scope
+        let src = "fn f(v: Vec<u64>) -> u64 { v.iter().sum::<u64>() + v[0] }";
+        assert!(lint_source("experiments/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn diagnostics_render_with_location() {
+        let d = Diagnostic { rule: "panic-freedom", file: "rust/src/x.rs".into(), line: 7, message: "m".into() };
+        assert_eq!(d.to_string(), "rust/src/x.rs:7: [panic-freedom] m");
+    }
+}

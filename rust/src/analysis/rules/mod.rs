@@ -1,0 +1,16 @@
+//! The five `pdpu lint` rules. Each rule module exposes
+//!
+//! * `RULE` — its kebab-case identifier (the name `allow(…)` pragmas use);
+//! * `applies(rel)` — whether the rule scans a given file (path relative
+//!   to `rust/src`);
+//! * `check(…)` — the scan itself, returning raw [`super::Diagnostic`]s
+//!   (suppression is applied by the driver, not the rules).
+//!
+//! The mapping from rule to paper invariant is documented per module and
+//! summarized in `docs/ARCHITECTURE.md`.
+
+pub mod r1_panic_freedom;
+pub mod r2_alloc_freedom;
+pub mod r3_determinism;
+pub mod r4_stage_isolation;
+pub mod r5_wire_ops;

@@ -1,0 +1,76 @@
+//! R1 — serving-tier panic-freedom.
+//!
+//! The coordinator is the always-on layer: a panic on a request path
+//! either kills a serving thread or poisons a lock, and a poisoned lock
+//! turns *every later request* into an error (a one-request denial of
+//! service). Non-test code under `coordinator/` therefore must not call
+//! `.unwrap()` / `.expect(…)`, must not use the panicking macros, and
+//! must not index with bare literal subscripts (`xs[0]`) — use
+//! `first()` / `get()` / `last()` with a typed error instead, and recover
+//! poisoned locks via [`crate::coordinator::lock_unpoisoned`].
+//!
+//! Deliberately out of scope: `assert!`/`debug_assert!` on internal
+//! invariants (a failed invariant *should* be loud), identifier-indexed
+//! slices already guarded by validation, and anything under
+//! `#[cfg(test)]`.
+
+use super::super::lexer::{SourceFile, TokKind};
+use super::super::Diagnostic;
+
+pub const RULE: &str = "panic-freedom";
+
+/// R1 scans every non-test token of the serving tier.
+pub fn applies(rel: &str) -> bool {
+    rel.starts_with("coordinator/")
+}
+
+pub fn check(file: &SourceFile) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let toks = &file.tokens;
+    for (i, t) in toks.iter().enumerate() {
+        if file.is_test[i] {
+            continue;
+        }
+        if t.kind == TokKind::Ident
+            && (t.text == "unwrap" || t.text == "expect")
+            && i > 0
+            && toks[i - 1].is_punct('.')
+        {
+            out.push(diag(
+                file,
+                t.line,
+                format!(
+                    ".{}() panics on the request path; return a typed error (poisoned locks: lock_unpoisoned)",
+                    t.text
+                ),
+            ));
+        }
+        if t.kind == TokKind::Ident
+            && matches!(t.text.as_str(), "panic" | "todo" | "unimplemented" | "unreachable")
+            && toks.get(i + 1).is_some_and(|n| n.is_punct('!'))
+        {
+            out.push(diag(file, t.line, format!("{}! aborts the serving thread; return an error", t.text)));
+        }
+        // literal subscript on an expression: `xs[0]`, `xs[g][1]` — the
+        // canonical empty-input panic. Array literals (`[0; n]`) and
+        // macro brackets (`vec![…]`) are excluded by the preceding-token
+        // test; computed/range indices are out of scope by design.
+        if t.is_punct('[')
+            && toks.get(i + 1).is_some_and(|n| n.kind == TokKind::Num)
+            && toks.get(i + 2).is_some_and(|n| n.is_punct(']'))
+            && i > 0
+            && (toks[i - 1].kind == TokKind::Ident || toks[i - 1].is_punct(')') || toks[i - 1].is_punct(']'))
+        {
+            out.push(diag(
+                file,
+                t.line,
+                format!("unchecked literal index [{}] panics when empty; use first()/get()/last()", toks[i + 1].text),
+            ));
+        }
+    }
+    out
+}
+
+fn diag(file: &SourceFile, line: usize, message: String) -> Diagnostic {
+    Diagnostic { rule: RULE, file: format!("rust/src/{}", file.rel), line, message }
+}

@@ -1,0 +1,85 @@
+//! R2 — hot-path allocation-freedom.
+//!
+//! The paper's datapath is combinational: nothing in S1–S6 allocates, and
+//! the software model's whole batched-engine speedup rests on keeping it
+//! that way (`DotScratch` reuse instead of per-call `Vec`s — and the
+//! precondition for the ROADMAP SIMD refactor). This rule scans
+//!
+//! * every `*_into` stage kernel under `pdpu/stages/`, and
+//! * every function annotated `// pdpu-lint: hot-path` (the engine's
+//!   inner-loop kernels, e.g. `BatchEngine::dot_prepared`),
+//!
+//! and flags allocating calls: `vec![…]`, `Vec::new`/`with_capacity`,
+//! `String::new`, `format!`, `.collect()`, `.to_vec()`, `.clone()`,
+//! `.to_owned()`. Amortized-free operations on caller-owned buffers
+//! (`clear`, `reserve`, `push`, `copy_from_slice`, `fill`) are allowed —
+//! they are exactly the scratch-reuse idiom the rule protects.
+
+use super::super::lexer::{SourceFile, TokKind};
+use super::super::Diagnostic;
+
+pub const RULE: &str = "alloc-freedom";
+
+/// Hot-path markers can appear in any file; `*_into` kernels are scanned
+/// under `pdpu/stages/` only.
+pub fn applies(_rel: &str) -> bool {
+    true
+}
+
+pub fn check(file: &SourceFile) -> Vec<Diagnostic> {
+    let mut spans: Vec<(String, usize, usize)> = file.hot_fn_bodies();
+    if file.rel.starts_with("pdpu/stages/") {
+        for f in &file.fns {
+            if f.name.ends_with("_into") {
+                if let Some((a, b)) = f.body {
+                    spans.push((f.name.clone(), a, b));
+                }
+            }
+        }
+    }
+    spans.sort_by_key(|s| s.1);
+    spans.dedup_by_key(|s| s.1);
+
+    let mut out = Vec::new();
+    let toks = &file.tokens;
+    for (name, a, b) in spans {
+        for i in a..=b.min(toks.len().saturating_sub(1)) {
+            if file.is_test[i] {
+                continue;
+            }
+            let t = &toks[i];
+            if t.kind == TokKind::Ident
+                && matches!(t.text.as_str(), "collect" | "to_vec" | "clone" | "to_owned")
+                && i > 0
+                && toks[i - 1].is_punct('.')
+            {
+                out.push(diag(file, t.line, format!(".{}() allocates inside hot kernel `{name}`", t.text)));
+            }
+            if t.kind == TokKind::Ident
+                && matches!(t.text.as_str(), "vec" | "format")
+                && toks.get(i + 1).is_some_and(|n| n.is_punct('!'))
+            {
+                out.push(diag(file, t.line, format!("{}! allocates inside hot kernel `{name}`", t.text)));
+            }
+            if t.kind == TokKind::Ident
+                && matches!(t.text.as_str(), "Vec" | "String")
+                && toks.get(i + 1).is_some_and(|n| n.is_punct(':'))
+                && toks.get(i + 2).is_some_and(|n| n.is_punct(':'))
+                && toks.get(i + 3).is_some_and(|n| {
+                    n.is_ident("new") || n.is_ident("with_capacity") || n.is_ident("from")
+                })
+            {
+                out.push(diag(
+                    file,
+                    t.line,
+                    format!("{}::{} allocates inside hot kernel `{name}`", t.text, toks[i + 3].text),
+                ));
+            }
+        }
+    }
+    out
+}
+
+fn diag(file: &SourceFile, line: usize, message: String) -> Diagnostic {
+    Diagnostic { rule: RULE, file: format!("rust/src/{}", file.rel), line, message }
+}

@@ -1,0 +1,141 @@
+//! R3 — determinism of result-affecting code.
+//!
+//! Quire-exact reproducibility is the differentiator posit serving claims
+//! over IEEE floats: the same request must produce the same bits on every
+//! run, machine, and thread count. Two things silently break that:
+//!
+//! * iterating a `HashMap`/`HashSet` (randomized iteration order since
+//!   `RandomState` is seeded per-process) in code whose *output* depends
+//!   on the order — e.g. fusion planning;
+//! * reading time or entropy (`Instant::now`, `SystemTime::now`,
+//!   `thread_rng`, …) inside a computation.
+//!
+//! Scope: the numeric stack (`posit/`, `pdpu/`, `engine.rs`, `train/`,
+//! `dnn/`) and the one result-affecting coordinator module,
+//! `coordinator/fusion.rs`. Keyed *lookups* (`get`/`entry`/`insert`) are
+//! order-free and allowed; only iteration over the map is flagged.
+//! Serving telemetry (batcher deadlines, latency metrics) reads clocks
+//! legitimately and stays out of scope.
+
+use super::super::lexer::{SourceFile, TokKind, Token};
+use super::super::Diagnostic;
+
+pub const RULE: &str = "determinism";
+
+/// Result-affecting files: the arithmetic stack plus fusion planning.
+pub fn applies(rel: &str) -> bool {
+    rel.starts_with("posit/")
+        || rel.starts_with("pdpu/")
+        || rel.starts_with("train/")
+        || rel.starts_with("dnn/")
+        || rel == "engine.rs"
+        || rel == "coordinator/fusion.rs"
+}
+
+/// Methods whose call on a hash container walks it in randomized order.
+const ITER_METHODS: [&str; 8] = ["iter", "iter_mut", "into_iter", "keys", "values", "values_mut", "drain", "retain"];
+
+pub fn check(file: &SourceFile) -> Vec<Diagnostic> {
+    let toks = &file.tokens;
+    let names = hash_bound_names(file);
+    let mut out = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if file.is_test[i] {
+            continue;
+        }
+        // unordered iteration over a known hash container
+        if t.kind == TokKind::Ident && names.iter().any(|n| n == &t.text) {
+            if let Some(m) = toks.get(i + 2) {
+                if toks[i + 1].is_punct('.') && ITER_METHODS.iter().any(|im| m.is_ident(im)) {
+                    out.push(diag(
+                        file,
+                        t.line,
+                        format!("`{}.{}()` iterates a HashMap in randomized order; sort keys first", t.text, m.text),
+                    ));
+                }
+            }
+        }
+        if t.is_ident("in") {
+            let mut j = i + 1;
+            while toks.get(j).is_some_and(|n| n.is_punct('&') || n.is_ident("mut")) {
+                j += 1;
+            }
+            if let Some(n) = toks.get(j) {
+                if n.kind == TokKind::Ident
+                    && names.iter().any(|b| b == &n.text)
+                    && !toks.get(j + 1).is_some_and(|p| p.is_punct('.'))
+                {
+                    out.push(diag(
+                        file,
+                        n.line,
+                        format!("`for … in {}` iterates a HashMap in randomized order; sort keys first", n.text),
+                    ));
+                }
+            }
+        }
+        // wall-clock and entropy sources
+        if t.kind == TokKind::Ident
+            && matches!(t.text.as_str(), "Instant" | "SystemTime")
+            && toks.get(i + 1).is_some_and(|n| n.is_punct(':'))
+            && toks.get(i + 2).is_some_and(|n| n.is_punct(':'))
+            && toks.get(i + 3).is_some_and(|n| n.is_ident("now"))
+        {
+            out.push(diag(file, t.line, format!("{}::now() makes results time-dependent", t.text)));
+        }
+        if t.kind == TokKind::Ident && matches!(t.text.as_str(), "thread_rng" | "from_entropy" | "random") {
+            out.push(diag(file, t.line, format!("`{}` injects entropy into a result-affecting path", t.text)));
+        }
+    }
+    out
+}
+
+/// Identifiers bound to a `HashMap`/`HashSet` in non-test code: either a
+/// `let [mut] name … HashMap …;` statement or a `name: [&mut] HashMap`
+/// type ascription (fn params, struct fields in scope).
+fn hash_bound_names(file: &SourceFile) -> Vec<String> {
+    let toks = &file.tokens;
+    let mut names = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if file.is_test[i] {
+            continue;
+        }
+        if t.is_ident("let") {
+            let mut j = i + 1;
+            if toks.get(j).is_some_and(|n| n.is_ident("mut")) {
+                j += 1;
+            }
+            let Some(name) = toks.get(j).filter(|n| n.kind == TokKind::Ident) else {
+                continue;
+            };
+            let mut k = j + 1;
+            while let Some(n) = toks.get(k) {
+                if n.is_punct(';') {
+                    break;
+                }
+                if is_hash_container(n) {
+                    names.push(name.text.clone());
+                    break;
+                }
+                k += 1;
+            }
+        }
+        if t.kind == TokKind::Ident && toks.get(i + 1).is_some_and(|n| n.is_punct(':')) {
+            let mut j = i + 2;
+            while toks.get(j).is_some_and(|n| n.is_punct('&') || n.is_ident("mut")) {
+                j += 1;
+            }
+            if toks.get(j).is_some_and(is_hash_container) {
+                names.push(t.text.clone());
+            }
+        }
+    }
+    names
+}
+
+fn is_hash_container(t: &Token) -> bool {
+    t.is_ident("HashMap") || t.is_ident("HashSet")
+}
+
+fn diag(file: &SourceFile, line: usize, message: String) -> Diagnostic {
+    Diagnostic { rule: RULE, file: format!("rust/src/{}", file.rel), line, message }
+}

@@ -1,0 +1,112 @@
+//! R4 — stage isolation: the S1→S6 dataflow is one-directional.
+//!
+//! In the RTL each pipeline stage reads only its predecessor's register
+//! and the generator parameters; there is no back-edge and no skip-ahead.
+//! The software stages mirror that: `pdpu/stages/sN_*` may reference
+//! earlier stages (`sM_*` with `M ≤ N`), the configuration
+//! (`crate::pdpu::{config, PdpuConfig}`), and the posit layer
+//! (`crate::posit`) — nothing else. A stage reaching *forward* (S3 using
+//! an S5 record) or *outward* (a stage importing the engine or the
+//! coordinator) breaks the property that makes the per-stage cost model
+//! and the cycle-level pipeline model attach to real boundaries.
+
+use super::super::lexer::{SourceFile, TokKind};
+use super::super::Diagnostic;
+
+pub const RULE: &str = "stage-isolation";
+
+/// Stage-numbered files only (`pdpu/stages/s<N>_…`), not the stage index.
+pub fn applies(rel: &str) -> bool {
+    stage_number(rel).is_some()
+}
+
+/// The stage number encoded in a path like `pdpu/stages/s3_align.rs`.
+fn stage_number(rel: &str) -> Option<u32> {
+    let name = rel.strip_prefix("pdpu/stages/s")?;
+    let digits: String = name.chars().take_while(|c| c.is_ascii_digit()).collect();
+    if digits.is_empty() || !name[digits.len()..].starts_with('_') {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// A `sM_…` identifier's stage number, if it is one.
+fn ident_stage(text: &str) -> Option<u32> {
+    let rest = text.strip_prefix('s')?;
+    let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+    if digits.is_empty() || !rest[digits.len()..].starts_with('_') {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+pub fn check(file: &SourceFile) -> Vec<Diagnostic> {
+    let Some(own) = stage_number(&file.rel) else {
+        return Vec::new();
+    };
+    let toks = &file.tokens;
+    let mut out = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if file.is_test[i] || t.kind != TokKind::Ident {
+            continue;
+        }
+        if let Some(m) = ident_stage(&t.text) {
+            if m > own {
+                out.push(diag(
+                    file,
+                    t.line,
+                    format!("stage S{own} references later stage `{}` — dataflow is S1→S6 only", t.text),
+                ));
+            }
+        }
+        // absolute paths: only `crate::posit` and the config side of
+        // `crate::pdpu` are legal from inside a stage
+        if t.is_ident("crate")
+            && toks.get(i + 1).is_some_and(|n| n.is_punct(':'))
+            && toks.get(i + 2).is_some_and(|n| n.is_punct(':'))
+        {
+            if let Some(seg) = toks.get(i + 3) {
+                match seg.text.as_str() {
+                    "posit" => {}
+                    "pdpu" => {
+                        let sub = toks
+                            .get(i + 4)
+                            .zip(toks.get(i + 5))
+                            .filter(|(a, b)| a.is_punct(':') && b.is_punct(':'))
+                            .and_then(|_| toks.get(i + 6));
+                        if let Some(sub) = sub {
+                            if !matches!(sub.text.as_str(), "config" | "PdpuConfig" | "ConfigError" | "stages") {
+                                out.push(diag(
+                                    file,
+                                    seg.line,
+                                    format!(
+                                        "stage S{own} reaches outside the stage dataflow: crate::pdpu::{}",
+                                        sub.text
+                                    ),
+                                ));
+                            }
+                        }
+                    }
+                    other => out.push(diag(
+                        file,
+                        seg.line,
+                        format!("stage S{own} depends on `crate::{other}` — stages see only earlier stages + config"),
+                    )),
+                }
+            }
+        }
+        // `super::super::…` escapes the stage directory entirely
+        if t.is_ident("super")
+            && toks.get(i + 1).is_some_and(|n| n.is_punct(':'))
+            && toks.get(i + 2).is_some_and(|n| n.is_punct(':'))
+            && toks.get(i + 3).is_some_and(|n| n.is_ident("super"))
+        {
+            out.push(diag(file, t.line, format!("stage S{own} escapes pdpu/stages via super::super")));
+        }
+    }
+    out
+}
+
+fn diag(file: &SourceFile, line: usize, message: String) -> Diagnostic {
+    Diagnostic { rule: RULE, file: format!("rust/src/{}", file.rel), line, message }
+}

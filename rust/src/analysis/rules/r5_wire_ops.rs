@@ -1,0 +1,114 @@
+//! R5 — wire-op exhaustiveness: code and protocol docs cannot drift.
+//!
+//! The TCP server's `handle_request` dispatch and the op table in
+//! `docs/ARCHITECTURE.md` must list exactly the same operations, both
+//! directions: an op served but undocumented is an API clients cannot
+//! discover; an op documented but unserved is a doc lying about the
+//! protocol. The served set is extracted from the `Some("…")` match arms
+//! inside `handle_request`; the documented set from the markdown table
+//! between the `<!-- wire-ops:begin -->` / `<!-- wire-ops:end -->`
+//! markers.
+
+use super::super::lexer::{SourceFile, TokKind};
+use super::super::Diagnostic;
+
+pub const RULE: &str = "wire-ops";
+
+/// Markers delimiting the op table in the architecture doc.
+pub const DOCS_BEGIN: &str = "<!-- wire-ops:begin -->";
+pub const DOCS_END: &str = "<!-- wire-ops:end -->";
+
+/// Ops matched in `handle_request`, with the line of each match arm.
+pub fn served_ops(server: &SourceFile) -> Vec<(String, usize)> {
+    let body = server
+        .fns
+        .iter()
+        .find(|f| f.name == "handle_request")
+        .and_then(|f| f.body);
+    let Some((a, b)) = body else {
+        return Vec::new();
+    };
+    let toks = &server.tokens;
+    let mut out: Vec<(String, usize)> = Vec::new();
+    for i in a..=b.min(toks.len().saturating_sub(1)) {
+        if server.is_test[i] {
+            continue;
+        }
+        if toks[i].is_ident("Some")
+            && toks.get(i + 1).is_some_and(|n| n.is_punct('('))
+            && toks.get(i + 2).is_some_and(|n| n.kind == TokKind::Str)
+        {
+            let op = toks[i + 2].text.clone();
+            if !out.iter().any(|(o, _)| o == &op) {
+                out.push((op, toks[i + 2].line));
+            }
+        }
+    }
+    out
+}
+
+/// Ops listed in the documentation table, with their doc line numbers.
+/// `None` when the markers are missing.
+pub fn documented_ops(docs: &str) -> Option<Vec<(String, usize)>> {
+    let mut inside = false;
+    let mut seen_begin = false;
+    let mut out = Vec::new();
+    for (ln, line) in docs.lines().enumerate() {
+        let trimmed = line.trim();
+        if trimmed == DOCS_BEGIN {
+            inside = true;
+            seen_begin = true;
+            continue;
+        }
+        if trimmed == DOCS_END {
+            inside = false;
+            continue;
+        }
+        if !inside || !trimmed.starts_with('|') {
+            continue;
+        }
+        let cell = trimmed.trim_start_matches('|').split('|').next().unwrap_or("").trim();
+        let op = cell.trim_matches('`').trim();
+        if op.is_empty() || op == "op" || op.chars().all(|c| matches!(c, '-' | ':' | ' ')) {
+            continue; // header / separator rows
+        }
+        out.push((op.to_string(), ln + 1));
+    }
+    seen_begin.then_some(out)
+}
+
+/// Compare the two sets; every mismatch is a diagnostic.
+pub fn check(server: &SourceFile, docs: &str, docs_rel: &str) -> Vec<Diagnostic> {
+    let served = served_ops(server);
+    let server_file = format!("rust/src/{}", server.rel);
+    let Some(documented) = documented_ops(docs) else {
+        return vec![Diagnostic {
+            rule: RULE,
+            file: docs_rel.to_string(),
+            line: 1,
+            message: format!("missing wire-op table markers `{DOCS_BEGIN}` / `{DOCS_END}`"),
+        }];
+    };
+    let mut out = Vec::new();
+    for (op, line) in &served {
+        if !documented.iter().any(|(d, _)| d == op) {
+            out.push(Diagnostic {
+                rule: RULE,
+                file: server_file.clone(),
+                line: *line,
+                message: format!("wire op '{op}' is served but missing from the {docs_rel} op table"),
+            });
+        }
+    }
+    for (op, line) in &documented {
+        if !served.iter().any(|(s, _)| s == op) {
+            out.push(Diagnostic {
+                rule: RULE,
+                file: docs_rel.to_string(),
+                line: *line,
+                message: format!("wire op '{op}' is documented but not matched in handle_request"),
+            });
+        }
+    }
+    out
+}

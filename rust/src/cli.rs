@@ -8,6 +8,7 @@
 //!   schedule …                      PDPU-array scheduling report
 //!   serve …                         start the inference server
 //!   train …                         posit SGD on the software engine
+//!   lint [--root DIR]               run the pdpu static-analysis pass
 //!   selftest                        artifact + runtime smoke check
 
 use std::collections::HashMap;
@@ -93,6 +94,10 @@ COMMANDS
         [--lr F] [--seed S]       mixed-precision posit SGD through the
                                   software engine on the bundled dataset
                                   (per-epoch loss/accuracy; no artifacts)
+  lint [--root DIR]               run the pdpu static-analysis pass over
+                                  rust/src (panic-freedom, alloc-freedom,
+                                  determinism, stage isolation, wire ops);
+                                  exit 1 on any unsuppressed violation
   selftest [--artifacts DIR]      load artifacts, run a PJRT smoke batch
 ";
 
@@ -110,6 +115,7 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<i32> {
         "schedule" => cmd_schedule(&args),
         "serve" => cmd_serve(&args),
         "train" => cmd_train(&args),
+        "lint" => cmd_lint(&args),
         "selftest" => cmd_selftest(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -264,24 +270,24 @@ fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
     let addr = args.flag("addr").unwrap_or("127.0.0.1:7878");
     let dir = args.flag("artifacts").unwrap_or("artifacts");
     let policy = ServerPolicy { fuse_gemm: args.flag("no-fuse").is_none() };
-    let software = || {
-        ServiceHandle::start_software(
+    let software = || -> anyhow::Result<ServiceHandle> {
+        Ok(ServiceHandle::start_software(
             PdpuConfig::paper_default(),
             vec![784, 128, 10],
             args.flag_usize("batch", 32).max(1),
             (32, 147, 32),
             2023,
-        )
+        )?)
     };
     let service = if args.flag("software").is_some() {
         println!("backend: software PDPU engine (batched bit-exact functional model)");
-        software()
+        software()?
     } else {
         match ServiceHandle::start(dir) {
             Ok(s) => s,
             Err(e) => {
                 println!("PJRT backend unavailable ({e:#}); serving via the software PDPU engine");
-                software()
+                software()?
             }
         }
     };
@@ -369,6 +375,27 @@ fn cmd_train(args: &Args) -> anyhow::Result<i32> {
     Ok(0)
 }
 
+fn cmd_lint(args: &Args) -> anyhow::Result<i32> {
+    use crate::analysis;
+    let root = std::path::PathBuf::from(args.flag("root").unwrap_or("."));
+    anyhow::ensure!(
+        root.join("rust").join("src").is_dir(),
+        "no rust/src under {} — run from the repo root or pass --root",
+        root.display()
+    );
+    let diags = analysis::run_lint(&root).map_err(|e| anyhow::anyhow!(e))?;
+    for d in &diags {
+        println!("{d}");
+    }
+    if diags.is_empty() {
+        println!("pdpu lint: clean");
+        Ok(0)
+    } else {
+        println!("pdpu lint: {} violation(s)", diags.len());
+        Ok(1)
+    }
+}
+
 fn cmd_selftest(args: &Args) -> anyhow::Result<i32> {
     use crate::coordinator::PositService;
     let dir = args.flag("artifacts").unwrap_or("artifacts");
@@ -453,5 +480,16 @@ mod tests {
     fn train_rejects_bad_lr() {
         assert!(run(argv("train --lr nope")).is_err());
         assert!(run(argv("train --lr -1")).is_err());
+    }
+
+    #[test]
+    fn lint_runs_clean_on_this_repo() {
+        let v = vec!["lint".to_string(), format!("--root={}", env!("CARGO_MANIFEST_DIR"))];
+        assert_eq!(run(v).unwrap(), 0);
+    }
+
+    #[test]
+    fn lint_rejects_missing_root() {
+        assert!(run(argv("lint --root /nonexistent-pdpu-root")).is_err());
     }
 }

@@ -10,10 +10,12 @@
 //! * an item waits at most ~`max_wait` before its batch is launched;
 //! * replies match their requests (no cross-wiring), in any interleaving.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use super::lock_unpoisoned;
 use super::metrics::Metrics;
 
 /// Batch-formation policy.
@@ -53,7 +55,7 @@ struct Pending<I, O> {
 pub struct Batcher<I: Send, O: Send> {
     queue: Arc<Mutex<Vec<Pending<I, O>>>>,
     metrics: Arc<Metrics>,
-    shutdown: Arc<Mutex<bool>>,
+    shutdown: Arc<AtomicBool>,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -61,12 +63,12 @@ impl<I: Send + 'static, O: Send + 'static> Batcher<I, O> {
     /// Spawn the executor thread over `backend`.
     pub fn spawn(policy: BatchPolicy, metrics: Arc<Metrics>, mut backend: impl BatchBackend<I, O> + 'static) -> Self {
         let queue: Arc<Mutex<Vec<Pending<I, O>>>> = Arc::new(Mutex::new(Vec::new()));
-        let shutdown = Arc::new(Mutex::new(false));
+        let shutdown = Arc::new(AtomicBool::new(false));
         let (q, m, sd) = (queue.clone(), metrics.clone(), shutdown.clone());
         let worker = std::thread::spawn(move || loop {
             // form a batch under the policy
             let batch: Vec<Pending<I, O>> = {
-                let mut guard = q.lock().unwrap();
+                let mut guard = lock_unpoisoned(&q);
                 let ready = guard.len() >= policy.max_batch
                     || guard.first().is_some_and(|p| p.enqueued.elapsed() >= policy.max_wait);
                 if ready {
@@ -77,7 +79,7 @@ impl<I: Send + 'static, O: Send + 'static> Batcher<I, O> {
                 }
             };
             if batch.is_empty() {
-                if *sd.lock().unwrap() {
+                if sd.load(Ordering::Relaxed) {
                     return;
                 }
                 std::thread::sleep(Duration::from_micros(100));
@@ -110,7 +112,7 @@ impl<I: Send + 'static, O: Send + 'static> Batcher<I, O> {
     pub fn submit(&self, item: I) -> Receiver<Result<O, String>> {
         self.metrics.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let (tx, rx) = channel();
-        self.queue.lock().unwrap().push(Pending { item, reply: tx, enqueued: Instant::now() });
+        lock_unpoisoned(&self.queue).push(Pending { item, reply: tx, enqueued: Instant::now() });
         rx
     }
 
@@ -122,7 +124,7 @@ impl<I: Send + 'static, O: Send + 'static> Batcher<I, O> {
 
 impl<I: Send, O: Send> Drop for Batcher<I, O> {
     fn drop(&mut self) {
-        *self.shutdown.lock().unwrap() = true;
+        self.shutdown.store(true, Ordering::Relaxed);
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
@@ -237,7 +239,8 @@ mod tests {
     fn batches_run_through_software_engine() {
         use super::super::engine::ServiceHandle;
         use crate::pdpu::PdpuConfig;
-        let svc = ServiceHandle::start_software(PdpuConfig::paper_default(), vec![6, 3], 8, (2, 2, 2), 1);
+        let svc =
+            ServiceHandle::start_software(PdpuConfig::paper_default(), vec![6, 3], 8, (2, 2, 2), 1).unwrap();
         let m = Arc::new(Metrics::new());
         let backend_svc = svc.clone();
         let b: Batcher<Vec<f32>, Vec<f32>> = Batcher::spawn(
@@ -271,13 +274,7 @@ mod tests {
     fn fused_gemm_replies_match_requests_under_concurrency() {
         use super::super::service::SoftwareService;
         use crate::pdpu::PdpuConfig;
-        let svc = Arc::new(SoftwareService::new(
-            PdpuConfig::paper_default(),
-            &[4, 3],
-            4,
-            (3, 4, 2),
-            0xFEE1,
-        ));
+        let svc = Arc::new(SoftwareService::new(PdpuConfig::paper_default(), &[4, 3], 4, (3, 4, 2), 0xFEE1).unwrap());
         let (m, k, n) = svc.gemm_mkn();
         let backend_svc = svc.clone();
         let b: Arc<Batcher<(Vec<f32>, Vec<f32>), Vec<f32>>> = Arc::new(Batcher::spawn(

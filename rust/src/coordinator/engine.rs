@@ -9,8 +9,9 @@ use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 
 use super::fusion::FusionStats;
+use super::lock_unpoisoned;
 use super::service::{PositService, SoftwareService};
-use crate::pdpu::PdpuConfig;
+use crate::pdpu::{ConfigError, PdpuConfig};
 
 /// One result per queued GEMM request plus the fusion outcome counters.
 pub type GemmBatchReply = (Vec<Result<Vec<f32>, String>>, FusionStats);
@@ -50,9 +51,6 @@ pub struct ServiceHandle {
     joiner: Arc<Mutex<Option<std::thread::JoinHandle<()>>>>,
 }
 
-// the Sender and info are Send+Sync-safe; the join handle sits in a Mutex
-unsafe impl Sync for ServiceHandle {}
-
 impl ServiceHandle {
     /// Spawn the engine thread, loading artifacts from `dir`.
     pub fn start(dir: impl Into<std::path::PathBuf>) -> anyhow::Result<ServiceHandle> {
@@ -65,8 +63,8 @@ impl ServiceHandle {
                     let m = s.manifest();
                     let _ = info_tx.send(Ok(ModelInfo {
                         batch: m.batch,
-                        input_dim: m.layer_sizes[0],
-                        classes: *m.layer_sizes.last().unwrap(),
+                        input_dim: m.input_dim(),
+                        classes: m.classes(),
                         gemm_mkn: m.gemm_mkn,
                         n_in: m.n_in,
                         n_out: m.n_out,
@@ -120,25 +118,21 @@ impl ServiceHandle {
     ///
     /// The service is constructed (and its configuration validated) on the
     /// caller's thread *before* the engine thread spawns, so an invalid
-    /// configuration panics here with its real message instead of killing
-    /// the engine thread and turning every later request into an opaque
-    /// "engine gone" error.
-    ///
-    /// # Panics
-    /// If `layer_sizes` has fewer than two entries or contains a zero, or
-    /// if `batch == 0` (the [`SoftwareService::new`] invariants).
+    /// configuration comes back as a typed [`ConfigError`] with its real
+    /// message instead of killing the engine thread and turning every
+    /// later request into an opaque "engine gone" error.
     pub fn start_software(
         cfg: PdpuConfig,
         layer_sizes: Vec<usize>,
         batch: usize,
         gemm_mkn: (usize, usize, usize),
         seed: u64,
-    ) -> ServiceHandle {
-        let service = SoftwareService::new(cfg, &layer_sizes, batch, gemm_mkn, seed);
+    ) -> Result<ServiceHandle, ConfigError> {
+        let service = SoftwareService::new(cfg, &layer_sizes, batch, gemm_mkn, seed)?;
         let info = ModelInfo {
             batch,
-            input_dim: layer_sizes[0],
-            classes: *layer_sizes.last().unwrap(),
+            input_dim: service.input_dim(),
+            classes: service.classes(),
             gemm_mkn,
             n_in: cfg.in_fmt.n(),
             n_out: cfg.out_fmt.n(),
@@ -164,7 +158,7 @@ impl ServiceHandle {
                 }
             }
         });
-        ServiceHandle { tx, info, joiner: Arc::new(Mutex::new(Some(joiner))) }
+        Ok(ServiceHandle { tx, info, joiner: Arc::new(Mutex::new(Some(joiner))) })
     }
 
     /// Static model facts (shapes and posit formats).
@@ -211,7 +205,7 @@ impl ServiceHandle {
     /// Ask the engine to exit once current work drains.
     pub fn shutdown(&self) {
         let _ = self.tx.send(EngineReq::Shutdown);
-        if let Some(j) = self.joiner.lock().unwrap().take() {
+        if let Some(j) = lock_unpoisoned(&self.joiner).take() {
             let _ = j.join();
         }
     }

@@ -129,14 +129,16 @@ pub struct FusionStats {
 /// representative compare inside the bucket rejects hash collisions.
 pub fn plan_fusion(tiles: &[GemmTile]) -> Vec<Vec<usize>> {
     let mut groups: Vec<Vec<usize>> = Vec::new();
-    let mut interned: HashMap<(PdpuConfig, usize, u64), Vec<usize>> = HashMap::new();
+    // bucket entries carry (group index, representative tile index) so the
+    // confirm compare needs no back-indexing into the groups themselves
+    let mut interned: HashMap<(PdpuConfig, usize, u64), Vec<(usize, usize)>> = HashMap::new();
     for (i, t) in tiles.iter().enumerate() {
         t.assert_shapes();
         let bucket = interned.entry((t.cfg, t.k, plane_hash(t))).or_default();
-        match bucket.iter().copied().find(|&g| t.fuses_with(&tiles[groups[g][0]])) {
-            Some(g) => groups[g].push(i),
+        match bucket.iter().find(|&&(_, rep)| t.fuses_with(&tiles[rep])) {
+            Some(&(g, _)) => groups[g].push(i),
             None => {
-                bucket.push(groups.len());
+                bucket.push((groups.len(), i));
                 groups.push(vec![i]);
             }
         }
@@ -157,7 +159,8 @@ pub fn execute_fused(tiles: &[GemmTile]) -> (Vec<Vec<f64>>, FusionStats) {
         if g.len() > 1 {
             stats.fused_tiles += g.len() as u64;
         }
-        let first = &tiles[g[0]];
+        let Some(&first_idx) = g.first() else { continue };
+        let first = &tiles[first_idx];
         let (cfg, k) = (first.cfg, first.k);
         let engine = BatchEngine::new(cfg);
         let wp = PreparedOperands::quantize(cfg.in_fmt, &first.a, k);

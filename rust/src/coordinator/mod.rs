@@ -23,6 +23,21 @@ pub mod scheduler;
 pub mod server;
 pub mod service;
 
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock a mutex, recovering from poisoning instead of panicking.
+///
+/// A panicking worker poisons every mutex it held; with `lock().unwrap()`
+/// each later request touching that lock then panics too, turning one bad
+/// request into a permanent denial of service. All coordinator state
+/// guarded by these mutexes (queues, parameter tensors, counters) stays
+/// structurally valid across a mid-update panic — updates are
+/// whole-value swaps or monotonic counters — so recovering the guard is
+/// sound, and the serving tier keeps answering.
+pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 pub use batcher::{BatchPolicy, Batcher};
 pub use engine::{ModelInfo, ServiceHandle};
 pub use fusion::{execute_fused, execute_unfused, plan_fusion, FusionStats, GemmTile};

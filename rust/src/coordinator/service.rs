@@ -7,10 +7,11 @@ use std::path::Path;
 use std::sync::Mutex;
 
 use super::fusion::{self, FusionStats, GemmTile};
+use super::lock_unpoisoned;
 use crate::baselines::{DotArch, PdpuArch};
 use crate::dnn::layers::with_zero_seeds;
 use crate::dnn::Tensor;
-use crate::pdpu::PdpuConfig;
+use crate::pdpu::{validate_layer_sizes, ConfigError, PdpuConfig};
 use crate::runtime::{literal_f32, literal_i32, to_vec_f32, ArtifactManifest, LoadedModel, Runtime};
 use crate::train::{softmax_xent_batch, Sgd, TrainGraph};
 
@@ -50,16 +51,16 @@ impl PositService {
 
     /// Input feature count per image.
     pub fn input_dim(&self) -> usize {
-        self.manifest.layer_sizes[0]
+        self.manifest.input_dim()
     }
 
     /// Output class count.
     pub fn classes(&self) -> usize {
-        *self.manifest.layer_sizes.last().unwrap()
+        self.manifest.classes()
     }
 
     fn param_literals(&self) -> Result<Vec<xla::Literal>> {
-        let params = self.params.lock().unwrap();
+        let params = lock_unpoisoned(&self.params);
         params
             .iter()
             .zip(&self.param_shapes)
@@ -81,7 +82,7 @@ impl PositService {
         let mut args = self.param_literals()?;
         args.push(literal_f32(&flat, &[b, d])?);
         let out = self.infer.execute(&args)?;
-        let logits = to_vec_f32(&out[0])?;
+        let logits = to_vec_f32(out.first().context("infer produced no outputs")?)?;
         let c = self.classes();
         Ok(images.iter().enumerate().map(|(i, _)| logits[i * c..(i + 1) * c].to_vec()).collect())
     }
@@ -103,12 +104,12 @@ impl PositService {
         args.push(literal_i32(&ys, &[b])?);
         let out = self.train.execute(&args)?;
         anyhow::ensure!(out.len() == self.param_shapes.len() + 1, "train step output arity");
-        let mut params = self.params.lock().unwrap();
+        let mut params = lock_unpoisoned(&self.params);
         for (slot, lit) in params.iter_mut().zip(&out[..self.param_shapes.len()]) {
             *slot = to_vec_f32(lit)?;
         }
         let loss = to_vec_f32(&out[self.param_shapes.len()])?;
-        Ok(loss[0])
+        loss.first().copied().context("train step produced an empty loss")
     }
 
     /// Raw posit GEMM at the compiled (M, K, N).
@@ -120,12 +121,12 @@ impl PositService {
             .gemm
             .execute(&[literal_f32(a, &[m, k])?, literal_f32(b, &[k, n])?])
             .context("gemm execute")?;
-        to_vec_f32(&out[0])
+        to_vec_f32(out.first().context("gemm produced no outputs")?)
     }
 
     /// Snapshot of current parameters (for checkpoint-style inspection).
     pub fn params_snapshot(&self) -> Vec<Vec<f32>> {
-        self.params.lock().unwrap().clone()
+        lock_unpoisoned(&self.params).clone()
     }
 }
 
@@ -157,22 +158,27 @@ pub struct SoftwareService {
 
 impl SoftwareService {
     /// Build a software model: `layer_sizes` = [input, hidden…, classes].
+    /// The topology and batch size are validated here, once, so every
+    /// request-path accessor below can assume a well-formed model.
     pub fn new(
         cfg: PdpuConfig,
         layer_sizes: &[usize],
         batch: usize,
         gemm_mkn: (usize, usize, usize),
         seed: u64,
-    ) -> Self {
-        assert!(batch >= 1);
-        Self {
+    ) -> Result<Self, ConfigError> {
+        validate_layer_sizes(layer_sizes)?;
+        if batch == 0 {
+            return Err(ConfigError::BadBatch);
+        }
+        Ok(Self {
             arch: PdpuArch::new(cfg),
             graph: Mutex::new(TrainGraph::new(cfg, layer_sizes, seed)),
             sgd: Sgd::new(SOFTWARE_TRAIN_LR, &cfg),
             layer_sizes: layer_sizes.to_vec(),
             batch,
             gemm_mkn,
-        }
+        })
     }
 
     /// Override the train-step learning rate (builder style).
@@ -181,14 +187,15 @@ impl SoftwareService {
         self
     }
 
-    /// Input feature count per image.
+    /// Input feature count per image. (`layer_sizes` was validated
+    /// non-degenerate in [`Self::new`], so the fallback never fires.)
     pub fn input_dim(&self) -> usize {
-        self.layer_sizes[0]
+        self.layer_sizes.first().copied().unwrap_or(0)
     }
 
     /// Output class count.
     pub fn classes(&self) -> usize {
-        *self.layer_sizes.last().unwrap()
+        self.layer_sizes.last().copied().unwrap_or(0)
     }
 
     /// Configured maximum batch size.
@@ -227,8 +234,8 @@ impl SoftwareService {
     /// layer, ReLU between layers. Deterministic between train steps.
     pub fn infer_batch(&self, images: &[Vec<f32>]) -> std::result::Result<Vec<Vec<f32>>, String> {
         let xs = self.images_tensor(images)?;
-        let b = xs.shape()[0];
-        let logits = self.graph.lock().unwrap().infer(&xs);
+        let b = images.len();
+        let logits = lock_unpoisoned(&self.graph).infer(&xs);
         let c = self.classes();
         Ok((0..b)
             .map(|i| logits.data()[i * c..(i + 1) * c].iter().map(|&v| v as f32).collect())
@@ -251,7 +258,7 @@ impl SoftwareService {
         }
         let xs = self.images_tensor(images)?;
         let labels: Vec<usize> = labels.iter().map(|&l| l as usize).collect();
-        let mut graph = self.graph.lock().unwrap();
+        let mut graph = lock_unpoisoned(&self.graph);
         let trace = graph.forward(&xs);
         let (loss, dlogits) = softmax_xent_batch(trace.logits(), &labels);
         let grads = graph.backward(&trace, &dlogits);
@@ -330,7 +337,25 @@ mod tests {
     use super::*;
 
     fn svc() -> SoftwareService {
-        SoftwareService::new(PdpuConfig::paper_default(), &[12, 8, 3], 4, (4, 6, 5), 0x5EED)
+        SoftwareService::new(PdpuConfig::paper_default(), &[12, 8, 3], 4, (4, 6, 5), 0x5EED).unwrap()
+    }
+
+    #[test]
+    fn construction_rejects_degenerate_models() {
+        let cfg = PdpuConfig::paper_default();
+        assert!(matches!(
+            SoftwareService::new(cfg, &[], 4, (4, 6, 5), 1),
+            Err(ConfigError::BadLayerCount(0))
+        ));
+        assert!(matches!(
+            SoftwareService::new(cfg, &[12], 4, (4, 6, 5), 1),
+            Err(ConfigError::BadLayerCount(1))
+        ));
+        assert!(matches!(
+            SoftwareService::new(cfg, &[12, 0, 3], 4, (4, 6, 5), 1),
+            Err(ConfigError::ZeroLayerWidth(1))
+        ));
+        assert!(matches!(SoftwareService::new(cfg, &[12, 3], 0, (4, 6, 5), 1), Err(ConfigError::BadBatch)));
     }
 
     #[test]

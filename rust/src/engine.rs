@@ -197,6 +197,7 @@ impl BatchEngine {
     /// One chunked dot product over pre-decoded planes: bit-identical to
     /// `Pdpu::dot_chunked(acc, row_posits, col_posits)` — same chunking,
     /// same zero-padded tail, same single rounding per chunk.
+    // pdpu-lint: hot-path
     pub fn dot_prepared(
         &self,
         acc: Posit,

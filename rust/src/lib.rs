@@ -1,3 +1,5 @@
+#![forbid(unsafe_code)]
+
 //! # PDPU — posit dot-product unit, full-stack reproduction
 //!
 //! Reproduction of Li, Fang & Wang, *"PDPU: An Open-Source Posit
@@ -28,6 +30,10 @@
 //!   posit quantization-on-update and quire-accumulated gradient sums.
 //! * [`testing`] — in-repo property-testing support (offline image has no
 //!   proptest).
+//! * [`analysis`] — `pdpu lint`: a domain-specific static-analysis pass
+//!   enforcing the serving/pipeline invariants (panic-freedom,
+//!   hot-path allocation-freedom, determinism, stage isolation, wire-op
+//!   exhaustiveness) over this crate's own sources.
 //!
 //! # Batched execution
 //!
@@ -66,6 +72,7 @@
 //! throughput to `BENCH_serving.json`. See `docs/ARCHITECTURE.md` for the
 //! full module map.
 
+pub mod analysis;
 pub mod baselines;
 pub mod bench_harness;
 pub mod cli;

@@ -36,6 +36,12 @@ pub enum ConfigError {
     BadWm(u32),
     /// The derived S4 accumulator exceeds the functional model's 127 bits.
     AccTooWide(u32),
+    /// A model topology needs at least an input and an output layer.
+    BadLayerCount(usize),
+    /// A model layer with zero units (index into `layer_sizes`).
+    ZeroLayerWidth(usize),
+    /// A batch size of zero.
+    BadBatch,
 }
 
 impl From<PositError> for ConfigError {
@@ -59,8 +65,26 @@ impl std::fmt::Display for ConfigError {
                 f,
                 "accumulator width {w} exceeds the 127-bit functional-model limit; reduce Wm or N"
             ),
+            ConfigError::BadLayerCount(n) => {
+                write!(f, "model topology has {n} layer size(s); need at least input and output")
+            }
+            ConfigError::ZeroLayerWidth(i) => write!(f, "model layer {i} has zero units"),
+            ConfigError::BadBatch => write!(f, "batch size must be at least 1"),
         }
     }
+}
+
+/// Validate a model topology: at least `[input, output]`, every layer
+/// non-empty. Serving code calls this once at construction/manifest-load
+/// time so request paths can index `layer_sizes` without panicking.
+pub fn validate_layer_sizes(layer_sizes: &[usize]) -> Result<(), ConfigError> {
+    if layer_sizes.len() < 2 {
+        return Err(ConfigError::BadLayerCount(layer_sizes.len()));
+    }
+    if let Some(i) = layer_sizes.iter().position(|&w| w == 0) {
+        return Err(ConfigError::ZeroLayerWidth(i));
+    }
+    Ok(())
 }
 
 impl std::error::Error for ConfigError {}
@@ -239,6 +263,15 @@ mod tests {
         ] {
             assert!(cfg.is_ok());
         }
+    }
+
+    #[test]
+    fn layer_size_validation() {
+        assert!(matches!(validate_layer_sizes(&[]), Err(ConfigError::BadLayerCount(0))));
+        assert!(matches!(validate_layer_sizes(&[7]), Err(ConfigError::BadLayerCount(1))));
+        assert!(matches!(validate_layer_sizes(&[4, 0, 3]), Err(ConfigError::ZeroLayerWidth(1))));
+        assert!(validate_layer_sizes(&[4, 3]).is_ok());
+        assert!(validate_layer_sizes(&[12, 8, 3]).is_ok());
     }
 
     #[test]

@@ -14,6 +14,6 @@ pub mod pipeline;
 pub mod stages;
 pub mod unit;
 
-pub use config::{ceil_log2, ConfigError, PdpuConfig};
+pub use config::{ceil_log2, validate_layer_sizes, ConfigError, PdpuConfig};
 pub use pipeline::{Pipeline, PipelineStats};
 pub use unit::{DotScratch, Pdpu, Trace};

@@ -93,6 +93,7 @@ impl Pdpu {
 
     /// Like [`Self::dot`] but running through a reusable [`DotScratch`]
     /// instead of allocating fresh inter-stage records per call.
+    // pdpu-lint: hot-path
     pub fn dot_with(&self, acc: Posit, a: &[Posit], b: &[Posit], scratch: &mut DotScratch) -> Posit {
         s1_decode_into(&self.cfg, acc, a, b, &mut scratch.s1);
         s2_multiply_into(&self.cfg, &scratch.s1, &mut scratch.s2);
@@ -106,6 +107,7 @@ impl Pdpu {
     /// point the batched GEMM engine uses after fusing pre-decoded operand
     /// planes directly into `scratch.s1` (skipping the per-call posit
     /// decode entirely).
+    // pdpu-lint: hot-path
     pub(crate) fn finish_from_s1(&self, scratch: &mut DotScratch) -> Posit {
         s2_multiply_into(&self.cfg, &scratch.s1, &mut scratch.s2);
         s3_align_into(&self.cfg, &scratch.s2, &mut scratch.s3);

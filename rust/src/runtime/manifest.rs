@@ -3,6 +3,7 @@
 //! and the initial-parameter blob.
 
 use crate::coordinator::json::{parse, Json};
+use crate::pdpu::validate_layer_sizes;
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
 
@@ -104,25 +105,43 @@ impl ArtifactManifest {
             );
         }
 
+        let layer_sizes: Vec<usize> = v
+            .get("layer_sizes")
+            .and_then(Json::as_f64_vec)
+            .context("layer_sizes")?
+            .into_iter()
+            .map(|d| d as usize)
+            .collect();
+        // Reject degenerate topologies here, once, so the serving tier's
+        // input_dim()/classes() accessors can never hit an empty list.
+        validate_layer_sizes(&layer_sizes).map_err(|e| anyhow::anyhow!("manifest layer_sizes: {e}"))?;
+        let batch = v.get("batch").and_then(Json::as_usize).unwrap_or(32);
+        anyhow::ensure!(batch >= 1, "manifest batch must be at least 1");
+
         Ok(Self {
             dir,
             n_in: need(fmt, "n_in")? as u32,
             n_out: need(fmt, "n_out")? as u32,
             es: need(fmt, "es")? as u32,
-            batch: v.get("batch").and_then(Json::as_usize).unwrap_or(32),
-            layer_sizes: v
-                .get("layer_sizes")
-                .and_then(Json::as_f64_vec)
-                .context("layer_sizes")?
-                .into_iter()
-                .map(|d| d as usize)
-                .collect(),
+            batch,
+            layer_sizes,
             gemm_mkn: (need(gemm, "m")?, need(gemm, "k")?, need(gemm, "n")?),
             entries,
             param_shapes,
             params_file,
             param_offsets,
         })
+    }
+
+    /// Input feature count (first layer width). `layer_sizes` was
+    /// validated at load, so the fallback never fires.
+    pub fn input_dim(&self) -> usize {
+        self.layer_sizes.first().copied().unwrap_or(0)
+    }
+
+    /// Output class count (last layer width).
+    pub fn classes(&self) -> usize {
+        self.layer_sizes.last().copied().unwrap_or(0)
     }
 
     pub fn entry(&self, name: &str) -> Result<&EntrySig> {
@@ -187,6 +206,24 @@ mod tests {
         let train = m.entry("mlp_train_step").unwrap();
         assert_eq!(train.args.len(), 8);
         assert_eq!(train.outputs, 7);
+    }
+
+    #[test]
+    fn degenerate_layer_sizes_rejected_at_load() {
+        // a manifest with a single-layer topology must fail to load with a
+        // typed message, not panic later in input_dim()/classes()
+        let dir = std::env::temp_dir().join(format!("pdpu-manifest-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{
+            "format": {"n_in": 13, "n_out": 16, "es": 2},
+            "gemm": {"m": 4, "k": 6, "n": 5},
+            "params_bin": {"file": "params.bin", "tensors": []},
+            "layer_sizes": [784]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let err = ArtifactManifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("layer_sizes"), "unexpected error: {err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

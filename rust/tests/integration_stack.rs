@@ -123,7 +123,8 @@ fn software_backend_serves_without_artifacts() {
         8,
         (3, 5, 2),
         0x50F7,
-    );
+    )
+    .unwrap();
     assert_eq!(e.info().input_dim, 16);
     assert_eq!(e.info().classes, 4);
     assert_eq!((e.info().n_in, e.info().n_out, e.info().es), (13, 16, 2));

@@ -1,0 +1,147 @@
+//! Tier-1 gate for `pdpu lint` (`rust/src/analysis/`): the tree itself
+//! must be clean, and — so a regression in the analyzer can't silently
+//! pass a dirty tree — every rule must demonstrably *fire* on a fixture
+//! that violates it, and the suppression pragma must demonstrably work.
+
+use std::path::Path;
+
+use pdpu::analysis::lexer::SourceFile;
+use pdpu::analysis::{lint_source, rules, run_lint};
+
+/// The whole repo passes its own lint — the same check `pdpu lint` and CI
+/// run. A failure message lists every diagnostic.
+#[test]
+fn tree_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let diags = run_lint(root).expect("lint walked the tree");
+    let listing: Vec<String> = diags.iter().map(|d| d.to_string()).collect();
+    assert!(diags.is_empty(), "pdpu lint found {} violation(s):\n{}", diags.len(), listing.join("\n"));
+}
+
+/// R1 fires on `.unwrap()`, `.expect(…)`, panicking macros, and literal
+/// subscripts in non-test coordinator code — and nowhere else.
+#[test]
+fn r1_panic_freedom_fires_on_fixture() {
+    let src = "fn f(v: Vec<u64>) -> u64 {\n\
+               let a = v.first().copied().unwrap();\n\
+               let b: u64 = v.iter().sum::<u64>();\n\
+               if b == 0 { panic!(\"empty\"); }\n\
+               a + v[0]\n\
+               }\n";
+    let diags = lint_source("coordinator/fixture.rs", src);
+    assert_eq!(diags.len(), 3, "unwrap + panic! + v[0]: {diags:?}");
+    assert!(diags.iter().all(|d| d.rule == "panic-freedom"));
+    assert_eq!([diags[0].line, diags[1].line, diags[2].line], [2, 4, 5]);
+    // same source outside the serving tier is out of scope
+    assert!(lint_source("experiments/fixture.rs", src).is_empty());
+    // test code inside the serving tier is out of scope
+    let in_test = format!("#[cfg(test)]\nmod tests {{\n{src}\n}}\n");
+    assert!(lint_source("coordinator/fixture.rs", &in_test).is_empty());
+}
+
+/// R2 fires on allocating calls inside `*_into` stage kernels and inside
+/// `// pdpu-lint: hot-path`-marked functions; scratch-reuse ops pass.
+#[test]
+fn r2_alloc_freedom_fires_on_fixture() {
+    let stage = "pub fn s9_widen_into(xs: &[u64], out: &mut Vec<u64>) {\n\
+                 out.clear();\n\
+                 let ys = xs.to_vec();\n\
+                 out.extend(ys);\n\
+                 }\n";
+    let diags = lint_source("pdpu/stages/s9_widen.rs", stage);
+    assert!(
+        diags.iter().any(|d| d.rule == "alloc-freedom" && d.line == 3),
+        ".to_vec() in an _into kernel: {diags:?}"
+    );
+    // the same kernel outside pdpu/stages/ is out of scope…
+    assert!(lint_source("dnn/fixture.rs", stage).is_empty());
+    // …unless it carries the hot-path marker, which works anywhere
+    let hot = "// pdpu-lint: hot-path\nfn kernel(xs: &[u64]) -> Vec<u64> { xs.iter().map(|x| x + 1).collect() }\n";
+    let diags = lint_source("dnn/fixture.rs", hot);
+    assert_eq!(diags.len(), 1, ".collect() in a hot-path fn: {diags:?}");
+    assert_eq!(diags[0].rule, "alloc-freedom");
+    // allocation-free scratch reuse is exactly what the rule protects
+    let clean = "// pdpu-lint: hot-path\nfn kernel(xs: &[u64], out: &mut Vec<u64>) { out.clear(); out.extend(xs); }\n";
+    assert!(lint_source("dnn/fixture.rs", clean).is_empty());
+}
+
+/// R3 fires on hash-container iteration and clock/entropy reads in
+/// result-affecting files; keyed lookups stay legal.
+#[test]
+fn r3_determinism_fires_on_fixture() {
+    let src = "use std::collections::HashMap;\n\
+               fn f(m: &HashMap<u32, u32>) -> u64 {\n\
+               let mut s = 0u64;\n\
+               for (_k, v) in m.iter() { s += u64::from(*v); }\n\
+               let t = std::time::Instant::now();\n\
+               let _ = t;\n\
+               s\n\
+               }\n";
+    let diags = lint_source("pdpu/fixture.rs", src);
+    assert_eq!(diags.len(), 2, "m.iter() + Instant::now(): {diags:?}");
+    assert!(diags.iter().all(|d| d.rule == "determinism"));
+    // keyed lookups are order-free and allowed
+    let lookups = "use std::collections::HashMap;\n\
+                   fn f(m: &mut HashMap<u32, u32>) -> Option<u32> { m.insert(1, 2); m.get(&1).copied() }\n";
+    assert!(lint_source("pdpu/fixture.rs", lookups).is_empty());
+    // the batcher reads deadlines legitimately — out of R3's scope
+    assert!(lint_source("coordinator/batcher.rs", "fn f() { let _ = std::time::Instant::now(); }").is_empty());
+}
+
+/// R4 fires when a stage references a later stage or reaches outside the
+/// stage dataflow; earlier stages and the config stay legal.
+#[test]
+fn r4_stage_isolation_fires_on_fixture() {
+    let src = "use crate::engine::BatchEngine;\n\
+               use crate::pdpu::stages::s5_normalize::S5;\n\
+               fn f(cfg: &crate::pdpu::PdpuConfig) { let _ = cfg; }\n";
+    let diags = lint_source("pdpu/stages/s3_fixture.rs", src);
+    assert!(diags.iter().all(|d| d.rule == "stage-isolation"));
+    assert!(diags.iter().any(|d| d.line == 1), "crate::engine from a stage: {diags:?}");
+    assert!(diags.iter().any(|d| d.line == 2), "s5_* from S3: {diags:?}");
+    assert!(!diags.iter().any(|d| d.line == 3), "crate::pdpu::PdpuConfig is legal: {diags:?}");
+    // the same record is fine from S6 (s5 is an earlier stage there)
+    let s6 = "use super::s5_normalize::S5;\nfn f(x: S5) { let _ = x; }\n";
+    assert!(lint_source("pdpu/stages/s6_fixture.rs", s6).is_empty());
+}
+
+/// R5 fires in both directions: an op served but undocumented, and an op
+/// documented but unserved; missing table markers are their own error.
+#[test]
+fn r5_wire_ops_fires_on_fixture() {
+    let server_src = "fn handle_request(op: Option<&str>) -> u32 {\n\
+                      match op {\n\
+                      Some(\"ping\") => 1,\n\
+                      Some(\"infer\") => 2,\n\
+                      _ => 0,\n\
+                      }\n\
+                      }\n";
+    let server = SourceFile::parse("coordinator/server.rs", server_src);
+    let docs = "preamble\n<!-- wire-ops:begin -->\n| op | meaning |\n|---|---|\n\
+                | `ping` | liveness |\n| `stats` | counters |\n<!-- wire-ops:end -->\n";
+    let diags = rules::r5_wire_ops::check(&server, docs, "docs/ARCHITECTURE.md");
+    assert_eq!(diags.len(), 2, "served-undocumented + documented-unserved: {diags:?}");
+    assert!(diags.iter().any(|d| d.file.starts_with("rust/src/") && d.message.contains("'infer'")));
+    assert!(diags.iter().any(|d| d.file.starts_with("docs/") && d.message.contains("'stats'")));
+    // exact agreement is clean
+    let docs_ok = "<!-- wire-ops:begin -->\n| op |\n|---|\n| `ping` |\n| `infer` |\n<!-- wire-ops:end -->\n";
+    assert!(rules::r5_wire_ops::check(&server, docs_ok, "docs/ARCHITECTURE.md").is_empty());
+    // a doc without the markers cannot satisfy the rule
+    let no_markers = rules::r5_wire_ops::check(&server, "no table here\n", "docs/ARCHITECTURE.md");
+    assert_eq!(no_markers.len(), 1);
+    assert!(no_markers[0].message.contains("wire-ops:begin"));
+}
+
+/// The suppression pragma needs the right rule *and* a reason; a bare or
+/// reasonless pragma is itself a diagnostic and suppresses nothing.
+#[test]
+fn suppression_pragma_grammar_is_enforced() {
+    let violation = "fn f(v: Vec<u64>) -> u64 { v.first().copied().unwrap() }\n";
+    let suppressed =
+        format!("// pdpu-lint: allow(panic-freedom) — fixture: suppression must cover the next line\n{violation}");
+    assert!(lint_source("coordinator/fixture.rs", &suppressed).is_empty());
+    let reasonless = format!("// pdpu-lint: allow(panic-freedom)\n{violation}");
+    let diags = lint_source("coordinator/fixture.rs", &reasonless);
+    assert!(diags.iter().any(|d| d.rule == "pragma"), "reasonless pragma is malformed: {diags:?}");
+    assert!(diags.iter().any(|d| d.rule == "panic-freedom"), "and suppresses nothing: {diags:?}");
+}

@@ -195,10 +195,10 @@ fn epoch_loss_strictly_decreases_on_bundled_dataset() {
 fn train_step_direct_vs_wire_paths_bit_identical() {
     let cfg = PdpuConfig::paper_default();
     let (sizes, batch, mkn, seed) = (vec![8usize, 6, 3], 4usize, (2usize, 2usize, 2usize), 0xAB5Eu64);
-    let direct = SoftwareService::new(cfg, &sizes, batch, mkn, seed);
-    let handle = ServiceHandle::start_software(cfg, sizes.clone(), batch, mkn, seed);
+    let direct = SoftwareService::new(cfg, &sizes, batch, mkn, seed).unwrap();
+    let handle = ServiceHandle::start_software(cfg, sizes.clone(), batch, mkn, seed).unwrap();
     let metrics = Arc::new(Metrics::new());
-    let tcp_backend = ServiceHandle::start_software(cfg, sizes.clone(), batch, mkn, seed);
+    let tcp_backend = ServiceHandle::start_software(cfg, sizes.clone(), batch, mkn, seed).unwrap();
     let server = Server::start("127.0.0.1:0", tcp_backend.clone(), metrics.clone()).expect("server");
     let stream = TcpStream::connect(server.addr).expect("connect");
     let mut writer = stream.try_clone().unwrap();

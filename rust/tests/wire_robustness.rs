@@ -1,0 +1,127 @@
+//! Malformed-input robustness of the serving wire: the parser and the
+//! TCP loop must turn hostile bytes into errors, never into panics —
+//! a panic in a connection thread (or a stack-overflow abort in the
+//! parser) is a one-request denial of service against the always-on
+//! coordinator. Companion to the `panic-freedom` lint rule, which proves
+//! the same property statically.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use pdpu::coordinator::{json, Metrics, Server, ServiceHandle};
+use pdpu::pdpu::PdpuConfig;
+
+/// Every prefix of a valid request — i.e. every possible truncation
+/// point of a line cut mid-flight — parses to a clean `Err`, not a panic.
+#[test]
+fn truncated_json_errors_not_panics() {
+    let full = r#"{"op":"train","images":[[0.5,-1.0],[2.0,0.0]],"labels":[1,0],"note":"trunc é"}"#;
+    assert!(json::parse(full).is_ok());
+    for cut in 0..full.len() {
+        if !full.is_char_boundary(cut) {
+            continue;
+        }
+        let prefix = &full[..cut];
+        assert!(json::parse(prefix).is_err(), "truncated prefix {cut:?} ({prefix:?}) must be an error");
+    }
+}
+
+/// Unbalanced/garbage payloads all error out cleanly.
+#[test]
+fn garbage_payloads_error_not_panic() {
+    for bad in [
+        "",
+        "   ",
+        "not json at all",
+        "{",
+        "}",
+        "[1,2",
+        "{\"op\":}",
+        "{\"op\" \"ping\"}",
+        "\"unterminated",
+        "123abc",
+        "{\"op\":\"ping\"} trailing",
+        "\u{0}\u{1}\u{2}",
+    ] {
+        assert!(json::parse(bad).is_err(), "{bad:?} must be a parse error");
+    }
+}
+
+/// Deeply-nested input is rejected by the depth guard instead of
+/// overflowing the parser's stack (recursive descent would otherwise
+/// abort the whole process — no unwinding, no error response).
+#[test]
+fn nesting_bombs_are_rejected_not_fatal() {
+    let unclosed_arrays = "[".repeat(100_000);
+    let unclosed_objects = "{\"a\":".repeat(100_000);
+    let balanced = format!("{}1{}", "[".repeat(100_000), "]".repeat(100_000));
+    for bomb in [&unclosed_arrays, &unclosed_objects, &balanced] {
+        let e = json::parse(bomb).unwrap_err();
+        assert!(e.contains("nesting"), "depth guard should reject the bomb: {e}");
+    }
+}
+
+fn start_test_server() -> (Server, ServiceHandle, Arc<Metrics>) {
+    let svc = ServiceHandle::start_software(PdpuConfig::paper_default(), vec![6, 3], 4, (2, 2, 2), 0xD05).unwrap();
+    let metrics = Arc::new(Metrics::new());
+    let server = Server::start("127.0.0.1:0", svc.clone(), metrics.clone()).expect("bind test server");
+    (server, svc, metrics)
+}
+
+fn ping_ok(addr: std::net::SocketAddr) -> bool {
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+    writer.write_all(b"{\"op\":\"ping\"}\n").expect("send ping");
+    let mut resp = String::new();
+    reader.read_line(&mut resp).expect("read pong");
+    let v = json::parse(&resp).expect("pong is json");
+    v.get("pong").is_some()
+}
+
+/// A connection feeding garbage, truncated JSON, and a nesting bomb gets
+/// an error *response* per line — and the server keeps serving pings on
+/// fresh connections afterwards.
+#[test]
+fn hostile_lines_get_error_responses_and_server_survives() {
+    let (server, _svc, _metrics) = start_test_server();
+    let stream = TcpStream::connect(server.addr).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+
+    let hostile = ["not json at all", "{\"op\":\"inf", "{\"op\":\"no-such-op\"}", "{\"op\":\"infer\"}"];
+    for line in hostile {
+        writer.write_all(line.as_bytes()).expect("send");
+        writer.write_all(b"\n").expect("send newline");
+        let mut resp = String::new();
+        reader.read_line(&mut resp).expect("read response");
+        let v = json::parse(&resp).unwrap_or_else(|e| panic!("response to {line:?} not json: {e} ({resp:?})"));
+        assert!(v.get("error").is_some(), "hostile line {line:?} must get an error response: {resp:?}");
+    }
+    // a nesting bomb on the wire gets the depth-guard error, not an abort
+    let bomb = format!("{}\n", "[".repeat(50_000));
+    writer.write_all(bomb.as_bytes()).expect("send bomb");
+    let mut resp = String::new();
+    reader.read_line(&mut resp).expect("read bomb response");
+    assert!(resp.contains("nesting"), "bomb should be rejected by the depth guard: {resp:?}");
+
+    assert!(ping_ok(server.addr), "server must still serve after hostile traffic");
+}
+
+/// Raw non-UTF-8 bytes make `BufRead::lines` error; the connection drops
+/// without a response — but only that connection. The server survives.
+#[test]
+fn non_utf8_bytes_drop_the_connection_not_the_server() {
+    let (server, _svc, _metrics) = start_test_server();
+    let stream = TcpStream::connect(server.addr).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+    writer.write_all(&[0xFF, 0xFE, 0x80, 0x00, 0xC3, 0x28, b'\n']).expect("send raw bytes");
+    // the server closes this connection (read returns 0 bytes eventually)
+    let mut buf = [0u8; 64];
+    let n = reader.read(&mut buf).unwrap_or(0);
+    assert_eq!(n, 0, "non-UTF-8 line should close the connection silently");
+
+    assert!(ping_ok(server.addr), "server must still serve after a non-UTF-8 connection");
+}
