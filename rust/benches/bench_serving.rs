@@ -111,6 +111,26 @@ fn main() {
     let speedup = m_unfused.mean_ns() / m_fused.mean_ns();
     println!("\n  fused serving speedup over per-request launches: {speedup:.2}x");
 
+    // tracing A/B: same fused pass with every request sampled into the
+    // span ring + the 1-in-64 stage probes live. The overhead ratio is the
+    // worst case (sampling=1); sampling off restores the exact baseline
+    // path (one relaxed atomic load per request).
+    pdpu::obs::trace::set_sampling(1);
+    let m_traced = bench(
+        "serving queue: fused, tracing sampled 1-in-1",
+        Duration::from_millis(1200),
+        || {
+            let root = pdpu::obs::trace::start_root("bench_pass");
+            let out = std::hint::black_box(execute_fused(&queue));
+            pdpu::obs::trace::finish(root);
+            out
+        },
+    );
+    pdpu::obs::trace::set_sampling(0);
+    report(&m_traced);
+    let overhead = m_traced.mean_ns() / m_fused.mean_ns();
+    println!("  -> tracing overhead at full sampling: {overhead:.3}x of the untraced fused pass");
+
     let json = Json::obj(vec![
         ("bench", Json::Str("serving".into())),
         ("config", Json::Str(cfg.label())),
@@ -124,6 +144,8 @@ fn main() {
         ("fused_tiles", Json::Num(stats.fused_tiles as f64)),
         ("unfused_mean_ns", Json::Num(m_unfused.mean_ns())),
         ("fused_mean_ns", Json::Num(m_fused.mean_ns())),
+        ("traced_mean_ns", Json::Num(m_traced.mean_ns())),
+        ("tracing_overhead", Json::Num(overhead)),
         ("unfused_macs_per_s", Json::Num(m_unfused.per_second(macs_per_pass))),
         ("fused_macs_per_s", Json::Num(m_fused.per_second(macs_per_pass))),
         ("speedup", Json::Num(speedup)),

@@ -12,7 +12,7 @@
 //! |---|---|
 //! | `panic-freedom`   | coordinator request paths return errors, never panic |
 //! | `alloc-freedom`   | `*_into` stage kernels and `hot-path` fns don't allocate |
-//! | `determinism`     | result-affecting code: no unordered-map iteration, no clocks/entropy |
+//! | `determinism`     | result-affecting code: no unordered-map iteration; clocks/entropy only via `obs/` |
 //! | `stage-isolation` | `pdpu/stages/sN_*` depends only on earlier stages + config |
 //! | `wire-ops`        | server match arms ≡ the `docs/ARCHITECTURE.md` op table |
 //!

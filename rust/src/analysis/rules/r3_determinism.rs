@@ -1,4 +1,4 @@
-//! R3 — determinism of result-affecting code.
+//! R3 — determinism of result-affecting code, plus clock discipline.
 //!
 //! Quire-exact reproducibility is the differentiator posit serving claims
 //! over IEEE floats: the same request must produce the same bits on every
@@ -10,12 +10,22 @@
 //! * reading time or entropy (`Instant::now`, `SystemTime::now`,
 //!   `thread_rng`, …) inside a computation.
 //!
-//! Scope: the numeric stack (`posit/`, `pdpu/`, `engine.rs`, `train/`,
-//! `dnn/`) and the one result-affecting coordinator module,
-//! `coordinator/fusion.rs`. Keyed *lookups* (`get`/`entry`/`insert`) are
-//! order-free and allowed; only iteration over the map is flagged.
-//! Serving telemetry (batcher deadlines, latency metrics) reads clocks
-//! legitimately and stays out of scope.
+//! Two nested scopes:
+//!
+//! * **Hash scope** — the numeric stack (`posit/`, `pdpu/`, `engine.rs`,
+//!   `train/`, `dnn/`) and the one result-affecting coordinator module,
+//!   `coordinator/fusion.rs`. Both the hash-iteration and the
+//!   clock/entropy diagnostics fire here. Keyed *lookups*
+//!   (`get`/`entry`/`insert`) are order-free and allowed; only iteration
+//!   over the map is flagged.
+//! * **Clock scope** — hash scope plus all of `coordinator/`: serving
+//!   telemetry needs wall time, but every read must go through the one
+//!   sanctioned site, [`crate::obs::clock`] (`obs/` is the only module
+//!   allowed to call `Instant::now` directly). Routing every clock read
+//!   through one module keeps latency spans and stage timings on a single
+//!   monotonic anchor and makes "where does time come from" greppable.
+//!   Only the clock/entropy diagnostics fire in the coordinator part of
+//!   this scope; batcher/metrics hash lookups stay unflagged.
 
 use super::super::lexer::{SourceFile, TokKind, Token};
 use super::super::Diagnostic;
@@ -23,7 +33,8 @@ use super::super::Diagnostic;
 pub const RULE: &str = "determinism";
 
 /// Result-affecting files: the arithmetic stack plus fusion planning.
-pub fn applies(rel: &str) -> bool {
+/// Hash-iteration *and* clock diagnostics both apply here.
+pub fn hash_scope(rel: &str) -> bool {
     rel.starts_with("posit/")
         || rel.starts_with("pdpu/")
         || rel.starts_with("train/")
@@ -32,19 +43,33 @@ pub fn applies(rel: &str) -> bool {
         || rel == "coordinator/fusion.rs"
 }
 
+/// Files whose direct `Instant::now`/`SystemTime::now`/entropy reads are
+/// flagged: the hash scope plus the whole coordinator — except `obs/`,
+/// the one module sanctioned to read the clock (everything else calls
+/// `crate::obs::clock::now()`).
+pub fn clock_scope(rel: &str) -> bool {
+    !rel.starts_with("obs/") && (hash_scope(rel) || rel.starts_with("coordinator/"))
+}
+
+pub fn applies(rel: &str) -> bool {
+    hash_scope(rel) || clock_scope(rel)
+}
+
 /// Methods whose call on a hash container walks it in randomized order.
 const ITER_METHODS: [&str; 8] = ["iter", "iter_mut", "into_iter", "keys", "values", "values_mut", "drain", "retain"];
 
 pub fn check(file: &SourceFile) -> Vec<Diagnostic> {
+    let in_hash_scope = hash_scope(&file.rel);
+    let in_clock_scope = clock_scope(&file.rel);
     let toks = &file.tokens;
-    let names = hash_bound_names(file);
+    let names = if in_hash_scope { hash_bound_names(file) } else { Vec::new() };
     let mut out = Vec::new();
     for (i, t) in toks.iter().enumerate() {
         if file.is_test[i] {
             continue;
         }
-        // unordered iteration over a known hash container
-        if t.kind == TokKind::Ident && names.iter().any(|n| n == &t.text) {
+        // unordered iteration over a known hash container (hash scope)
+        if in_hash_scope && t.kind == TokKind::Ident && names.iter().any(|n| n == &t.text) {
             if let Some(m) = toks.get(i + 2) {
                 if toks[i + 1].is_punct('.') && ITER_METHODS.iter().any(|im| m.is_ident(im)) {
                     out.push(diag(
@@ -55,7 +80,7 @@ pub fn check(file: &SourceFile) -> Vec<Diagnostic> {
                 }
             }
         }
-        if t.is_ident("in") {
+        if in_hash_scope && t.is_ident("in") {
             let mut j = i + 1;
             while toks.get(j).is_some_and(|n| n.is_punct('&') || n.is_ident("mut")) {
                 j += 1;
@@ -73,16 +98,24 @@ pub fn check(file: &SourceFile) -> Vec<Diagnostic> {
                 }
             }
         }
-        // wall-clock and entropy sources
-        if t.kind == TokKind::Ident
+        // wall-clock and entropy sources (clock scope)
+        if in_clock_scope
+            && t.kind == TokKind::Ident
             && matches!(t.text.as_str(), "Instant" | "SystemTime")
             && toks.get(i + 1).is_some_and(|n| n.is_punct(':'))
             && toks.get(i + 2).is_some_and(|n| n.is_punct(':'))
             && toks.get(i + 3).is_some_and(|n| n.is_ident("now"))
         {
-            out.push(diag(file, t.line, format!("{}::now() makes results time-dependent", t.text)));
+            out.push(diag(
+                file,
+                t.line,
+                format!("{}::now() outside obs/ — route clock reads through crate::obs::clock", t.text),
+            ));
         }
-        if t.kind == TokKind::Ident && matches!(t.text.as_str(), "thread_rng" | "from_entropy" | "random") {
+        if in_clock_scope
+            && t.kind == TokKind::Ident
+            && matches!(t.text.as_str(), "thread_rng" | "from_entropy" | "random")
+        {
             out.push(diag(file, t.line, format!("`{}` injects entropy into a result-affecting path", t.text)));
         }
     }

@@ -8,6 +8,9 @@
 //!   schedule …                      PDPU-array scheduling report
 //!   serve …                         start the inference server
 //!   train …                         posit SGD on the software engine
+//!   stats [--addr A] [--prom]       scrape a running server's counters
+//!   trace [--addr A] …              export a server's span ring as
+//!                                   Chrome-tracing JSON
 //!   lint [--root DIR]               run the pdpu static-analysis pass
 //!   selftest                        artifact + runtime smoke check
 
@@ -84,16 +87,29 @@ COMMANDS
   schedule [--outputs N] [--dot-len K] [--units U] [--n N] [--interleave I]
                                   PDPU-array cycle-accurate schedule
   serve [--addr HOST:PORT] [--artifacts DIR] [--software] [--batch N]
-        [--no-fuse]
+        [--no-fuse] [--trace N]
                                   start the batched inference/GEMM server
                                   (--software, or missing PJRT artifacts,
                                   serves the batched bit-exact PDPU engine;
                                   --no-fuse disables cross-request GEMM
-                                  fusion for A/B runs — outputs identical)
+                                  fusion for A/B runs — outputs identical;
+                                  --trace N samples 1-in-N requests into
+                                  the span ring, 0 = off, default off)
   train [--epochs N] [--limit N] [--batch N] [--hidden N] [--classes N]
         [--lr F] [--seed S]       mixed-precision posit SGD through the
                                   software engine on the bundled dataset
                                   (per-epoch loss/accuracy; no artifacts)
+  stats [--addr HOST:PORT] [--prom]
+                                  one-shot scrape of a running server:
+                                  the {\"op\":\"stats\"} counters as JSON, or
+                                  with --prom the full Prometheus text
+                                  exposition ({\"op\":\"metrics\"})
+  trace [--addr HOST:PORT] [--sample N] [--clear] [--out FILE]
+                                  export a running server's completed
+                                  spans as Chrome-tracing JSON (load in
+                                  chrome://tracing or Perfetto); --sample N
+                                  sets 1-in-N request sampling first,
+                                  --clear empties the ring before sampling
   lint [--root DIR]               run the pdpu static-analysis pass over
                                   rust/src (panic-freedom, alloc-freedom,
                                   determinism, stage isolation, wire ops);
@@ -115,6 +131,8 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<i32> {
         "schedule" => cmd_schedule(&args),
         "serve" => cmd_serve(&args),
         "train" => cmd_train(&args),
+        "stats" => cmd_stats(&args),
+        "trace" => cmd_trace(&args),
         "lint" => cmd_lint(&args),
         "selftest" => cmd_selftest(&args),
         "help" | "--help" | "-h" => {
@@ -292,6 +310,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
         }
     };
     let (m, k, n) = service.info().gemm_mkn;
+    let trace_every = args.flag_usize("trace", 0) as u32;
+    crate::obs::trace::set_sampling(trace_every);
     let metrics = Arc::new(Metrics::new());
     let server = Server::start_with(addr, service, metrics, policy)?;
     println!("pdpu coordinator listening on {}", server.addr);
@@ -299,10 +319,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
         "cross-request GEMM fusion: {}",
         if policy.fuse_gemm { "on" } else { "off (--no-fuse)" }
     );
+    if trace_every > 0 {
+        println!("request tracing: 1-in-{trace_every} sampling (export with `pdpu trace`)");
+    }
     println!(
         "protocol: JSON lines — {{\"op\":\"infer\",\"image\":[784 floats]}} | \
          {{\"op\":\"gemm\",\"a\":[{} floats],\"b\":[{} floats]}} | \
-         {{\"op\":\"train\",\"images\":[[784]…],\"labels\":[ints]}} | {{\"op\":\"stats\"}} | {{\"op\":\"ping\"}}",
+         {{\"op\":\"train\",\"images\":[[784]…],\"labels\":[ints]}} | {{\"op\":\"stats\"}} | \
+         {{\"op\":\"metrics\"}} | {{\"op\":\"trace\"}} | {{\"op\":\"ping\"}}",
         m * k,
         k * n
     );
@@ -372,6 +396,69 @@ fn cmd_train(args: &Args) -> anyhow::Result<i32> {
             "NOT strictly decreasing (try a smaller --lr)".to_string()
         }
     );
+    Ok(0)
+}
+
+/// One JSON-lines round trip against a running coordinator: connect,
+/// write `req` as a line, read and parse the one-line response.
+fn wire_request(addr: &str, req: &crate::coordinator::json::Json) -> anyhow::Result<crate::coordinator::json::Json> {
+    use std::io::{BufRead, BufReader, Write};
+    let mut stream = std::net::TcpStream::connect(addr)
+        .map_err(|e| anyhow::anyhow!("cannot reach a pdpu server at {addr}: {e}"))?;
+    stream.write_all((req.to_string() + "\n").as_bytes())?;
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line)?;
+    anyhow::ensure!(!line.trim().is_empty(), "server at {addr} closed the connection without replying");
+    crate::coordinator::json::parse(&line).map_err(|e| anyhow::anyhow!("bad response from {addr}: {e}"))
+}
+
+fn cmd_stats(args: &Args) -> anyhow::Result<i32> {
+    use crate::coordinator::json::Json;
+    let addr = args.flag("addr").unwrap_or("127.0.0.1:7878");
+    if args.flag("prom").is_some() {
+        let resp = wire_request(addr, &Json::obj(vec![("op", Json::Str("metrics".to_string()))]))?;
+        let Some(text) = resp.get("prometheus").and_then(Json::as_str) else {
+            anyhow::bail!("server returned no 'prometheus' field: {resp}");
+        };
+        print!("{text}");
+    } else {
+        let resp = wire_request(addr, &Json::obj(vec![("op", Json::Str("stats".to_string()))]))?;
+        println!("{resp}");
+    }
+    Ok(0)
+}
+
+fn cmd_trace(args: &Args) -> anyhow::Result<i32> {
+    use crate::coordinator::json::Json;
+    let addr = args.flag("addr").unwrap_or("127.0.0.1:7878");
+    let mut fields: Vec<(&str, Json)> = vec![("op", Json::Str("trace".to_string()))];
+    if let Some(v) = args.flag("sample") {
+        let every: u32 = v.parse().map_err(|_| anyhow::anyhow!("--sample wants a non-negative integer"))?;
+        fields.push(("sample", Json::Num(f64::from(every))));
+    }
+    if args.flag("clear").is_some() {
+        fields.push(("clear", Json::Bool(true)));
+    }
+    let resp = wire_request(addr, &Json::obj(fields))?;
+    anyhow::ensure!(matches!(resp.get("ok"), Some(Json::Bool(true))), "server error: {resp}");
+    let events = resp.get("events").cloned().unwrap_or(Json::Arr(Vec::new()));
+    let n_events = events.as_arr().map_or(0, <[Json]>::len);
+    let sampling = resp.get("sampling").and_then(Json::as_f64).unwrap_or(0.0);
+    // chrome://tracing / Perfetto wrapper object
+    let doc = Json::obj(vec![
+        ("traceEvents", events),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ]);
+    match args.flag("out") {
+        Some(path) => {
+            std::fs::write(path, doc.to_string() + "\n")?;
+            println!(
+                "wrote {n_events} span event(s) to {path} (server sampling: {}) — open in chrome://tracing",
+                if sampling > 0.0 { format!("1-in-{sampling}") } else { "off".to_string() }
+            );
+        }
+        None => println!("{doc}"),
+    }
     Ok(0)
 }
 
@@ -480,6 +567,19 @@ mod tests {
     fn train_rejects_bad_lr() {
         assert!(run(argv("train --lr nope")).is_err());
         assert!(run(argv("train --lr -1")).is_err());
+    }
+
+    #[test]
+    fn stats_fails_fast_without_a_server() {
+        // port 1 refuses immediately on loopback — the error must surface
+        assert!(run(argv("stats --addr 127.0.0.1:1")).is_err());
+        assert!(run(argv("stats --addr 127.0.0.1:1 --prom")).is_err());
+    }
+
+    #[test]
+    fn trace_rejects_bad_sample_before_connecting() {
+        assert!(run(argv("trace --addr 127.0.0.1:1 --sample nope")).is_err());
+        assert!(run(argv("trace --addr 127.0.0.1:1 --sample -3")).is_err());
     }
 
     #[test]

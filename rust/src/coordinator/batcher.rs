@@ -9,6 +9,14 @@
 //! * batches never exceed `max_batch`;
 //! * an item waits at most ~`max_wait` before its batch is launched;
 //! * replies match their requests (no cross-wiring), in any interleaving.
+//!
+//! Telemetry: each batcher is bound to one [`OpKind`] — latencies land in
+//! that op's histogram, the queue-depth gauge tracks waiting items, and
+//! the batch-wait gauge records the oldest item's wait at each batch
+//! formation. Sampled requests (see [`crate::obs::trace`]) carry a
+//! [`TraceCtx`] through the queue: the batcher emits a `queue_wait` and a
+//! `batch_exec` span per sampled item and hands the batch's first sampled
+//! context to the backend so engine-side spans parent under the request.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -16,7 +24,8 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::lock_unpoisoned;
-use super::metrics::Metrics;
+use super::metrics::{Metrics, OpKind};
+use crate::obs::trace::TraceCtx;
 
 /// Batch-formation policy.
 #[derive(Clone, Copy, Debug)]
@@ -35,13 +44,15 @@ impl Default for BatchPolicy {
 
 /// Processes one formed batch. Must return exactly one output per input.
 pub trait BatchBackend<I: Send, O: Send>: Send {
-    /// Execute the batch, one result per item, in item order.
-    fn run(&mut self, items: Vec<I>) -> Vec<Result<O, String>>;
+    /// Execute the batch, one result per item, in item order. `ctx` is
+    /// the first sampled request's trace context (if any) so backend-side
+    /// spans can parent under it.
+    fn run(&mut self, items: Vec<I>, ctx: Option<TraceCtx>) -> Vec<Result<O, String>>;
 }
 
-impl<I: Send, O: Send, F: FnMut(Vec<I>) -> Vec<Result<O, String>> + Send> BatchBackend<I, O> for F {
-    fn run(&mut self, items: Vec<I>) -> Vec<Result<O, String>> {
-        self(items)
+impl<I: Send, O: Send, F: FnMut(Vec<I>, Option<TraceCtx>) -> Vec<Result<O, String>> + Send> BatchBackend<I, O> for F {
+    fn run(&mut self, items: Vec<I>, ctx: Option<TraceCtx>) -> Vec<Result<O, String>> {
+        self(items, ctx)
     }
 }
 
@@ -49,19 +60,27 @@ struct Pending<I, O> {
     item: I,
     reply: Sender<Result<O, String>>,
     enqueued: Instant,
+    ctx: Option<TraceCtx>,
 }
 
 /// Shared handle for submitting work.
 pub struct Batcher<I: Send, O: Send> {
     queue: Arc<Mutex<Vec<Pending<I, O>>>>,
     metrics: Arc<Metrics>,
+    kind: OpKind,
     shutdown: Arc<AtomicBool>,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
 impl<I: Send + 'static, O: Send + 'static> Batcher<I, O> {
-    /// Spawn the executor thread over `backend`.
-    pub fn spawn(policy: BatchPolicy, metrics: Arc<Metrics>, mut backend: impl BatchBackend<I, O> + 'static) -> Self {
+    /// Spawn the executor thread over `backend`, recording telemetry
+    /// under `kind`.
+    pub fn spawn(
+        policy: BatchPolicy,
+        metrics: Arc<Metrics>,
+        kind: OpKind,
+        mut backend: impl BatchBackend<I, O> + 'static,
+    ) -> Self {
         let queue: Arc<Mutex<Vec<Pending<I, O>>>> = Arc::new(Mutex::new(Vec::new()));
         let shutdown = Arc::new(AtomicBool::new(false));
         let (q, m, sd) = (queue.clone(), metrics.clone(), shutdown.clone());
@@ -86,17 +105,39 @@ impl<I: Send + 'static, O: Send + 'static> Batcher<I, O> {
                 continue;
             }
             m.record_batch(batch.len());
+            m.queue_leave(kind, batch.len());
+            if let Some(oldest) = batch.first() {
+                m.record_batch_wait(kind, oldest.enqueued.elapsed());
+            }
+            // queue-wait spans for sampled items; the first sampled item's
+            // context rides along to the backend as the batch's parent
+            let mut batch_ctx: Option<TraceCtx> = None;
+            for p in &batch {
+                if let Some(c) = p.ctx {
+                    if batch_ctx.is_none() {
+                        batch_ctx = Some(c);
+                    }
+                    let waited_ns = p.enqueued.elapsed().as_nanos() as u64;
+                    crate::obs::trace::record_ending_now("queue_wait", Some(c), waited_ns);
+                }
+            }
             let started: Vec<Instant> = batch.iter().map(|p| p.enqueued).collect();
+            let ctxs: Vec<Option<TraceCtx>> = batch.iter().map(|p| p.ctx).collect();
             let (items, replies): (Vec<I>, Vec<Sender<Result<O, String>>>) =
                 batch.into_iter().map(|p| (p.item, p.reply)).unzip();
             let n = items.len();
-            let mut results = backend.run(items);
+            let exec0 = crate::obs::clock::now();
+            let mut results = backend.run(items, batch_ctx);
+            let exec_ns = exec0.elapsed().as_nanos() as u64;
             if results.len() != n {
                 let msg = format!("backend returned {} results for {} items", results.len(), n);
                 results = (0..n).map(|_| Err(msg.clone())).collect();
             }
-            for ((r, tx), t0) in results.into_iter().zip(replies).zip(started) {
-                m.observe_latency(t0.elapsed());
+            for (((r, tx), t0), ctx) in results.into_iter().zip(replies).zip(started).zip(ctxs) {
+                crate::obs::trace::record_ending_now("batch_exec", ctx, exec_ns);
+                // observed for successes AND errors — the per-op histogram
+                // carries its own count, so this cannot skew the mean
+                m.observe_latency(kind, t0.elapsed());
                 if r.is_ok() {
                     m.responses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 } else {
@@ -105,20 +146,31 @@ impl<I: Send + 'static, O: Send + 'static> Batcher<I, O> {
                 let _ = tx.send(r); // receiver may have given up; fine
             }
         });
-        Self { queue, metrics, shutdown, worker: Some(worker) }
+        Self { queue, metrics, kind, shutdown, worker: Some(worker) }
     }
 
     /// Submit one item and get the receiver for its reply.
     pub fn submit(&self, item: I) -> Receiver<Result<O, String>> {
+        self.submit_traced(item, None)
+    }
+
+    /// Submit one item carrying a trace context (sampled requests).
+    pub fn submit_traced(&self, item: I, ctx: Option<TraceCtx>) -> Receiver<Result<O, String>> {
         self.metrics.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.metrics.queue_enter(self.kind);
         let (tx, rx) = channel();
-        lock_unpoisoned(&self.queue).push(Pending { item, reply: tx, enqueued: Instant::now() });
+        lock_unpoisoned(&self.queue).push(Pending { item, reply: tx, enqueued: crate::obs::clock::now(), ctx });
         rx
     }
 
     /// Submit and block for the reply.
     pub fn call(&self, item: I) -> Result<O, String> {
-        self.submit(item).recv().map_err(|_| "batcher shut down".to_string())?
+        self.call_traced(item, None)
+    }
+
+    /// Submit with a trace context and block for the reply.
+    pub fn call_traced(&self, item: I, ctx: Option<TraceCtx>) -> Result<O, String> {
+        self.submit_traced(item, ctx).recv().map_err(|_| "batcher shut down".to_string())?
     }
 }
 
@@ -137,12 +189,12 @@ mod tests {
     use crate::testing::Rng;
 
     fn echo_backend() -> impl BatchBackend<u64, u64> {
-        |items: Vec<u64>| items.into_iter().map(|v| Ok(v * 2)).collect::<Vec<_>>()
+        |items: Vec<u64>, _ctx: Option<TraceCtx>| items.into_iter().map(|v| Ok(v * 2)).collect::<Vec<_>>()
     }
 
     #[test]
     fn single_item_roundtrip() {
-        let b = Batcher::spawn(BatchPolicy::default(), Arc::new(Metrics::new()), echo_backend());
+        let b = Batcher::spawn(BatchPolicy::default(), Arc::new(Metrics::new()), OpKind::Infer, echo_backend());
         assert_eq!(b.call(21), Ok(42));
     }
 
@@ -151,13 +203,14 @@ mod tests {
         let m = Arc::new(Metrics::new());
         let seen = Arc::new(Mutex::new(Vec::<usize>::new()));
         let seen2 = seen.clone();
-        let backend = move |items: Vec<u64>| {
+        let backend = move |items: Vec<u64>, _ctx: Option<TraceCtx>| {
             seen2.lock().unwrap().push(items.len());
             items.into_iter().map(Ok).collect::<Vec<_>>()
         };
         let b = Batcher::spawn(
             BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(50) },
             m,
+            OpKind::Infer,
             backend,
         );
         // submit 10 quickly from this thread, then drain
@@ -175,6 +228,7 @@ mod tests {
         let b = Batcher::spawn(
             BatchPolicy { max_batch: 1000, max_wait: Duration::from_millis(5) },
             Arc::new(Metrics::new()),
+            OpKind::Infer,
             echo_backend(),
         );
         let t0 = Instant::now();
@@ -187,6 +241,7 @@ mod tests {
         let b = Arc::new(Batcher::spawn(
             BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
             Arc::new(Metrics::new()),
+            OpKind::Infer,
             echo_backend(),
         ));
         let mut handles = Vec::new();
@@ -207,22 +262,26 @@ mod tests {
 
     #[test]
     fn backend_errors_propagate() {
-        let backend = |items: Vec<u64>| {
+        let backend = |items: Vec<u64>, _ctx: Option<TraceCtx>| {
             items.into_iter().map(|v| if v % 2 == 0 { Ok(v) } else { Err("odd".to_string()) }).collect::<Vec<_>>()
         };
         let m = Arc::new(Metrics::new());
-        let b = Batcher::spawn(BatchPolicy::default(), m.clone(), backend);
+        let b = Batcher::spawn(BatchPolicy::default(), m.clone(), OpKind::Infer, backend);
         assert_eq!(b.call(2), Ok(2));
         assert_eq!(b.call(3), Err("odd".to_string()));
-        assert_eq!(m.snapshot().errors, 1);
+        let s = m.snapshot();
+        assert_eq!(s.errors, 1);
+        // the error reply's latency was observed in the op histogram too
+        assert_eq!(s.infer.latency.count, 2);
     }
 
     #[test]
     fn wrong_cardinality_backend_errors_everyone() {
-        let backend = |_items: Vec<u64>| vec![Ok(1u64)]; // always 1 result
+        let backend = |_items: Vec<u64>, _ctx: Option<TraceCtx>| vec![Ok(1u64)]; // always 1 result
         let b = Arc::new(Batcher::spawn(
             BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
             Arc::new(Metrics::new()),
+            OpKind::Infer,
             backend,
         ));
         let rxs: Vec<_> = (0..4).map(|i| b.submit(i)).collect();
@@ -246,9 +305,10 @@ mod tests {
         let b: Batcher<Vec<f32>, Vec<f32>> = Batcher::spawn(
             BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
             m.clone(),
-            move |images: Vec<Vec<f32>>| {
+            OpKind::Infer,
+            move |images: Vec<Vec<f32>>, ctx: Option<TraceCtx>| {
                 let n = images.len();
-                match backend_svc.infer_batch(images) {
+                match backend_svc.infer_batch_traced(images, ctx) {
                     Ok(outs) => outs.into_iter().map(Ok).collect::<Vec<_>>(),
                     Err(e) => (0..n).map(|_| Err(e.clone())).collect(),
                 }
@@ -280,7 +340,8 @@ mod tests {
         let b: Arc<Batcher<(Vec<f32>, Vec<f32>), Vec<f32>>> = Arc::new(Batcher::spawn(
             BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
             Arc::new(Metrics::new()),
-            move |reqs: Vec<(Vec<f32>, Vec<f32>)>| backend_svc.gemm_batch(&reqs).0,
+            OpKind::Gemm,
+            move |reqs: Vec<(Vec<f32>, Vec<f32>)>, _ctx: Option<TraceCtx>| backend_svc.gemm_batch(&reqs).0,
         ));
         // a few shared left planes so formed batches really fuse
         let planes: Vec<Vec<f32>> = (0..2)
@@ -316,6 +377,7 @@ mod tests {
         let b = Batcher::spawn(
             BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
             m.clone(),
+            OpKind::Infer,
             echo_backend(),
         );
         let rxs: Vec<_> = (0..6).map(|i| b.submit(i)).collect();
@@ -326,5 +388,9 @@ mod tests {
         assert_eq!(s.requests, 6);
         assert_eq!(s.responses, 6);
         assert!(s.batches >= 3);
+        // every latency landed in this batcher's op histogram, and the
+        // queue gauge returned to zero once everything drained
+        assert_eq!(s.infer.latency.count, 6);
+        assert_eq!(s.infer.queue_depth, 0);
     }
 }

@@ -4,6 +4,11 @@
 //! `Rc`s over C++ objects), so the coordinator confines them to one
 //! dedicated thread and talks to it over channels. [`ServiceHandle`] is
 //! the cloneable, `Send + Sync` face the batcher/server/examples use.
+//!
+//! Requests can carry an optional [`TraceCtx`] (`*_traced` methods): the
+//! software backend threads it into the service's span-emitting variants;
+//! the PJRT backend ignores it (kernel time is opaque behind XLA). The
+//! plain methods delegate with `None`, so existing callers are untouched.
 
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
@@ -11,16 +16,17 @@ use std::sync::{Arc, Mutex};
 use super::fusion::FusionStats;
 use super::lock_unpoisoned;
 use super::service::{PositService, SoftwareService};
+use crate::obs::trace::TraceCtx;
 use crate::pdpu::{ConfigError, PdpuConfig};
 
 /// One result per queued GEMM request plus the fusion outcome counters.
 pub type GemmBatchReply = (Vec<Result<Vec<f32>, String>>, FusionStats);
 
 enum EngineReq {
-    InferBatch(Vec<Vec<f32>>, Sender<Result<Vec<Vec<f32>>, String>>),
-    TrainStep(Vec<Vec<f32>>, Vec<u32>, Sender<Result<f32, String>>),
+    InferBatch(Vec<Vec<f32>>, Option<TraceCtx>, Sender<Result<Vec<Vec<f32>>, String>>),
+    TrainStep(Vec<Vec<f32>>, Vec<u32>, Option<TraceCtx>, Sender<Result<f32, String>>),
     Gemm(Vec<f32>, Vec<f32>, Sender<Result<Vec<f32>, String>>),
-    GemmBatch(Vec<(Vec<f32>, Vec<f32>)>, Sender<GemmBatchReply>),
+    GemmBatch(Vec<(Vec<f32>, Vec<f32>)>, Option<TraceCtx>, Sender<GemmBatchReply>),
     Shutdown,
 }
 
@@ -41,6 +47,23 @@ pub struct ModelInfo {
     pub n_out: u32,
     /// Posit exponent-size parameter.
     pub es: u32,
+    /// Multiply-accumulates one forward pass of one example costs (the
+    /// sum of the model's weight-matrix sizes). The server's MAC counter
+    /// multiplies this by examples served — and by 3 for train steps
+    /// (forward + the two backward GEMMs per layer are each ≈ the same
+    /// tile volume).
+    pub macs_per_example: u64,
+}
+
+/// Sum of 2-D parameter-shape products: the per-example forward MAC cost
+/// of a dense MLP described by its weight shapes.
+fn macs_from_shapes<'a>(shapes: impl Iterator<Item = &'a Vec<usize>>) -> u64 {
+    shapes.filter(|s| s.len() == 2).map(|s| s.iter().product::<usize>() as u64).sum()
+}
+
+/// Per-example forward MAC cost of an MLP given its layer widths.
+fn macs_from_layers(layer_sizes: &[usize]) -> u64 {
+    layer_sizes.windows(2).map(|w| w.iter().product::<usize>() as u64).sum()
 }
 
 /// Cloneable handle to the engine thread.
@@ -69,6 +92,7 @@ impl ServiceHandle {
                         n_in: m.n_in,
                         n_out: m.n_out,
                         es: m.es,
+                        macs_per_example: macs_from_shapes(m.param_shapes.iter()),
                     }));
                     s
                 }
@@ -79,16 +103,16 @@ impl ServiceHandle {
             };
             while let Ok(req) = rx.recv() {
                 match req {
-                    EngineReq::InferBatch(images, reply) => {
+                    EngineReq::InferBatch(images, _ctx, reply) => {
                         let _ = reply.send(service.infer_batch(&images).map_err(|e| format!("{e:#}")));
                     }
-                    EngineReq::TrainStep(images, labels, reply) => {
+                    EngineReq::TrainStep(images, labels, _ctx, reply) => {
                         let _ = reply.send(service.train_step(&images, &labels).map_err(|e| format!("{e:#}")));
                     }
                     EngineReq::Gemm(a, b, reply) => {
                         let _ = reply.send(service.gemm(&a, &b).map_err(|e| format!("{e:#}")));
                     }
-                    EngineReq::GemmBatch(reqs, reply) => {
+                    EngineReq::GemmBatch(reqs, _ctx, reply) => {
                         // PJRT executables are compiled at a fixed (M, K, N),
                         // so the AOT path runs the queue one launch per
                         // request; only the software engine fuses.
@@ -137,22 +161,23 @@ impl ServiceHandle {
             n_in: cfg.in_fmt.n(),
             n_out: cfg.out_fmt.n(),
             es: cfg.in_fmt.es(),
+            macs_per_example: macs_from_layers(&layer_sizes),
         };
         let (tx, rx) = channel::<EngineReq>();
         let joiner = std::thread::spawn(move || {
             while let Ok(req) = rx.recv() {
                 match req {
-                    EngineReq::InferBatch(images, reply) => {
-                        let _ = reply.send(service.infer_batch(&images));
+                    EngineReq::InferBatch(images, ctx, reply) => {
+                        let _ = reply.send(service.infer_batch_traced(&images, ctx));
                     }
-                    EngineReq::TrainStep(images, labels, reply) => {
-                        let _ = reply.send(service.train_step(&images, &labels));
+                    EngineReq::TrainStep(images, labels, ctx, reply) => {
+                        let _ = reply.send(service.train_step_traced(&images, &labels, ctx));
                     }
                     EngineReq::Gemm(a, b, reply) => {
                         let _ = reply.send(service.gemm(&a, &b));
                     }
-                    EngineReq::GemmBatch(reqs, reply) => {
-                        let _ = reply.send(service.gemm_batch(&reqs));
+                    EngineReq::GemmBatch(reqs, ctx, reply) => {
+                        let _ = reply.send(service.gemm_batch_traced(&reqs, ctx));
                     }
                     EngineReq::Shutdown => return,
                 }
@@ -168,8 +193,18 @@ impl ServiceHandle {
 
     /// Run one inference batch through the backend.
     pub fn infer_batch(&self, images: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>, String> {
+        self.infer_batch_traced(images, None)
+    }
+
+    /// [`Self::infer_batch`] carrying a sampled request's trace context
+    /// to the backend (software backend emits engine-side spans).
+    pub fn infer_batch_traced(
+        &self,
+        images: Vec<Vec<f32>>,
+        ctx: Option<TraceCtx>,
+    ) -> Result<Vec<Vec<f32>>, String> {
         let (tx, rx) = channel();
-        self.tx.send(EngineReq::InferBatch(images, tx)).map_err(|_| "engine gone".to_string())?;
+        self.tx.send(EngineReq::InferBatch(images, ctx, tx)).map_err(|_| "engine gone".to_string())?;
         rx.recv().map_err(|_| "engine gone".to_string())?
     }
 
@@ -179,8 +214,18 @@ impl ServiceHandle {
     /// posit SGD through the batched engine (any batch up to the
     /// configured size).
     pub fn train_step(&self, images: Vec<Vec<f32>>, labels: Vec<u32>) -> Result<f32, String> {
+        self.train_step_traced(images, labels, None)
+    }
+
+    /// [`Self::train_step`] carrying a sampled request's trace context.
+    pub fn train_step_traced(
+        &self,
+        images: Vec<Vec<f32>>,
+        labels: Vec<u32>,
+        ctx: Option<TraceCtx>,
+    ) -> Result<f32, String> {
         let (tx, rx) = channel();
-        self.tx.send(EngineReq::TrainStep(images, labels, tx)).map_err(|_| "engine gone".to_string())?;
+        self.tx.send(EngineReq::TrainStep(images, labels, ctx, tx)).map_err(|_| "engine gone".to_string())?;
         rx.recv().map_err(|_| "engine gone".to_string())?
     }
 
@@ -197,8 +242,18 @@ impl ServiceHandle {
     /// launch per request. Either way the reply holds one result per
     /// request, in order, plus the launch counters.
     pub fn gemm_batch(&self, reqs: Vec<(Vec<f32>, Vec<f32>)>) -> Result<GemmBatchReply, String> {
+        self.gemm_batch_traced(reqs, None)
+    }
+
+    /// [`Self::gemm_batch`] carrying a sampled request's trace context
+    /// (software backend times `fusion_plan` / `engine_launch` under it).
+    pub fn gemm_batch_traced(
+        &self,
+        reqs: Vec<(Vec<f32>, Vec<f32>)>,
+        ctx: Option<TraceCtx>,
+    ) -> Result<GemmBatchReply, String> {
         let (tx, rx) = channel();
-        self.tx.send(EngineReq::GemmBatch(reqs, tx)).map_err(|_| "engine gone".to_string())?;
+        self.tx.send(EngineReq::GemmBatch(reqs, ctx, tx)).map_err(|_| "engine gone".to_string())?;
         rx.recv().map_err(|_| "engine gone".to_string())
     }
 

@@ -152,9 +152,17 @@ pub fn plan_fusion(tiles: &[GemmTile]) -> Vec<Vec<usize>> {
 /// per tile, **in queue order**, bit-identical to [`execute_unfused`].
 pub fn execute_fused(tiles: &[GemmTile]) -> (Vec<Vec<f64>>, FusionStats) {
     let groups = plan_fusion(tiles);
+    execute_planned(tiles, &groups)
+}
+
+/// Execute a queue under an already-computed fusion plan (the `groups`
+/// returned by [`plan_fusion`] for these exact `tiles`). Split out from
+/// [`execute_fused`] so the serving path can time planning and launching
+/// as separate trace spans without perturbing what either step does.
+pub fn execute_planned(tiles: &[GemmTile], groups: &[Vec<usize>]) -> (Vec<Vec<f64>>, FusionStats) {
     let mut out: Vec<Vec<f64>> = vec![Vec::new(); tiles.len()];
     let mut stats = FusionStats::default();
-    for g in &groups {
+    for g in groups {
         stats.launches += 1;
         if g.len() > 1 {
             stats.fused_tiles += g.len() as u64;
@@ -175,6 +183,8 @@ pub fn execute_fused(tiles: &[GemmTile]) -> (Vec<Vec<f64>>, FusionStats) {
         let xp = PreparedOperands::quantize(cfg.in_fmt, &xcat, k);
         let accp: Vec<Posit> = first.acc.iter().map(|&v| Posit::from_f64(v, cfg.out_fmt)).collect();
         let fused = engine.gemm_posit(&accp, &wp, &xp);
+        // S6/convert boundary: tally saturations/NaR before leaving posit land
+        crate::obs::record_outputs(&fused);
         // scatter the fused launch's columns back to the member tiles
         let (m, cols_total) = (wp.rows(), xp.rows());
         let mut off = 0usize;
@@ -204,7 +214,9 @@ pub fn execute_unfused(tiles: &[GemmTile]) -> Vec<Vec<f64>> {
             let wp = PreparedOperands::quantize(t.cfg.in_fmt, &t.a, t.k);
             let xp = PreparedOperands::quantize(t.cfg.in_fmt, &t.bt, t.k);
             let accp: Vec<Posit> = t.acc.iter().map(|&v| Posit::from_f64(v, t.cfg.out_fmt)).collect();
-            engine.gemm_posit(&accp, &wp, &xp).iter().map(|p| p.to_f64()).collect()
+            let outs = engine.gemm_posit(&accp, &wp, &xp);
+            crate::obs::record_outputs(&outs);
+            outs.iter().map(|p| p.to_f64()).collect()
         })
         .collect()
 }

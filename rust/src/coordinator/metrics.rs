@@ -1,12 +1,150 @@
-//! Coordinator metrics: lock-free counters plus a fixed-bucket latency
-//! histogram (microseconds). No external deps; snapshot-able for the
-//! `stats` endpoint.
+//! Coordinator metrics: lock-free counters, per-op latency histograms
+//! (microseconds), and queue gauges. No external deps; snapshot-able for
+//! the `stats` endpoint and renderable as Prometheus text exposition by
+//! [`crate::obs::prom`].
+//!
+//! Latency is histogrammed **per op** (`infer` / `gemm` / `train` get
+//! their own [`Histo`]), because blending a 100µs infer path with a
+//! multi-ms train step produces a histogram that describes neither. The
+//! blended `mean_latency_us` / `p95_latency_us` stats fields are derived
+//! by merging the three histograms, and the mean divides by the
+//! histogram's **own sample count** — error replies are observed too, so
+//! dividing by `responses` (successes only) would skew the mean upward.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
-/// Histogram bucket upper bounds in microseconds.
-const BUCKETS_US: [u64; 12] = [50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 1_000_000];
+/// Histogram bucket upper bounds in microseconds (shared by the stats
+/// endpoint and the Prometheus renderer's `le` labels).
+pub const BUCKETS_US: [u64; 12] = [50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 1_000_000];
+
+/// Which serving op a latency observation or queue event belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    /// Dynamic-batched image inference.
+    Infer,
+    /// (Possibly fused) GEMM execution.
+    Gemm,
+    /// Served SGD steps.
+    Train,
+}
+
+impl OpKind {
+    /// Stable label used in Prometheus series and span names.
+    pub fn label(self) -> &'static str {
+        match self {
+            OpKind::Infer => "infer",
+            OpKind::Gemm => "gemm",
+            OpKind::Train => "train",
+        }
+    }
+}
+
+/// Lock-free fixed-bucket latency histogram with its own sample count.
+#[derive(Debug, Default)]
+struct Histo {
+    buckets: [AtomicU64; 13],
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histo {
+    fn observe(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(BUCKETS_US.len());
+        if let Some(b) = self.buckets.get(idx) {
+            b.fetch_add(1, Ordering::Relaxed);
+        }
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> HistoSnapshot {
+        let mut buckets = [0u64; 13];
+        for (dst, src) in buckets.iter_mut().zip(&self.buckets) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        HistoSnapshot { buckets, sum_us: self.sum_us.load(Ordering::Relaxed), count: self.count.load(Ordering::Relaxed) }
+    }
+}
+
+/// Point-in-time copy of one latency histogram.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HistoSnapshot {
+    /// Per-bucket counts; index `i` pairs with `BUCKETS_US[i]`, the last
+    /// slot is the overflow (+Inf) bucket.
+    pub buckets: [u64; 13],
+    /// Sum of observed latencies (µs).
+    pub sum_us: u64,
+    /// Number of observations (successes **and** error replies).
+    pub count: u64,
+}
+
+impl HistoSnapshot {
+    /// Mean latency in µs over everything this histogram observed.
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Approximate latency quantile (bucket upper bound in µs).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total: u64 = self.buckets.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= target {
+                return BUCKETS_US.get(i).copied().unwrap_or(u64::MAX);
+            }
+        }
+        u64::MAX
+    }
+
+    /// Bucket-wise merge of two histograms (same fixed bounds).
+    pub fn merge(&self, other: &HistoSnapshot) -> HistoSnapshot {
+        let mut buckets = [0u64; 13];
+        for ((dst, a), b) in buckets.iter_mut().zip(&self.buckets).zip(&other.buckets) {
+            *dst = a + b;
+        }
+        HistoSnapshot { buckets, sum_us: self.sum_us + other.sum_us, count: self.count + other.count }
+    }
+}
+
+/// Per-op telemetry: latency histogram plus queue gauges.
+#[derive(Debug, Default)]
+struct OpStats {
+    latency: Histo,
+    queue_depth: AtomicU64,
+    last_batch_wait_us: AtomicU64,
+}
+
+impl OpStats {
+    fn snapshot(&self) -> OpSnapshot {
+        OpSnapshot {
+            latency: self.latency.snapshot(),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            last_batch_wait_us: self.last_batch_wait_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of one op's telemetry.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpSnapshot {
+    /// Latency histogram for this op.
+    pub latency: HistoSnapshot,
+    /// Requests currently waiting in this op's batcher queue.
+    pub queue_depth: u64,
+    /// Oldest-item queue wait (µs) of the most recently formed batch.
+    pub last_batch_wait_us: u64,
+}
 
 /// Shared metrics registry.
 #[derive(Debug, Default)]
@@ -21,7 +159,7 @@ pub struct Metrics {
     pub batches: AtomicU64,
     /// Total items across all formed batches.
     pub batched_items: AtomicU64,
-    /// MACs executed (where the backend reports them).
+    /// MACs executed (software GEMM/infer/train paths report them).
     pub macs: AtomicU64,
     /// GEMM requests that reached the serving path.
     pub gemm_requests: AtomicU64,
@@ -33,8 +171,9 @@ pub struct Metrics {
     pub train_steps: AtomicU64,
     /// Labelled examples consumed by served train steps.
     pub train_examples: AtomicU64,
-    latency_buckets: [AtomicU64; 13],
-    latency_sum_us: AtomicU64,
+    infer: OpStats,
+    gemm: OpStats,
+    train: OpStats,
 }
 
 impl Metrics {
@@ -43,18 +182,53 @@ impl Metrics {
         Self::default()
     }
 
-    /// Record one end-to-end request latency into the histogram.
-    pub fn observe_latency(&self, d: Duration) {
-        let us = d.as_micros() as u64;
-        let idx = BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(BUCKETS_US.len());
-        self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
-        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
+    fn op(&self, kind: OpKind) -> &OpStats {
+        match kind {
+            OpKind::Infer => &self.infer,
+            OpKind::Gemm => &self.gemm,
+            OpKind::Train => &self.train,
+        }
+    }
+
+    /// Record one end-to-end request latency into `kind`'s histogram.
+    /// Observed for successes and error replies alike; the histogram
+    /// carries its own count, so the mean stays honest either way.
+    pub fn observe_latency(&self, kind: OpKind, d: Duration) {
+        self.op(kind).latency.observe(d);
+    }
+
+    /// One request entered `kind`'s batcher queue.
+    pub fn queue_enter(&self, kind: OpKind) {
+        self.op(kind).queue_depth.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` requests left `kind`'s batcher queue (drained into a batch).
+    pub fn queue_leave(&self, kind: OpKind, n: usize) {
+        let g = &self.op(kind).queue_depth;
+        let mut cur = g.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(n as u64);
+            match g.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Record the oldest-item queue wait of a just-formed `kind` batch.
+    pub fn record_batch_wait(&self, kind: OpKind, wait: Duration) {
+        self.op(kind).last_batch_wait_us.store(wait.as_micros() as u64, Ordering::Relaxed);
     }
 
     /// Record one formed batch of `items` requests.
     pub fn record_batch(&self, items: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_items.fetch_add(items as u64, Ordering::Relaxed);
+    }
+
+    /// Record MACs executed by the engine on behalf of served requests.
+    pub fn record_macs(&self, macs: u64) {
+        self.macs.fetch_add(macs, Ordering::Relaxed);
     }
 
     /// Record the outcome of one fused GEMM execution: how many engine
@@ -71,31 +245,20 @@ impl Metrics {
         self.train_examples.fetch_add(examples as u64, Ordering::Relaxed);
     }
 
-    /// Mean observed latency in microseconds.
-    pub fn mean_latency_us(&self) -> f64 {
-        let n = self.responses.load(Ordering::Relaxed);
-        if n == 0 {
-            0.0
-        } else {
-            self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
-        }
+    /// Blended histogram across all ops (for the legacy stats fields).
+    fn merged_latency(&self) -> HistoSnapshot {
+        self.infer.latency.snapshot().merge(&self.gemm.latency.snapshot()).merge(&self.train.latency.snapshot())
     }
 
-    /// Approximate latency quantile from the histogram (bucket upper bound).
+    /// Mean observed latency in µs across all ops, over every
+    /// observation the histograms made (error replies included).
+    pub fn mean_latency_us(&self) -> f64 {
+        self.merged_latency().mean_us()
+    }
+
+    /// Approximate blended latency quantile (bucket upper bound, µs).
     pub fn latency_quantile_us(&self, q: f64) -> u64 {
-        let total: u64 = self.latency_buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum();
-        if total == 0 {
-            return 0;
-        }
-        let target = (q * total as f64).ceil() as u64;
-        let mut seen = 0;
-        for (i, b) in self.latency_buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= target {
-                return BUCKETS_US.get(i).copied().unwrap_or(u64::MAX);
-            }
-        }
-        u64::MAX
+        self.merged_latency().quantile_us(q)
     }
 
     /// Mean items per formed batch.
@@ -108,27 +271,33 @@ impl Metrics {
         }
     }
 
-    /// Consistent-enough point-in-time copy of every counter.
+    /// Consistent-enough point-in-time copy of every counter, gauge, and
+    /// histogram, plus the process-wide posit numerics counters.
     pub fn snapshot(&self) -> MetricsSnapshot {
+        let blended = self.merged_latency();
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             responses: self.responses.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             mean_batch_size: self.mean_batch_size(),
-            mean_latency_us: self.mean_latency_us(),
-            p95_latency_us: self.latency_quantile_us(0.95),
+            mean_latency_us: blended.mean_us(),
+            p95_latency_us: blended.quantile_us(0.95),
             macs: self.macs.load(Ordering::Relaxed),
             gemm_requests: self.gemm_requests.load(Ordering::Relaxed),
             fused_launches: self.fused_launches.load(Ordering::Relaxed),
             fused_tiles: self.fused_tiles.load(Ordering::Relaxed),
             train_steps: self.train_steps.load(Ordering::Relaxed),
             train_examples: self.train_examples.load(Ordering::Relaxed),
+            infer: self.infer.snapshot(),
+            gemm: self.gemm.snapshot(),
+            train: self.train.snapshot(),
+            numerics: crate::obs::numerics(),
         }
     }
 }
 
-/// Point-in-time view for the stats endpoint.
+/// Point-in-time view for the stats/metrics endpoints.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct MetricsSnapshot {
     /// Items submitted to any batcher.
@@ -141,9 +310,10 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     /// Mean items per formed batch.
     pub mean_batch_size: f64,
-    /// Mean end-to-end latency (µs).
+    /// Mean end-to-end latency (µs), blended across ops, over every
+    /// histogram observation (error replies included).
     pub mean_latency_us: f64,
-    /// Approximate p95 latency (µs, histogram bucket bound).
+    /// Approximate p95 latency (µs, histogram bucket bound), blended.
     pub p95_latency_us: u64,
     /// MACs executed.
     pub macs: u64,
@@ -157,6 +327,14 @@ pub struct MetricsSnapshot {
     pub train_steps: u64,
     /// Labelled examples consumed by served train steps.
     pub train_examples: u64,
+    /// Infer-path telemetry.
+    pub infer: OpSnapshot,
+    /// GEMM-path telemetry.
+    pub gemm: OpSnapshot,
+    /// Train-path telemetry.
+    pub train: OpSnapshot,
+    /// Posit numerics counters (process-wide, from [`crate::obs`]).
+    pub numerics: crate::obs::NumericsSnapshot,
 }
 
 #[cfg(test)]
@@ -181,7 +359,7 @@ mod tests {
     fn latency_histogram_quantiles() {
         let m = Metrics::new();
         for us in [10u64, 20, 30, 40, 60, 80, 200, 300, 400, 30_000] {
-            m.observe_latency(Duration::from_micros(us));
+            m.observe_latency(OpKind::Infer, Duration::from_micros(us));
         }
         // 40% of samples ≤ 50us bucket
         assert_eq!(m.latency_quantile_us(0.4), 50);
@@ -191,12 +369,59 @@ mod tests {
     }
 
     #[test]
-    fn mean_latency_uses_response_count() {
+    fn mean_latency_counts_every_observation() {
         let m = Metrics::new();
-        m.responses.fetch_add(2, Ordering::Relaxed);
-        m.observe_latency(Duration::from_micros(100));
-        m.observe_latency(Duration::from_micros(300));
+        // one success, one error reply: both latencies are observed, and
+        // the mean divides by the histogram's own count — not `responses`
+        m.responses.fetch_add(1, Ordering::Relaxed);
+        m.errors.fetch_add(1, Ordering::Relaxed);
+        m.observe_latency(OpKind::Infer, Duration::from_micros(100));
+        m.observe_latency(OpKind::Infer, Duration::from_micros(300));
         assert_eq!(m.mean_latency_us(), 200.0);
+        assert_eq!(m.snapshot().infer.latency.count, 2);
+    }
+
+    #[test]
+    fn per_op_histograms_are_separate_and_merge_for_blended_stats() {
+        let m = Metrics::new();
+        m.observe_latency(OpKind::Infer, Duration::from_micros(40));
+        m.observe_latency(OpKind::Gemm, Duration::from_micros(400));
+        m.observe_latency(OpKind::Train, Duration::from_micros(40_000));
+        let s = m.snapshot();
+        assert_eq!(s.infer.latency.count, 1);
+        assert_eq!(s.gemm.latency.count, 1);
+        assert_eq!(s.train.latency.count, 1);
+        assert_eq!(s.infer.latency.quantile_us(1.0), 50);
+        assert_eq!(s.gemm.latency.quantile_us(1.0), 500);
+        assert_eq!(s.train.latency.quantile_us(1.0), 50_000);
+        // blended fields merge all three
+        assert_eq!(s.mean_latency_us, (40.0 + 400.0 + 40_000.0) / 3.0);
+        assert_eq!(s.p95_latency_us, 50_000);
+    }
+
+    #[test]
+    fn queue_gauges_track_depth_and_wait() {
+        let m = Metrics::new();
+        m.queue_enter(OpKind::Gemm);
+        m.queue_enter(OpKind::Gemm);
+        m.queue_enter(OpKind::Infer);
+        m.queue_leave(OpKind::Gemm, 2);
+        m.record_batch_wait(OpKind::Gemm, Duration::from_micros(750));
+        let s = m.snapshot();
+        assert_eq!(s.gemm.queue_depth, 0);
+        assert_eq!(s.infer.queue_depth, 1);
+        assert_eq!(s.gemm.last_batch_wait_us, 750);
+        // leaving more than entered saturates at zero instead of wrapping
+        m.queue_leave(OpKind::Infer, 5);
+        assert_eq!(m.snapshot().infer.queue_depth, 0);
+    }
+
+    #[test]
+    fn macs_accumulate() {
+        let m = Metrics::new();
+        m.record_macs(1_000);
+        m.record_macs(24);
+        assert_eq!(m.snapshot().macs, 1_024);
     }
 
     #[test]
@@ -229,5 +454,7 @@ mod tests {
         assert_eq!(s.p95_latency_us, 0);
         assert_eq!(s.train_steps, 0);
         assert_eq!(s.train_examples, 0);
+        assert_eq!(s.infer.latency.count, 0);
+        assert_eq!(s.gemm.queue_depth, 0);
     }
 }

@@ -2,7 +2,8 @@
 //! stack into a system.
 //!
 //! * [`json`] — wire format + manifest parsing (no serde offline).
-//! * [`metrics`] — counters and latency histograms.
+//! * [`metrics`] — counters, per-op latency histograms, queue gauges
+//!   (rendered as Prometheus text by [`crate::obs::prom`]).
 //! * [`batcher`] — dynamic batching (size-or-deadline policy) feeding one
 //!   backend invocation per batch.
 //! * [`fusion`] — cross-request GEMM fusion: compatible queued tiles
@@ -40,8 +41,8 @@ pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use engine::{ModelInfo, ServiceHandle};
-pub use fusion::{execute_fused, execute_unfused, plan_fusion, FusionStats, GemmTile};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use fusion::{execute_fused, execute_planned, execute_unfused, plan_fusion, FusionStats, GemmTile};
+pub use metrics::{Metrics, MetricsSnapshot, OpKind, OpSnapshot};
 pub use scheduler::{conv_jobs, fuse_launches, schedule, schedule_launches, DotJob, ScheduleReport};
 pub use server::{Server, ServerPolicy};
 pub use service::{PositService, SoftwareService};

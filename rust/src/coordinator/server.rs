@@ -7,6 +7,9 @@
 //!   {"op":"train","images":[[784]…],"labels":[ints]}
 //!                                        → {"ok":true,"loss":L}
 //!   {"op":"stats"}                       → {"ok":true, …counters…}
+//!   {"op":"metrics"}                     → {"ok":true,"prometheus":"…"}
+//!   {"op":"trace","sample":N?,"clear":bool?}
+//!                                        → {"ok":true,"sampling":N,"events":[…]}
 //!
 //! Requests from all connections funnel through per-op [`Batcher`]s, so
 //! concurrent clients get batched into single backend invocations — the
@@ -18,6 +21,11 @@
 //! parameters, so steps execute in arrival order on the engine thread
 //! (which already serializes them), one step per request.
 //!
+//! Sampled requests (see [`crate::obs::trace`]) open a root span named
+//! after the op; the batcher, fusion planner, engine launch, and S1–S6
+//! kernel stages hang child spans off it, so `{"op":"trace"}` exports one
+//! request's whole lifecycle as Chrome-tracing events.
+//!
 //! std::net + threads (no tokio in the offline image): one reader thread
 //! per connection, one batch-executor thread per batcher.
 
@@ -28,7 +36,9 @@ use std::sync::Arc;
 use super::batcher::{BatchPolicy, Batcher};
 use super::engine::ServiceHandle;
 use super::json::{parse, Json};
-use super::metrics::Metrics;
+use super::metrics::{Metrics, OpKind};
+use crate::obs;
+use crate::obs::trace::{self, ActiveSpan, Span};
 
 /// Serving knobs beyond the batch-formation policy.
 #[derive(Clone, Copy, Debug)]
@@ -81,13 +91,19 @@ impl Server {
         let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
 
         let svc = service.clone();
+        let imetrics = metrics.clone();
+        let infer_macs = service.info().macs_per_example;
         let infer: Batcher<Vec<f32>, Vec<f32>> = Batcher::spawn(
             BatchPolicy { max_batch: service.info().batch, max_wait: std::time::Duration::from_millis(2) },
             metrics.clone(),
-            move |images: Vec<Vec<f32>>| {
+            OpKind::Infer,
+            move |images: Vec<Vec<f32>>, ctx| {
                 let n = images.len();
-                match svc.infer_batch(images) {
-                    Ok(outs) => outs.into_iter().map(Ok).collect(),
+                match svc.infer_batch_traced(images, ctx) {
+                    Ok(outs) => {
+                        imetrics.record_macs(infer_macs * n as u64);
+                        outs.into_iter().map(Ok).collect()
+                    }
                     Err(e) => (0..n).map(|_| Err(e.clone())).collect(),
                 }
             },
@@ -96,14 +112,17 @@ impl Server {
         let gsvc = service.clone();
         let gmetrics = metrics.clone();
         let fuse = policy.fuse_gemm;
+        let (gm, gk, gn) = service.info().gemm_mkn;
+        let gemm_macs = (gm * gk * gn) as u64;
         let gemm: Batcher<(Vec<f32>, Vec<f32>), Vec<f32>> = Batcher::spawn(
             BatchPolicy { max_batch: 64, max_wait: std::time::Duration::from_millis(2) },
             metrics.clone(),
-            move |reqs: Vec<(Vec<f32>, Vec<f32>)>| {
+            OpKind::Gemm,
+            move |reqs: Vec<(Vec<f32>, Vec<f32>)>, ctx| {
                 let n = reqs.len();
                 gmetrics.gemm_requests.fetch_add(n as u64, std::sync::atomic::Ordering::Relaxed);
-                if fuse {
-                    match gsvc.gemm_batch(reqs) {
+                let results: Vec<Result<Vec<f32>, String>> = if fuse {
+                    match gsvc.gemm_batch_traced(reqs, ctx) {
                         Ok((results, stats)) => {
                             gmetrics.record_fusion(stats.launches, stats.fused_tiles);
                             results
@@ -113,7 +132,10 @@ impl Server {
                 } else {
                     gmetrics.record_fusion(n as u64, 0);
                     reqs.into_iter().map(|(a, b)| gsvc.gemm(a, b)).collect()
-                }
+                };
+                let ok = results.iter().filter(|r| r.is_ok()).count() as u64;
+                gmetrics.record_macs(gemm_macs * ok);
+                results
             },
         );
 
@@ -175,6 +197,21 @@ fn err(msg: impl Into<String>) -> Json {
     Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.into()))])
 }
 
+/// One completed span as a Chrome-tracing "X" (complete) event. The trace
+/// id doubles as the `tid`, so chrome://tracing / Perfetto groups one
+/// request's spans onto one timeline row.
+fn span_to_chrome(s: &Span) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(s.name.to_string())),
+        ("ph", Json::Str("X".to_string())),
+        ("ts", Json::Num(s.start_us as f64)),
+        ("dur", Json::Num(s.dur_ns as f64 / 1000.0)),
+        ("pid", Json::Num(1.0)),
+        ("tid", Json::Num(s.trace as f64)),
+        ("args", Json::obj(vec![("span", Json::Num(s.id as f64)), ("parent", Json::Num(s.parent as f64))])),
+    ])
+}
+
 fn handle_request(line: &str, shared: &Shared) -> Json {
     let req = match parse(line) {
         Ok(v) => v,
@@ -190,7 +227,11 @@ fn handle_request(line: &str, shared: &Shared) -> Json {
                 return err(format!("image must have {} pixels", shared.service.info().input_dim));
             }
             let img: Vec<f32> = img.into_iter().map(|v| v as f32).collect();
-            match shared.infer.call(img) {
+            let root = trace::start_root("infer");
+            let ctx = root.as_ref().map(ActiveSpan::ctx);
+            let out = shared.infer.call_traced(img, ctx);
+            trace::finish(root);
+            match out {
                 Ok(logits) => Json::obj(vec![
                     ("ok", Json::Bool(true)),
                     ("logits", Json::arr_f64(&logits.iter().map(|&v| v as f64).collect::<Vec<_>>())),
@@ -214,7 +255,11 @@ fn handle_request(line: &str, shared: &Shared) -> Json {
             }
             let a: Vec<f32> = a.into_iter().map(|v| v as f32).collect();
             let b: Vec<f32> = b.into_iter().map(|v| v as f32).collect();
-            match shared.gemm.call((a, b)) {
+            let root = trace::start_root("gemm");
+            let ctx = root.as_ref().map(ActiveSpan::ctx);
+            let out = shared.gemm.call_traced((a, b), ctx);
+            trace::finish(root);
+            match out {
                 Ok(c) => Json::obj(vec![
                     ("ok", Json::Bool(true)),
                     ("c", Json::arr_f64(&c.iter().map(|&v| v as f64).collect::<Vec<_>>())),
@@ -252,13 +297,19 @@ fn handle_request(line: &str, shared: &Shared) -> Json {
             }
             let labels = checked;
             let n = images.len();
-            let t0 = std::time::Instant::now();
+            let t0 = crate::obs::clock::now();
             shared.metrics.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            match shared.service.train_step(images, labels) {
+            let root = trace::start_root("train");
+            let ctx = root.as_ref().map(ActiveSpan::ctx);
+            let outcome = shared.service.train_step_traced(images, labels, ctx);
+            trace::finish(root);
+            shared.metrics.observe_latency(OpKind::Train, t0.elapsed());
+            match outcome {
                 Ok(loss) => {
                     shared.metrics.record_train_step(n);
+                    // one step ≈ forward + two backward GEMM volumes per layer
+                    shared.metrics.record_macs(3 * info.macs_per_example * n as u64);
                     shared.metrics.responses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    shared.metrics.observe_latency(t0.elapsed());
                     Json::obj(vec![("ok", Json::Bool(true)), ("loss", Json::Num(loss as f64))])
                 }
                 Err(e) => {
@@ -278,11 +329,33 @@ fn handle_request(line: &str, shared: &Shared) -> Json {
                 ("mean_batch_size", Json::Num(s.mean_batch_size)),
                 ("mean_latency_us", Json::Num(s.mean_latency_us)),
                 ("p95_latency_us", Json::Num(s.p95_latency_us as f64)),
+                ("macs", Json::Num(s.macs as f64)),
                 ("gemm_requests", Json::Num(s.gemm_requests as f64)),
                 ("fused_launches", Json::Num(s.fused_launches as f64)),
                 ("fused_tiles", Json::Num(s.fused_tiles as f64)),
                 ("train_steps", Json::Num(s.train_steps as f64)),
                 ("train_examples", Json::Num(s.train_examples as f64)),
+            ])
+        }
+        Some("metrics") => {
+            let s = shared.metrics.snapshot();
+            Json::obj(vec![("ok", Json::Bool(true)), ("prometheus", Json::Str(obs::prom::render(&s)))])
+        }
+        Some("trace") => {
+            if matches!(req.get("clear"), Some(Json::Bool(true))) {
+                trace::clear();
+            }
+            if let Some(every) = req.get("sample").and_then(Json::as_f64) {
+                if every.fract() != 0.0 || !(0.0..=u32::MAX as f64).contains(&every) {
+                    return err(format!("'sample' must be a non-negative integer, got {every}"));
+                }
+                trace::set_sampling(every as u32);
+            }
+            let events: Vec<Json> = trace::events().iter().map(span_to_chrome).collect();
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("sampling", Json::Num(trace::sampling() as f64)),
+                ("events", Json::Arr(events)),
             ])
         }
         Some(op) => err(format!("unknown op '{op}'")),

@@ -11,6 +11,7 @@ use super::lock_unpoisoned;
 use crate::baselines::{DotArch, PdpuArch};
 use crate::dnn::layers::with_zero_seeds;
 use crate::dnn::Tensor;
+use crate::obs::trace::{ActiveSpan, TraceCtx};
 use crate::pdpu::{validate_layer_sizes, ConfigError, PdpuConfig};
 use crate::runtime::{literal_f32, literal_i32, to_vec_f32, ArtifactManifest, LoadedModel, Runtime};
 use crate::train::{softmax_xent_batch, Sgd, TrainGraph};
@@ -242,6 +243,23 @@ impl SoftwareService {
             .collect())
     }
 
+    /// [`Self::infer_batch`] wrapped in an `engine_launch` trace span
+    /// (with S1–S6 stage-bin deltas as its children) when the batch
+    /// carries a sampled request's context. `None` context costs nothing.
+    pub fn infer_batch_traced(
+        &self,
+        images: &[Vec<f32>],
+        ctx: Option<TraceCtx>,
+    ) -> std::result::Result<Vec<Vec<f32>>, String> {
+        let stages0 = crate::obs::stages::snapshot();
+        let span = crate::obs::trace::start_child("engine_launch", ctx);
+        let sctx = span.as_ref().map(ActiveSpan::ctx);
+        let out = self.infer_batch(images);
+        crate::obs::trace::finish(span);
+        crate::obs::stages::emit_delta(sctx, &stages0);
+        out
+    }
+
     /// One SGD step on a batch of labelled images through the posit
     /// training graph: forward → softmax cross-entropy → backward GEMMs →
     /// quire-accumulated posit update ([`crate::train`]). Updates the
@@ -264,6 +282,23 @@ impl SoftwareService {
         let grads = graph.backward(&trace, &dlogits);
         self.sgd.step(&mut graph, &grads);
         Ok(loss as f32)
+    }
+
+    /// [`Self::train_step`] wrapped in a `train_step` trace span (with
+    /// S1–S6 stage-bin deltas as its children) for sampled requests.
+    pub fn train_step_traced(
+        &self,
+        images: &[Vec<f32>],
+        labels: &[u32],
+        ctx: Option<TraceCtx>,
+    ) -> std::result::Result<f32, String> {
+        let stages0 = crate::obs::stages::snapshot();
+        let span = crate::obs::trace::start_child("train_step", ctx);
+        let sctx = span.as_ref().map(ActiveSpan::ctx);
+        let out = self.train_step(images, labels);
+        crate::obs::trace::finish(span);
+        crate::obs::stages::emit_delta(sctx, &stages0);
+        out
     }
 
     /// Shared request validation for the single and batched GEMM paths:
@@ -308,6 +343,21 @@ impl SoftwareService {
         &self,
         reqs: &[(Vec<f32>, Vec<f32>)],
     ) -> (Vec<std::result::Result<Vec<f32>, String>>, FusionStats) {
+        self.gemm_batch_traced(reqs, None)
+    }
+
+    /// [`Self::gemm_batch`] with request tracing: when `ctx` carries a
+    /// sampled request's context, planning and launching are timed as
+    /// separate `fusion_plan` / `engine_launch` spans, and the S1–S6
+    /// stage-bin growth across the launch is emitted as the launch span's
+    /// children. Identical outputs either way — the plan/execute split is
+    /// [`fusion::plan_fusion`] + [`fusion::execute_planned`], which
+    /// [`fusion::execute_fused`] itself composes.
+    pub fn gemm_batch_traced(
+        &self,
+        reqs: &[(Vec<f32>, Vec<f32>)],
+        ctx: Option<TraceCtx>,
+    ) -> (Vec<std::result::Result<Vec<f32>, String>>, FusionStats) {
         let (m, k, _) = self.gemm_mkn;
         let mut tiles: Vec<GemmTile> = Vec::new();
         // per-request slot: index into `tiles`, or the shape error
@@ -321,7 +371,15 @@ impl SoftwareService {
                 Err(e) => slots.push(Err(e)),
             }
         }
-        let (mut outs, stats) = fusion::execute_fused(&tiles);
+        let plan_span = crate::obs::trace::start_child("fusion_plan", ctx);
+        let groups = fusion::plan_fusion(&tiles);
+        crate::obs::trace::finish(plan_span);
+        let stages0 = crate::obs::stages::snapshot();
+        let launch_span = crate::obs::trace::start_child("engine_launch", ctx);
+        let lctx = launch_span.as_ref().map(ActiveSpan::ctx);
+        let (mut outs, stats) = fusion::execute_planned(&tiles, &groups);
+        crate::obs::trace::finish(launch_span);
+        crate::obs::stages::emit_delta(lctx, &stages0);
         let results = slots
             .into_iter()
             .map(|slot| {

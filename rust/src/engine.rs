@@ -32,7 +32,7 @@
 //! per-value posit decode out of the loop. The equivalence is enforced by
 //! tests at three levels (stage, unit, GEMM).
 
-use crate::pdpu::stages::{acc_term, product_term};
+use crate::pdpu::stages::{acc_term, product_term, DecodedInputs};
 use crate::pdpu::{DotScratch, Pdpu, PdpuConfig};
 use crate::posit::{decode, Decoded, Posit, PositFormat};
 
@@ -116,6 +116,31 @@ impl PreparedOperands {
     }
 }
 
+/// Fuse one chunk's cached per-value decodes into the S1 record (the only
+/// S1 work left is the per-chunk accumulator decode): `row`/`col` are the
+/// chunk's live lanes (≤ `n` of them), zero-padded to `n` exactly as
+/// `dot_chunked` pads. Shared by the plain and profiled dot paths so both
+/// execute the identical S1 fill.
+// pdpu-lint: hot-path
+#[inline]
+fn fill_s1_chunk(s1: &mut DecodedInputs, n: usize, acc: Posit, row: &[Decoded], col: &[Decoded]) {
+    s1.products.clear();
+    s1.products.reserve(n);
+    let mut any_nar = false;
+    for (&r, &c) in row.iter().zip(col.iter()) {
+        let (term, nar) = product_term(r, c);
+        any_nar |= nar;
+        s1.products.push(term);
+    }
+    for _ in row.len()..n {
+        s1.products.push(product_term(Decoded::Zero, Decoded::Zero).0);
+    }
+    let (at, nar) = acc_term(acc);
+    any_nar |= nar;
+    s1.acc = at;
+    s1.any_nar = any_nar;
+}
+
 /// Below this many MACs (rows·cols·k) a tile runs sequentially in auto
 /// mode: thread spawn/join would cost more than the dot products.
 const AUTO_PARALLEL_MIN_MACS: usize = 16 * 1024;
@@ -197,8 +222,42 @@ impl BatchEngine {
     /// One chunked dot product over pre-decoded planes: bit-identical to
     /// `Pdpu::dot_chunked(acc, row_posits, col_posits)` — same chunking,
     /// same zero-padded tail, same single rounding per chunk.
+    ///
+    /// When tracing is on, a 1-in-N thread-local probe
+    /// ([`crate::obs::stages::probe`]) diverts the call through
+    /// [`Self::dot_prepared_profiled`] — the same stage sequence with
+    /// per-stage timestamps, so the result stays bit-identical.
     // pdpu-lint: hot-path
     pub fn dot_prepared(
+        &self,
+        acc: Posit,
+        row: &[Decoded],
+        col: &[Decoded],
+        scratch: &mut DotScratch,
+    ) -> Posit {
+        if crate::obs::stages::probe() {
+            return self.dot_prepared_profiled(acc, row, col, scratch);
+        }
+        assert_eq!(row.len(), col.len(), "vector length mismatch");
+        let n = self.unit.config().n;
+        let len = row.len();
+        let mut acc = acc;
+        let mut i = 0;
+        while i < len {
+            let m = (len - i).min(n);
+            fill_s1_chunk(&mut scratch.s1, n, acc, &row[i..i + m], &col[i..i + m]);
+            acc = self.unit.finish_from_s1(scratch);
+            i += n;
+        }
+        acc
+    }
+
+    /// [`Self::dot_prepared`] with S1 / S2 / S3+S4 / S5+S6 wall-time
+    /// accounting accumulated into [`crate::obs::stages`] (one sample per
+    /// dot). Identical stage sequence, identical bits; only the sampled
+    /// profiling path runs it, so it is deliberately *not* a lint-marked
+    /// hot-path function.
+    fn dot_prepared_profiled(
         &self,
         acc: Posit,
         row: &[Decoded],
@@ -209,33 +268,21 @@ impl BatchEngine {
         let n = self.unit.config().n;
         let len = row.len();
         let mut acc = acc;
+        let (mut s1_ns, mut s2_ns, mut s34_ns, mut s56_ns) = (0u64, 0u64, 0u64, 0u64);
         let mut i = 0;
         while i < len {
             let m = (len - i).min(n);
-            // fuse the cached per-value decodes into the S1 record (the
-            // only S1 work left is the per-chunk accumulator decode)
-            {
-                let s1 = &mut scratch.s1;
-                s1.products.clear();
-                s1.products.reserve(n);
-                let mut any_nar = false;
-                for j in i..i + m {
-                    let (term, nar) = product_term(row[j], col[j]);
-                    any_nar |= nar;
-                    s1.products.push(term);
-                }
-                // zero-padded tail lanes, exactly as dot_chunked pads
-                for _ in m..n {
-                    s1.products.push(product_term(Decoded::Zero, Decoded::Zero).0);
-                }
-                let (at, nar) = acc_term(acc);
-                any_nar |= nar;
-                s1.acc = at;
-                s1.any_nar = any_nar;
-            }
-            acc = self.unit.finish_from_s1(scratch);
+            let t0 = crate::obs::clock::now();
+            fill_s1_chunk(&mut scratch.s1, n, acc, &row[i..i + m], &col[i..i + m]);
+            s1_ns += t0.elapsed().as_nanos() as u64;
+            let (out, c2, c34, c56) = self.unit.finish_from_s1_profiled(scratch);
+            acc = out;
+            s2_ns += c2;
+            s34_ns += c34;
+            s56_ns += c56;
             i += n;
         }
+        crate::obs::stages::add_sample(s1_ns, s2_ns, s34_ns, s56_ns);
         acc
     }
 
@@ -317,7 +364,10 @@ impl BatchEngine {
         let wp = PreparedOperands::quantize(cfg.in_fmt, w, k);
         let xp = PreparedOperands::quantize(cfg.in_fmt, x, k);
         let accp: Vec<Posit> = acc.iter().map(|&v| Posit::from_f64(v, cfg.out_fmt)).collect();
-        self.gemm_posit(&accp, &wp, &xp).iter().map(|p| p.to_f64()).collect()
+        let outs = self.gemm_posit(&accp, &wp, &xp);
+        // S6/convert boundary: tally saturations/NaR before leaving posit land
+        crate::obs::record_outputs(&outs);
+        outs.iter().map(|p| p.to_f64()).collect()
     }
 }
 

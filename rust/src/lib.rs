@@ -34,6 +34,9 @@
 //!   enforcing the serving/pipeline invariants (panic-freedom,
 //!   hot-path allocation-freedom, determinism, stage isolation, wire-op
 //!   exhaustiveness) over this crate's own sources.
+//! * [`obs`] — observability: sampled request tracing into a span ring,
+//!   S1–S6 kernel-time profiling, posit numerics counters, Prometheus
+//!   exposition — and the crate's single lint-sanctioned clock site.
 //!
 //! # Batched execution
 //!
@@ -81,6 +84,7 @@ pub mod cost;
 pub mod dnn;
 pub mod engine;
 pub mod experiments;
+pub mod obs;
 pub mod runtime;
 pub mod pdpu;
 pub mod posit;

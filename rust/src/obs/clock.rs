@@ -1,0 +1,57 @@
+//! The crate's single sanctioned clock site.
+//!
+//! The `determinism` lint rule (`analysis/rules/r3_determinism.rs`) bans
+//! raw `Instant::now()` / `SystemTime::now()` everywhere result-affecting
+//! code lives *and* throughout `coordinator/` — telemetry that wants wall
+//! time must route through this module instead. Centralizing the reads
+//! keeps "who looks at the clock" greppable and lets the observability
+//! layer anchor every timestamp to one process-wide epoch, so span start
+//! times from different threads land on a single comparable timeline.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Process-wide epoch: the first time anything asked for a timestamp.
+fn anchor() -> Instant {
+    static ANCHOR: OnceLock<Instant> = OnceLock::new();
+    *ANCHOR.get_or_init(Instant::now)
+}
+
+/// A monotonic instant, for measuring durations.
+///
+/// This is the only place the crate reads the monotonic clock; everything
+/// else stores the returned [`Instant`] and asks it for `elapsed()` /
+/// `saturating_duration_since`.
+pub fn now() -> Instant {
+    Instant::now()
+}
+
+/// Microseconds since the process-wide epoch (first clock use).
+///
+/// Saturates at zero for instants that somehow precede the anchor, so it
+/// can never panic.
+pub fn epoch_us() -> u64 {
+    let a = anchor();
+    now().saturating_duration_since(a).as_micros() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoch_is_monotone() {
+        let a = epoch_us();
+        let b = epoch_us();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn durations_are_nonnegative() {
+        let t0 = now();
+        let t1 = now();
+        assert!(t1.saturating_duration_since(t0) >= std::time::Duration::ZERO);
+        // the saturating form clamps reversed arguments to zero instead of panicking
+        assert_eq!(t0.saturating_duration_since(t1), std::time::Duration::ZERO);
+    }
+}

@@ -1,0 +1,140 @@
+//! Observability: request tracing, per-stage profiling, posit numerics
+//! counters, and Prometheus rendering.
+//!
+//! This module is the telemetry substrate for the serving stack — and,
+//! by lint decree, the **only** place in the crate allowed to read the
+//! wall clock (the `determinism` rule bans `Instant::now` everywhere
+//! else, including the whole coordinator; see [`clock`]).
+//!
+//! * [`clock`] — the sanctioned monotonic clock + process epoch.
+//! * [`trace`] — sampled request spans into a bounded ring buffer
+//!   (`{"op":"trace"}` / `pdpu trace` export it as Chrome tracing JSON).
+//! * [`stages`] — S1–S6 kernel-time bins fed by the engine's sampled
+//!   profiled dot products.
+//! * [`prom`] — Prometheus text exposition of the metrics snapshot
+//!   (`{"op":"metrics"}` / `pdpu stats --prom`), plus a minimal parser
+//!   used by the tests.
+//!
+//! This file additionally owns the **posit numerics counters** — always-on
+//! process-wide tallies of quire-rounding events, saturations to
+//! ±maxpos/±minpos, and NaR encounters, recorded at the S6/convert
+//! boundary where engine launches hand posit results back to f64 land.
+//! They are cheap (one slice scan over *outputs*, which is tiny next to
+//! the O(m·k·n) work that produced them) and they ground the posit
+//! accuracy story in live serving data.
+
+pub mod clock;
+pub mod prom;
+pub mod stages;
+pub mod trace;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::posit::Posit;
+
+static QUIRE_ROUNDINGS: AtomicU64 = AtomicU64::new(0);
+static SAT_MAXPOS: AtomicU64 = AtomicU64::new(0);
+static SAT_MINPOS: AtomicU64 = AtomicU64::new(0);
+static NAR: AtomicU64 = AtomicU64::new(0);
+
+/// Count `n` quire-rounding events: conversions where the single
+/// quire→posit rounding changed the value versus the exact result
+/// (recorded by the SGD update path).
+pub fn add_quire_roundings(n: u64) {
+    if n > 0 {
+        QUIRE_ROUNDINGS.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// Scan one launch's posit outputs at the S6/convert boundary and count
+/// saturations to ±maxpos, hits of ±minpos (the smallest representable
+/// magnitude — where underflow-avoidance clamps land), and NaR values.
+///
+/// One pass over the output slice, local tallies, at most three atomic
+/// adds — safe to leave always-on.
+pub fn record_outputs(outs: &[Posit]) {
+    let mut maxpos = 0u64;
+    let mut minpos = 0u64;
+    let mut nar = 0u64;
+    for p in outs {
+        if p.is_nar() {
+            nar += 1;
+            continue;
+        }
+        if p.is_zero() {
+            continue;
+        }
+        let fmt = p.format();
+        let bits = p.bits();
+        let sign_bit = 1u32 << (fmt.n() - 1);
+        let abs = if bits & sign_bit != 0 { bits.wrapping_neg() & fmt.mask() } else { bits };
+        if abs == fmt.maxpos_bits() {
+            maxpos += 1;
+        } else if abs == fmt.minpos_bits() {
+            minpos += 1;
+        }
+    }
+    if maxpos > 0 {
+        SAT_MAXPOS.fetch_add(maxpos, Ordering::Relaxed);
+    }
+    if minpos > 0 {
+        SAT_MINPOS.fetch_add(minpos, Ordering::Relaxed);
+    }
+    if nar > 0 {
+        NAR.fetch_add(nar, Ordering::Relaxed);
+    }
+}
+
+/// Point-in-time view of the posit numerics counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NumericsSnapshot {
+    /// Quire→posit conversions that rounded away from the exact value.
+    pub quire_roundings: u64,
+    /// Outputs saturated to ±maxpos.
+    pub sat_maxpos: u64,
+    /// Outputs landing on ±minpos (underflow clamp magnitude).
+    pub sat_minpos: u64,
+    /// NaR outputs observed.
+    pub nar: u64,
+}
+
+/// Read the numerics counters.
+pub fn numerics() -> NumericsSnapshot {
+    NumericsSnapshot {
+        quire_roundings: QUIRE_ROUNDINGS.load(Ordering::Relaxed),
+        sat_maxpos: SAT_MAXPOS.load(Ordering::Relaxed),
+        sat_minpos: SAT_MINPOS.load(Ordering::Relaxed),
+        nar: NAR.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::PositFormat;
+
+    #[test]
+    fn record_outputs_classifies_saturation_and_nar() {
+        let fmt = PositFormat::new(8, 2).expect("valid format");
+        let before = numerics();
+        let maxpos = Posit::from_bits(fmt.maxpos_bits(), fmt);
+        let neg_maxpos = Posit::from_f64(-maxpos.to_f64(), fmt);
+        let minpos = Posit::from_bits(fmt.minpos_bits(), fmt);
+        let nar = Posit::nar(fmt);
+        let ordinary = Posit::from_f64(1.0, fmt);
+        let zero = Posit::from_f64(0.0, fmt);
+        record_outputs(&[maxpos, neg_maxpos, minpos, nar, ordinary, zero]);
+        let d = numerics();
+        assert!(d.sat_maxpos >= before.sat_maxpos + 2);
+        assert!(d.sat_minpos >= before.sat_minpos + 1);
+        assert!(d.nar >= before.nar + 1);
+    }
+
+    #[test]
+    fn quire_roundings_accumulate() {
+        let before = numerics().quire_roundings;
+        add_quire_roundings(0);
+        add_quire_roundings(3);
+        assert!(numerics().quire_roundings >= before + 3);
+    }
+}

@@ -1,0 +1,176 @@
+//! Prometheus text exposition of the metrics snapshot, plus the minimal
+//! parser the test suite round-trips it through.
+//!
+//! Rendering follows the text exposition format version 0.0.4: `# HELP` /
+//! `# TYPE` per metric name, `name{labels} value` samples, histogram
+//! buckets cumulative with a closing `le="+Inf"`. Metric names are
+//! prefixed `pdpu_` and use base units in the name
+//! (`…_microseconds`, `…_total`).
+
+use std::fmt::Write as _;
+
+use crate::coordinator::metrics::{HistoSnapshot, MetricsSnapshot, BUCKETS_US};
+
+fn counter(out: &mut String, name: &str, help: &str, v: u64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} counter");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+fn histogram_series(out: &mut String, name: &str, op: &str, h: &HistoSnapshot) {
+    let mut cum = 0u64;
+    for (i, bound) in BUCKETS_US.iter().enumerate() {
+        cum += h.buckets.get(i).copied().unwrap_or(0);
+        let _ = writeln!(out, "{name}_bucket{{op=\"{op}\",le=\"{bound}\"}} {cum}");
+    }
+    let _ = writeln!(out, "{name}_bucket{{op=\"{op}\",le=\"+Inf\"}} {}", h.count);
+    let _ = writeln!(out, "{name}_sum{{op=\"{op}\"}} {}", h.sum_us);
+    let _ = writeln!(out, "{name}_count{{op=\"{op}\"}} {}", h.count);
+}
+
+/// Render a metrics snapshot as Prometheus text exposition.
+pub fn render(s: &MetricsSnapshot) -> String {
+    let mut out = String::new();
+    counter(&mut out, "pdpu_requests_total", "Requests received over the wire.", s.requests);
+    counter(&mut out, "pdpu_responses_total", "Successful replies sent.", s.responses);
+    counter(&mut out, "pdpu_errors_total", "Error replies sent.", s.errors);
+    counter(&mut out, "pdpu_batches_total", "Dynamic batches executed.", s.batches);
+    counter(&mut out, "pdpu_macs_total", "Multiply-accumulate operations executed by the engine.", s.macs);
+    counter(&mut out, "pdpu_gemm_requests_total", "GEMM requests received.", s.gemm_requests);
+    counter(&mut out, "pdpu_fused_launches_total", "Engine launches after cross-request fusion.", s.fused_launches);
+    counter(&mut out, "pdpu_fused_tiles_total", "GEMM tiles that rode a shared fused launch.", s.fused_tiles);
+    counter(&mut out, "pdpu_train_steps_total", "SGD steps applied to the served model.", s.train_steps);
+    counter(&mut out, "pdpu_train_examples_total", "Examples consumed by training steps.", s.train_examples);
+
+    let name = "pdpu_request_latency_microseconds";
+    let _ = writeln!(out, "# HELP {name} Request latency from enqueue to reply, per op.");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    for (op, h) in [("infer", &s.infer), ("gemm", &s.gemm), ("train", &s.train)] {
+        histogram_series(&mut out, name, op, &h.latency);
+    }
+
+    let _ = writeln!(out, "# HELP pdpu_queue_depth Requests waiting in the batcher queue, per op.");
+    let _ = writeln!(out, "# TYPE pdpu_queue_depth gauge");
+    for (op, o) in [("infer", &s.infer), ("gemm", &s.gemm), ("train", &s.train)] {
+        let _ = writeln!(out, "pdpu_queue_depth{{op=\"{op}\"}} {}", o.queue_depth);
+    }
+    let _ = writeln!(out, "# HELP pdpu_batch_wait_microseconds Oldest-item queue wait of the most recent batch, per op.");
+    let _ = writeln!(out, "# TYPE pdpu_batch_wait_microseconds gauge");
+    for (op, o) in [("infer", &s.infer), ("gemm", &s.gemm), ("train", &s.train)] {
+        let _ = writeln!(out, "pdpu_batch_wait_microseconds{{op=\"{op}\"}} {}", o.last_batch_wait_us);
+    }
+
+    counter(
+        &mut out,
+        "pdpu_posit_quire_roundings_total",
+        "Quire-to-posit conversions that rounded away from the exact value.",
+        s.numerics.quire_roundings,
+    );
+    counter(&mut out, "pdpu_posit_sat_maxpos_total", "Posit outputs saturated to +/-maxpos.", s.numerics.sat_maxpos);
+    counter(&mut out, "pdpu_posit_sat_minpos_total", "Posit outputs clamped at +/-minpos.", s.numerics.sat_minpos);
+    counter(&mut out, "pdpu_posit_nar_total", "NaR posit outputs observed.", s.numerics.nar);
+    out
+}
+
+/// One parsed sample line: `name{labels} value`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    /// Metric name (`[a-zA-Z0-9_:]+`).
+    pub name: String,
+    /// Label pairs in source order.
+    pub labels: Vec<(String, String)>,
+    /// Sample value.
+    pub value: f64,
+}
+
+impl Sample {
+    /// Value of label `key`, if present.
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Minimal Prometheus text-format parser: skips comments and blanks,
+/// parses `name{k="v",…} value` lines, and rejects malformed names,
+/// labels, or values. Enough to round-trip [`render`] in tests and smoke
+/// jobs; not a full scrape-protocol implementation.
+pub fn parse_exposition(text: &str) -> Result<Vec<Sample>, String> {
+    let mut out = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let ln = idx + 1;
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (head, val) = line.rsplit_once(' ').ok_or_else(|| format!("line {ln}: no value"))?;
+        let value: f64 = val.trim().parse().map_err(|_| format!("line {ln}: bad value {val:?}"))?;
+        let (name, labels) = match head.find('{') {
+            Some(i) => {
+                let (n, rest) = head.split_at(i);
+                let inner = rest
+                    .strip_prefix('{')
+                    .and_then(|r| r.strip_suffix('}'))
+                    .ok_or_else(|| format!("line {ln}: unbalanced label braces"))?;
+                let mut labels = Vec::new();
+                for pair in inner.split(',').filter(|p| !p.is_empty()) {
+                    let (k, v) = pair.split_once('=').ok_or_else(|| format!("line {ln}: bad label pair {pair:?}"))?;
+                    let v = v
+                        .strip_prefix('"')
+                        .and_then(|v| v.strip_suffix('"'))
+                        .ok_or_else(|| format!("line {ln}: unquoted label value in {pair:?}"))?;
+                    labels.push((k.to_string(), v.to_string()));
+                }
+                (n, labels)
+            }
+            None => (head, Vec::new()),
+        };
+        if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':') {
+            return Err(format!("line {ln}: bad metric name {name:?}"));
+        }
+        out.push(Sample { name: name.to_string(), labels, value });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Metrics;
+    use std::time::Duration;
+
+    #[test]
+    fn render_round_trips_through_parser() {
+        let m = Metrics::default();
+        m.requests.fetch_add(7, std::sync::atomic::Ordering::Relaxed);
+        m.observe_latency(crate::coordinator::OpKind::Infer, Duration::from_micros(80));
+        m.observe_latency(crate::coordinator::OpKind::Gemm, Duration::from_micros(800));
+        let text = render(&m.snapshot());
+        let samples = parse_exposition(&text).expect("renderer output parses");
+        let req = samples.iter().find(|s| s.name == "pdpu_requests_total").expect("requests counter present");
+        assert_eq!(req.value, 7.0);
+        let inf = samples
+            .iter()
+            .find(|s| s.name == "pdpu_request_latency_microseconds_count" && s.label("op") == Some("infer"))
+            .expect("infer histogram count present");
+        assert_eq!(inf.value, 1.0);
+        // cumulative buckets: the +Inf bucket equals the count
+        let inf_inf = samples
+            .iter()
+            .find(|s| {
+                s.name == "pdpu_request_latency_microseconds_bucket"
+                    && s.label("op") == Some("infer")
+                    && s.label("le") == Some("+Inf")
+            })
+            .expect("+Inf bucket present");
+        assert_eq!(inf_inf.value, 1.0);
+    }
+
+    #[test]
+    fn parser_rejects_malformed_lines() {
+        assert!(parse_exposition("no_value_here").is_err());
+        assert!(parse_exposition("bad name 1").is_err());
+        assert!(parse_exposition("name{k=v} 1").is_err());
+        assert!(parse_exposition("name{k=\"v\" 1").is_err());
+        assert!(parse_exposition("name 1.5e3\n# comment\n\nother_total 2").is_ok());
+    }
+}

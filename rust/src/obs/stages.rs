@@ -1,0 +1,146 @@
+//! Per-stage kernel timing for the paper's S1–S6 pipeline.
+//!
+//! The engine's inner loop (`BatchEngine::dot_prepared`) is the one place
+//! the reproduction touches all six pipeline stages per chunk, and also
+//! the one place that absolutely cannot afford per-call timing. So the
+//! probe is two-level:
+//!
+//! * **Level 0** — tracing off ([`super::trace::sampling`] == 0):
+//!   [`probe`] is a single relaxed load plus a predictable branch; the
+//!   engine runs its unprofiled hot kernel.
+//! * **Level 1** — tracing on: a thread-local tick samples one dot
+//!   product in [`STAGE_PROBE_EVERY`], and only that dot runs the
+//!   profiled kernel, which times S1 (decode/fill), S2 (multiply),
+//!   S3–S4 (align + accumulate) and S5–S6 (normalize + encode) and adds
+//!   the nanoseconds into four global bins.
+//!
+//! The bins are cumulative; span emission works on *deltas* — the service
+//! snapshots the bins before an engine launch and emits the per-stage
+//! growth as child spans of that launch ([`emit_delta`]). The engine
+//! thread serializes launches, so a launch's delta is attributable to it.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// When tracing is on, one dot product in this many is stage-profiled.
+pub const STAGE_PROBE_EVERY: u32 = 64;
+
+thread_local! {
+    static TICK: Cell<u32> = Cell::new(0);
+}
+
+static S1_NS: AtomicU64 = AtomicU64::new(0);
+static S2_NS: AtomicU64 = AtomicU64::new(0);
+static S34_NS: AtomicU64 = AtomicU64::new(0);
+static S56_NS: AtomicU64 = AtomicU64::new(0);
+static SAMPLES: AtomicU64 = AtomicU64::new(0);
+
+/// Should this dot product run the profiled kernel?
+///
+/// False in one relaxed load when tracing is off; otherwise true for one
+/// call in [`STAGE_PROBE_EVERY`] per thread. Allocation-free.
+pub fn probe() -> bool {
+    if super::trace::sampling() == 0 {
+        return false;
+    }
+    TICK.with(|t| {
+        let v = t.get().wrapping_add(1);
+        t.set(v);
+        v % STAGE_PROBE_EVERY == 0
+    })
+}
+
+/// Add one profiled dot product's per-stage nanoseconds to the bins.
+pub fn add_sample(s1_ns: u64, s2_ns: u64, s34_ns: u64, s56_ns: u64) {
+    S1_NS.fetch_add(s1_ns, Ordering::Relaxed);
+    S2_NS.fetch_add(s2_ns, Ordering::Relaxed);
+    S34_NS.fetch_add(s34_ns, Ordering::Relaxed);
+    S56_NS.fetch_add(s56_ns, Ordering::Relaxed);
+    SAMPLES.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Cumulative stage-bin totals at a point in time.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StageSnapshot {
+    /// S1 decode + operand fill, nanoseconds.
+    pub s1_ns: u64,
+    /// S2 mantissa multiply, nanoseconds.
+    pub s2_ns: u64,
+    /// S3 align + S4 accumulate, nanoseconds.
+    pub s34_ns: u64,
+    /// S5 normalize + S6 round/encode, nanoseconds.
+    pub s56_ns: u64,
+    /// Profiled dot products contributing to the bins.
+    pub samples: u64,
+}
+
+impl StageSnapshot {
+    /// Bin growth since `earlier` (saturating, so reordered relaxed reads
+    /// can never underflow).
+    pub fn delta_since(&self, earlier: &StageSnapshot) -> StageSnapshot {
+        StageSnapshot {
+            s1_ns: self.s1_ns.saturating_sub(earlier.s1_ns),
+            s2_ns: self.s2_ns.saturating_sub(earlier.s2_ns),
+            s34_ns: self.s34_ns.saturating_sub(earlier.s34_ns),
+            s56_ns: self.s56_ns.saturating_sub(earlier.s56_ns),
+            samples: self.samples.saturating_sub(earlier.samples),
+        }
+    }
+}
+
+/// Read the cumulative bins.
+pub fn snapshot() -> StageSnapshot {
+    StageSnapshot {
+        s1_ns: S1_NS.load(Ordering::Relaxed),
+        s2_ns: S2_NS.load(Ordering::Relaxed),
+        s34_ns: S34_NS.load(Ordering::Relaxed),
+        s56_ns: S56_NS.load(Ordering::Relaxed),
+        samples: SAMPLES.load(Ordering::Relaxed),
+    }
+}
+
+/// Emit the bin growth since `earlier` as four stage spans under `ctx`
+/// (normally an `engine_launch` span). No-op when nothing was profiled
+/// in the window or the request is unsampled.
+pub fn emit_delta(ctx: Option<super::trace::TraceCtx>, earlier: &StageSnapshot) {
+    if ctx.is_none() {
+        return;
+    }
+    let d = snapshot().delta_since(earlier);
+    if d.samples == 0 {
+        return;
+    }
+    super::trace::record_ending_now("s1_decode", ctx, d.s1_ns);
+    super::trace::record_ending_now("s2_multiply", ctx, d.s2_ns);
+    super::trace::record_ending_now("s3_s4_align_acc", ctx, d.s34_ns);
+    super::trace::record_ending_now("s5_s6_norm_encode", ctx, d.s56_ns);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_is_false_when_tracing_off() {
+        // sampling may be toggled by trace tests in this binary; only
+        // assert the off case, which we can force locally.
+        if super::super::trace::sampling() == 0 {
+            for _ in 0..1000 {
+                assert!(!probe());
+            }
+        }
+    }
+
+    #[test]
+    fn delta_is_saturating_and_additive() {
+        let before = snapshot();
+        add_sample(10, 20, 30, 40);
+        add_sample(1, 2, 3, 4);
+        let d = snapshot().delta_since(&before);
+        assert!(d.s1_ns >= 11 && d.s2_ns >= 22 && d.s34_ns >= 33 && d.s56_ns >= 44);
+        assert!(d.samples >= 2);
+        // reversed arguments saturate to zero instead of wrapping
+        let z = before.delta_since(&snapshot());
+        assert_eq!(z.samples, 0);
+    }
+}

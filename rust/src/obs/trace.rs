@@ -1,0 +1,281 @@
+//! Lock-cheap request tracing: sampled spans into a fixed-capacity ring.
+//!
+//! Design goals, in priority order:
+//!
+//! 1. **The off path costs one relaxed atomic load and a predictable
+//!    branch.** Sampling defaults to *off* (`SAMPLE_EVERY == 0`); every
+//!    instrumentation site first calls [`sampling`]/[`start_root`]/
+//!    [`start_child`], which bail immediately without touching any lock.
+//! 2. **Sampled requests are traced end to end.** The root span decides
+//!    once (1-in-N on a global tick); children inherit the decision by
+//!    carrying the parent's [`TraceCtx`] — there is no per-child coin
+//!    flip, so a sampled request's full breakdown is always complete.
+//! 3. **Completed spans land in a bounded ring** (capacity
+//!    [`RING_CAPACITY`]) guarded by one mutex that is touched only for
+//!    sampled spans; the ring overwrites oldest-first and never grows.
+//!
+//! Span identity: every span gets a process-unique `id`; `parent == 0`
+//! marks a root; `trace` is the root span's id, shared by the whole tree,
+//! so one request's lifecycle is reconstructable by filtering the ring on
+//! a single `trace` value. Export to Chrome's `chrome://tracing` JSON is
+//! done by the server/CLI (`{"op":"trace"}` / `pdpu trace`); this module
+//! deliberately knows nothing about JSON.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Completed spans retained; the ring overwrites oldest-first beyond this.
+pub const RING_CAPACITY: usize = 4096;
+
+/// 0 = tracing off; N>0 = trace every Nth root request.
+static SAMPLE_EVERY: AtomicU32 = AtomicU32::new(0);
+/// Monotone root-request tick driving the 1-in-N decision.
+static ROOT_TICK: AtomicU64 = AtomicU64::new(0);
+/// Process-unique span id allocator (0 is reserved for "no parent").
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Set the sampling rate: `0` disables tracing, `n > 0` traces every
+/// `n`th root request (children of a sampled root are always traced).
+pub fn set_sampling(every: u32) {
+    SAMPLE_EVERY.store(every, Ordering::Relaxed);
+}
+
+/// Current sampling rate (`0` = off). One relaxed load — this is the
+/// branch the hot path predicts.
+pub fn sampling() -> u32 {
+    SAMPLE_EVERY.load(Ordering::Relaxed)
+}
+
+/// Identity a sampled span hands to its children: the root id of the
+/// whole request tree plus the immediate parent span id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceCtx {
+    /// Root span id shared by every span of one request.
+    pub trace: u64,
+    /// Immediate parent span id.
+    pub span: u64,
+}
+
+/// A completed span as stored in the ring.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Span {
+    /// Process-unique span id.
+    pub id: u64,
+    /// Parent span id; `0` for roots.
+    pub parent: u64,
+    /// Root span id of the request tree this span belongs to.
+    pub trace: u64,
+    /// Static span name (see the taxonomy in `docs/ARCHITECTURE.md`).
+    pub name: &'static str,
+    /// Start time in microseconds since the process clock epoch.
+    pub start_us: u64,
+    /// Duration in nanoseconds.
+    pub dur_ns: u64,
+}
+
+/// An in-flight span; finish it with [`finish`] to record it.
+#[derive(Debug)]
+pub struct ActiveSpan {
+    id: u64,
+    parent: u64,
+    trace: u64,
+    name: &'static str,
+    start: Instant,
+    start_us: u64,
+}
+
+impl ActiveSpan {
+    /// Context to hand to children so they parent under this span.
+    pub fn ctx(&self) -> TraceCtx {
+        TraceCtx { trace: self.trace, span: self.id }
+    }
+}
+
+fn alloc_id() -> u64 {
+    NEXT_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Start a root span (one per request). Returns `None` — at the cost of
+/// one relaxed load — when sampling is off, and for the N-1 of N requests
+/// the sampler skips.
+pub fn start_root(name: &'static str) -> Option<ActiveSpan> {
+    let every = sampling();
+    if every == 0 {
+        return None;
+    }
+    if ROOT_TICK.fetch_add(1, Ordering::Relaxed) % u64::from(every) != 0 {
+        return None;
+    }
+    let id = alloc_id();
+    Some(ActiveSpan {
+        id,
+        parent: 0,
+        trace: id,
+        name,
+        start: super::clock::now(),
+        start_us: super::clock::epoch_us(),
+    })
+}
+
+/// Start a child span under `ctx`. `None` in, `None` out: unsampled
+/// requests carry no context, so their children cost nothing.
+pub fn start_child(name: &'static str, ctx: Option<TraceCtx>) -> Option<ActiveSpan> {
+    let ctx = ctx?;
+    Some(ActiveSpan {
+        id: alloc_id(),
+        parent: ctx.span,
+        trace: ctx.trace,
+        name,
+        start: super::clock::now(),
+        start_us: super::clock::epoch_us(),
+    })
+}
+
+/// Finish a span started by [`start_root`]/[`start_child`], pushing it
+/// into the ring. `None` is a no-op, so call sites stay branch-free.
+pub fn finish(span: Option<ActiveSpan>) {
+    let Some(s) = span else { return };
+    let dur_ns = super::clock::now().saturating_duration_since(s.start).as_nanos() as u64;
+    push(Span { id: s.id, parent: s.parent, trace: s.trace, name: s.name, start_us: s.start_us, dur_ns });
+}
+
+/// Record a span that just ended with a known duration (used where the
+/// start was observed elsewhere: batcher queue-wait, stage-bin deltas).
+/// No-op without a context.
+pub fn record_ending_now(name: &'static str, ctx: Option<TraceCtx>, dur_ns: u64) {
+    let Some(c) = ctx else { return };
+    let end_us = super::clock::epoch_us();
+    push(Span {
+        id: alloc_id(),
+        parent: c.span,
+        trace: c.trace,
+        name,
+        start_us: end_us.saturating_sub(dur_ns / 1_000),
+        dur_ns,
+    });
+}
+
+struct Ring {
+    spans: Vec<Span>,
+    next: usize,
+}
+
+static RING: Mutex<Ring> = Mutex::new(Ring { spans: Vec::new(), next: 0 });
+
+fn ring_lock() -> std::sync::MutexGuard<'static, Ring> {
+    RING.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn push(span: Span) {
+    let mut g = ring_lock();
+    if g.spans.len() < RING_CAPACITY {
+        g.spans.push(span);
+    } else {
+        let at = g.next % RING_CAPACITY;
+        if let Some(slot) = g.spans.get_mut(at) {
+            *slot = span;
+        }
+        g.next = (g.next + 1) % RING_CAPACITY;
+    }
+}
+
+/// Snapshot of the ring, ordered by start time (ties broken by id).
+pub fn events() -> Vec<Span> {
+    let mut out = ring_lock().spans.clone();
+    out.sort_by_key(|s| (s.start_us, s.id));
+    out
+}
+
+/// Drop all recorded spans (sampling rate is left unchanged).
+pub fn clear() {
+    let mut g = ring_lock();
+    g.spans.clear();
+    g.next = 0;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Sampling rate and the ring are process-global; every test that
+    // touches them serializes on this lock so `cargo test`'s parallel
+    // runner can't interleave them.
+    static GLOBALS: Mutex<()> = Mutex::new(());
+
+    fn locked() -> std::sync::MutexGuard<'static, ()> {
+        GLOBALS.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn sampling_off_records_nothing() {
+        let _g = locked();
+        set_sampling(0);
+        clear();
+        let root = start_root("infer");
+        assert!(root.is_none());
+        let child = start_child("queue_wait", root.as_ref().map(ActiveSpan::ctx));
+        assert!(child.is_none());
+        finish(child);
+        finish(root);
+        record_ending_now("queue_wait", None, 123);
+        assert!(events().is_empty());
+    }
+
+    #[test]
+    fn sampled_tree_shares_trace_id_and_parents_correctly() {
+        let _g = locked();
+        set_sampling(1);
+        clear();
+        let root = start_root("gemm").expect("1-in-1 sampling always samples");
+        let rctx = root.ctx();
+        let child = start_child("engine_launch", Some(rctx)).expect("child of sampled root");
+        let cctx = child.ctx();
+        record_ending_now("s2_multiply", Some(cctx), 500);
+        finish(child);
+        finish(root);
+        set_sampling(0);
+
+        let evs = events();
+        assert_eq!(evs.len(), 3);
+        let root_ev = evs.iter().find(|e| e.name == "gemm").expect("root span recorded");
+        assert_eq!(root_ev.parent, 0);
+        assert_eq!(root_ev.trace, root_ev.id);
+        let launch = evs.iter().find(|e| e.name == "engine_launch").expect("child span recorded");
+        assert_eq!(launch.parent, root_ev.id);
+        assert_eq!(launch.trace, root_ev.id);
+        let stage = evs.iter().find(|e| e.name == "s2_multiply").expect("leaf span recorded");
+        assert_eq!(stage.parent, launch.id);
+        assert_eq!(stage.trace, root_ev.id);
+        assert_eq!(stage.dur_ns, 500);
+    }
+
+    #[test]
+    fn one_in_n_sampling_traces_a_strict_subset() {
+        let _g = locked();
+        set_sampling(4);
+        clear();
+        let sampled = (0..16)
+            .filter(|_| {
+                let s = start_root("infer");
+                let hit = s.is_some();
+                finish(s);
+                hit
+            })
+            .count();
+        set_sampling(0);
+        assert_eq!(sampled, 4, "1-in-4 over 16 roots");
+    }
+
+    #[test]
+    fn ring_is_bounded() {
+        let _g = locked();
+        set_sampling(1);
+        clear();
+        for _ in 0..(RING_CAPACITY + 10) {
+            finish(start_root("ping"));
+        }
+        set_sampling(0);
+        assert_eq!(events().len(), RING_CAPACITY);
+    }
+}

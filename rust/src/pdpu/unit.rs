@@ -116,6 +116,27 @@ impl Pdpu {
         s6_encode(&self.cfg, &s5)
     }
 
+    /// [`Self::finish_from_s1`] with per-stage timestamps: returns the
+    /// chunk result plus nanoseconds spent in S2, S3+S4, and S5+S6. Only
+    /// the sampled profiling path ([`crate::obs::stages`]) runs this, so
+    /// it is deliberately *not* a lint-marked hot-path function — the
+    /// clock reads would be noise on the always-on path.
+    pub(crate) fn finish_from_s1_profiled(&self, scratch: &mut DotScratch) -> (Posit, u64, u64, u64) {
+        let t0 = crate::obs::clock::now();
+        s2_multiply_into(&self.cfg, &scratch.s1, &mut scratch.s2);
+        let t1 = crate::obs::clock::now();
+        s3_align_into(&self.cfg, &scratch.s2, &mut scratch.s3);
+        let s4 = s4_accumulate(&self.cfg, &scratch.s3);
+        let t2 = crate::obs::clock::now();
+        let s5 = s5_normalize(&self.cfg, &s4);
+        let out = s6_encode(&self.cfg, &s5);
+        let t3 = crate::obs::clock::now();
+        let s2_ns = t1.saturating_duration_since(t0).as_nanos() as u64;
+        let s34_ns = t2.saturating_duration_since(t1).as_nanos() as u64;
+        let s56_ns = t3.saturating_duration_since(t2).as_nanos() as u64;
+        (out, s2_ns, s34_ns, s56_ns)
+    }
+
 
     /// Like [`Self::dot`] but returning all intermediate stage records.
     pub fn dot_trace(&self, acc: Posit, a: &[Posit], b: &[Posit]) -> Trace {

@@ -80,15 +80,30 @@ impl Sgd {
     }
 
     /// `w[i] ← round(w[i] − lr·g[i])`, single-rounded through the quire.
+    ///
+    /// Each update's one quire→posit rounding is audited: when the stored
+    /// result differs from the exact `wq − lr·gq` (all operands already on
+    /// their posit grids, so the f64 reference is exact up to its own 53
+    /// bits), the slice's tally lands in the global
+    /// [`crate::obs`] quire-rounding counter — the "how often does
+    /// quantization-on-update actually round" signal.
     fn update_slice(&self, w: &mut [f64], g: &[f64]) {
         assert_eq!(w.len(), g.len(), "parameter/gradient shape mismatch");
         let neg_lr = Posit::from_f64(-self.lr, self.grad_fmt);
+        let mut roundings = 0u64;
         for (wi, &gi) in w.iter_mut().zip(g) {
+            let wq = Posit::from_f64(*wi, self.weight_fmt);
+            let gq = Posit::from_f64(gi, self.grad_fmt);
             let mut q = Quire::new(self.grad_fmt, self.grad_fmt).expect("format within quire capacity");
-            q.add_posit(Posit::from_f64(*wi, self.weight_fmt));
-            q.add_product(neg_lr, Posit::from_f64(gi, self.grad_fmt));
-            *wi = q.to_posit(self.weight_fmt).to_f64();
+            q.add_posit(wq);
+            q.add_product(neg_lr, gq);
+            let updated = q.to_posit(self.weight_fmt);
+            if updated.to_f64() != wq.to_f64() + neg_lr.to_f64() * gq.to_f64() {
+                roundings += 1;
+            }
+            *wi = updated.to_f64();
         }
+        crate::obs::add_quire_roundings(roundings);
     }
 }
 
@@ -158,6 +173,23 @@ mod tests {
         sgd.update_slice(&mut w, &g);
         assert_eq!(w[0], 0.75); // 1 − 0.5·0.5
         assert_eq!(w[1], -0.75); // −0.25 − 0.5
+    }
+
+    #[test]
+    fn inexact_updates_bump_the_quire_rounding_counter() {
+        // tiny lr·g against a unit weight: the exact sum needs more
+        // fraction bits than p16 holds, so the single rounding must fire.
+        // The counter is process-global (other tests may also bump it), so
+        // assert a monotone increase, not an exact delta.
+        let before = crate::obs::numerics().quire_roundings;
+        let cfg = PdpuConfig::paper_default();
+        let sgd = Sgd::new(1.0 / 1024.0, &cfg);
+        let mut w = [1.0];
+        sgd.update_slice(&mut w, &[1.0 / 1024.0]);
+        assert!(
+            crate::obs::numerics().quire_roundings > before,
+            "an update that cannot be exact must record a rounding event"
+        );
     }
 
     #[test]

@@ -84,8 +84,21 @@ fn r3_determinism_fires_on_fixture() {
     let lookups = "use std::collections::HashMap;\n\
                    fn f(m: &mut HashMap<u32, u32>) -> Option<u32> { m.insert(1, 2); m.get(&1).copied() }\n";
     assert!(lint_source("pdpu/fixture.rs", lookups).is_empty());
-    // the batcher reads deadlines legitimately — out of R3's scope
-    assert!(lint_source("coordinator/batcher.rs", "fn f() { let _ = std::time::Instant::now(); }").is_empty());
+    // the coordinator is in the clock scope: raw clock reads must route
+    // through crate::obs::clock instead
+    let raw_clock = "fn f() { let _ = std::time::Instant::now(); }";
+    let diags = lint_source("coordinator/batcher.rs", raw_clock);
+    assert_eq!(diags.len(), 1, "raw Instant::now in the coordinator: {diags:?}");
+    assert_eq!(diags[0].rule, "determinism");
+    // …but hash iteration there stays unflagged (clock scope only): the
+    // same fixture that drew two diags in pdpu/ draws just the clock one
+    let lines: Vec<usize> = lint_source("coordinator/batcher.rs", src).iter().map(|d| d.line).collect();
+    assert_eq!(lines, vec![5], "only the Instant::now line fires in the coordinator");
+    // obs/ is the sanctioned clock site — clean by construction
+    let clock_site = "pub fn now() -> std::time::Instant { std::time::Instant::now() }";
+    assert!(lint_source("obs/clock.rs", clock_site).is_empty());
+    // the sanctioned call spelling is clean everywhere, coordinator included
+    assert!(lint_source("coordinator/batcher.rs", "fn f() { let _ = crate::obs::clock::now(); }").is_empty());
 }
 
 /// R4 fires when a stage references a later stage or reaches outside the

@@ -1,0 +1,324 @@
+//! Live-TCP tests for the observability plane: the `stats`, `metrics`,
+//! and `trace` wire ops against a real `Server` + software engine, with
+//! concurrent clients, a Prometheus exposition round trip through the
+//! in-repo parser, and a full request-lifecycle reconstruction from the
+//! exported Chrome-tracing events.
+//!
+//! The span ring, sampling knob, and numerics counters are process-global
+//! (`pdpu::obs`), so every test that toggles sampling or asserts on ring
+//! contents serializes on one mutex and restores sampling to 0.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+
+use pdpu::coordinator::json::{parse, Json};
+use pdpu::coordinator::{Metrics, Server, ServiceHandle};
+use pdpu::obs;
+use pdpu::pdpu::PdpuConfig;
+
+/// Serializes tests that touch the process-global sampling knob and ring.
+static GLOBALS: Mutex<()> = Mutex::new(());
+
+const INPUT_DIM: usize = 16;
+const GEMM_MKN: (usize, usize, usize) = (3, 5, 2);
+
+fn start_server() -> (Server, Arc<Metrics>, ServiceHandle) {
+    let service = ServiceHandle::start_software(
+        PdpuConfig::paper_default(),
+        vec![INPUT_DIM, 10, 4],
+        8,
+        GEMM_MKN,
+        7,
+    )
+    .expect("valid software config");
+    let metrics = Arc::new(Metrics::new());
+    let server = Server::start("127.0.0.1:0", service.clone(), metrics.clone()).expect("bind");
+    (server, metrics, service)
+}
+
+/// One persistent JSON-lines connection.
+struct Client {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let w = TcpStream::connect(addr).expect("connect");
+        let r = BufReader::new(w.try_clone().expect("clone stream"));
+        Client { w, r }
+    }
+
+    fn roundtrip(&mut self, req: &Json) -> Json {
+        self.w.write_all((req.to_string() + "\n").as_bytes()).expect("send");
+        let mut line = String::new();
+        self.r.read_line(&mut line).expect("recv");
+        parse(&line).expect("well-formed response")
+    }
+
+    fn ok(&mut self, req: &Json) -> Json {
+        let resp = self.roundtrip(req);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "server error: {resp}");
+        resp
+    }
+}
+
+fn infer_req(seed: usize) -> Json {
+    let img: Vec<f64> = (0..INPUT_DIM).map(|i| ((seed + i) % 7) as f64 * 0.1).collect();
+    Json::obj(vec![("op", Json::Str("infer".into())), ("image", Json::arr_f64(&img))])
+}
+
+fn gemm_req(seed: usize) -> Json {
+    let (m, k, n) = GEMM_MKN;
+    let a: Vec<f64> = (0..m * k).map(|i| ((seed + i) % 5) as f64 * 0.25).collect();
+    let b: Vec<f64> = (0..k * n).map(|i| ((seed + 2 * i) % 3) as f64 * 0.5).collect();
+    Json::obj(vec![("op", Json::Str("gemm".into())), ("a", Json::arr_f64(&a)), ("b", Json::arr_f64(&b))])
+}
+
+fn train_req() -> Json {
+    let imgs: Vec<Json> = (0..4)
+        .map(|s| Json::arr_f64(&(0..INPUT_DIM).map(|i| ((s + i) % 4) as f64 * 0.2).collect::<Vec<_>>()))
+        .collect();
+    let labels: Vec<f64> = (0..4).map(|s| (s % 4) as f64).collect();
+    Json::obj(vec![
+        ("op", Json::Str("train".into())),
+        ("images", Json::Arr(imgs)),
+        ("labels", Json::arr_f64(&labels)),
+    ])
+}
+
+fn num(v: &Json, key: &str) -> f64 {
+    v.get(key).and_then(Json::as_f64).unwrap_or_else(|| panic!("missing numeric '{key}' in {v}"))
+}
+
+#[test]
+fn stats_op_counts_mixed_traffic_and_macs() {
+    let _g = GLOBALS.lock().unwrap_or_else(|e| e.into_inner());
+    obs::trace::set_sampling(0);
+    let (server, _metrics, service) = start_server();
+    let mut c = Client::connect(server.addr);
+
+    let before = c.ok(&Json::obj(vec![("op", Json::Str("stats".into()))]));
+    for i in 0..6 {
+        c.ok(&infer_req(i));
+    }
+    for i in 0..4 {
+        c.ok(&gemm_req(i));
+    }
+    c.ok(&train_req());
+    // an error reply must count as an error, not a response
+    let bad = c.roundtrip(&Json::obj(vec![
+        ("op", Json::Str("train".into())),
+        ("images", Json::Arr(vec![Json::arr_f64(&[0.0])])),
+        ("labels", Json::arr_f64(&[0.0])),
+    ]));
+    assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+
+    let after = c.ok(&Json::obj(vec![("op", Json::Str("stats".into()))]));
+    assert_eq!(num(&after, "requests") - num(&before, "requests"), 11.0);
+    assert_eq!(num(&after, "responses") - num(&before, "responses"), 11.0);
+    assert_eq!(num(&after, "train_steps"), 1.0);
+    assert_eq!(num(&after, "train_examples"), 4.0);
+    assert_eq!(num(&after, "gemm_requests"), 4.0);
+    assert!(num(&after, "fused_launches") >= 1.0);
+    assert!(num(&after, "mean_latency_us") > 0.0);
+    // satellite: the MAC counter is live — 6 infers + 4 GEMMs + 1 train
+    // step of 4 examples at known shapes
+    let per_example = (INPUT_DIM * 10 + 10 * 4) as f64;
+    let (m, k, n) = GEMM_MKN;
+    let expected = 6.0 * per_example + 4.0 * (m * k * n) as f64 + 3.0 * per_example * 4.0;
+    assert_eq!(num(&after, "macs"), expected, "macs counter must track served work");
+    drop(server);
+    service.shutdown();
+}
+
+#[test]
+fn metrics_op_round_trips_through_the_prometheus_parser() {
+    let _g = GLOBALS.lock().unwrap_or_else(|e| e.into_inner());
+    obs::trace::set_sampling(0);
+    let (server, _metrics, service) = start_server();
+    let mut c = Client::connect(server.addr);
+    for i in 0..5 {
+        c.ok(&infer_req(i));
+        c.ok(&gemm_req(i));
+    }
+    c.ok(&train_req());
+
+    let resp = c.ok(&Json::obj(vec![("op", Json::Str("metrics".into()))]));
+    let text = resp.get("prometheus").and_then(Json::as_str).expect("prometheus field");
+    let samples = obs::prom::parse_exposition(text).expect("valid exposition");
+    assert!(!samples.is_empty());
+
+    let value = |name: &str| {
+        samples
+            .iter()
+            .find(|s| s.name == name && s.labels.is_empty())
+            .unwrap_or_else(|| panic!("missing {name}"))
+            .value
+    };
+    assert!(value("pdpu_requests_total") >= 11.0);
+    assert!(value("pdpu_responses_total") >= 11.0);
+    assert!(value("pdpu_macs_total") > 0.0);
+    assert!(value("pdpu_train_steps_total") >= 1.0);
+
+    // per-op histograms: every op we drove has observations, and the
+    // +Inf bucket equals the count (cumulative buckets)
+    for op in ["infer", "gemm", "train"] {
+        let count = samples
+            .iter()
+            .find(|s| s.name == "pdpu_request_latency_microseconds_count" && s.label("op") == Some(op))
+            .unwrap_or_else(|| panic!("missing {op} histogram count"))
+            .value;
+        assert!(count >= 1.0, "{op} latency count");
+        let inf_bucket = samples
+            .iter()
+            .find(|s| {
+                s.name == "pdpu_request_latency_microseconds_bucket"
+                    && s.label("op") == Some(op)
+                    && s.label("le") == Some("+Inf")
+            })
+            .unwrap_or_else(|| panic!("missing {op} +Inf bucket"))
+            .value;
+        assert_eq!(inf_bucket, count, "{op} +Inf bucket must equal the count");
+        assert!(
+            samples.iter().any(|s| s.name == "pdpu_queue_depth" && s.label("op") == Some(op)),
+            "{op} queue gauge"
+        );
+    }
+    // numerics counters are exported (values are process-global, so only
+    // presence and non-negativity are assertable here)
+    for name in [
+        "pdpu_posit_quire_roundings_total",
+        "pdpu_posit_sat_maxpos_total",
+        "pdpu_posit_sat_minpos_total",
+        "pdpu_posit_nar_total",
+    ] {
+        assert!(value(name) >= 0.0);
+    }
+    drop(server);
+    service.shutdown();
+}
+
+#[test]
+fn concurrent_clients_keep_counters_monotone_and_consistent() {
+    let _g = GLOBALS.lock().unwrap_or_else(|e| e.into_inner());
+    obs::trace::set_sampling(0);
+    let (server, metrics, service) = start_server();
+    let addr = server.addr;
+
+    let mut handles = Vec::new();
+    for t in 0..4usize {
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr);
+            for i in 0..10 {
+                if (t + i) % 3 == 0 {
+                    c.ok(&gemm_req(t * 10 + i));
+                } else {
+                    c.ok(&infer_req(t * 10 + i));
+                }
+            }
+        }));
+    }
+    // scrape concurrently with the traffic: each snapshot must be
+    // monotone in the previous one
+    let mut c = Client::connect(addr);
+    let mut last = (0.0, 0.0);
+    for _ in 0..20 {
+        let s = c.ok(&Json::obj(vec![("op", Json::Str("stats".into()))]));
+        let now = (num(&s, "requests"), num(&s, "responses"));
+        assert!(now.0 >= last.0 && now.1 >= last.1, "counters went backwards: {last:?} -> {now:?}");
+        last = now;
+    }
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    let s = c.ok(&Json::obj(vec![("op", Json::Str("stats".into()))]));
+    // stats scrapes don't count as work: exactly the 40 infer/gemm calls
+    assert_eq!(num(&s, "requests"), 40.0);
+    assert_eq!(num(&s, "responses"), 40.0);
+    assert_eq!(num(&s, "errors"), 0.0);
+    let snap = metrics.snapshot();
+    assert_eq!(snap.infer.queue_depth + snap.gemm.queue_depth, 0, "queues drained");
+    drop(server);
+    service.shutdown();
+}
+
+#[test]
+fn trace_op_reconstructs_a_request_lifecycle() {
+    let _g = GLOBALS.lock().unwrap_or_else(|e| e.into_inner());
+    let (server, _metrics, service) = start_server();
+    let mut c = Client::connect(server.addr);
+
+    // clear the ring and sample every request
+    let armed = c.ok(&Json::obj(vec![
+        ("op", Json::Str("trace".into())),
+        ("sample", Json::Num(1.0)),
+        ("clear", Json::Bool(true)),
+    ]));
+    assert_eq!(num(&armed, "sampling"), 1.0);
+
+    // enough engine-thread dots that the 1-in-64 stage probe fires
+    for i in 0..30 {
+        c.ok(&infer_req(i));
+    }
+    for i in 0..6 {
+        c.ok(&gemm_req(i));
+    }
+    c.ok(&train_req());
+
+    let resp = c.ok(&Json::obj(vec![("op", Json::Str("trace".into()))]));
+    obs::trace::set_sampling(0);
+    let events = resp.get("events").and_then(Json::as_arr).expect("events array").to_vec();
+    assert!(!events.is_empty());
+
+    // every event is a well-formed Chrome complete event
+    for e in &events {
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"), "{e}");
+        assert!(e.get("name").and_then(Json::as_str).is_some(), "{e}");
+        assert!(num(e, "ts") >= 0.0 && num(e, "dur") >= 0.0, "{e}");
+        assert_eq!(num(e, "pid"), 1.0);
+        assert!(num(e, "tid") > 0.0);
+        let args = e.get("args").expect("args");
+        assert!(num(args, "span") > 0.0 && num(args, "parent") >= 0.0);
+    }
+
+    let name = |e: &Json| e.get("name").and_then(Json::as_str).map(str::to_string).unwrap_or_default();
+    let is_root = |e: &Json| num(e.get("args").expect("args"), "parent") == 0.0;
+
+    // one gemm request's full lifecycle: root → queue_wait + batch_exec
+    // (batcher) → fusion_plan → engine_launch, all sharing the trace id
+    let lifecycle = events.iter().filter(|&e| name(e) == "gemm" && is_root(e)).any(|root| {
+        let tid = num(root, "tid");
+        let children: Vec<String> =
+            events.iter().filter(|&e| num(e, "tid") == tid && !is_root(e)).map(name).collect();
+        ["queue_wait", "batch_exec", "fusion_plan", "engine_launch"]
+            .iter()
+            .all(|want| children.iter().any(|n| n == want))
+    });
+    assert!(lifecycle, "no gemm trace carried its full span tree");
+
+    // infer and train roots exist too
+    for op in ["infer", "train"] {
+        assert!(events.iter().any(|e| name(e) == op && is_root(e)), "no sampled {op} root");
+    }
+
+    // S1–S6 kernel-stage spans surfaced from the probed dots
+    for stage in ["s1_decode", "s2_multiply", "s3_s4_align_acc", "s5_s6_norm_encode"] {
+        assert!(events.iter().any(|e| name(e) == stage), "no {stage} span in {} events", events.len());
+    }
+
+    // stage spans parent under an engine_launch (or train_step) span
+    let launch_spans: Vec<f64> = events
+        .iter()
+        .filter(|&e| matches!(name(e).as_str(), "engine_launch" | "train_step"))
+        .map(|e| num(e.get("args").expect("args"), "span"))
+        .collect();
+    let stage_parented = events
+        .iter()
+        .filter(|&e| name(e) == "s1_decode")
+        .all(|e| launch_spans.contains(&num(e.get("args").expect("args"), "parent")));
+    assert!(stage_parented, "stage spans must hang off an engine launch");
+    drop(server);
+    service.shutdown();
+}
