@@ -7,12 +7,13 @@
 use std::time::Duration;
 
 use pdpu::baselines::{DotArch, PdpuArch};
-use pdpu::bench_harness::{bench, report, report_header};
+use pdpu::bench_harness::{bench, report, report_header, Measurement};
+use pdpu::coordinator::json::Json;
 use pdpu::dnn::dataset::conv1_workload;
 use pdpu::dnn::layers::conv2d;
 use pdpu::dnn::tensor::im2col_patch;
 use pdpu::engine::BatchEngine;
-use pdpu::pdpu::{Pdpu, PdpuConfig};
+use pdpu::pdpu::{DotScratch, Pdpu, PdpuConfig};
 use pdpu::posit::{decode, p_add, p_fma, p_mul, quire::Quire, Posit, PositFormat};
 use pdpu::testing::Rng;
 
@@ -108,8 +109,78 @@ fn main() {
     report(&m);
     println!("  -> {:.2} M MACs/s", m.per_second(147.0) / 1e6);
 
+    bench_scalar_vs_vectorized();
     bench_conv_batched_vs_scalar();
     bench_col_blocking();
+}
+
+/// The datapath comparison behind the lane-packed refactor: the scalar
+/// staged pipeline (`Pdpu::dot` — s1..s6 reference model, fresh stage
+/// records per call) vs the vectorized fast path (`Pdpu::dot_with` →
+/// `dot_packed_chunk`: u64-packed S1/S2 over a fixed `LaneScratch`, no
+/// allocation). Bit-identity is asserted before timing (and exhaustively
+/// in `rust/tests/conformance_exhaustive.rs`), so the speedup is pure
+/// execution efficiency. Results are recorded to `BENCH_kernels.json`.
+fn bench_scalar_vs_vectorized() {
+    println!("\n== scalar staged pipeline vs lane-packed vectorized path (equal output bits) ==\n");
+    report_header();
+
+    let mut rows: Vec<(String, Measurement, Measurement, f64)> = Vec::new();
+    for cfg in [
+        PdpuConfig::mixed(13, 16, 2, 4, 14).unwrap(),
+        PdpuConfig::mixed(13, 16, 2, 8, 14).unwrap(),
+        PdpuConfig::mixed(13, 16, 2, 16, 14).unwrap(),
+    ] {
+        let unit = Pdpu::new(cfg);
+        let a: Vec<Posit> =
+            (0..cfg.n).map(|i| Posit::from_f64((i as f64 * 0.31).sin(), cfg.in_fmt)).collect();
+        let b: Vec<Posit> =
+            (0..cfg.n).map(|i| Posit::from_f64((i as f64 * 0.17).cos(), cfg.in_fmt)).collect();
+        let acc = Posit::zero(cfg.out_fmt);
+        let mut scratch = DotScratch::for_config(&cfg);
+        assert_eq!(
+            unit.dot(acc, &a, &b).bits(),
+            unit.dot_with(acc, &a, &b, &mut scratch).bits(),
+            "vectorized path diverged from the scalar reference"
+        );
+
+        let m_scalar =
+            bench(&format!("dot {}: scalar staged (reference)", cfg.label()), Duration::from_millis(400), || {
+                std::hint::black_box(unit.dot(acc, &a, &b)).bits()
+            });
+        report(&m_scalar);
+        let m_vec =
+            bench(&format!("dot {}: lane-packed vectorized", cfg.label()), Duration::from_millis(400), || {
+                std::hint::black_box(unit.dot_with(acc, &a, &b, &mut scratch)).bits()
+            });
+        report(&m_vec);
+        let speedup = m_scalar.mean_ns() / m_vec.mean_ns();
+        println!("  -> N={} speedup: {speedup:.2}x", cfg.n);
+        rows.push((cfg.label(), m_scalar, m_vec, speedup));
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("kernels".into())),
+        ("section", Json::Str("scalar_vs_vectorized".into())),
+        (
+            "configs",
+            Json::Arr(
+                rows.iter()
+                    .map(|(label, ms, mv, speedup)| {
+                        Json::obj(vec![
+                            ("config", Json::Str(label.clone())),
+                            ("scalar_mean_ns", Json::Num(ms.mean_ns())),
+                            ("vectorized_mean_ns", Json::Num(mv.mean_ns())),
+                            ("speedup", Json::Num(*speedup)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let path = "BENCH_kernels.json";
+    std::fs::write(path, json.to_string() + "\n").expect("write BENCH_kernels.json");
+    println!("\n  scalar-vs-vectorized results recorded to {path}");
 }
 
 /// Engine tiling: whole-row walks stream the entire x-plane through cache

@@ -4,7 +4,8 @@
 use super::arch::DotArch;
 use crate::engine::{BatchEngine, PreparedOperands};
 use crate::pdpu::{Pdpu, PdpuConfig};
-use crate::posit::{quire::Quire, Posit, PositFormat};
+use crate::posit::quire::CACHE_LINE_LIMBS;
+use crate::posit::{quire::Quire, Posit, PositFormat, QuireSpec};
 
 /// The proposed PDPU as an evaluable architecture.
 #[derive(Clone, Debug)]
@@ -67,29 +68,44 @@ pub struct QuirePdpuArch {
     pub in_fmt: PositFormat,
     pub out_fmt: PositFormat,
     pub n: usize,
+    /// Quire recipe for `in_fmt` products, validated once at construction
+    /// so per-chunk quire setup inside the dot loop is branch-free.
+    spec: QuireSpec,
 }
 
 impl QuirePdpuArch {
     /// Build the quire baseline: `n`-lane chunks, quire-exact inside each.
     pub fn new(in_fmt: PositFormat, out_fmt: PositFormat, n: usize) -> Self {
         assert!(n >= 1);
-        Self { in_fmt, out_fmt, n }
+        let spec = QuireSpec::new(in_fmt, in_fmt).expect("quire capacity");
+        Self { in_fmt, out_fmt, n, spec }
     }
 
     /// The quire register width this configuration implies (the Wm column
     /// of the quire row; P(13,2) products need 256 bits in the paper).
     pub fn quire_bits(&self) -> u32 {
-        Quire::new(self.in_fmt, self.in_fmt).expect("quire capacity").required_bits()
+        self.spec.required_bits()
     }
 
     /// The chunk-serial quire accumulation over already-quantized posits —
     /// the single definition of this architecture's dataflow, shared by
     /// the scalar [`DotArch::dot_f64`] entry point and the prepared-operand
-    /// [`DotArch::dot_batch`] override.
+    /// [`DotArch::dot_batch`] override. Dispatches once on the register
+    /// width the format pair needs (one cache line when it fits), then
+    /// reuses a single quire across chunks.
     fn dot_posits(&self, acc: Posit, a: &[Posit], b: &[Posit]) -> Posit {
+        if self.spec.fits_cache_line() {
+            self.dot_posits_with::<CACHE_LINE_LIMBS>(acc, a, b)
+        } else {
+            self.dot_posits_with::<16>(acc, a, b)
+        }
+    }
+
+    fn dot_posits_with<const L: usize>(&self, acc: Posit, a: &[Posit], b: &[Posit]) -> Posit {
         let mut acc = acc;
+        let mut q = Quire::<L>::from_spec(self.spec);
         for (ca, cb) in a.chunks(self.n).zip(b.chunks(self.n)) {
-            let mut q = Quire::new(self.in_fmt, self.in_fmt).expect("quire capacity");
+            q.reset();
             q.add_posit(acc);
             for (&x, &y) in ca.iter().zip(cb) {
                 q.add_product(x, y);

@@ -11,11 +11,12 @@
 //! with the scalar path:
 //!
 //! * [`PreparedOperands`] quantizes an f64 tensor to the input posit
-//!   format and runs the S1 per-value decode **once**, storing the
-//!   [`Decoded`] planes; every subsequent operation reuses them (the
-//!   paper's S1 decoders run once per value instead of once per use —
-//!   exactly what a systolic deployment of PDPU would do with its
-//!   stationary operand).
+//!   format and runs the S1 per-value decode **once**, storing each
+//!   decoded operand as a lane-packed 64-bit word ([`PackedLane`]);
+//!   every subsequent operation reuses the packed planes (the paper's S1
+//!   decoders run once per value instead of once per use — exactly what
+//!   a systolic deployment of PDPU would do with its stationary
+//!   operand).
 //! * [`BatchEngine::gemm_posit`] executes the whole output tile through a
 //!   per-worker reusable [`DotScratch`], with **row-parallel** execution
 //!   across `std::thread` workers and **column-blocked** (cache-tiled)
@@ -24,21 +25,25 @@
 //!   both the worker count and the tile width (property-tested in
 //!   `rust/tests/engine_equivalence.rs`).
 //!
-//! Bit-exactness invariant: for every output element the engine performs
-//! the *same* S1–S6 stage sequence as [`Pdpu::dot_chunked`] — the lane and
-//! accumulator semantics live in one place
-//! ([`crate::pdpu::stages::product_term`] / [`crate::pdpu::stages::acc_term`],
-//! shared with `s1_decode`), and pre-decoding only hoists the pure
+//! Bit-exactness invariant: for every output element the engine computes
+//! the *same* result as [`Pdpu::dot_chunked`] — for `N ≤`
+//! [`MAX_FAST_LANES`] each chunk runs the lane-packed fused kernel
+//! ([`crate::pdpu::lanes::dot_packed_chunk`]), which shares the scalar
+//! stages' decode/alignment/normalize/encode definitions; wider N falls
+//! back to the staged pipeline through [`product_term_packed`] /
+//! [`crate::pdpu::stages::acc_term`]. Pre-decoding only hoists the pure
 //! per-value posit decode out of the loop. The equivalence is enforced by
-//! tests at three levels (stage, unit, GEMM).
+//! tests at three levels (stage, unit, GEMM) plus the exhaustive
+//! conformance sweep in `rust/tests/conformance_exhaustive.rs`.
 
-use crate::pdpu::stages::{acc_term, product_term, DecodedInputs};
+use crate::pdpu::lanes::{dot_packed_chunk, product_term_packed, PackedLane, MAX_FAST_LANES};
+use crate::pdpu::stages::{acc_term, DecodedInputs, ProductTerm};
 use crate::pdpu::{DotScratch, Pdpu, PdpuConfig};
-use crate::posit::{decode, Decoded, Posit, PositFormat};
+use crate::posit::{Posit, PositFormat};
 
 /// A matrix of operands quantized to a posit format and pre-decoded into
-/// S1 [`Decoded`] planes, laid out as `rows` contiguous vectors of length
-/// `k` (row-major).
+/// lane-packed S1 words ([`PackedLane`]), laid out as `rows` contiguous
+/// vectors of length `k` (row-major).
 ///
 /// For a conv layer this is built **once per layer** from the OIHW weight
 /// tensor (rows = output channels, k = in_ch·kh·kw) and once per image
@@ -70,7 +75,7 @@ pub struct PreparedOperands {
     fmt: PositFormat,
     rows: usize,
     k: usize,
-    elems: Vec<Decoded>,
+    elems: Vec<PackedLane>,
 }
 
 impl PreparedOperands {
@@ -78,7 +83,7 @@ impl PreparedOperands {
     pub fn quantize(fmt: PositFormat, data: &[f64], k: usize) -> Self {
         assert!(k > 0, "inner dimension k must be positive");
         assert_eq!(data.len() % k, 0, "data length {} not a multiple of k={k}", data.len());
-        let elems = data.iter().map(|&v| decode(Posit::from_f64(v, fmt))).collect();
+        let elems = data.iter().map(|&v| PackedLane::from_posit(Posit::from_f64(v, fmt))).collect();
         Self { fmt, rows: data.len() / k, k, elems }
     }
 
@@ -87,7 +92,7 @@ impl PreparedOperands {
         assert!(k > 0, "inner dimension k must be positive");
         assert_eq!(posits.len() % k, 0);
         debug_assert!(posits.iter().all(|p| p.format() == fmt));
-        let elems = posits.iter().map(|&p| decode(p)).collect();
+        let elems = posits.iter().map(|&p| PackedLane::from_posit(p)).collect();
         Self { fmt, rows: posits.len() / k, k, elems }
     }
 
@@ -109,9 +114,9 @@ impl PreparedOperands {
         self.fmt
     }
 
-    /// Pre-decoded row `r`.
+    /// Pre-decoded (lane-packed) row `r`.
     #[inline]
-    pub fn row(&self, r: usize) -> &[Decoded] {
+    pub fn row(&self, r: usize) -> &[PackedLane] {
         &self.elems[r * self.k..(r + 1) * self.k]
     }
 }
@@ -119,21 +124,22 @@ impl PreparedOperands {
 /// Fuse one chunk's cached per-value decodes into the S1 record (the only
 /// S1 work left is the per-chunk accumulator decode): `row`/`col` are the
 /// chunk's live lanes (≤ `n` of them), zero-padded to `n` exactly as
-/// `dot_chunked` pads. Shared by the plain and profiled dot paths so both
-/// execute the identical S1 fill.
+/// `dot_chunked` pads. The staged fallback (`N > MAX_FAST_LANES`) and the
+/// sampled profiling path both run this, so they execute the identical
+/// S1 fill.
 // pdpu-lint: hot-path
 #[inline]
-fn fill_s1_chunk(s1: &mut DecodedInputs, n: usize, acc: Posit, row: &[Decoded], col: &[Decoded]) {
+fn fill_s1_chunk(s1: &mut DecodedInputs, n: usize, acc: Posit, row: &[PackedLane], col: &[PackedLane]) {
     s1.products.clear();
     s1.products.reserve(n);
     let mut any_nar = false;
     for (&r, &c) in row.iter().zip(col.iter()) {
-        let (term, nar) = product_term(r, c);
+        let (term, nar) = product_term_packed(r, c);
         any_nar |= nar;
         s1.products.push(term);
     }
     for _ in row.len()..n {
-        s1.products.push(product_term(Decoded::Zero, Decoded::Zero).0);
+        s1.products.push(ProductTerm { sign: false, e_ab: 0, ma: 0, mb: 0, zero: true });
     }
     let (at, nar) = acc_term(acc);
     any_nar |= nar;
@@ -219,30 +225,46 @@ impl BatchEngine {
         b.clamp(1, cols.max(1))
     }
 
-    /// One chunked dot product over pre-decoded planes: bit-identical to
-    /// `Pdpu::dot_chunked(acc, row_posits, col_posits)` — same chunking,
-    /// same zero-padded tail, same single rounding per chunk.
+    /// One chunked dot product over pre-decoded lane-packed planes:
+    /// bit-identical to `Pdpu::dot_chunked(acc, row_posits, col_posits)`
+    /// — same chunking, same zero-padded tail semantics, same single
+    /// rounding per chunk.
+    ///
+    /// For `N ≤` [`MAX_FAST_LANES`] each chunk runs the fused
+    /// lane-parallel kernel ([`crate::pdpu::lanes::dot_packed_chunk`]);
+    /// short tails need no explicit padding because padding lanes
+    /// contribute a zero addend and are excluded from `e_max`. Wider N
+    /// falls back to the staged pipeline.
     ///
     /// When tracing is on, a 1-in-N thread-local probe
     /// ([`crate::obs::stages::probe`]) diverts the call through
-    /// [`Self::dot_prepared_profiled`] — the same stage sequence with
+    /// [`Self::dot_prepared_profiled`] — the staged stage sequence with
     /// per-stage timestamps, so the result stays bit-identical.
     // pdpu-lint: hot-path
     pub fn dot_prepared(
         &self,
         acc: Posit,
-        row: &[Decoded],
-        col: &[Decoded],
+        row: &[PackedLane],
+        col: &[PackedLane],
         scratch: &mut DotScratch,
     ) -> Posit {
         if crate::obs::stages::probe() {
             return self.dot_prepared_profiled(acc, row, col, scratch);
         }
         assert_eq!(row.len(), col.len(), "vector length mismatch");
-        let n = self.unit.config().n;
+        let cfg = self.unit.config();
+        let n = cfg.n;
         let len = row.len();
         let mut acc = acc;
         let mut i = 0;
+        if n <= MAX_FAST_LANES {
+            while i < len {
+                let m = (len - i).min(n);
+                acc = dot_packed_chunk(cfg, acc, &row[i..i + m], &col[i..i + m], &mut scratch.lanes);
+                i += n;
+            }
+            return acc;
+        }
         while i < len {
             let m = (len - i).min(n);
             fill_s1_chunk(&mut scratch.s1, n, acc, &row[i..i + m], &col[i..i + m]);
@@ -260,8 +282,8 @@ impl BatchEngine {
     fn dot_prepared_profiled(
         &self,
         acc: Posit,
-        row: &[Decoded],
-        col: &[Decoded],
+        row: &[PackedLane],
+        col: &[PackedLane],
         scratch: &mut DotScratch,
     ) -> Posit {
         assert_eq!(row.len(), col.len(), "vector length mismatch");
@@ -396,8 +418,8 @@ mod tests {
                 let a: Vec<Posit> = (0..len).map(|_| rand_posit(&mut rng, cfg.in_fmt)).collect();
                 let b: Vec<Posit> = (0..len).map(|_| rand_posit(&mut rng, cfg.in_fmt)).collect();
                 let acc = rand_posit(&mut rng, cfg.out_fmt);
-                let pa: Vec<Decoded> = a.iter().map(|&p| decode(p)).collect();
-                let pb: Vec<Decoded> = b.iter().map(|&p| decode(p)).collect();
+                let pa: Vec<PackedLane> = a.iter().map(|&p| PackedLane::from_posit(p)).collect();
+                let pb: Vec<PackedLane> = b.iter().map(|&p| PackedLane::from_posit(p)).collect();
                 assert_eq!(
                     unit.dot_chunked(acc, &a, &b).bits(),
                     engine.dot_prepared(acc, &pa, &pb, &mut scratch).bits(),

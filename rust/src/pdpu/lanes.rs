@@ -1,0 +1,387 @@
+//! Lane-packed fast path for the hot dot-product datapath: S1 decode and
+//! the S2 multiply batched across lanes over `u64`-packed words, fused
+//! with S3 alignment and the S4 sum into one branch-light kernel.
+//!
+//! The hardware PDPU decodes all 2N inputs in parallel and multiplies
+//! them in a combinational array (paper Fig. 4); the scalar stage
+//! functions in [`super::stages`] model that one lane at a time with
+//! per-stage records. This module is the software analogue of the
+//! parallel array: every decoded operand is packed into one 64-bit word
+//! ([`PackedLane`]) and the per-lane work of S1+S2 (sign XOR, scale add,
+//! mantissa multiply, `e_max` reduction) becomes straight-line integer
+//! arithmetic over those words, with S3+S4 folded into the same pass over
+//! a fixed-size scratch ([`LaneScratch`]) — no heap traffic anywhere.
+//!
+//! **Bit-identity by construction**: the kernel does not reimplement any
+//! numeric semantics. Packing delegates to the scalar [`decode`], the
+//! alignment shift is the *same* [`align_one`] the scalar S3 uses, the
+//! accumulator decode is the shared [`acc_term`], and the back end is the
+//! scalar [`s5_normalize`] + [`s6_encode`]. The i128 addend sum is exact,
+//! so term order and zero-lane skipping cannot change the result. The
+//! scalar `s1..s6` stage functions remain the reference model; the
+//! conformance suite (`rust/tests/conformance_exhaustive.rs`) sweeps both
+//! paths exhaustively for every small format.
+
+use super::config::PdpuConfig;
+use super::stages::s3_align::align_one;
+use super::stages::{acc_term, s5_normalize, s6_encode, Accumulated, ProductTerm};
+use crate::posit::{decode, Decoded, Posit};
+
+/// Maximum dot-product size `N` the fixed-size fast path covers; larger
+/// configurations fall back to the staged scalar pipeline (still through
+/// packed operands, via [`product_term_packed`]).
+pub const MAX_FAST_LANES: usize = 64;
+
+// ---- PackedLane bit layout ------------------------------------------------
+// bits  0..32  mantissa `1.f`, left-aligned to `max_frac_bits` (≤ 30 bits
+//              for every supported format, so 32 is roomy)
+// bits 32..48  scale (regime·2^es + exponent) biased by 2^15
+// bit  48      sign
+// bit  49      live: operand is finite and nonzero
+// bit  50      NaR
+// Zero packs to the all-zero word; NaR to just the NaR bit. Dead lanes
+// keep frac = 0 so a packed multiply of any dead lane yields 0.
+const FRAC_MASK: u64 = 0xFFFF_FFFF;
+const SCALE_SHIFT: u32 = 32;
+const SCALE_FIELD_MASK: u64 = 0xFFFF;
+const SCALE_BIAS: i32 = 1 << 15;
+const SIGN_BIT: u64 = 1 << 48;
+const LIVE_BIT: u64 = 1 << 49;
+const NAR_BIT: u64 = 1 << 50;
+
+/// One decoded posit operand packed into a single 64-bit word — the
+/// operand format of the lane-parallel S1/S2 kernel and the storage
+/// format of the engine's pre-decoded operand planes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PackedLane(u64);
+
+impl PackedLane {
+    /// Pack one posit. Delegates to the scalar [`decode`] — the packed
+    /// representation is a re-encoding of the reference decoder's output,
+    /// never a second decoder implementation.
+    #[inline]
+    pub fn from_posit(p: Posit) -> Self {
+        match decode(p) {
+            Decoded::Zero => Self(0),
+            Decoded::NaR => Self(NAR_BIT),
+            Decoded::Finite(f) => {
+                debug_assert!(f.frac <= FRAC_MASK, "mantissa exceeds the 32-bit lane field");
+                let biased = (f.scale + SCALE_BIAS) as u64;
+                debug_assert!(biased <= SCALE_FIELD_MASK, "scale exceeds the 16-bit lane field");
+                Self(f.frac | (biased << SCALE_SHIFT) | ((f.sign as u64) << 48) | LIVE_BIT)
+            }
+        }
+    }
+
+    /// The raw packed word.
+    #[inline]
+    pub fn word(self) -> u64 {
+        self.0
+    }
+
+    /// Finite and nonzero.
+    #[inline]
+    pub fn is_live(self) -> bool {
+        self.0 & LIVE_BIT != 0
+    }
+
+    #[inline]
+    pub fn is_nar(self) -> bool {
+        self.0 & NAR_BIT != 0
+    }
+
+    #[inline]
+    pub fn is_zero(self) -> bool {
+        self.0 == 0
+    }
+
+    /// Sign bit (false for dead lanes).
+    #[inline]
+    pub fn sign(self) -> bool {
+        self.0 & SIGN_BIT != 0
+    }
+
+    /// Unbiased scale. Meaningful only for live lanes (dead lanes read
+    /// back the bias origin).
+    #[inline]
+    pub fn scale(self) -> i32 {
+        ((self.0 >> SCALE_SHIFT) & SCALE_FIELD_MASK) as i32 - SCALE_BIAS
+    }
+
+    /// Left-aligned mantissa `1.f` (0 for dead lanes).
+    #[inline]
+    pub fn frac(self) -> u64 {
+        self.0 & FRAC_MASK
+    }
+}
+
+/// Rebuild the scalar S1 lane record from two packed operands —
+/// bit-identical to `product_term(decode(a), decode(b))`. The staged
+/// fallback for `N >` [`MAX_FAST_LANES`] (and the sampled profiling path)
+/// runs through this, so packed operand planes serve every path.
+#[inline]
+pub fn product_term_packed(la: PackedLane, lb: PackedLane) -> (ProductTerm, bool) {
+    if (la.0 | lb.0) & NAR_BIT != 0 {
+        return (ProductTerm { sign: false, e_ab: 0, ma: 0, mb: 0, zero: true }, true);
+    }
+    if la.0 & lb.0 & LIVE_BIT == 0 {
+        return (ProductTerm { sign: false, e_ab: 0, ma: 0, mb: 0, zero: true }, false);
+    }
+    (
+        ProductTerm {
+            sign: ((la.0 ^ lb.0) & SIGN_BIT) != 0,
+            e_ab: la.scale() + lb.scale(),
+            ma: la.frac(),
+            mb: lb.frac(),
+            zero: false,
+        },
+        false,
+    )
+}
+
+// ---- per-lane metadata word (LaneScratch::meta) ---------------------------
+// bits 0..12  product scale e_ab biased by 2^11 (|e_ab| ≤ 2·480 < 2^11)
+// bit  12     product sign
+// bit  13     live (both operands finite nonzero)
+const META_E_MASK: u32 = 0xFFF;
+const META_E_BIAS: i32 = 1 << 11;
+const META_SIGN: u32 = 1 << 12;
+const META_LIVE: u32 = 1 << 13;
+
+/// Fixed-size per-operation workspace of the fused kernel: one exact
+/// mantissa product and one metadata word per lane. Plain arrays — the
+/// kernel never touches the allocator.
+#[derive(Clone, Copy, Debug)]
+pub struct LaneScratch {
+    prod: [u64; MAX_FAST_LANES],
+    meta: [u32; MAX_FAST_LANES],
+}
+
+impl LaneScratch {
+    pub const fn new() -> Self {
+        Self { prod: [0; MAX_FAST_LANES], meta: [0; MAX_FAST_LANES] }
+    }
+}
+
+impl Default for LaneScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One fused dot-product chunk over packed lanes: S1+S2 batched across
+/// lanes (pass 1), S3+S4 fused into the addend sum (pass 2), then the
+/// shared scalar S5/S6 back end. Bit-identical to running the staged
+/// pipeline over the same operands.
+///
+/// `row`/`col` hold the chunk's live lanes (at most [`MAX_FAST_LANES`],
+/// at most `cfg.n`); a short chunk behaves exactly like the scalar
+/// path's zero-padded tail because padding lanes contribute an addend of
+/// zero and are excluded from the `e_max` reduction.
+// pdpu-lint: hot-path
+pub fn dot_packed_chunk(
+    cfg: &PdpuConfig,
+    acc: Posit,
+    row: &[PackedLane],
+    col: &[PackedLane],
+    scratch: &mut LaneScratch,
+) -> Posit {
+    let len = row.len();
+    assert_eq!(len, col.len(), "vector length mismatch");
+    assert!(len <= MAX_FAST_LANES, "chunk exceeds the fast-path lane budget");
+    debug_assert!(len <= cfg.n);
+
+    // pass 1 — S1+S2 across lanes: sign XOR, biased-scale add, mantissa
+    // multiply, e_max reduction. Branch-light: dead lanes run the same
+    // arithmetic on zero mantissas and are masked out of e_max via the
+    // i32::MIN sentinel.
+    let mut any_nar = false;
+    let mut e_raw = i32::MIN;
+    for i in 0..len {
+        let (la, lb) = (row[i], col[i]);
+        any_nar |= (la.0 | lb.0) & NAR_BIT != 0;
+        let live = la.0 & lb.0 & LIVE_BIT != 0;
+        let e = ((la.0 >> SCALE_SHIFT) & SCALE_FIELD_MASK) as i32
+            + ((lb.0 >> SCALE_SHIFT) & SCALE_FIELD_MASK) as i32
+            - 2 * SCALE_BIAS;
+        scratch.prod[i] = (la.0 & FRAC_MASK) * (lb.0 & FRAC_MASK);
+        scratch.meta[i] = ((e + META_E_BIAS) as u32 & META_E_MASK)
+            | ((((la.0 ^ lb.0) & SIGN_BIT) != 0) as u32) << 12
+            | (live as u32) << 13;
+        e_raw = e_raw.max(if live { e } else { i32::MIN });
+    }
+
+    // accumulator operand: the shared scalar decode
+    let (at, nar) = acc_term(acc);
+    any_nar |= nar;
+    if !at.zero {
+        e_raw = e_raw.max(at.e_c);
+    }
+    let e_max = (e_raw != i32::MIN).then_some(e_raw);
+
+    // pass 2 — S3+S4 fused: align every live lane on the Wm grid with the
+    // *same* shift definition as the scalar S3, sum exactly in i128.
+    let mut sum: i128 = 0;
+    if let Some(em) = e_max {
+        let fb2 = 2 * cfg.in_frac_bits();
+        let wm = cfg.wm;
+        for i in 0..len {
+            let m = scratch.meta[i];
+            if m & META_LIVE == 0 {
+                continue;
+            }
+            let e = (m & META_E_MASK) as i32 - META_E_BIAS;
+            let mag = align_one(scratch.prod[i] as u128, fb2, e, em, wm);
+            debug_assert!(mag < (1u128 << wm), "aligned magnitude exceeds Wm window");
+            sum += if m & META_SIGN != 0 { -(mag as i128) } else { mag as i128 };
+        }
+        if !at.zero {
+            let mag = align_one(at.mc as u128, cfg.acc_frac_bits(), at.e_c, em, wm);
+            debug_assert!(mag < (1u128 << wm));
+            sum += if at.sign { -(mag as i128) } else { mag as i128 };
+        }
+        debug_assert!(
+            sum.unsigned_abs() <= (1u128 << (cfg.acc_width() - 1)),
+            "accumulated sum overflows the modeled adder width"
+        );
+    }
+
+    // shared scalar back end — the only rounding in the datapath
+    let s4 = Accumulated { sum, e_max, any_nar };
+    let s5 = s5_normalize(cfg, &s4);
+    s6_encode(cfg, &s5)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pdpu::stages::product_term;
+    use crate::pdpu::Pdpu;
+    use crate::posit::PositFormat;
+    use crate::testing::{check, Rng};
+
+    fn rand_pattern(rng: &mut Rng, fmt: PositFormat) -> Posit {
+        Posit::from_bits(rng.next_u64() as u32 & fmt.mask(), fmt)
+    }
+
+    #[test]
+    fn packing_roundtrips_the_decoder() {
+        for &(n, es) in &[(8u32, 0u32), (8, 2), (13, 2), (16, 2), (32, 0), (32, 2), (3, 0), (32, 4)] {
+            let fmt = PositFormat::p(n, es);
+            let mut rng = Rng::seeded(0x9ACC ^ (n as u64) << 8 ^ es as u64);
+            for _ in 0..400 {
+                let p = rand_pattern(&mut rng, fmt);
+                let l = PackedLane::from_posit(p);
+                match decode(p) {
+                    Decoded::Zero => {
+                        assert!(l.is_zero() && !l.is_live() && !l.is_nar());
+                        assert_eq!(l.frac(), 0);
+                    }
+                    Decoded::NaR => {
+                        assert!(l.is_nar() && !l.is_live() && !l.is_zero());
+                        assert_eq!(l.frac(), 0);
+                    }
+                    Decoded::Finite(f) => {
+                        assert!(l.is_live() && !l.is_nar() && !l.is_zero());
+                        assert_eq!(l.sign(), f.sign);
+                        assert_eq!(l.scale(), f.scale);
+                        assert_eq!(l.frac(), f.frac);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_product_term_matches_scalar() {
+        let fmt = PositFormat::p(13, 2);
+        check("product_term_packed ≡ product_term∘decode", 0x7E21, 2_000, |rng, _| {
+            let a = rand_pattern(rng, fmt);
+            let b = rand_pattern(rng, fmt);
+            let want = product_term(decode(a), decode(b));
+            let got = product_term_packed(PackedLane::from_posit(a), PackedLane::from_posit(b));
+            assert_eq!(got, want, "a={a:?} b={b:?}");
+        });
+    }
+
+    #[test]
+    fn fused_kernel_matches_staged_pipeline() {
+        let configs = [
+            crate::pdpu::PdpuConfig::paper_default(),
+            crate::pdpu::PdpuConfig::uniform(16, 2, 1, 96).unwrap(),
+            crate::pdpu::PdpuConfig::mixed(8, 16, 2, 8, 6).unwrap(),
+            crate::pdpu::PdpuConfig::uniform(32, 2, 16, 40).unwrap(),
+        ];
+        let mut scratch = LaneScratch::new();
+        for (ci, cfg) in configs.iter().enumerate() {
+            let unit = Pdpu::new(*cfg);
+            check("dot_packed_chunk ≡ staged dot", 0xFA57 ^ ci as u64, 800, |rng, _| {
+                // full random patterns: NaR and zero specials included
+                let a: Vec<Posit> = (0..cfg.n).map(|_| rand_pattern(rng, cfg.in_fmt)).collect();
+                let b: Vec<Posit> = (0..cfg.n).map(|_| rand_pattern(rng, cfg.in_fmt)).collect();
+                let acc = rand_pattern(rng, cfg.out_fmt);
+                let pa: Vec<PackedLane> = a.iter().map(|&p| PackedLane::from_posit(p)).collect();
+                let pb: Vec<PackedLane> = b.iter().map(|&p| PackedLane::from_posit(p)).collect();
+                let got = dot_packed_chunk(cfg, acc, &pa, &pb, &mut scratch);
+                let want = unit.dot(acc, &a, &b);
+                assert_eq!(got.bits(), want.bits(), "a={a:?} b={b:?} acc={acc:?}");
+            });
+        }
+    }
+
+    #[test]
+    fn short_chunk_equals_zero_padded_chunk() {
+        let cfg = crate::pdpu::PdpuConfig::paper_default();
+        let unit = Pdpu::new(cfg);
+        let mut rng = Rng::seeded(0x5027);
+        let mut scratch = LaneScratch::new();
+        for m in 0..cfg.n {
+            let a: Vec<Posit> = (0..m).map(|_| rand_pattern(&mut rng, cfg.in_fmt)).collect();
+            let b: Vec<Posit> = (0..m).map(|_| rand_pattern(&mut rng, cfg.in_fmt)).collect();
+            let acc = rand_pattern(&mut rng, cfg.out_fmt);
+            let pa: Vec<PackedLane> = a.iter().map(|&p| PackedLane::from_posit(p)).collect();
+            let pb: Vec<PackedLane> = b.iter().map(|&p| PackedLane::from_posit(p)).collect();
+            let got = dot_packed_chunk(&cfg, acc, &pa, &pb, &mut scratch);
+            // scalar reference: explicit zero-padding to N lanes
+            let zero = Posit::zero(cfg.in_fmt);
+            let mut fa = a.clone();
+            let mut fb = b.clone();
+            fa.resize(cfg.n, zero);
+            fb.resize(cfg.n, zero);
+            let want = unit.dot(acc, &fa, &fb);
+            assert_eq!(got.bits(), want.bits(), "m={m}");
+        }
+    }
+
+    #[test]
+    fn extreme_scales_survive_the_packed_fields() {
+        // ±maxpos/±minpos in the widest format stress the biased scale
+        // field (|scale| = 480) and the mantissa field at once
+        let cfg = crate::pdpu::PdpuConfig::uniform(32, 4, 4, 96).unwrap();
+        let unit = Pdpu::new(cfg);
+        let mut scratch = LaneScratch::new();
+        let fmt = cfg.in_fmt;
+        let specials = [
+            Posit::maxpos(fmt),
+            Posit::minpos(fmt),
+            Posit::from_bits(Posit::maxpos(fmt).bits().wrapping_neg(), fmt),
+            Posit::from_bits(Posit::minpos(fmt).bits().wrapping_neg(), fmt),
+            Posit::zero(fmt),
+            Posit::one(fmt),
+        ];
+        for &w in &specials {
+            for &x in &specials {
+                let a = [w, x, Posit::one(fmt), Posit::zero(fmt)];
+                let b = [x, w, w, x];
+                let acc = Posit::zero(cfg.out_fmt);
+                let pa: Vec<PackedLane> = a.iter().map(|&p| PackedLane::from_posit(p)).collect();
+                let pb: Vec<PackedLane> = b.iter().map(|&p| PackedLane::from_posit(p)).collect();
+                assert_eq!(
+                    dot_packed_chunk(&cfg, acc, &pa, &pb, &mut scratch).bits(),
+                    unit.dot(acc, &a, &b).bits(),
+                    "w={w:?} x={x:?}"
+                );
+            }
+        }
+    }
+}

@@ -6,14 +6,19 @@
 //!   inter-stage records (S1 Decode … S6 Encode, Fig. 4).
 //! * [`unit`] — the composed functional unit: bit-exact `out = acc + Va·Vb`
 //!   plus chunk-based accumulation for long DNN dot products.
+//! * [`lanes`] — the lane-packed fast path: S1+S2 batched across lanes
+//!   over `u64`-packed operand words, fused with S3+S4, bit-identical to
+//!   the staged stages (the software twin of the parallel decoder array).
 //! * [`pipeline`] — cycle-level 6-stage timing model with RAW-hazard
 //!   tracking (feeds Fig. 6 and the coordinator's scheduler).
 
 pub mod config;
+pub mod lanes;
 pub mod pipeline;
 pub mod stages;
 pub mod unit;
 
 pub use config::{ceil_log2, validate_layer_sizes, ConfigError, PdpuConfig};
+pub use lanes::{dot_packed_chunk, product_term_packed, LaneScratch, PackedLane, MAX_FAST_LANES};
 pub use pipeline::{Pipeline, PipelineStats};
 pub use unit::{DotScratch, Pdpu, Trace};

@@ -27,7 +27,13 @@ pub struct Aligned {
 /// Align one magnitude: `m` has `frac_bits` fraction bits and scale `e`
 /// (value `m·2^(e−frac_bits)`); place it on the grid with LSB weight
 /// `2^(e_max+2−wm)`, truncating low bits.
-fn align_one(m: u128, frac_bits: u32, e: i32, e_max: i32, wm: u32) -> u128 {
+///
+/// `pub(crate)` so the lane-packed fast path ([`crate::pdpu::lanes`])
+/// shares the *same* alignment definition as this reference stage —
+/// bit-identity between the two paths holds by construction, not by
+/// parallel reimplementation.
+#[inline]
+pub(crate) fn align_one(m: u128, frac_bits: u32, e: i32, e_max: i32, wm: u32) -> u128 {
     // target: floor( m · 2^(e − frac_bits) / 2^(e_max + 2 − wm) )
     //       = floor( m · 2^(e − frac_bits − e_max − 2 + wm) )
     let sh = e - frac_bits as i32 - e_max - 2 + wm as i32;

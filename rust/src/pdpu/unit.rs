@@ -9,6 +9,7 @@
 //! S3 alignment truncation at `Wm` bits and the single S6 rounding.
 
 use super::config::PdpuConfig;
+use super::lanes::{dot_packed_chunk, LaneScratch, PackedLane, MAX_FAST_LANES};
 use super::stages::*;
 use crate::posit::Posit;
 
@@ -31,22 +32,36 @@ pub struct Trace {
 }
 
 /// Reusable workspace for the allocation-free datapath: the S1–S3
-/// inter-stage records, allocated once and refilled per operation.
+/// inter-stage records plus the fixed-size lane-packed scratch of the
+/// fused fast path, allocated once and refilled per operation.
 ///
 /// One `DotScratch` per worker thread keeps the batched GEMM engine free
 /// of per-operation heap traffic; [`Pdpu::dot_with`] is bit-identical to
-/// [`Pdpu::dot`] (both run the same stage implementations).
+/// [`Pdpu::dot`] (the fast path shares the scalar stages' definitions of
+/// decode, alignment, normalization and encoding).
 #[derive(Clone, Debug)]
 pub struct DotScratch {
     pub(crate) s1: DecodedInputs,
     pub(crate) s2: Multiplied,
     pub(crate) s3: Aligned,
+    /// fixed-field workspace of the lane-packed fused kernel
+    pub(crate) lanes: LaneScratch,
+    /// packed-operand staging buffers for [`Pdpu::dot_with`]
+    pub(crate) pa: Vec<PackedLane>,
+    pub(crate) pb: Vec<PackedLane>,
 }
 
 impl DotScratch {
     /// An empty workspace; the inter-stage vectors grow on first use.
     pub fn new() -> Self {
-        Self { s1: DecodedInputs::empty(), s2: Multiplied::empty(), s3: Aligned::empty() }
+        Self {
+            s1: DecodedInputs::empty(),
+            s2: Multiplied::empty(),
+            s3: Aligned::empty(),
+            lanes: LaneScratch::new(),
+            pa: Vec::new(),
+            pb: Vec::new(),
+        }
     }
 
     /// A workspace pre-sized for `cfg`: the S1/S2 lane vectors reserve
@@ -58,6 +73,8 @@ impl DotScratch {
         s.s1.products.reserve(cfg.n);
         s.s2.terms.reserve(cfg.n);
         s.s3.addends.reserve(cfg.n + 1);
+        s.pa.reserve(cfg.n);
+        s.pb.reserve(cfg.n);
         s
     }
 }
@@ -93,8 +110,23 @@ impl Pdpu {
 
     /// Like [`Self::dot`] but running through a reusable [`DotScratch`]
     /// instead of allocating fresh inter-stage records per call.
+    ///
+    /// For `N ≤` [`MAX_FAST_LANES`] (every practical configuration) this
+    /// runs the lane-packed fused kernel
+    /// ([`crate::pdpu::lanes::dot_packed_chunk`]); larger N falls back to
+    /// the staged scalar pipeline. Both are bit-identical to
+    /// [`Self::dot`] — enforced by the exhaustive conformance sweep.
     // pdpu-lint: hot-path
     pub fn dot_with(&self, acc: Posit, a: &[Posit], b: &[Posit], scratch: &mut DotScratch) -> Posit {
+        if self.cfg.n <= MAX_FAST_LANES {
+            assert_eq!(a.len(), self.cfg.n, "Va length must equal configured N");
+            assert_eq!(b.len(), self.cfg.n, "Vb length must equal configured N");
+            scratch.pa.clear();
+            scratch.pa.extend(a.iter().map(|&p| PackedLane::from_posit(p)));
+            scratch.pb.clear();
+            scratch.pb.extend(b.iter().map(|&p| PackedLane::from_posit(p)));
+            return dot_packed_chunk(&self.cfg, acc, &scratch.pa, &scratch.pb, &mut scratch.lanes);
+        }
         s1_decode_into(&self.cfg, acc, a, b, &mut scratch.s1);
         s2_multiply_into(&self.cfg, &scratch.s1, &mut scratch.s2);
         s3_align_into(&self.cfg, &scratch.s2, &mut scratch.s3);

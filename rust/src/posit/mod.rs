@@ -30,7 +30,7 @@ pub mod wide;
 pub use arith::{p_add, p_div, p_fma, p_mul, p_neg, p_sub};
 pub use decode::{decode, Decoded};
 pub use encode::{encode, Unpacked};
-pub use quire::Quire;
+pub use quire::{CacheQuire, Quire, QuireSpec};
 
 use std::fmt;
 

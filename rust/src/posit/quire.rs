@@ -10,36 +10,51 @@
 //! * the **Quire PDPU** baseline of Table I (`Wm = 256` row) builds on it;
 //! * it is the *exact oracle* against which every rounded datapath
 //!   (PDPU, discrete DPUs, FMAs) is validated in tests.
+//!
+//! # Sizing and allocation-free reuse
+//!
+//! The register width is a const generic `L` (limb count). Capacity
+//! validation happens **once**, at [`QuireSpec::new`] — hot loops build one
+//! quire via [`Quire::from_spec`] and [`Quire::reset`] it per item instead
+//! of re-deriving and re-checking the span on every construction. For every
+//! format pair with n ≤ 16, es ≤ 2 the span fits [`CacheQuire`]
+//! (`Wide<8>`, 512 bits = one 64-byte cache line of limbs), keeping S4-style
+//! accumulation register-friendly; wider pairs (up to P(32,4)-adjacent)
+//! use the default `Wide<16>`.
 
 use super::wide::Wide;
 use super::{decode, encode, Decoded, Posit, PositFormat, PositError, Unpacked};
 
-/// Number of 64-bit limbs in the quire register (1024 bits): enough for
-/// P(32,4) products (scale span 4·30·16 = 1920... see `fits` check) — we
-/// validate capacity at construction instead of sizing generically.
+/// Number of 64-bit limbs in the default quire register (1024 bits): the
+/// widest register we support. [`QuireSpec::new`] validates at config time
+/// that a format pair fits; P(32,4) would not.
 const LIMBS: usize = 16;
 
-/// Exact accumulator for products of `a_fmt` × `b_fmt` posits.
-///
-/// Fixed-point layout: bit `origin` is weight 2^0; products land at
-/// `origin + scale - 2·mb` … The register keeps `2·max_scale + mb` bits on
-/// each side of the origin plus `carry_guard` headroom bits.
-#[derive(Clone)]
-pub struct Quire {
-    acc: Wide<LIMBS>,
+/// Limb count whose storage spans exactly one 64-byte cache line.
+pub const CACHE_LINE_LIMBS: usize = 8;
+
+/// A quire sized to one cache line of limbs (512 bits) — enough for every
+/// format pair with n ≤ 16, es ≤ 2 (P(16,2)×P(16,2) needs 313 bits).
+pub type CacheQuire = Quire<CACHE_LINE_LIMBS>;
+
+/// Validated construction recipe for a [`Quire`]: the format pair, the
+/// fixed-point origin, and the required register width — computed and
+/// checked **once** so per-item quire setup inside hot loops is branch-free
+/// (see [`Quire::from_spec`] / [`Quire::reset`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QuireSpec {
     a_fmt: PositFormat,
     b_fmt: PositFormat,
     /// bit position of weight 2^0
     origin: u32,
-    /// true once a NaR entered the accumulation (poisons the result)
-    nar: bool,
+    /// total register bits the format pair requires (span + carry guard)
+    need: u32,
 }
 
-impl Quire {
-    /// Create an empty quire for products of `a_fmt` and `b_fmt` values.
-    ///
-    /// Returns an error if the format pair needs more span than the
-    /// register provides (cannot happen for n ≤ 32, es ≤ 2; P(32,4) would).
+impl QuireSpec {
+    /// Validate a format pair for quire accumulation. Errors if the pair
+    /// needs more span than the widest supported register ([`Wide`]`<16>`,
+    /// 1024 bits — cannot happen for n ≤ 32, es ≤ 2; P(32,4) would).
     pub fn new(a_fmt: PositFormat, b_fmt: PositFormat) -> Result<Self, PositError> {
         let span_hi = (a_fmt.max_scale() + b_fmt.max_scale() + 2) as u32; // product < 2^(hi)
         let span_lo =
@@ -50,7 +65,90 @@ impl Quire {
             // formats too wide for the fixed register — treat as a format error
             return Err(PositError::BadWordSize(a_fmt.n().max(b_fmt.n())));
         }
-        Ok(Self { acc: Wide::zero(), a_fmt, b_fmt, origin: span_lo, nar: false })
+        Ok(Self { a_fmt, b_fmt, origin: span_lo, need })
+    }
+
+    /// Whether this pair fits a `Wide<L>`-backed register.
+    #[inline]
+    pub fn fits<const L: usize>(&self) -> bool {
+        self.need <= Wide::<L>::BITS
+    }
+
+    /// Whether this pair fits the one-cache-line [`CacheQuire`].
+    #[inline]
+    pub fn fits_cache_line(&self) -> bool {
+        self.fits::<CACHE_LINE_LIMBS>()
+    }
+
+    /// Quire width in bits actually required by this format pair — the
+    /// "prohibitive hardware overhead" quantity the paper cites ([34]).
+    pub fn required_bits(&self) -> u32 {
+        let span_hi = (self.a_fmt.max_scale() + self.b_fmt.max_scale() + 2) as u32;
+        self.origin + span_hi + 1
+    }
+
+    /// Left-operand format of the product pair.
+    pub fn a_fmt(&self) -> PositFormat {
+        self.a_fmt
+    }
+
+    /// Right-operand format of the product pair.
+    pub fn b_fmt(&self) -> PositFormat {
+        self.b_fmt
+    }
+}
+
+/// Exact accumulator for products of `a_fmt` × `b_fmt` posits.
+///
+/// Fixed-point layout: bit `origin` is weight 2^0; products land at
+/// `origin + scale - 2·mb` … The register keeps `2·max_scale + mb` bits on
+/// each side of the origin plus `carry_guard` headroom bits.
+///
+/// The register is a plain `[u64; L]` on the stack (via [`Wide`]) — no heap
+/// anywhere. `L` defaults to the widest supported register; size-critical
+/// callers use [`CacheQuire`] after checking [`QuireSpec::fits_cache_line`].
+#[derive(Clone, Copy)]
+pub struct Quire<const L: usize = LIMBS> {
+    acc: Wide<L>,
+    a_fmt: PositFormat,
+    b_fmt: PositFormat,
+    /// bit position of weight 2^0
+    origin: u32,
+    /// true once a NaR entered the accumulation (poisons the result)
+    nar: bool,
+}
+
+impl Quire<LIMBS> {
+    /// Create an empty default-width quire for products of `a_fmt` and
+    /// `b_fmt` values, validating capacity. Hot loops should instead
+    /// validate once via [`QuireSpec::new`] and construct with
+    /// [`Quire::from_spec`] + [`Quire::reset`].
+    pub fn new(a_fmt: PositFormat, b_fmt: PositFormat) -> Result<Self, PositError> {
+        Ok(Self::from_spec(QuireSpec::new(a_fmt, b_fmt)?))
+    }
+}
+
+impl<const L: usize> Quire<L> {
+    /// Build an empty quire from a pre-validated spec. The width check is a
+    /// real (release-mode) assert because [`Wide::from_u128_shifted`] only
+    /// debug-asserts overflow — but it runs once per *construction*, and
+    /// hot loops construct once and [`reset`](Self::reset) per item.
+    pub fn from_spec(spec: QuireSpec) -> Self {
+        assert!(
+            spec.fits::<L>(),
+            "format pair needs {} quire bits; Wide<{L}> register has {}",
+            spec.need,
+            Wide::<L>::BITS
+        );
+        Self { acc: Wide::zero(), a_fmt: spec.a_fmt, b_fmt: spec.b_fmt, origin: spec.origin, nar: false }
+    }
+
+    /// Clear back to the empty accumulation — branch-free per-item reuse
+    /// for hot loops (no re-validation, no re-derivation of the span).
+    #[inline]
+    pub fn reset(&mut self) {
+        self.acc = Wide::zero();
+        self.nar = false;
     }
 
     /// Quire width in bits actually required by this format pair — the
@@ -217,7 +315,7 @@ mod tests {
         q.add_product(Posit::maxpos(fmt), Posit::maxpos(fmt));
         q.add_product(Posit::minpos(fmt), Posit::minpos(fmt));
         // subtract maxpos² again: the surviving value must be minpos²
-        let mut q2 = q.clone();
+        let mut q2 = q;
         q2.add_product(Posit::maxpos(fmt), Posit::from_f64(-Posit::maxpos(fmt).to_f64(), fmt));
         let survivor = q2.to_posit(p16());
         assert!(!survivor.is_zero(), "minpos² was lost in the quire");
@@ -240,6 +338,60 @@ mod tests {
         let q = Quire::new(PositFormat::p(13, 2), PositFormat::p(13, 2)).unwrap();
         let bits = q.required_bits();
         assert!((150..320).contains(&bits), "quire width {bits}");
+    }
+
+    #[test]
+    fn cache_quire_bit_identical_to_default_width() {
+        // the one-cache-line register must agree with the 1024-bit one on
+        // every path: products, posit folds, rounding, NaR
+        let fmt = PositFormat::p(13, 2);
+        let spec = QuireSpec::new(fmt, fmt).unwrap();
+        assert!(spec.fits_cache_line(), "P(13,2) pair must fit one cache line");
+        let mut rng = Rng::seeded(0xCACE);
+        let mut small = CacheQuire::from_spec(spec);
+        let mut wide = Quire::from_spec(spec);
+        for round in 0..200 {
+            small.reset();
+            wide.reset();
+            let seed = Posit::from_f64(rng.normal(), fmt);
+            small.add_posit(seed);
+            wide.add_posit(seed);
+            for _ in 0..12 {
+                let a = Posit::from_f64(rng.log_uniform_signed(-12.0, 12.0), fmt);
+                let b = Posit::from_f64(rng.log_uniform_signed(-12.0, 12.0), fmt);
+                small.add_product(a, b);
+                wide.add_product(a, b);
+            }
+            let out = PositFormat::p(16, 2);
+            assert_eq!(small.to_posit(out).bits(), wide.to_posit(out).bits(), "round {round}");
+            assert_eq!(small.to_f64().to_bits(), wide.to_f64().to_bits(), "round {round}");
+        }
+    }
+
+    #[test]
+    fn spec_reports_fit_and_required_bits() {
+        let narrow = QuireSpec::new(p8(), p8()).unwrap();
+        assert!(narrow.fits_cache_line());
+        let widest = QuireSpec::new(PositFormat::p(32, 2), PositFormat::p(32, 2)).unwrap();
+        assert!(!widest.fits_cache_line(), "P(32,2) span exceeds one cache line");
+        assert!(widest.fits::<16>());
+        let q = Quire::from_spec(narrow);
+        assert_eq!(q.required_bits(), narrow.required_bits());
+    }
+
+    #[test]
+    fn reset_restores_the_empty_state() {
+        let fmt = p16();
+        let spec = QuireSpec::new(fmt, fmt).unwrap();
+        let mut q = CacheQuire::from_spec(spec);
+        q.add_product(Posit::nar(fmt), Posit::one(fmt));
+        q.add_product(Posit::from_f64(2.5, fmt), Posit::from_f64(4.0, fmt));
+        assert!(q.is_nar());
+        q.reset();
+        assert!(!q.is_nar());
+        assert!(q.to_posit(fmt).is_zero());
+        q.add_product(Posit::from_f64(2.5, fmt), Posit::from_f64(4.0, fmt));
+        assert_eq!(q.to_f64(), 10.0);
     }
 
     /// Randomized: exact_dot against an f64 oracle on well-conditioned data

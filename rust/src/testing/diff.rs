@@ -1,0 +1,261 @@
+//! Shared differential-testing support for the posit datapath.
+//!
+//! Every suite that compares two implementations of the same dot product
+//! (scalar stages vs. the lane-packed fast path, engine vs. scalar loop,
+//! train kernels vs. reference backprop) needs the same two ingredients:
+//!
+//! * **seeded generators** that actually reach the adversarial corners —
+//!   NaR, zero, ±maxpos/±minpos, deep-regime ("subnormal-like") patterns
+//!   with almost no fraction bits, and cancellation-heavy vectors whose
+//!   products annihilate;
+//! * **a bit-identity runner** that drives one operand set through every
+//!   datapath implementation and fails loudly (with the config label and
+//!   the operands) on the first diverging bit.
+//!
+//! This module centralizes both so `rust/tests/engine_equivalence.rs`,
+//! `rust/tests/train_stack.rs`, and the conformance/fuzz suites share one
+//! definition of "hard inputs" instead of ad-hoc per-file generators.
+
+use super::Rng;
+use crate::pdpu::lanes::{dot_packed_chunk, LaneScratch, PackedLane, MAX_FAST_LANES};
+use crate::pdpu::{DotScratch, Pdpu, PdpuConfig};
+use crate::posit::{Posit, PositFormat};
+
+// ---- posit generators -----------------------------------------------------
+
+/// Uniform over the full n-bit pattern space — NaR and zero included.
+pub fn rand_pattern(rng: &mut Rng, fmt: PositFormat) -> Posit {
+    Posit::from_bits(rng.next_u64() as u32 & fmt.mask(), fmt)
+}
+
+/// Uniform over all finite patterns (rejects NaR; zero included).
+pub fn rand_finite(rng: &mut Rng, fmt: PositFormat) -> Posit {
+    loop {
+        let p = rand_pattern(rng, fmt);
+        if !p.is_nar() {
+            return p;
+        }
+    }
+}
+
+/// Log-uniform magnitude within `2^±log2_span`, random sign — the
+/// moderate-dynamic-range distribution most accuracy tests use.
+pub fn rand_moderate(rng: &mut Rng, fmt: PositFormat, log2_span: f64) -> Posit {
+    Posit::from_f64(rng.log_uniform_signed(-log2_span, log2_span), fmt)
+}
+
+/// One of the format's corner values: NaR, zero, ±1, ±maxpos, ±minpos,
+/// the deep-regime neighbours of the extremes, or a random power of two
+/// (single-set-bit pattern ⇒ maximal regime run, no fraction bits — the
+/// posit analogue of a subnormal).
+pub fn special(rng: &mut Rng, fmt: PositFormat) -> Posit {
+    let neg = |p: Posit| Posit::from_bits(p.bits().wrapping_neg(), fmt);
+    match rng.below(12) {
+        0 => Posit::nar(fmt),
+        1 => Posit::zero(fmt),
+        2 => Posit::one(fmt),
+        3 => neg(Posit::one(fmt)),
+        4 => Posit::maxpos(fmt),
+        5 => neg(Posit::maxpos(fmt)),
+        6 => Posit::minpos(fmt),
+        7 => neg(Posit::minpos(fmt)),
+        8 => Posit::minpos(fmt).succ(),
+        9 => Posit::maxpos(fmt).pred(),
+        // single-bit pattern: deep regime, empty fraction
+        10 => Posit::from_bits(1u32 << rng.below(fmt.n() as u64 - 1), fmt),
+        _ => neg(Posit::from_bits(1u32 << rng.below(fmt.n() as u64 - 1), fmt)),
+    }
+}
+
+/// A vector that mixes moderate values with forced corner cases: every
+/// position has a 1-in-4 chance of being a [`special`], so short vectors
+/// still hit NaR/extreme lanes often.
+pub fn adversarial_vector(rng: &mut Rng, fmt: PositFormat, len: usize) -> Vec<Posit> {
+    (0..len)
+        .map(|_| if rng.below(4) == 0 { special(rng, fmt) } else { rand_finite(rng, fmt) })
+        .collect()
+}
+
+/// A cancellation-heavy operand pair: lanes come in (v, w) / (−v, w)
+/// couples so products annihilate pairwise, stressing the signed S4 sum,
+/// the S5 renormalization of near-zero results, and exact-zero encoding.
+/// Odd lengths keep one unpaired lane.
+pub fn cancellation_pair(rng: &mut Rng, fmt: PositFormat, len: usize) -> (Vec<Posit>, Vec<Posit>) {
+    let mut a = Vec::with_capacity(len);
+    let mut b = Vec::with_capacity(len);
+    while a.len() + 1 < len {
+        let v = rand_finite(rng, fmt);
+        let w = rand_finite(rng, fmt);
+        a.push(v);
+        b.push(w);
+        a.push(Posit::from_bits(v.bits().wrapping_neg(), fmt));
+        b.push(w);
+    }
+    if a.len() < len {
+        a.push(rand_finite(rng, fmt));
+        b.push(rand_finite(rng, fmt));
+    }
+    (a, b)
+}
+
+// ---- config / batch generators (migrated from the ad-hoc per-test-file
+// ---- versions) ------------------------------------------------------------
+
+/// Random valid [`PdpuConfig`] spanning the standard tested space:
+/// N ∈ {1,4,8}, Wm ∈ 6..=96, uniform and mixed input/output formats.
+pub fn random_config(rng: &mut Rng) -> PdpuConfig {
+    let n = [1usize, 4, 8][rng.below(3) as usize];
+    random_config_with_n(rng, n)
+}
+
+/// [`random_config`] with a caller-chosen dot-product size — the fuzz
+/// suite uses this to cross the fast-path boundary (N > 64).
+pub fn random_config_with_n(rng: &mut Rng, n: usize) -> PdpuConfig {
+    loop {
+        let wm = rng.range_i64(6, 96) as u32;
+        let es = rng.range_i64(0, 2) as u32;
+        let n_out = rng.range_i64(8, 32) as u32;
+        let n_in = if rng.flip() {
+            n_out // uniform
+        } else {
+            rng.range_i64(5, n_out as i64) as u32 // mixed: narrow inputs
+        };
+        if let Ok(cfg) = PdpuConfig::mixed(n_in, n_out, es, n, wm) {
+            return cfg;
+        }
+    }
+}
+
+/// A training mini-batch: `b`×`d` standard-normal inputs (row-major) plus
+/// `b` uniform class labels in `0..classes`.
+pub fn random_batch(rng: &mut Rng, b: usize, d: usize, classes: usize) -> (Vec<f64>, Vec<usize>) {
+    let xs = (0..b * d).map(|_| rng.normal()).collect();
+    let labels = (0..b).map(|_| rng.below(classes as u64) as usize).collect();
+    (xs, labels)
+}
+
+// ---- the bit-identity runner ---------------------------------------------
+
+/// Assert two implementations produced the same posit, with a readable
+/// failure message. The building block of [`assert_dot_paths_bit_identical`].
+#[track_caller]
+pub fn assert_bit_identical(label: &str, scalar: Posit, vectorized: Posit) {
+    assert_eq!(
+        scalar.bits(),
+        vectorized.bits(),
+        "{label}: scalar {scalar:?} != vectorized {vectorized:?}"
+    );
+}
+
+/// Drive one `acc + Va·Vb` operand set through **every** dot-product
+/// implementation — the allocating scalar stage pipeline (the reference),
+/// the scratch path `Pdpu::dot_with` (lane-packed fused kernel for
+/// N ≤ 64, staged fallback above), the fused kernel called directly, and
+/// the engine's pre-decoded `dot_prepared` — asserting pairwise
+/// bit-identity. Returns the reference result.
+pub fn assert_dot_paths_bit_identical(
+    cfg: &PdpuConfig,
+    acc: Posit,
+    a: &[Posit],
+    b: &[Posit],
+) -> Posit {
+    let unit = Pdpu::new(*cfg);
+    let scalar = unit.dot(acc, a, b);
+    let label = cfg.label();
+
+    let mut scratch = DotScratch::for_config(cfg);
+    let via_scratch = unit.dot_with(acc, a, b, &mut scratch);
+    assert_bit_identical(&format!("{label} dot_with: a={a:?} b={b:?} acc={acc:?}"), scalar, via_scratch);
+
+    let pa: Vec<PackedLane> = a.iter().map(|&p| PackedLane::from_posit(p)).collect();
+    let pb: Vec<PackedLane> = b.iter().map(|&p| PackedLane::from_posit(p)).collect();
+    if cfg.n <= MAX_FAST_LANES {
+        let mut lanes = LaneScratch::new();
+        let fused = dot_packed_chunk(cfg, acc, &pa, &pb, &mut lanes);
+        assert_bit_identical(
+            &format!("{label} dot_packed_chunk: a={a:?} b={b:?} acc={acc:?}"),
+            scalar,
+            fused,
+        );
+    }
+
+    let engine = crate::engine::BatchEngine::new(*cfg);
+    let via_engine = engine.dot_prepared(acc, &pa, &pb, &mut scratch);
+    assert_bit_identical(
+        &format!("{label} dot_prepared: a={a:?} b={b:?} acc={acc:?}"),
+        scalar,
+        via_engine,
+    );
+    scalar
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_cover_the_corners() {
+        let fmt = PositFormat::p(13, 2);
+        let mut rng = Rng::seeded(0xD1FF);
+        let (mut nar, mut zero, mut maxp, mut minp) = (false, false, false, false);
+        for _ in 0..2_000 {
+            let p = special(&mut rng, fmt);
+            nar |= p.is_nar();
+            zero |= p.is_zero();
+            maxp |= p.bits() == fmt.maxpos_bits();
+            minp |= p.bits() == fmt.minpos_bits();
+        }
+        assert!(nar && zero && maxp && minp, "{nar} {zero} {maxp} {minp}");
+    }
+
+    #[test]
+    fn adversarial_vectors_contain_specials() {
+        let fmt = PositFormat::p(8, 2);
+        let mut rng = Rng::seeded(0xAD7E);
+        let v: Vec<Posit> = (0..40).flat_map(|_| adversarial_vector(&mut rng, fmt, 8)).collect();
+        assert!(v.iter().any(|p| p.is_nar()));
+        assert!(v.iter().any(|p| p.is_zero()));
+    }
+
+    #[test]
+    fn cancellation_pairs_annihilate_under_exact_sum() {
+        let fmt = PositFormat::p(13, 2);
+        let mut rng = Rng::seeded(0xCA9C);
+        for len in [2usize, 4, 8] {
+            let (a, b) = cancellation_pair(&mut rng, fmt, len);
+            assert_eq!(a.len(), len);
+            let exact: f64 = a.iter().zip(&b).map(|(x, y)| x.to_f64() * y.to_f64()).sum();
+            assert_eq!(exact, 0.0, "even-length pairs must cancel exactly");
+        }
+        let (a, _) = cancellation_pair(&mut rng, fmt, 5);
+        assert_eq!(a.len(), 5);
+    }
+
+    #[test]
+    fn runner_accepts_agreeing_paths_on_adversarial_data() {
+        let mut rng = Rng::seeded(0x0D1F);
+        for _ in 0..40 {
+            let cfg = random_config(&mut rng);
+            let a = adversarial_vector(&mut rng, cfg.in_fmt, cfg.n);
+            let b = adversarial_vector(&mut rng, cfg.in_fmt, cfg.n);
+            let acc = if rng.below(4) == 0 { special(&mut rng, cfg.out_fmt) } else { rand_finite(&mut rng, cfg.out_fmt) };
+            assert_dot_paths_bit_identical(&cfg, acc, &a, &b);
+        }
+    }
+
+    #[test]
+    fn random_batch_shapes() {
+        let mut rng = Rng::seeded(0xBA7C);
+        let (xs, labels) = random_batch(&mut rng, 3, 5, 4);
+        assert_eq!(xs.len(), 15);
+        assert_eq!(labels.len(), 3);
+        assert!(labels.iter().all(|&l| l < 4));
+    }
+
+    #[test]
+    #[should_panic(expected = "scalar")]
+    fn runner_reports_divergence() {
+        let fmt = PositFormat::p(16, 2);
+        assert_bit_identical("forced", Posit::one(fmt), Posit::zero(fmt));
+    }
+}

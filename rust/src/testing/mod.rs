@@ -8,6 +8,12 @@
 //! * [`check`] — a randomized property runner with minimal failure
 //!   reporting (seed + iteration), so a red run is reproducible by pasting
 //!   the printed seed into `Rng::seeded`.
+//!
+//! [`diff`] adds the shared differential-testing layer on top: seeded
+//! generators for adversarial posit corners and the scalar↔vectorized
+//! bit-identity runner used by the conformance and fuzz suites.
+
+pub mod diff;
 
 /// SplitMix64: tiny, high-quality-enough, seedable PRNG.
 /// (Sebastiano Vigna's public-domain generator.)

@@ -18,13 +18,26 @@
 
 use super::graph::{Grads, TrainGraph};
 use crate::pdpu::PdpuConfig;
-use crate::posit::{Posit, PositFormat, Quire};
+use crate::posit::quire::CACHE_LINE_LIMBS;
+use crate::posit::{Posit, PositFormat, Quire, QuireSpec};
 
 /// Sum `vals` exactly in the quire after quantizing each addend to `fmt`,
 /// rounding the total once back to `fmt` — the S4-style wide accumulation
 /// for gradient reductions (one rounding per *sum*, not per addend).
+///
+/// Capacity is validated once up front ([`QuireSpec::new`]); the register
+/// width is picked to fit one cache line when the format allows it.
 pub fn quire_sum(vals: &[f64], fmt: PositFormat) -> f64 {
-    let mut q = Quire::new(fmt, fmt).expect("format within quire capacity");
+    let spec = QuireSpec::new(fmt, fmt).expect("format within quire capacity");
+    if spec.fits_cache_line() {
+        quire_sum_with::<CACHE_LINE_LIMBS>(spec, vals, fmt)
+    } else {
+        quire_sum_with::<16>(spec, vals, fmt)
+    }
+}
+
+fn quire_sum_with<const L: usize>(spec: QuireSpec, vals: &[f64], fmt: PositFormat) -> f64 {
+    let mut q = Quire::<L>::from_spec(spec);
     for &v in vals {
         q.add_posit(Posit::from_f64(v, fmt));
     }
@@ -40,6 +53,9 @@ pub struct Sgd {
     /// Format the learning rate and gradient are quantized to before the
     /// exact `lr·g` product enters the quire.
     grad_fmt: PositFormat,
+    /// Quire recipe for `grad_fmt` products, validated once at
+    /// construction so per-parameter quire setup is branch-free.
+    spec: QuireSpec,
 }
 
 impl Sgd {
@@ -53,7 +69,9 @@ impl Sgd {
     /// survive rounding.
     pub fn new(lr: f64, cfg: &PdpuConfig) -> Self {
         assert!(lr > 0.0 && lr.is_finite(), "learning rate must be positive");
-        Self { lr, weight_fmt: cfg.out_fmt, grad_fmt: cfg.out_fmt }
+        let grad_fmt = cfg.out_fmt;
+        let spec = QuireSpec::new(grad_fmt, grad_fmt).expect("format within quire capacity");
+        Self { lr, weight_fmt: cfg.out_fmt, grad_fmt, spec }
     }
 
     /// The configured learning rate.
@@ -88,13 +106,24 @@ impl Sgd {
     /// [`crate::obs`] quire-rounding counter — the "how often does
     /// quantization-on-update actually round" signal.
     fn update_slice(&self, w: &mut [f64], g: &[f64]) {
+        // capacity was validated in `new`; dispatch once on register width,
+        // then the per-parameter loop builds no quire and checks no branch
+        if self.spec.fits_cache_line() {
+            self.update_slice_with::<CACHE_LINE_LIMBS>(w, g)
+        } else {
+            self.update_slice_with::<16>(w, g)
+        }
+    }
+
+    fn update_slice_with<const L: usize>(&self, w: &mut [f64], g: &[f64]) {
         assert_eq!(w.len(), g.len(), "parameter/gradient shape mismatch");
         let neg_lr = Posit::from_f64(-self.lr, self.grad_fmt);
         let mut roundings = 0u64;
+        let mut q = Quire::<L>::from_spec(self.spec);
         for (wi, &gi) in w.iter_mut().zip(g) {
             let wq = Posit::from_f64(*wi, self.weight_fmt);
             let gq = Posit::from_f64(gi, self.grad_fmt);
-            let mut q = Quire::new(self.grad_fmt, self.grad_fmt).expect("format within quire capacity");
+            q.reset();
             q.add_posit(wq);
             q.add_product(neg_lr, gq);
             let updated = q.to_posit(self.weight_fmt);

@@ -1,0 +1,148 @@
+//! Exhaustive conformance sweep gating the lane-packed fast path.
+//!
+//! For **every** posit format with n ≤ 8, es ≤ 2 and **all** 2^n × 2^n
+//! operand pairs, a single-lane PDPU with a wide-enough alignment window
+//! (Wm ≥ 2·frac_bits + 2 ⇒ S3 never truncates) must agree bit-for-bit
+//! with three independent references:
+//!
+//! 1. the scalar staged pipeline (`Pdpu::dot` — the reference model),
+//! 2. the exact quire (`exact_dot` — Eq. (2) computed without rounding),
+//! 3. FP64: `Posit::from_f64(a·b)` — exact for these widths because the
+//!    product significand (≤ 12 bits) and scale span fit f64 losslessly.
+//!
+//! On top of the oracle, the narrow formats also sweep truncating
+//! configurations (small Wm) and N=2 cancellation lanes through every
+//! datapath implementation via the shared bit-identity runner.
+//!
+//! The n = 16 analogues are randomized (the full cross product is 2^32
+//! pairs) and marked `#[ignore]` for the advisory long-haul CI job.
+
+use pdpu::pdpu::{DotScratch, Pdpu, PdpuConfig};
+use pdpu::posit::quire::exact_dot;
+use pdpu::posit::{Posit, PositFormat};
+use pdpu::testing::diff::{adversarial_vector, assert_dot_paths_bit_identical, rand_pattern};
+use pdpu::testing::Rng;
+
+/// Wm at which a single product aligns with no right shift: S3 becomes
+/// exact, so the PDPU result is the correctly-rounded exact product.
+fn lossless_wm(fmt: PositFormat) -> u32 {
+    (2 * fmt.max_frac_bits() + 2).max(4)
+}
+
+/// All patterns of a format, NaR and zero included.
+fn all_patterns(fmt: PositFormat) -> impl Iterator<Item = Posit> {
+    (0..fmt.cardinality()).map(move |bits| Posit::from_bits(bits as u32, fmt))
+}
+
+/// One (a, b) pair through scalar, vectorized, quire, and FP64 — the
+/// units are hoisted by the caller so the n=8 sweep (65 536 pairs per es)
+/// stays cheap in debug mode.
+fn oracle_case(unit: &Pdpu, scratch: &mut DotScratch, fmt: PositFormat, a: Posit, b: Posit) {
+    let zero = Posit::zero(fmt);
+    let scalar = unit.dot(zero, &[a], &[b]);
+    let vectorized = unit.dot_with(zero, &[a], &[b], &mut *scratch);
+    assert_eq!(scalar.bits(), vectorized.bits(), "{fmt:?} scalar≠vectorized a={a:?} b={b:?}");
+    let quire = exact_dot(zero, &[a], &[b], fmt);
+    assert_eq!(scalar.bits(), quire.bits(), "{fmt:?} pdpu≠quire a={a:?} b={b:?}");
+    if a.is_nar() || b.is_nar() {
+        assert!(scalar.is_nar(), "{fmt:?} NaR operand must produce NaR: a={a:?} b={b:?}");
+    } else {
+        let direct = Posit::from_f64(a.to_f64() * b.to_f64(), fmt);
+        assert_eq!(scalar.bits(), direct.bits(), "{fmt:?} pdpu≠fp64 a={a:?} b={b:?}");
+    }
+}
+
+#[test]
+fn all_pairs_match_quire_and_fp64_for_small_formats() {
+    // every (n ≤ 8, es ≤ 2) format, every operand pair, lossless Wm
+    for n in 3..=8u32 {
+        for es in 0..=2u32 {
+            let fmt = PositFormat::new(n, es).unwrap();
+            let cfg = PdpuConfig::new(fmt, fmt, 1, lossless_wm(fmt)).unwrap();
+            let unit = Pdpu::new(cfg);
+            let mut scratch = DotScratch::for_config(&cfg);
+            for a in all_patterns(fmt) {
+                for b in all_patterns(fmt) {
+                    oracle_case(&unit, &mut scratch, fmt, a, b);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn all_pairs_bit_identical_across_paths_under_truncation() {
+    // minimum Wm ⇒ S3 truncates aggressively; no external oracle applies,
+    // but every implementation must still agree bit-for-bit on every pair
+    for n in 3..=6u32 {
+        for es in 0..=2u32 {
+            let fmt = PositFormat::new(n, es).unwrap();
+            let cfg = PdpuConfig::new(fmt, fmt, 1, 4).unwrap();
+            for a in all_patterns(fmt) {
+                for b in all_patterns(fmt) {
+                    assert_dot_paths_bit_identical(&cfg, Posit::zero(fmt), &[a], &[b]);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn all_pairs_cancel_exactly_in_two_lanes() {
+    // lanes (a,b) and (−a,b): identical alignment shifts ⇒ the truncated
+    // addends cancel exactly, so the result is exactly zero (or NaR)
+    for n in 3..=6u32 {
+        for es in 0..=2u32 {
+            let fmt = PositFormat::new(n, es).unwrap();
+            let cfg = PdpuConfig::new(fmt, fmt, 2, 6).unwrap();
+            for a in all_patterns(fmt) {
+                let na = Posit::from_bits(a.bits().wrapping_neg(), fmt);
+                for b in all_patterns(fmt) {
+                    let got =
+                        assert_dot_paths_bit_identical(&cfg, Posit::zero(fmt), &[a, na], &[b, b]);
+                    if a.is_nar() || b.is_nar() {
+                        assert!(got.is_nar(), "{fmt:?} a={a:?} b={b:?}");
+                    } else {
+                        assert!(got.is_zero(), "{fmt:?} a·b − a·b ≠ 0: a={a:?} b={b:?} got {got:?}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+#[ignore = "long-haul: n=16 randomized oracle sweep; run via the advisory CI job"]
+fn p16_random_pairs_match_quire_and_fp64() {
+    // 2^32 pairs is out of reach; a seeded uniform sample over the full
+    // pattern space (NaR and zero included) stands in. FP64 is still an
+    // exact oracle at n=16 (product significand ≤ 24 bits).
+    for es in 0..=2u32 {
+        let fmt = PositFormat::new(16, es).unwrap();
+        let cfg = PdpuConfig::new(fmt, fmt, 1, lossless_wm(fmt)).unwrap();
+        let unit = Pdpu::new(cfg);
+        let mut scratch = DotScratch::for_config(&cfg);
+        let mut rng = Rng::seeded(0xC0F0_0016 + es as u64);
+        for _ in 0..2_000_000 {
+            let a = rand_pattern(&mut rng, fmt);
+            let b = rand_pattern(&mut rng, fmt);
+            oracle_case(&unit, &mut scratch, fmt, a, b);
+        }
+    }
+}
+
+#[test]
+#[ignore = "long-haul: n=16 adversarial vector sweep; run via the advisory CI job"]
+fn p16_adversarial_vectors_bit_identical_across_paths() {
+    let mut rng = Rng::seeded(0xADF0_0016);
+    for round in 0..20_000 {
+        let n = [1usize, 2, 4, 8, 16][(round % 5) as usize];
+        let wm = 4 + (round % 5) * 10;
+        let fmt = PositFormat::new(16, 2).unwrap();
+        let cfg = PdpuConfig::new(fmt, fmt, n, wm as u32).unwrap();
+        let a = adversarial_vector(&mut rng, fmt, n);
+        let b = adversarial_vector(&mut rng, fmt, n);
+        let acc = rand_pattern(&mut rng, fmt);
+        assert_dot_paths_bit_identical(&cfg, acc, &a, &b);
+    }
+}

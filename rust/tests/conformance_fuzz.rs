@@ -1,0 +1,147 @@
+//! Long-haul fuzz for the lane-packed fast path (`#[ignore]`d; run by the
+//! advisory CI job via `cargo test --release -- --ignored`).
+//!
+//! Random [`PdpuConfig`]s — including dot sizes that cross the
+//! `MAX_FAST_LANES` boundary into the staged fallback — are driven through
+//! `dot`/`dot_with`/`dot_prepared`/`gemm` on adversarial and
+//! cancellation-heavy operands, asserting scalar↔vectorized bit-identity
+//! throughout, plus one test checking that the `obs` numerics counters
+//! (saturation, minpos clamps, NaR) agree with a recount of the actual
+//! outputs.
+//!
+//! The numerics counters are process-global atomics, so **all** counter
+//! assertions live in the single `numerics_counters_agree_with_outputs`
+//! test — no other test in this binary may call `gemm_f64`,
+//! `record_outputs`, or the SGD update path.
+
+use pdpu::engine::{BatchEngine, PreparedOperands};
+use pdpu::pdpu::{Pdpu, PdpuConfig, MAX_FAST_LANES};
+use pdpu::posit::Posit;
+use pdpu::testing::diff::{
+    adversarial_vector, assert_dot_paths_bit_identical, cancellation_pair, random_config,
+    random_config_with_n, rand_pattern, special,
+};
+use pdpu::testing::Rng;
+
+/// Dot sizes straddling the fast-path boundary (N ≤ 64 fused, above staged).
+const N_CHOICES: [usize; 12] = [1, 2, 3, 4, 7, 8, 16, 32, 63, 64, 65, 96];
+
+#[test]
+#[ignore = "long-haul fuzz: random configs through every dot path; run via the advisory CI job"]
+fn dot_paths_bit_identical_across_random_configs() {
+    let mut rng = Rng::seeded(0xF0220_001);
+    for _ in 0..30_000 {
+        let n = N_CHOICES[rng.below(N_CHOICES.len() as u64) as usize];
+        let cfg = random_config_with_n(&mut rng, n);
+        let (a, b) = if rng.flip() {
+            (
+                adversarial_vector(&mut rng, cfg.in_fmt, n),
+                adversarial_vector(&mut rng, cfg.in_fmt, n),
+            )
+        } else {
+            cancellation_pair(&mut rng, cfg.in_fmt, n)
+        };
+        let acc = if rng.below(4) == 0 {
+            special(&mut rng, cfg.out_fmt)
+        } else {
+            rand_pattern(&mut rng, cfg.out_fmt)
+        };
+        assert_dot_paths_bit_identical(&cfg, acc, &a, &b);
+    }
+}
+
+#[test]
+#[ignore = "long-haul fuzz: batched GEMM vs the scalar chunked loop; run via the advisory CI job"]
+fn gemm_bit_identical_to_scalar_chunked_loop() {
+    let mut rng = Rng::seeded(0xF0220_002);
+    for round in 0..2_000 {
+        let cfg = random_config(&mut rng);
+        let unit = Pdpu::new(cfg);
+        let engine = BatchEngine::new(cfg);
+        let (rows, cols) = (1 + rng.below(4) as usize, 1 + rng.below(4) as usize);
+        let k = 1 + rng.below(3 * MAX_FAST_LANES as u64) as usize; // tails + multi-chunk
+        let w = adversarial_vector(&mut rng, cfg.in_fmt, rows * k);
+        let x = adversarial_vector(&mut rng, cfg.in_fmt, cols * k);
+        let acc: Vec<Posit> = (0..rows).map(|_| rand_pattern(&mut rng, cfg.out_fmt)).collect();
+        let wp = PreparedOperands::from_posits(cfg.in_fmt, &w, k);
+        let xp = PreparedOperands::from_posits(cfg.in_fmt, &x, k);
+        let got = engine.gemm_posit(&acc, &wp, &xp);
+        for r in 0..rows {
+            for c in 0..cols {
+                let want = unit.dot_chunked(acc[r], &w[r * k..(r + 1) * k], &x[c * k..(c + 1) * k]);
+                assert_eq!(
+                    got[r * cols + c].bits(),
+                    want.bits(),
+                    "round {round} cfg {} out[{r},{c}]",
+                    cfg.label()
+                );
+            }
+        }
+    }
+}
+
+/// Mirror of `obs::record_outputs`'s classification: (maxpos, minpos, nar)
+/// tallies over a launch's posit outputs.
+fn classify(outs: &[Posit]) -> (u64, u64, u64) {
+    let (mut maxpos, mut minpos, mut nar) = (0u64, 0u64, 0u64);
+    for p in outs {
+        if p.is_nar() {
+            nar += 1;
+            continue;
+        }
+        if p.is_zero() {
+            continue;
+        }
+        let fmt = p.format();
+        let bits = p.bits();
+        let sign_bit = 1u32 << (fmt.n() - 1);
+        let abs = if bits & sign_bit != 0 { bits.wrapping_neg() & fmt.mask() } else { bits };
+        if abs == fmt.maxpos_bits() {
+            maxpos += 1;
+        } else if abs == fmt.minpos_bits() {
+            minpos += 1;
+        }
+    }
+    (maxpos, minpos, nar)
+}
+
+#[test]
+#[ignore = "long-haul fuzz: obs numerics counters vs output recount; run via the advisory CI job"]
+fn numerics_counters_agree_with_outputs() {
+    // The ONLY test in this binary allowed to touch the global counters.
+    let mut rng = Rng::seeded(0xF0220_003);
+    for round in 0..500 {
+        let cfg = random_config(&mut rng);
+        let engine = BatchEngine::new(cfg);
+        let (rows, cols) = (1 + rng.below(3) as usize, 1 + rng.below(3) as usize);
+        let k = 1 + rng.below(24) as usize;
+        // huge dynamic range forces ±maxpos saturation and ±minpos clamps;
+        // injected NaNs quantize to NaR and must poison whole output rows
+        let mut w: Vec<f64> = (0..rows * k).map(|_| rng.log_uniform_signed(-80.0, 80.0)).collect();
+        let x: Vec<f64> = (0..cols * k).map(|_| rng.log_uniform_signed(-80.0, 80.0)).collect();
+        if rng.flip() {
+            let slot = rng.below((rows * k) as u64) as usize;
+            w[slot] = f64::NAN;
+        }
+        let acc: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+
+        // expected outputs via the counter-free posit-level entry point
+        let wp = PreparedOperands::quantize(cfg.in_fmt, &w, k);
+        let xp = PreparedOperands::quantize(cfg.in_fmt, &x, k);
+        let accp: Vec<Posit> = acc.iter().map(|&v| Posit::from_f64(v, cfg.out_fmt)).collect();
+        let outs = engine.gemm_posit(&accp, &wp, &xp);
+        let (exp_max, exp_min, exp_nar) = classify(&outs);
+
+        let before = pdpu::obs::numerics();
+        let got = engine.gemm_f64(&acc, &w, &x, k);
+        let after = pdpu::obs::numerics();
+
+        assert_eq!(after.sat_maxpos - before.sat_maxpos, exp_max, "round {round} maxpos");
+        assert_eq!(after.sat_minpos - before.sat_minpos, exp_min, "round {round} minpos");
+        assert_eq!(after.nar - before.nar, exp_nar, "round {round} nar");
+        // and the f64 facade returns exactly the posit outputs it counted
+        for (g, p) in got.iter().zip(&outs) {
+            assert_eq!(g.to_bits(), p.to_f64().to_bits(), "round {round}");
+        }
+    }
+}

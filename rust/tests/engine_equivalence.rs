@@ -15,26 +15,8 @@ use pdpu::coordinator::fusion::{execute_fused, execute_unfused, plan_fusion, Gem
 use pdpu::engine::{BatchEngine, PreparedOperands};
 use pdpu::pdpu::{Pdpu, PdpuConfig};
 use pdpu::posit::{Posit, PositFormat};
+use pdpu::testing::diff::random_config;
 use pdpu::testing::Rng;
-
-/// Random valid PdpuConfig spanning the tested space: N ∈ {1,4,8},
-/// Wm ∈ 6..=96, uniform and mixed input/output formats.
-fn random_config(rng: &mut Rng) -> PdpuConfig {
-    let n = [1usize, 4, 8][rng.below(3) as usize];
-    loop {
-        let wm = rng.range_i64(6, 96) as u32;
-        let es = rng.range_i64(0, 2) as u32;
-        let n_out = rng.range_i64(8, 32) as u32;
-        let n_in = if rng.flip() {
-            n_out // uniform
-        } else {
-            rng.range_i64(5, n_out as i64) as u32 // mixed: narrow inputs
-        };
-        if let Ok(cfg) = PdpuConfig::mixed(n_in, n_out, es, n, wm) {
-            return cfg;
-        }
-    }
-}
 
 /// The scalar reference for one output element: quantize and run
 /// `dot_chunked`, exactly as `PdpuArch::dot_f64` does.
@@ -300,8 +282,8 @@ fn quire_dot_batch_bit_identical_to_scalar_loop() {
 
 #[test]
 fn prepared_operands_match_per_call_quantization() {
-    // quantize-once must equal quantize-per-call: same decoded planes
-    use pdpu::posit::decode;
+    // quantize-once must equal quantize-per-call: same packed lane words
+    use pdpu::pdpu::PackedLane;
     let mut rng = Rng::seeded(0x9A4);
     let cfg = PdpuConfig::paper_default();
     let k = 17;
@@ -310,7 +292,7 @@ fn prepared_operands_match_per_call_quantization() {
     for r in 0..4 {
         let fresh: Vec<_> = data[r * k..(r + 1) * k]
             .iter()
-            .map(|&v| decode(Posit::from_f64(v, cfg.in_fmt)))
+            .map(|&v| PackedLane::from_posit(Posit::from_f64(v, cfg.in_fmt)))
             .collect();
         assert_eq!(&fresh[..], prepared.row(r), "row {r}");
     }

@@ -17,13 +17,14 @@ use pdpu::dnn::dataset::mnist_like;
 use pdpu::dnn::layers::{linear_batch, relu};
 use pdpu::dnn::Tensor;
 use pdpu::pdpu::PdpuConfig;
-use pdpu::testing::Rng;
+use pdpu::testing::{diff, Rng};
 use pdpu::train::{softmax_xent_batch, TrainGraph, Trainer};
 
+/// Mini-batch from the shared differential-testing generators, wrapped
+/// into the tensor shape the training graph expects.
 fn random_batch(rng: &mut Rng, b: usize, d: usize, classes: usize) -> (Tensor, Vec<usize>) {
-    let xs = Tensor::from_vec(&[b, d], (0..b * d).map(|_| rng.normal()).collect());
-    let labels = (0..b).map(|_| rng.below(classes as u64) as usize).collect();
-    (xs, labels)
+    let (xs, labels) = diff::random_batch(rng, b, d, classes);
+    (Tensor::from_vec(&[b, d], xs), labels)
 }
 
 /// The FP64 analytic backward must match central finite differences of the
