@@ -131,6 +131,23 @@ fn main() {
     let overhead = m_traced.mean_ns() / m_fused.mean_ns();
     println!("  -> tracing overhead at full sampling: {overhead:.3}x of the untraced fused pass");
 
+    // numerics-observatory A/B: same fused pass with every engine launch
+    // FP64-shadowed (sampling=1, the worst case). Shadowing re-walks the
+    // decoded operand planes in double precision on the caller thread;
+    // primary outputs stay bit-identical (rust/tests/shadow_identity.rs).
+    pdpu::obs::shadow::set_sampling(1);
+    let m_shadowed = bench(
+        "serving queue: fused, FP64 shadow sampled 1-in-1",
+        Duration::from_millis(1200),
+        || std::hint::black_box(execute_fused(&queue)),
+    );
+    pdpu::obs::shadow::set_sampling(0);
+    report(&m_shadowed);
+    let numerics_overhead = m_shadowed.mean_ns() / m_fused.mean_ns();
+    println!(
+        "  -> numerics-observatory overhead at full shadow sampling: {numerics_overhead:.3}x of the fused pass"
+    );
+
     let json = Json::obj(vec![
         ("bench", Json::Str("serving".into())),
         ("config", Json::Str(cfg.label())),
@@ -146,6 +163,8 @@ fn main() {
         ("fused_mean_ns", Json::Num(m_fused.mean_ns())),
         ("traced_mean_ns", Json::Num(m_traced.mean_ns())),
         ("tracing_overhead", Json::Num(overhead)),
+        ("numerics_shadow_mean_ns", Json::Num(m_shadowed.mean_ns())),
+        ("numerics_overhead", Json::Num(numerics_overhead)),
         ("unfused_macs_per_s", Json::Num(m_unfused.per_second(macs_per_pass))),
         ("fused_macs_per_s", Json::Num(m_fused.per_second(macs_per_pass))),
         ("speedup", Json::Num(speedup)),

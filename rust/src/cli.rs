@@ -87,14 +87,17 @@ COMMANDS
   schedule [--outputs N] [--dot-len K] [--units U] [--n N] [--interleave I]
                                   PDPU-array cycle-accurate schedule
   serve [--addr HOST:PORT] [--artifacts DIR] [--software] [--batch N]
-        [--no-fuse] [--trace N]
+        [--no-fuse] [--trace N] [--shadow N]
                                   start the batched inference/GEMM server
                                   (--software, or missing PJRT artifacts,
                                   serves the batched bit-exact PDPU engine;
                                   --no-fuse disables cross-request GEMM
                                   fusion for A/B runs — outputs identical;
                                   --trace N samples 1-in-N requests into
-                                  the span ring, 0 = off, default off)
+                                  the span ring, 0 = off, default off;
+                                  --shadow N shadow-executes 1-in-N engine
+                                  launches in FP64 for the numerics
+                                  observatory, 0 = off, default off)
   train [--epochs N] [--limit N] [--batch N] [--hidden N] [--classes N]
         [--lr F] [--seed S]       mixed-precision posit SGD through the
                                   software engine on the bundled dataset
@@ -110,6 +113,14 @@ COMMANDS
                                   chrome://tracing or Perfetto); --sample N
                                   sets 1-in-N request sampling first,
                                   --clear empties the ring before sampling
+  numerics [--addr HOST:PORT] [--shadow N] [--json]
+                                  per-layer numerics observatory report
+                                  from a running server: regime-utilization
+                                  histograms, saturation/NaR tallies, FP64
+                                  shadow accuracy, and the precision
+                                  advisor's per-site (n, es); --shadow N
+                                  (re)arms 1-in-N shadow sampling first,
+                                  --json prints the raw wire response
   lint [--root DIR]               run the pdpu static-analysis pass over
                                   rust/src (panic-freedom, alloc-freedom,
                                   determinism, stage isolation, wire ops);
@@ -133,6 +144,7 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<i32> {
         "train" => cmd_train(&args),
         "stats" => cmd_stats(&args),
         "trace" => cmd_trace(&args),
+        "numerics" => cmd_numerics(&args),
         "lint" => cmd_lint(&args),
         "selftest" => cmd_selftest(&args),
         "help" | "--help" | "-h" => {
@@ -312,6 +324,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
     let (m, k, n) = service.info().gemm_mkn;
     let trace_every = args.flag_usize("trace", 0) as u32;
     crate::obs::trace::set_sampling(trace_every);
+    let shadow_every = args.flag_usize("shadow", 0) as u32;
+    crate::obs::shadow::set_sampling(shadow_every);
     let metrics = Arc::new(Metrics::new());
     let server = Server::start_with(addr, service, metrics, policy)?;
     println!("pdpu coordinator listening on {}", server.addr);
@@ -322,11 +336,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
     if trace_every > 0 {
         println!("request tracing: 1-in-{trace_every} sampling (export with `pdpu trace`)");
     }
+    if shadow_every > 0 {
+        println!(
+            "FP64 shadow execution: 1-in-{shadow_every} engine launches (report with `pdpu numerics`)"
+        );
+    }
     println!(
         "protocol: JSON lines — {{\"op\":\"infer\",\"image\":[784 floats]}} | \
          {{\"op\":\"gemm\",\"a\":[{} floats],\"b\":[{} floats]}} | \
          {{\"op\":\"train\",\"images\":[[784]…],\"labels\":[ints]}} | {{\"op\":\"stats\"}} | \
-         {{\"op\":\"metrics\"}} | {{\"op\":\"trace\"}} | {{\"op\":\"ping\"}}",
+         {{\"op\":\"metrics\"}} | {{\"op\":\"trace\"}} | {{\"op\":\"numerics\"}} | {{\"op\":\"ping\"}}",
         m * k,
         k * n
     );
@@ -462,6 +481,122 @@ fn cmd_trace(args: &Args) -> anyhow::Result<i32> {
     Ok(0)
 }
 
+fn cmd_numerics(args: &Args) -> anyhow::Result<i32> {
+    use crate::coordinator::json::Json;
+    let addr = args.flag("addr").unwrap_or("127.0.0.1:7878");
+    let mut fields: Vec<(&str, Json)> = vec![("op", Json::Str("numerics".to_string()))];
+    if let Some(v) = args.flag("shadow") {
+        let every: u32 = v.parse().map_err(|_| anyhow::anyhow!("--shadow wants a non-negative integer"))?;
+        fields.push(("shadow", Json::Num(f64::from(every))));
+    }
+    let resp = wire_request(addr, &Json::obj(fields))?;
+    anyhow::ensure!(matches!(resp.get("ok"), Some(Json::Bool(true))), "server error: {resp}");
+    if args.flag("json").is_some() {
+        println!("{resp}");
+        return Ok(0);
+    }
+
+    let f = |v: &Json, k: &str| v.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    let s = |v: &Json, k: &str| v.get(k).and_then(Json::as_str).unwrap_or("?").to_string();
+    let sampling = resp.get("shadow_sampling").and_then(Json::as_f64).unwrap_or(0.0);
+    println!(
+        "numerics observatory — FP64 shadow sampling: {}",
+        if sampling > 0.0 { format!("1-in-{sampling}") } else { "off (arm with --shadow N)".to_string() }
+    );
+    let sites = resp.get("sites").and_then(Json::as_arr).map(<[Json]>::to_vec).unwrap_or_default();
+    if sites.is_empty() {
+        println!("no sites recorded yet — drive some traffic through the server first");
+        return Ok(0);
+    }
+
+    println!(
+        "\n{:<16} {:<24} {:>8} {:>10} {:>8} {:>8} {:>6} {:>9} {:>14}",
+        "site", "cfg", "launches", "outputs", "±maxpos", "±minpos", "NaR", "roundings", "scale range"
+    );
+    for site in &sites {
+        let range = match (
+            site.get("min_scale").and_then(Json::as_f64),
+            site.get("max_scale").and_then(Json::as_f64),
+        ) {
+            (Some(lo), Some(hi)) => format!("[{lo}, {hi}]"),
+            _ => "—".to_string(),
+        };
+        println!(
+            "{:<16} {:<24} {:>8} {:>10} {:>8} {:>8} {:>6} {:>9} {:>14}",
+            s(site, "site"),
+            s(site, "cfg"),
+            f(site, "launches"),
+            f(site, "outputs"),
+            f(site, "sat_maxpos"),
+            f(site, "sat_minpos"),
+            f(site, "nar"),
+            f(site, "quire_roundings"),
+            range
+        );
+    }
+
+    println!("\noutput dynamic range (64 buckets of 4 binades, from scale 2^-128):");
+    const RAMP: [char; 5] = [' ', '.', 'o', 'O', '#'];
+    for site in &sites {
+        let Some(hist) = site.get("output_scale_hist").and_then(Json::as_f64_vec) else { continue };
+        let peak = hist.iter().copied().fold(0.0f64, f64::max);
+        if peak <= 0.0 {
+            continue;
+        }
+        let glyphs: String = hist
+            .iter()
+            .map(|&c| {
+                let idx = if c <= 0.0 { 0 } else { 1 + ((c / peak) * 3.999) as usize };
+                RAMP.get(idx.min(RAMP.len() - 1)).copied().unwrap_or('#')
+            })
+            .collect();
+        println!("{:<16} |{glyphs}|", s(site, "site"));
+    }
+
+    let shadowed: Vec<&Json> = sites
+        .iter()
+        .filter(|v| v.get("shadow").is_some_and(|sh| f(sh, "samples") > 0.0))
+        .collect();
+    if !shadowed.is_empty() {
+        println!("\nFP64 shadow accuracy (sampled launches re-run in double precision):");
+        println!(
+            "{:<16} {:>9} {:>13} {:>13} {:>11}",
+            "site", "samples", "mean rel err", "max abs err", "dec digits"
+        );
+        for site in shadowed {
+            let Some(sh) = site.get("shadow") else { continue };
+            println!(
+                "{:<16} {:>9} {:>13.3e} {:>13.3e} {:>11.2}",
+                s(site, "site"),
+                f(sh, "samples"),
+                f(sh, "mean_rel_err"),
+                f(sh, "max_abs_err"),
+                f(sh, "mean_decimal_accuracy")
+            );
+        }
+    }
+
+    let advisor = resp.get("advisor").and_then(Json::as_arr).map(<[Json]>::to_vec).unwrap_or_default();
+    if !advisor.is_empty() {
+        println!("\nprecision advisor — smallest P(n, es) covering each site's observed range + accuracy:");
+        println!(
+            "{:<16} {:<24} {:>12} {:>11} {:>12}",
+            "site", "current cfg", "scale ±2^", "dec digits", "recommend"
+        );
+        for a in &advisor {
+            println!(
+                "{:<16} {:<24} {:>12} {:>11.2} {:>12}",
+                s(a, "site"),
+                s(a, "cfg"),
+                f(a, "required_scale"),
+                f(a, "target_decimal_digits"),
+                format!("P({}, {})", f(a, "rec_n"), f(a, "rec_es"))
+            );
+        }
+    }
+    Ok(0)
+}
+
 fn cmd_lint(args: &Args) -> anyhow::Result<i32> {
     use crate::analysis;
     let root = std::path::PathBuf::from(args.flag("root").unwrap_or("."));
@@ -580,6 +715,19 @@ mod tests {
     fn trace_rejects_bad_sample_before_connecting() {
         assert!(run(argv("trace --addr 127.0.0.1:1 --sample nope")).is_err());
         assert!(run(argv("trace --addr 127.0.0.1:1 --sample -3")).is_err());
+    }
+
+    #[test]
+    fn numerics_fails_fast_without_a_server() {
+        // port 1 refuses immediately on loopback — the error must surface
+        assert!(run(argv("numerics --addr 127.0.0.1:1")).is_err());
+        assert!(run(argv("numerics --addr 127.0.0.1:1 --json")).is_err());
+    }
+
+    #[test]
+    fn numerics_rejects_bad_shadow_before_connecting() {
+        assert!(run(argv("numerics --addr 127.0.0.1:1 --shadow nope")).is_err());
+        assert!(run(argv("numerics --addr 127.0.0.1:1 --shadow -2")).is_err());
     }
 
     #[test]

@@ -183,8 +183,6 @@ pub fn execute_planned(tiles: &[GemmTile], groups: &[Vec<usize>]) -> (Vec<Vec<f6
         let xp = PreparedOperands::quantize(cfg.in_fmt, &xcat, k);
         let accp: Vec<Posit> = first.acc.iter().map(|&v| Posit::from_f64(v, cfg.out_fmt)).collect();
         let fused = engine.gemm_posit(&accp, &wp, &xp);
-        // S6/convert boundary: tally saturations/NaR before leaving posit land
-        crate::obs::record_outputs(&fused);
         // scatter the fused launch's columns back to the member tiles
         let (m, cols_total) = (wp.rows(), xp.rows());
         let mut off = 0usize;
@@ -215,7 +213,6 @@ pub fn execute_unfused(tiles: &[GemmTile]) -> Vec<Vec<f64>> {
             let xp = PreparedOperands::quantize(t.cfg.in_fmt, &t.bt, t.k);
             let accp: Vec<Posit> = t.acc.iter().map(|&v| Posit::from_f64(v, t.cfg.out_fmt)).collect();
             let outs = engine.gemm_posit(&accp, &wp, &xp);
-            crate::obs::record_outputs(&outs);
             outs.iter().map(|p| p.to_f64()).collect()
         })
         .collect()

@@ -10,6 +10,8 @@
 //!   {"op":"metrics"}                     → {"ok":true,"prometheus":"…"}
 //!   {"op":"trace","sample":N?,"clear":bool?}
 //!                                        → {"ok":true,"sampling":N,"events":[…]}
+//!   {"op":"numerics","shadow":N?}        → {"ok":true,"shadow_sampling":N,
+//!                                           "sites":[…],"advisor":[…]}
 //!
 //! Requests from all connections funnel through per-op [`Batcher`]s, so
 //! concurrent clients get batched into single backend invocations — the
@@ -358,7 +360,85 @@ fn handle_request(line: &str, shared: &Shared) -> Json {
                 ("events", Json::Arr(events)),
             ])
         }
+        Some("numerics") => {
+            if let Some(every) = req.get("shadow").and_then(Json::as_f64) {
+                if every.fract() != 0.0 || !(0.0..=u32::MAX as f64).contains(&every) {
+                    return err(format!("'shadow' must be a non-negative integer, got {every}"));
+                }
+                crate::obs::shadow::set_sampling(every as u32);
+            }
+            numerics_report()
+        }
         Some(op) => err(format!("unknown op '{op}'")),
         None => err("missing 'op'"),
     }
+}
+
+/// The `{"op":"numerics"}` response body: every registry site with its
+/// tallies, scale histograms, and shadow error stats, plus the precision
+/// advisor's per-site (n, es) recommendations.
+fn numerics_report() -> Json {
+    let sites: Vec<Json> = crate::obs::numerics::snapshot().iter().map(site_to_json).collect();
+    let advisor: Vec<Json> = crate::obs::numerics::advise().iter().map(advice_to_json).collect();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("shadow_sampling", Json::Num(crate::obs::shadow::sampling() as f64)),
+        ("sites", Json::Arr(sites)),
+        ("advisor", Json::Arr(advisor)),
+    ])
+}
+
+fn opt_i32(v: Option<i32>) -> Json {
+    match v {
+        Some(x) => Json::Num(x as f64),
+        None => Json::Null,
+    }
+}
+
+fn hist_to_json(hist: &[u64]) -> Json {
+    Json::Arr(hist.iter().map(|&v| Json::Num(v as f64)).collect())
+}
+
+fn site_to_json(e: &crate::obs::numerics::SiteEntry) -> Json {
+    let s = &e.stats;
+    Json::obj(vec![
+        ("site", Json::Str(e.site.label())),
+        ("cfg", Json::Str(e.cfg.label())),
+        ("launches", Json::Num(s.launches as f64)),
+        ("outputs", Json::Num(s.outputs as f64)),
+        ("sat_maxpos", Json::Num(s.sat_maxpos as f64)),
+        ("sat_minpos", Json::Num(s.sat_minpos as f64)),
+        ("nar", Json::Num(s.nar as f64)),
+        ("quire_roundings", Json::Num(s.quire_roundings as f64)),
+        ("grad_sat", Json::Num(s.grad_sat as f64)),
+        ("grad_underflow", Json::Num(s.grad_underflow as f64)),
+        ("min_scale", opt_i32(s.min_scale)),
+        ("max_scale", opt_i32(s.max_scale)),
+        ("quire_watermark_log2", opt_i32(s.quire_watermark_log2)),
+        ("scale_bucket_lo", Json::Num(crate::obs::numerics::SCALE_BUCKET_LO as f64)),
+        ("scale_bucket_width", Json::Num(crate::obs::numerics::SCALE_BUCKET_WIDTH as f64)),
+        ("operand_scale_hist", hist_to_json(&s.operand_scale_hist)),
+        ("output_scale_hist", hist_to_json(&s.output_scale_hist)),
+        (
+            "shadow",
+            Json::obj(vec![
+                ("samples", Json::Num(s.shadow.samples() as f64)),
+                ("overflow_frac", Json::Num(s.shadow.overflow_frac())),
+                ("max_abs_err", Json::Num(s.shadow.max_abs_err())),
+                ("mean_rel_err", Json::Num(s.shadow.mean_rel_err())),
+                ("mean_decimal_accuracy", Json::Num(s.shadow.mean_decimal_accuracy())),
+            ]),
+        ),
+    ])
+}
+
+fn advice_to_json(a: &crate::obs::numerics::Advice) -> Json {
+    Json::obj(vec![
+        ("site", Json::Str(a.site.label())),
+        ("cfg", Json::Str(a.cfg.label())),
+        ("rec_n", Json::Num(a.rec_n as f64)),
+        ("rec_es", Json::Num(a.rec_es as f64)),
+        ("required_scale", Json::Num(a.required_scale as f64)),
+        ("target_decimal_digits", Json::Num(a.target_decimal_digits)),
+    ])
 }

@@ -326,6 +326,7 @@ impl SoftwareService {
     /// Posit GEMM at the configured (M, K, N): quantize once per operand,
     /// run one batched tile.
     pub fn gemm(&self, a: &[f32], b: &[f32]) -> std::result::Result<Vec<f32>, String> {
+        let _site = crate::obs::numerics::SiteGuard::enter(crate::obs::numerics::Site::gemm());
         let (m, k, _) = self.gemm_mkn;
         let (af, bt) = self.validate_and_transpose(a, b)?;
         let out = with_zero_seeds(m, |seeds| self.arch.dot_batch(seeds, &af, &bt, k));
@@ -358,6 +359,9 @@ impl SoftwareService {
         reqs: &[(Vec<f32>, Vec<f32>)],
         ctx: Option<TraceCtx>,
     ) -> (Vec<std::result::Result<Vec<f32>, String>>, FusionStats) {
+        // numerics attribution: fused launches run on this thread, so the
+        // guard covers planning and execution for the whole queue
+        let _site = crate::obs::numerics::SiteGuard::enter(crate::obs::numerics::Site::gemm());
         let (m, k, _) = self.gemm_mkn;
         let mut tiles: Vec<GemmTile> = Vec::new();
         // per-request slot: index into `tiles`, or the shape error

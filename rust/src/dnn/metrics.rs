@@ -15,13 +15,12 @@
 pub fn mean_relative_accuracy(outputs: &[f64], reference: &[f64]) -> f64 {
     assert_eq!(outputs.len(), reference.len());
     assert!(!outputs.is_empty());
-    let eps = 1e-12;
     let mut total = 0.0;
     for (&y, &r) in outputs.iter().zip(reference) {
         if !y.is_finite() {
             continue; // contributes 0
         }
-        let rel = (y - r).abs() / r.abs().max(eps);
+        let rel = crate::obs::errstats::relative_error(r, y);
         total += (1.0 - rel).max(0.0);
     }
     total / outputs.len() as f64
@@ -83,16 +82,7 @@ pub fn top1(logits: &[Vec<f64>], labels: &[usize]) -> f64 {
 /// relative error when rounding `x` to the format (Gustafson's metric,
 /// the y-axis of Fig. 3).
 pub fn decimal_accuracy(x: f64, quantize: impl Fn(f64) -> f64) -> f64 {
-    let q = quantize(x);
-    if !q.is_finite() || x == 0.0 {
-        return 0.0;
-    }
-    let rel = ((q - x) / x).abs();
-    if rel == 0.0 {
-        f64::INFINITY
-    } else {
-        -rel.log10()
-    }
+    crate::obs::errstats::decimal_accuracy(x, quantize(x))
 }
 
 #[cfg(test)]

@@ -2,6 +2,7 @@
 //! the bridge between FP64 workloads and the hardware formats.
 
 use crate::baselines::ieee::{fp_from_f64, fp_to_f64, IeeeFormat};
+use crate::obs::errstats::ErrStats;
 use crate::posit::{Posit, PositFormat};
 
 /// Round every element to the nearest posit of `fmt` and back to f64
@@ -25,32 +26,23 @@ pub struct QuantStats {
     pub overflow_frac: f64,
 }
 
+/// Error statistics of `quantized` against `original`, accumulated through
+/// the shared [`ErrStats`] — the same arithmetic the FP64 shadow executor
+/// uses live, so experiment sweeps and the numerics observatory report
+/// identical numbers for identical errors.
 pub fn quant_stats(original: &[f64], quantized: &[f64]) -> QuantStats {
     assert_eq!(original.len(), quantized.len());
     assert!(!original.is_empty());
-    let mut s = QuantStats::default();
-    let mut rel_n = 0usize;
-    let mut overflows = 0usize;
+    let mut s = ErrStats::default();
     for (&o, &q) in original.iter().zip(quantized) {
-        if !q.is_finite() {
-            overflows += 1;
-            continue;
-        }
-        let e = (o - q).abs();
-        s.max_abs_err = s.max_abs_err.max(e);
-        s.mean_abs_err += e;
-        if o != 0.0 {
-            s.mean_rel_err += e / o.abs();
-            rel_n += 1;
-        }
+        s.observe(o, q);
     }
-    let n = original.len() as f64;
-    s.mean_abs_err /= n;
-    if rel_n > 0 {
-        s.mean_rel_err /= rel_n as f64;
+    QuantStats {
+        max_abs_err: s.max_abs_err(),
+        mean_abs_err: s.mean_abs_err(),
+        mean_rel_err: s.mean_rel_err(),
+        overflow_frac: s.overflow_frac(),
     }
-    s.overflow_frac = overflows as f64 / n;
-    s
 }
 
 #[cfg(test)]

@@ -351,6 +351,7 @@ impl BatchEngine {
                 }
                 c0 = c1;
             }
+            self.observe_launch(acc, w, x, &out);
             return out;
         }
         let rows_per = rows.div_ceil(threads);
@@ -375,7 +376,29 @@ impl BatchEngine {
                 });
             }
         });
+        self.observe_launch(acc, w, x, &out);
         out
+    }
+
+    /// The single sanctioned numerics-attribution boundary: every engine
+    /// launch passes through here exactly once, on the *caller's* thread
+    /// (after worker join), so the thread-local site guard installed by
+    /// the serving/training layers attributes the work correctly. Tallies
+    /// output saturation/NaR plus operand/output scale histograms into
+    /// the per-site registry, and — when the 1-in-N shadow probe fires —
+    /// re-runs the launch in FP64 for error statistics. The shadow path
+    /// only reads, so primary outputs are bit-identical either way.
+    fn observe_launch(
+        &self,
+        acc: &[Posit],
+        w: &PreparedOperands,
+        x: &PreparedOperands,
+        out: &[Posit],
+    ) {
+        crate::obs::numerics::record_launch(self.unit.config(), &w.elems, &x.elems, out);
+        if crate::obs::shadow::probe() {
+            crate::obs::shadow::shadow_gemm(self.unit.config(), acc, w, x, out);
+        }
     }
 
     /// f64-facing convenience: quantize both operand matrices once, run
@@ -387,8 +410,6 @@ impl BatchEngine {
         let xp = PreparedOperands::quantize(cfg.in_fmt, x, k);
         let accp: Vec<Posit> = acc.iter().map(|&v| Posit::from_f64(v, cfg.out_fmt)).collect();
         let outs = self.gemm_posit(&accp, &wp, &xp);
-        // S6/convert boundary: tally saturations/NaR before leaving posit land
-        crate::obs::record_outputs(&outs);
         outs.iter().map(|p| p.to_f64()).collect()
     }
 }

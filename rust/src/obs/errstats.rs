@@ -1,0 +1,211 @@
+//! Shared numeric-error statistics: absolute/relative error and decimal
+//! accuracy ("how many correct decimal digits survive", à la Deep
+//! Positron's accuracy metric).
+//!
+//! One accumulator, two producers: `dnn::quantize::quant_stats` (format
+//! sweeps over quantized tensors) and the FP64 shadow executor in
+//! `obs::shadow` (sampled engine launches re-run in double precision).
+//! Both previously carried their own copies of this arithmetic; keeping it
+//! here means the figure-3 / table-1 experiments and the live observatory
+//! report the same numbers for the same errors.
+
+/// Decimal-accuracy contribution credited to an exact match. FP64 itself
+/// carries ~15.95 decimal digits, so an exact posit↔shadow agreement is
+/// capped here instead of poisoning the mean with +∞.
+pub const DECIMAL_ACCURACY_CAP: f64 = 16.0;
+
+/// Floor used by [`relative_error`] so exact-zero references yield a
+/// finite (if huge) relative error instead of a division by zero.
+pub const REL_EPS: f64 = 1e-12;
+
+/// Streaming error accumulator over (reference, approximation) pairs.
+///
+/// Semantics mirror the historical `quant_stats` exactly:
+/// - a non-finite approximation counts as an *overflow* and contributes to
+///   no error sum (but still to the sample count, so `mean_abs_err` is
+///   averaged over all samples);
+/// - relative error and decimal accuracy are only defined where the
+///   reference is nonzero.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ErrStats {
+    n: u64,
+    rel_n: u64,
+    overflows: u64,
+    max_abs_err: f64,
+    sum_abs_err: f64,
+    sum_rel_err: f64,
+    sum_dec_acc: f64,
+}
+
+impl ErrStats {
+    /// Record one (reference, approximation) pair.
+    pub fn observe(&mut self, reference: f64, got: f64) {
+        self.n += 1;
+        if !got.is_finite() {
+            self.overflows += 1;
+            return;
+        }
+        let e = (reference - got).abs();
+        if e > self.max_abs_err {
+            self.max_abs_err = e;
+        }
+        self.sum_abs_err += e;
+        if reference != 0.0 {
+            let rel = e / reference.abs();
+            self.sum_rel_err += rel;
+            self.rel_n += 1;
+            self.sum_dec_acc += if rel == 0.0 {
+                DECIMAL_ACCURACY_CAP
+            } else {
+                (-rel.log10()).min(DECIMAL_ACCURACY_CAP)
+            };
+        }
+    }
+
+    /// Fold another accumulator into this one (used to merge per-launch
+    /// shadow samples into the long-lived per-site entry).
+    pub fn merge(&mut self, other: &ErrStats) {
+        self.n += other.n;
+        self.rel_n += other.rel_n;
+        self.overflows += other.overflows;
+        if other.max_abs_err > self.max_abs_err {
+            self.max_abs_err = other.max_abs_err;
+        }
+        self.sum_abs_err += other.sum_abs_err;
+        self.sum_rel_err += other.sum_rel_err;
+        self.sum_dec_acc += other.sum_dec_acc;
+    }
+
+    /// Total observed pairs, overflows included.
+    pub fn samples(&self) -> u64 {
+        self.n
+    }
+
+    /// Fraction of samples whose approximation was non-finite.
+    pub fn overflow_frac(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.overflows as f64 / self.n as f64
+        }
+    }
+
+    /// Largest absolute error over the finite approximations.
+    pub fn max_abs_err(&self) -> f64 {
+        self.max_abs_err
+    }
+
+    /// Mean absolute error, averaged over *all* samples (overflowed ones
+    /// contribute zero to the numerator, matching `quant_stats`).
+    pub fn mean_abs_err(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum_abs_err / self.n as f64
+        }
+    }
+
+    /// Mean relative error over samples with a nonzero reference.
+    pub fn mean_rel_err(&self) -> f64 {
+        if self.rel_n == 0 {
+            0.0
+        } else {
+            self.sum_rel_err / self.rel_n as f64
+        }
+    }
+
+    /// Mean decimal accuracy (−log₁₀ of relative error, capped at
+    /// [`DECIMAL_ACCURACY_CAP`]) over samples with a nonzero reference.
+    pub fn mean_decimal_accuracy(&self) -> f64 {
+        if self.rel_n == 0 {
+            0.0
+        } else {
+            self.sum_dec_acc / self.rel_n as f64
+        }
+    }
+}
+
+/// Relative error with an epsilon-floored denominator — the form used by
+/// `dnn::metrics::mean_relative_accuracy` (table 1).
+pub fn relative_error(reference: f64, got: f64) -> f64 {
+    (got - reference).abs() / reference.abs().max(REL_EPS)
+}
+
+/// Decimal accuracy of a single approximation — the form used by
+/// `dnn::metrics::decimal_accuracy` (figure 3): `0.0` when the
+/// approximation is non-finite or the reference is zero, `+∞` for an
+/// exact match, otherwise −log₁₀ of the relative error.
+pub fn decimal_accuracy(reference: f64, got: f64) -> f64 {
+    if !got.is_finite() || reference == 0.0 {
+        return 0.0;
+    }
+    let rel = ((got - reference) / reference).abs();
+    if rel == 0.0 {
+        f64::INFINITY
+    } else {
+        -rel.log10()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observe_tracks_abs_rel_and_overflow_like_quant_stats() {
+        let mut s = ErrStats::default();
+        s.observe(1.0, 1.5); // abs 0.5, rel 0.5
+        s.observe(2.0, 2.0); // exact: abs 0, rel 0, dec capped
+        s.observe(4.0, f64::INFINITY); // overflow: no error contribution
+        s.observe(0.0, 0.25); // zero reference: abs only
+        assert_eq!(s.samples(), 4);
+        assert!((s.overflow_frac() - 0.25).abs() < 1e-12);
+        assert!((s.max_abs_err() - 0.5).abs() < 1e-12);
+        // sum_abs = 0.5 + 0 + 0.25 over n = 4
+        assert!((s.mean_abs_err() - 0.75 / 4.0).abs() < 1e-12);
+        // rel over the two nonzero-reference finite samples
+        assert!((s.mean_rel_err() - 0.25).abs() < 1e-12);
+        // dec: (-log10(0.5) + CAP) / 2
+        let want = (0.5f64.log10().abs() + DECIMAL_ACCURACY_CAP) / 2.0;
+        assert!((s.mean_decimal_accuracy() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_is_equivalent_to_observing_everything_in_one_accumulator() {
+        let pairs = [(1.0, 1.25), (3.0, 2.0), (0.5, f64::NAN), (-2.0, -2.0)];
+        let mut whole = ErrStats::default();
+        let mut a = ErrStats::default();
+        let mut b = ErrStats::default();
+        for (i, &(r, g)) in pairs.iter().enumerate() {
+            whole.observe(r, g);
+            if i % 2 == 0 {
+                a.observe(r, g);
+            } else {
+                b.observe(r, g);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.samples(), whole.samples());
+        assert_eq!(a.overflow_frac().to_bits(), whole.overflow_frac().to_bits());
+        assert_eq!(a.mean_abs_err().to_bits(), whole.mean_abs_err().to_bits());
+        assert_eq!(a.mean_rel_err().to_bits(), whole.mean_rel_err().to_bits());
+        assert_eq!(a.max_abs_err().to_bits(), whole.max_abs_err().to_bits());
+    }
+
+    #[test]
+    fn decimal_accuracy_free_fn_keeps_the_metrics_edge_cases() {
+        assert_eq!(decimal_accuracy(0.0, 0.1), 0.0);
+        assert_eq!(decimal_accuracy(1.0, f64::INFINITY), 0.0);
+        assert_eq!(decimal_accuracy(1.0, 1.0), f64::INFINITY);
+        // 1% relative error ≈ 2 decimal digits
+        assert!((decimal_accuracy(1.0, 1.01) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn relative_error_floors_the_denominator() {
+        assert!((relative_error(2.0, 2.5) - 0.25).abs() < 1e-12);
+        // zero reference: huge but finite
+        assert!(relative_error(0.0, 1.0).is_finite());
+        assert!(relative_error(0.0, 1.0) > 1e11);
+    }
+}

@@ -14,17 +14,30 @@
 //! * [`prom`] — Prometheus text exposition of the metrics snapshot
 //!   (`{"op":"metrics"}` / `pdpu stats --prom`), plus a minimal parser
 //!   used by the tests.
+//! * [`numerics`](mod@numerics) — the per-site numerics observatory: scale histograms,
+//!   saturation/NaR/quire tallies, and the precision advisor, keyed by
+//!   op site × config (`{"op":"numerics"}` / `pdpu numerics`).
+//! * [`shadow`] — 1-in-N sampled FP64 shadow execution of engine
+//!   launches; primary outputs stay bit-identical.
+//! * [`errstats`] — shared error/decimal-accuracy arithmetic used by the
+//!   shadow executor and the `dnn` quantization experiments.
 //!
-//! This file additionally owns the **posit numerics counters** — always-on
-//! process-wide tallies of quire-rounding events, saturations to
-//! ±maxpos/±minpos, and NaR encounters, recorded at the S6/convert
-//! boundary where engine launches hand posit results back to f64 land.
-//! They are cheap (one slice scan over *outputs*, which is tiny next to
-//! the O(m·k·n) work that produced them) and they ground the posit
-//! accuracy story in live serving data.
+//! This file additionally owns the **process-global posit numerics
+//! counters** — always-on tallies of quire-rounding events, saturations
+//! to ±maxpos/±minpos, and NaR encounters. They are fed from exactly one
+//! sanctioned boundary per kind of work: engine launches record through
+//! `numerics::record_launch` (called once per `BatchEngine::gemm_posit`
+//! on the caller's thread), and SGD updates through
+//! `numerics::record_update` — both of which tick these globals *and*
+//! the site-attributed registry, so the two views can never drift. The
+//! cost is one slice scan over outputs/operand lanes, tiny next to the
+//! O(m·k·n) work that produced them.
 
 pub mod clock;
+pub mod errstats;
+pub mod numerics;
 pub mod prom;
+pub mod shadow;
 pub mod stages;
 pub mod trace;
 
@@ -46,12 +59,30 @@ pub fn add_quire_roundings(n: u64) {
     }
 }
 
-/// Scan one launch's posit outputs at the S6/convert boundary and count
-/// saturations to ±maxpos, hits of ±minpos (the smallest representable
-/// magnitude — where underflow-avoidance clamps land), and NaR values.
+/// Fold one launch's output classification into the process-global
+/// counters. [`numerics::record_launch`] — the single sanctioned engine
+/// boundary — calls this, so the globals and the per-site registry stay
+/// consistent by construction.
+pub(crate) fn add_output_tallies(maxpos: u64, minpos: u64, nar: u64) {
+    if maxpos > 0 {
+        SAT_MAXPOS.fetch_add(maxpos, Ordering::Relaxed);
+    }
+    if minpos > 0 {
+        SAT_MINPOS.fetch_add(minpos, Ordering::Relaxed);
+    }
+    if nar > 0 {
+        NAR.fetch_add(nar, Ordering::Relaxed);
+    }
+}
+
+/// Scan a slice of posit outputs and count saturations to ±maxpos, hits
+/// of ±minpos (the smallest representable magnitude — where
+/// underflow-avoidance clamps land), and NaR values.
 ///
-/// One pass over the output slice, local tallies, at most three atomic
-/// adds — safe to leave always-on.
+/// This is the reference classification; the live serving path records
+/// through [`numerics::record_launch`] (which applies the same
+/// classification *and* site attribution) rather than calling this
+/// directly, so each output is tallied exactly once.
 pub fn record_outputs(outs: &[Posit]) {
     let mut maxpos = 0u64;
     let mut minpos = 0u64;
@@ -74,15 +105,7 @@ pub fn record_outputs(outs: &[Posit]) {
             minpos += 1;
         }
     }
-    if maxpos > 0 {
-        SAT_MAXPOS.fetch_add(maxpos, Ordering::Relaxed);
-    }
-    if minpos > 0 {
-        SAT_MINPOS.fetch_add(minpos, Ordering::Relaxed);
-    }
-    if nar > 0 {
-        NAR.fetch_add(nar, Ordering::Relaxed);
-    }
+    add_output_tallies(maxpos, minpos, nar);
 }
 
 /// Point-in-time view of the posit numerics counters.

@@ -1,0 +1,524 @@
+//! Per-site posit numerics observatory.
+//!
+//! The global counters in `obs` answer "is the process saturating?"; this
+//! registry answers the paper's real question — *which layer* is running
+//! out of regime, and which (n, es) would fix it. Every engine launch is
+//! attributed to an op **site** (model layer index × kernel kind, e.g.
+//! `infer:L0`, `train_bwd:L2`, `gemm`) via a thread-local [`SiteGuard`]
+//! installed by the serving/training layers, and the registry keys entries
+//! on site × [`PdpuConfig`] so mixed-format deployments stay separable.
+//!
+//! Per entry it records:
+//! - log₂-bucketed histograms of decoded operand and output scales
+//!   (regime/dynamic-range utilization straight off the [`PackedLane`]
+//!   words — no re-decode of the posit bit patterns);
+//! - saturation (±maxpos), ±minpos-clamp, and NaR tallies, site-attributed
+//!   (the process-global counters keep ticking through
+//!   `obs::add_output_tallies` so existing dashboards are unchanged);
+//! - quire-rounding counts, gradient saturation/underflow counts, and the
+//!   quire max-magnitude watermark from the SGD update path;
+//! - FP64 shadow-execution error statistics merged in by `obs::shadow`.
+//!
+//! [`advise`] turns each entry into a per-site (n, es) recommendation —
+//! the smallest posit format whose regime span covers the observed scale
+//! range while keeping the fraction bits the site's measured accuracy
+//! actually uses. This is the direct feeder artifact for the ROADMAP
+//! mixed-precision autotuner.
+
+use std::cell::Cell;
+use std::sync::Mutex;
+
+use super::errstats::ErrStats;
+use crate::pdpu::{PackedLane, PdpuConfig};
+use crate::posit::Posit;
+
+/// Number of scale-histogram buckets per plane.
+pub const SCALE_BUCKETS: usize = 64;
+/// Scale value mapped to bucket 0; anything below clamps into it.
+pub const SCALE_BUCKET_LO: i32 = -128;
+/// Width of each histogram bucket in binary orders of magnitude.
+pub const SCALE_BUCKET_WIDTH: i32 = 4;
+
+fn bucket(scale: i32) -> usize {
+    ((scale - SCALE_BUCKET_LO) / SCALE_BUCKET_WIDTH).clamp(0, SCALE_BUCKETS as i32 - 1) as usize
+}
+
+/// Kernel family a launch belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SiteKind {
+    /// Serving inference layers (`TrainGraph::infer`).
+    Infer,
+    /// Training forward-pass layers.
+    TrainFwd,
+    /// Training backward-pass layers (dW / dA kernels).
+    TrainBwd,
+    /// SGD weight/bias updates (quire-FMA path, no engine launch).
+    SgdUpdate,
+    /// Raw served GEMM requests (fused or unfused).
+    Gemm,
+    /// Work with no guard installed (direct engine calls, tests).
+    Unattributed,
+}
+
+impl SiteKind {
+    /// Stable lowercase label used in wire responses and metric labels.
+    pub fn label(self) -> &'static str {
+        match self {
+            SiteKind::Infer => "infer",
+            SiteKind::TrainFwd => "train_fwd",
+            SiteKind::TrainBwd => "train_bwd",
+            SiteKind::SgdUpdate => "sgd_update",
+            SiteKind::Gemm => "gemm",
+            SiteKind::Unattributed => "unattributed",
+        }
+    }
+}
+
+/// An op site: kernel kind plus model layer index (`-1` when the kernel
+/// is not layer-scoped, e.g. a raw served GEMM).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Site {
+    pub kind: SiteKind,
+    pub layer: i32,
+}
+
+impl Site {
+    /// The site work lands on when no guard is installed.
+    pub const UNATTRIBUTED: Site = Site { kind: SiteKind::Unattributed, layer: -1 };
+
+    pub fn new(kind: SiteKind, layer: i32) -> Site {
+        Site { kind, layer }
+    }
+
+    /// Non-layer-scoped site for raw served GEMMs.
+    pub fn gemm() -> Site {
+        Site::new(SiteKind::Gemm, -1)
+    }
+
+    /// Human/wire label: `infer:L0` when layer-scoped, else the bare kind.
+    pub fn label(&self) -> String {
+        if self.layer < 0 {
+            self.kind.label().to_string()
+        } else {
+            format!("{}:L{}", self.kind.label(), self.layer)
+        }
+    }
+}
+
+thread_local! {
+    static CURRENT: Cell<Site> = Cell::new(Site::UNATTRIBUTED);
+}
+
+/// Site currently installed on this thread.
+pub fn current_site() -> Site {
+    CURRENT.with(Cell::get)
+}
+
+/// RAII guard installing a site on the current thread; restores the
+/// previous site on drop so guards nest (e.g. a served GEMM entering the
+/// fusion planner keeps its `gemm` attribution).
+///
+/// Engine launches record on the *caller's* thread (after worker join),
+/// so a guard held across a `BatchEngine` call attributes correctly even
+/// when the GEMM itself fans out to worker threads.
+#[must_use = "the site is only installed while the guard is alive"]
+pub struct SiteGuard {
+    prev: Site,
+}
+
+impl SiteGuard {
+    pub fn enter(site: Site) -> SiteGuard {
+        let prev = CURRENT.with(|c| c.replace(site));
+        SiteGuard { prev }
+    }
+}
+
+impl Drop for SiteGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        CURRENT.with(move |c| c.set(prev));
+    }
+}
+
+/// Everything the observatory knows about one site × config pair.
+#[derive(Clone, Debug)]
+pub struct SiteStats {
+    /// Engine launches attributed here.
+    pub launches: u64,
+    /// Posit outputs produced by those launches.
+    pub outputs: u64,
+    /// Outputs clamped to ±maxpos (regime exhausted upward).
+    pub sat_maxpos: u64,
+    /// Nonzero results clamped to ±minpos (regime exhausted downward).
+    pub sat_minpos: u64,
+    /// NaR outputs.
+    pub nar: u64,
+    /// Inexact quire-FMA weight updates (SGD path).
+    pub quire_roundings: u64,
+    /// Gradients that quantized to ±maxpos before the update.
+    pub grad_sat: u64,
+    /// Nonzero gradients that quantized to ±minpos.
+    pub grad_underflow: u64,
+    /// Histogram of decoded operand scales (both GEMM planes).
+    pub operand_scale_hist: [u64; SCALE_BUCKETS],
+    /// Histogram of output scales.
+    pub output_scale_hist: [u64; SCALE_BUCKETS],
+    /// Smallest decoded scale seen (operands or outputs).
+    pub min_scale: Option<i32>,
+    /// Largest decoded scale seen (operands or outputs).
+    pub max_scale: Option<i32>,
+    /// Largest ⌊log₂|quire|⌋ observed across SGD updates.
+    pub quire_watermark_log2: Option<i32>,
+    /// FP64 shadow-execution error statistics.
+    pub shadow: ErrStats,
+}
+
+impl SiteStats {
+    fn new() -> SiteStats {
+        SiteStats {
+            launches: 0,
+            outputs: 0,
+            sat_maxpos: 0,
+            sat_minpos: 0,
+            nar: 0,
+            quire_roundings: 0,
+            grad_sat: 0,
+            grad_underflow: 0,
+            operand_scale_hist: [0; SCALE_BUCKETS],
+            output_scale_hist: [0; SCALE_BUCKETS],
+            min_scale: None,
+            max_scale: None,
+            quire_watermark_log2: None,
+            shadow: ErrStats::default(),
+        }
+    }
+
+    fn widen_scale_range(&mut self, lo: i32, hi: i32) {
+        self.min_scale = Some(self.min_scale.map_or(lo, |m| m.min(lo)));
+        self.max_scale = Some(self.max_scale.map_or(hi, |m| m.max(hi)));
+    }
+}
+
+/// One registry row in a [`snapshot`].
+#[derive(Clone, Debug)]
+pub struct SiteEntry {
+    pub site: Site,
+    pub cfg: PdpuConfig,
+    pub stats: SiteStats,
+}
+
+// Distinct (site, config) pairs are few (layers × kernel kinds), so a
+// linear-scan Vec under one mutex beats a map and keeps snapshots ordered
+// by first appearance.
+static REGISTRY: Mutex<Vec<SiteEntry>> = Mutex::new(Vec::new());
+
+fn with_entry<F: FnOnce(&mut SiteStats)>(site: Site, cfg: PdpuConfig, f: F) {
+    let mut reg = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(entry) = reg.iter_mut().find(|e| e.site == site && e.cfg == cfg) {
+        f(&mut entry.stats);
+        return;
+    }
+    let mut stats = SiteStats::new();
+    f(&mut stats);
+    reg.push(SiteEntry { site, cfg, stats });
+}
+
+/// Record one engine launch at the current thread's site: classify the
+/// posit outputs (same classification as `obs::record_outputs`), tick the
+/// process-global tallies, and fold operand/output scale statistics into
+/// the site entry. Called from the single sanctioned boundary in
+/// `BatchEngine::gemm_posit`.
+pub fn record_launch(cfg: &PdpuConfig, w: &[PackedLane], x: &[PackedLane], outs: &[Posit]) {
+    let (mut maxpos, mut minpos, mut nar) = (0u64, 0u64, 0u64);
+    let mut out_hist = [0u64; SCALE_BUCKETS];
+    let (mut lo, mut hi) = (i32::MAX, i32::MIN);
+    for &p in outs {
+        if p.is_nar() {
+            nar += 1;
+            continue;
+        }
+        if p.is_zero() {
+            continue;
+        }
+        let fmt = p.format();
+        let bits = p.bits();
+        let sign_bit = 1u32 << (fmt.n() - 1);
+        let abs = if bits & sign_bit != 0 { bits.wrapping_neg() & fmt.mask() } else { bits };
+        if abs == fmt.maxpos_bits() {
+            maxpos += 1;
+        } else if abs == fmt.minpos_bits() {
+            minpos += 1;
+        }
+        let sc = PackedLane::from_posit(p).scale();
+        lo = lo.min(sc);
+        hi = hi.max(sc);
+        out_hist[bucket(sc)] += 1;
+    }
+    super::add_output_tallies(maxpos, minpos, nar);
+
+    let mut op_hist = [0u64; SCALE_BUCKETS];
+    for lane in w.iter().chain(x) {
+        if !lane.is_live() {
+            continue;
+        }
+        let sc = lane.scale();
+        lo = lo.min(sc);
+        hi = hi.max(sc);
+        op_hist[bucket(sc)] += 1;
+    }
+
+    with_entry(current_site(), *cfg, |s| {
+        s.launches += 1;
+        s.outputs += outs.len() as u64;
+        s.sat_maxpos += maxpos;
+        s.sat_minpos += minpos;
+        s.nar += nar;
+        for (slot, v) in s.operand_scale_hist.iter_mut().zip(op_hist) {
+            *slot += v;
+        }
+        for (slot, v) in s.output_scale_hist.iter_mut().zip(out_hist) {
+            *slot += v;
+        }
+        if lo <= hi {
+            s.widen_scale_range(lo, hi);
+        }
+    });
+}
+
+/// Record one SGD update-slice pass at the current thread's site. Keeps
+/// the process-global quire-rounding counter ticking (via
+/// `obs::add_quire_roundings`) in addition to the site attribution.
+pub fn record_update(
+    cfg: &PdpuConfig,
+    roundings: u64,
+    grad_sat: u64,
+    grad_underflow: u64,
+    watermark: Option<i32>,
+) {
+    super::add_quire_roundings(roundings);
+    with_entry(current_site(), *cfg, |s| {
+        s.quire_roundings += roundings;
+        s.grad_sat += grad_sat;
+        s.grad_underflow += grad_underflow;
+        if let Some(w) = watermark {
+            s.quire_watermark_log2 = Some(s.quire_watermark_log2.map_or(w, |m| m.max(w)));
+        }
+    });
+}
+
+/// Merge one launch's FP64 shadow-execution error statistics into the
+/// current thread's site entry (called by `obs::shadow`).
+pub fn merge_shadow(cfg: &PdpuConfig, stats: ErrStats) {
+    with_entry(current_site(), *cfg, |s| s.shadow.merge(&stats));
+}
+
+/// Clone of the registry, ordered by first appearance.
+pub fn snapshot() -> Vec<SiteEntry> {
+    REGISTRY.lock().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+/// Comma-free config label for Prometheus label values (the exposition
+/// parser splits label pairs on commas, so `PdpuConfig::label`'s
+/// `P(13/16,2)` form cannot be used there).
+pub fn cfg_metric_label(cfg: &PdpuConfig) -> String {
+    format!(
+        "P{}-{}es{}_N{}_Wm{}",
+        cfg.in_fmt.n(),
+        cfg.out_fmt.n(),
+        cfg.in_fmt.es(),
+        cfg.n,
+        cfg.wm
+    )
+}
+
+/// A per-site format recommendation from the precision advisor.
+#[derive(Clone, Debug)]
+pub struct Advice {
+    pub site: Site,
+    pub cfg: PdpuConfig,
+    /// Recommended posit width.
+    pub rec_n: u32,
+    /// Recommended exponent-field width.
+    pub rec_es: u32,
+    /// Binary orders of magnitude the format's regime must span.
+    pub required_scale: i32,
+    /// Decimal digits the site demonstrably carries (shadow-measured when
+    /// available, else the current format's nominal precision).
+    pub target_decimal_digits: f64,
+}
+
+/// Precision-advisor report: for every site with observed dynamic-range
+/// evidence, the smallest (n, es) whose max regime scale `(n−2)·2^es`
+/// covers the site's scale span while retaining enough fraction bits
+/// (`n−3−es`) for its measured decimal accuracy. This is the per-layer
+/// format table Deep Positron-style deployments start from.
+pub fn advise() -> Vec<Advice> {
+    snapshot().iter().filter_map(advise_one).collect()
+}
+
+fn advise_one(e: &SiteEntry) -> Option<Advice> {
+    let s = &e.stats;
+    let mut required: Option<i32> = None;
+    let mut widen = |v: i32| {
+        let v = v.abs();
+        required = Some(required.map_or(v, |r| r.max(v)));
+    };
+    if let Some(v) = s.min_scale {
+        widen(v);
+    }
+    if let Some(v) = s.max_scale {
+        widen(v);
+    }
+    if let Some(v) = s.quire_watermark_log2 {
+        widen(v);
+    }
+    let required = required?; // no range evidence → no recommendation
+
+    let nominal_frac = e.cfg.in_fmt.max_frac_bits() as i32;
+    let digits = if s.shadow.samples() > 0 {
+        s.shadow.mean_decimal_accuracy().max(0.0)
+    } else {
+        nominal_frac as f64 * std::f64::consts::LOG10_2
+    };
+    // Bits needed for the measured digits, never exceeding what the
+    // current format could have delivered (the shadow measures *achieved*
+    // accuracy, so it cannot justify more bits than the format carries).
+    let frac_needed = ((digits * std::f64::consts::LOG2_10).ceil() as i32).clamp(0, nominal_frac);
+
+    for n in 3..=32i32 {
+        for es in 0..=3i32 {
+            let span = (n - 2) << es;
+            let frac = n - 3 - es;
+            if span >= required && frac >= frac_needed {
+                return Some(Advice {
+                    site: e.site,
+                    cfg: e.cfg,
+                    rec_n: n as u32,
+                    rec_es: es as u32,
+                    required_scale: required,
+                    target_decimal_digits: digits,
+                });
+            }
+        }
+    }
+    // Pathological range (beyond P32/es3): keep the current input format.
+    Some(Advice {
+        site: e.site,
+        cfg: e.cfg,
+        rec_n: e.cfg.in_fmt.n(),
+        rec_es: e.cfg.in_fmt.es(),
+        required_scale: required,
+        target_decimal_digits: digits,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_cfg() -> PdpuConfig {
+        PdpuConfig::paper_default()
+    }
+
+    fn stats_for(site: Site, cfg: &PdpuConfig) -> Option<SiteStats> {
+        snapshot().into_iter().find(|e| e.site == site && &e.cfg == cfg).map(|e| e.stats)
+    }
+
+    #[test]
+    fn site_guard_nests_and_restores() {
+        assert_eq!(current_site(), Site::UNATTRIBUTED);
+        {
+            let _a = SiteGuard::enter(Site::new(SiteKind::Infer, 0));
+            assert_eq!(current_site(), Site::new(SiteKind::Infer, 0));
+            {
+                let _b = SiteGuard::enter(Site::gemm());
+                assert_eq!(current_site(), Site::gemm());
+            }
+            assert_eq!(current_site(), Site::new(SiteKind::Infer, 0));
+        }
+        assert_eq!(current_site(), Site::UNATTRIBUTED);
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(Site::new(SiteKind::Infer, 2).label(), "infer:L2");
+        assert_eq!(Site::gemm().label(), "gemm");
+        assert_eq!(Site::UNATTRIBUTED.label(), "unattributed");
+        // metric label must stay comma- and space-free for the prom parser
+        let l = cfg_metric_label(&test_cfg());
+        assert!(!l.contains(',') && !l.contains(' ') && !l.contains('"'), "{l}");
+    }
+
+    #[test]
+    fn record_launch_attributes_to_the_installed_site() {
+        let cfg = test_cfg();
+        let site = Site::new(SiteKind::TrainFwd, 77); // unique to this test
+        let fmt = cfg.in_fmt;
+        let w: Vec<PackedLane> =
+            [1.0, -2.0, 0.0].iter().map(|&v| PackedLane::from_posit(Posit::from_f64(v, fmt))).collect();
+        let x: Vec<PackedLane> =
+            [0.5, 4.0].iter().map(|&v| PackedLane::from_posit(Posit::from_f64(v, fmt))).collect();
+        let outs = vec![
+            Posit::from_f64(1.5, cfg.out_fmt),
+            Posit::from_f64(0.0, cfg.out_fmt),
+            Posit::from_f64(f64::NAN, cfg.out_fmt), // NaR
+        ];
+        let _g = SiteGuard::enter(site);
+        record_launch(&cfg, &w, &x, &outs);
+        let s = stats_for(site, &cfg).expect("entry created");
+        assert_eq!(s.launches, 1);
+        assert_eq!(s.outputs, 3);
+        assert_eq!(s.nar, 1);
+        // 4 live operand lanes (the 0.0 packs dead) + 1 finite nonzero output
+        assert_eq!(s.operand_scale_hist.iter().sum::<u64>(), 4);
+        assert_eq!(s.output_scale_hist.iter().sum::<u64>(), 1);
+        // scales span [-1, 2]: 4.0 → 2, 0.5 → -1
+        assert_eq!(s.min_scale, Some(-1));
+        assert_eq!(s.max_scale, Some(2));
+    }
+
+    #[test]
+    fn record_update_tracks_watermark_and_grad_tallies() {
+        let cfg = test_cfg();
+        let site = Site::new(SiteKind::SgdUpdate, 88); // unique to this test
+        {
+            let _g = SiteGuard::enter(site);
+            record_update(&cfg, 3, 1, 2, Some(9));
+            record_update(&cfg, 1, 0, 0, Some(4)); // lower watermark must not regress
+        }
+        let s = stats_for(site, &cfg).expect("entry created");
+        assert_eq!(s.quire_roundings, 4);
+        assert_eq!(s.grad_sat, 1);
+        assert_eq!(s.grad_underflow, 2);
+        assert_eq!(s.quire_watermark_log2, Some(9));
+    }
+
+    #[test]
+    fn advisor_covers_range_and_caps_at_current_precision() {
+        let cfg = test_cfg();
+        let site = Site::new(SiteKind::Gemm, 99); // unique to this test
+        {
+            let _g = SiteGuard::enter(site);
+            record_update(&cfg, 0, 0, 0, Some(20));
+        }
+        let advice = advise();
+        let a = advice.iter().find(|a| a.site == site).expect("advised");
+        assert_eq!(a.required_scale, 20);
+        let span = (a.rec_n as i32 - 2) << a.rec_es;
+        assert!(span >= 20, "span {span} < required 20");
+        assert!((3..=32).contains(&a.rec_n), "n {}", a.rec_n);
+        assert!(a.rec_es <= 3, "es {}", a.rec_es);
+        // never recommends more fraction bits than the current format has
+        let frac = a.rec_n as i32 - 3 - a.rec_es as i32;
+        assert!(frac <= cfg.in_fmt.max_frac_bits() as i32 + 1);
+    }
+
+    #[test]
+    fn scale_buckets_clamp_at_the_edges() {
+        assert_eq!(bucket(SCALE_BUCKET_LO), 0);
+        assert_eq!(bucket(SCALE_BUCKET_LO - 1000), 0);
+        assert_eq!(bucket(-SCALE_BUCKET_LO - 1), SCALE_BUCKETS - 1);
+        assert_eq!(bucket(1000), SCALE_BUCKETS - 1);
+        assert_eq!(bucket(0), SCALE_BUCKETS / 2);
+    }
+}

@@ -69,7 +69,108 @@ pub fn render(s: &MetricsSnapshot) -> String {
     counter(&mut out, "pdpu_posit_sat_maxpos_total", "Posit outputs saturated to +/-maxpos.", s.numerics.sat_maxpos);
     counter(&mut out, "pdpu_posit_sat_minpos_total", "Posit outputs clamped at +/-minpos.", s.numerics.sat_minpos);
     counter(&mut out, "pdpu_posit_nar_total", "NaR posit outputs observed.", s.numerics.nar);
+
+    render_sites(&mut out, &crate::obs::numerics::snapshot());
     out
+}
+
+/// Per-site numerics families: one sample per registry entry, labeled
+/// `{site="infer:L0",cfg="P13-16es2_N4_Wm14"}` (the cfg label is the
+/// comma-free [`crate::obs::numerics::cfg_metric_label`] form — this
+/// parser splits label pairs on commas). Scale-range gauges and shadow
+/// accuracy are emitted only for entries that have data, so absent
+/// watermarks never render as fake zeros.
+fn render_sites(out: &mut String, sites: &[crate::obs::numerics::SiteEntry]) {
+    if sites.is_empty() {
+        return;
+    }
+    type Pick = fn(&crate::obs::numerics::SiteStats) -> u64;
+    let families: [(&str, &str, Pick); 8] = [
+        ("pdpu_site_launches_total", "Engine launches attributed to the site.", |s| s.launches),
+        ("pdpu_site_outputs_total", "Posit outputs produced at the site.", |s| s.outputs),
+        ("pdpu_site_sat_maxpos_total", "Site outputs saturated to +/-maxpos.", |s| s.sat_maxpos),
+        ("pdpu_site_sat_minpos_total", "Site outputs clamped at +/-minpos.", |s| s.sat_minpos),
+        ("pdpu_site_nar_total", "NaR outputs at the site.", |s| s.nar),
+        (
+            "pdpu_site_quire_roundings_total",
+            "Inexact quire-FMA updates attributed to the site.",
+            |s| s.quire_roundings,
+        ),
+        ("pdpu_site_grad_sat_total", "Gradients quantized to +/-maxpos at the site.", |s| s.grad_sat),
+        (
+            "pdpu_site_grad_underflow_total",
+            "Nonzero gradients clamped to +/-minpos at the site.",
+            |s| s.grad_underflow,
+        ),
+    ];
+    for (name, help, pick) in families {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} counter");
+        for e in sites {
+            let _ = writeln!(
+                out,
+                "{name}{{site=\"{}\",cfg=\"{}\"}} {}",
+                e.site.label(),
+                crate::obs::numerics::cfg_metric_label(&e.cfg),
+                pick(&e.stats)
+            );
+        }
+    }
+    type PickOpt = fn(&crate::obs::numerics::SiteStats) -> Option<i32>;
+    let gauges: [(&str, &str, PickOpt); 3] = [
+        ("pdpu_site_scale_min", "Smallest decoded scale observed at the site.", |s| s.min_scale),
+        ("pdpu_site_scale_max", "Largest decoded scale observed at the site.", |s| s.max_scale),
+        (
+            "pdpu_site_quire_watermark_log2",
+            "Largest quire magnitude (log2) observed at the site.",
+            |s| s.quire_watermark_log2,
+        ),
+    ];
+    for (name, help, pick) in gauges {
+        if !sites.iter().any(|e| pick(&e.stats).is_some()) {
+            continue;
+        }
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        for e in sites {
+            if let Some(v) = pick(&e.stats) {
+                let _ = writeln!(
+                    out,
+                    "{name}{{site=\"{}\",cfg=\"{}\"}} {v}",
+                    e.site.label(),
+                    crate::obs::numerics::cfg_metric_label(&e.cfg),
+                );
+            }
+        }
+    }
+    let shadowed: Vec<_> = sites.iter().filter(|e| e.stats.shadow.samples() > 0).collect();
+    if shadowed.is_empty() {
+        return;
+    }
+    let name = "pdpu_site_shadow_samples_total";
+    let _ = writeln!(out, "# HELP {name} FP64 shadow-executed outputs compared at the site.");
+    let _ = writeln!(out, "# TYPE {name} counter");
+    for e in &shadowed {
+        let _ = writeln!(
+            out,
+            "{name}{{site=\"{}\",cfg=\"{}\"}} {}",
+            e.site.label(),
+            crate::obs::numerics::cfg_metric_label(&e.cfg),
+            e.stats.shadow.samples()
+        );
+    }
+    let name = "pdpu_site_shadow_decimal_accuracy";
+    let _ = writeln!(out, "# HELP {name} Mean decimal accuracy of posit outputs vs the FP64 shadow.");
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    for e in &shadowed {
+        let _ = writeln!(
+            out,
+            "{name}{{site=\"{}\",cfg=\"{}\"}} {}",
+            e.site.label(),
+            crate::obs::numerics::cfg_metric_label(&e.cfg),
+            e.stats.shadow.mean_decimal_accuracy()
+        );
+    }
 }
 
 /// One parsed sample line: `name{labels} value`.
@@ -163,6 +264,32 @@ mod tests {
             })
             .expect("+Inf bucket present");
         assert_eq!(inf_inf.value, 1.0);
+    }
+
+    #[test]
+    fn site_families_round_trip_with_parseable_labels() {
+        use crate::obs::numerics::{record_update, Site, SiteGuard, SiteKind};
+        let cfg = crate::pdpu::PdpuConfig::paper_default();
+        {
+            let _g = SiteGuard::enter(Site::new(SiteKind::SgdUpdate, 55)); // unique to this test
+            record_update(&cfg, 2, 0, 0, Some(7));
+        }
+        let text = render(&Metrics::default().snapshot());
+        let samples = parse_exposition(&text).expect("site families parse");
+        let s = samples
+            .iter()
+            .find(|s| {
+                s.name == "pdpu_site_quire_roundings_total" && s.label("site") == Some("sgd_update:L55")
+            })
+            .expect("site sample present");
+        assert!(s.value >= 2.0);
+        // the cfg label survives the comma-splitting parser intact
+        assert_eq!(s.label("cfg"), Some("P13-16es2_N4_Wm14"));
+        let wm = samples
+            .iter()
+            .find(|s| s.name == "pdpu_site_quire_watermark_log2" && s.label("site") == Some("sgd_update:L55"))
+            .expect("watermark gauge present");
+        assert_eq!(wm.value, 7.0);
     }
 
     #[test]

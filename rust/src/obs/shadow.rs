@@ -1,0 +1,155 @@
+//! Sampled FP64 shadow execution.
+//!
+//! A 1-in-N probe (same shape as the `obs::stages` kernel probe) diverts
+//! nothing: when it fires, the launch's already-decoded [`PreparedOperands`]
+//! planes are *re-run* in double precision on the caller's thread and the
+//! FP64 result is compared against the posit outputs the engine already
+//! produced. The primary path is read-only here by construction — shadow
+//! sampling ON vs OFF is bit-identical on every output (property-tested in
+//! `rust/tests/shadow_identity.rs`).
+//!
+//! Per-launch error statistics ([`ErrStats`]: relative error, decimal
+//! accuracy) are merged into the site registry in `obs::numerics`, giving
+//! each layer a measured "digits actually delivered" figure the precision
+//! advisor converts into an (n, es) recommendation.
+//!
+//! Sampling is off (0) by default; arm it with `pdpu serve --shadow N` or
+//! the `{"op":"numerics","shadow":N}` wire op.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use super::errstats::ErrStats;
+use crate::engine::PreparedOperands;
+use crate::pdpu::{PackedLane, PdpuConfig};
+use crate::posit::Posit;
+
+static SAMPLING: AtomicU32 = AtomicU32::new(0);
+
+/// Set the shadow sampling rate: 0 disables, N shadows one launch in N
+/// per engine thread.
+pub fn set_sampling(every: u32) {
+    SAMPLING.store(every, Ordering::Relaxed);
+}
+
+/// Current sampling rate (0 = disabled).
+pub fn sampling() -> u32 {
+    SAMPLING.load(Ordering::Relaxed)
+}
+
+thread_local! {
+    static TICK: Cell<u32> = Cell::new(0);
+}
+
+/// Cheap per-launch probe: one relaxed load when disabled, a thread-local
+/// counter tick when armed. Returns true for one launch in N.
+pub fn probe() -> bool {
+    let every = SAMPLING.load(Ordering::Relaxed);
+    if every == 0 {
+        return false;
+    }
+    TICK.with(|t| {
+        let v = t.get().wrapping_add(1);
+        t.set(v);
+        v % every == 0
+    })
+}
+
+/// Exact FP64 value of one packed lane: dead lanes are 0, NaR is NaN,
+/// live lanes reconstruct `±frac · 2^(scale − frac_bits)` — exact because
+/// a posit fraction (≤ 31 bits) fits the FP64 mantissa.
+fn lane_f64(lane: PackedLane, frac_bits: u32) -> f64 {
+    if lane.is_nar() {
+        return f64::NAN;
+    }
+    if !lane.is_live() {
+        return 0.0;
+    }
+    let mag = lane.frac() as f64 * 2f64.powi(lane.scale() - frac_bits as i32);
+    if lane.sign() {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Re-run one engine launch in FP64 and record error statistics against
+/// the posit outputs. Reads everything, mutates nothing but the site
+/// registry. NaR outputs and FP64 overflows are skipped: there is no
+/// meaningful scalar error to attribute to them (they are counted by the
+/// saturation/NaR tallies instead).
+pub fn shadow_gemm(
+    cfg: &PdpuConfig,
+    acc: &[Posit],
+    w: &PreparedOperands,
+    x: &PreparedOperands,
+    outs: &[Posit],
+) {
+    let (rows, cols) = (w.rows(), x.rows());
+    if rows == 0 || cols == 0 || outs.len() != rows * cols || acc.len() != rows {
+        return;
+    }
+    let frac_bits = w.format().max_frac_bits();
+    let mut stats = ErrStats::default();
+    for r in 0..rows {
+        let seed = acc[r].to_f64();
+        let wrow = w.row(r);
+        for c in 0..cols {
+            let got = outs[r * cols + c];
+            if got.is_nar() {
+                continue;
+            }
+            let mut s = seed;
+            for (&a, &b) in wrow.iter().zip(x.row(c)) {
+                s += lane_f64(a, frac_bits) * lane_f64(b, frac_bits);
+            }
+            if !s.is_finite() {
+                continue;
+            }
+            stats.observe(s, got.to_f64());
+        }
+    }
+    if stats.samples() > 0 {
+        super::numerics::merge_shadow(cfg, stats);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::diff::{adversarial_vector, random_config};
+    use crate::testing::Rng;
+
+    #[test]
+    fn probe_never_fires_when_disabled() {
+        set_sampling(0);
+        for _ in 0..1000 {
+            assert!(!probe());
+        }
+    }
+
+    #[test]
+    fn lane_f64_reconstructs_the_decoded_posit_exactly() {
+        let mut rng = Rng::seeded(0x5AD0_0001);
+        for _ in 0..50 {
+            let cfg = random_config(&mut rng);
+            let frac_bits = cfg.in_fmt.max_frac_bits();
+            for p in adversarial_vector(&mut rng, cfg.in_fmt, 64) {
+                let lane = PackedLane::from_posit(p);
+                let via_lane = lane_f64(lane, frac_bits);
+                let direct = p.to_f64();
+                if p.is_nar() {
+                    assert!(via_lane.is_nan(), "NaR must shadow as NaN");
+                } else {
+                    assert_eq!(
+                        via_lane.to_bits(),
+                        direct.to_bits(),
+                        "cfg {} posit bits {:#x}",
+                        cfg.label(),
+                        p.bits()
+                    );
+                }
+            }
+        }
+    }
+}

@@ -244,6 +244,17 @@ impl<const L: usize> Quire<L> {
         let u = Unpacked { sign: neg, scale, sig, sig_frac_bits: take, sticky };
         Posit::from_bits(encode(u, out_fmt), out_fmt)
     }
+
+    /// Dynamic-range watermark: ⌊log₂|acc|⌋ of the accumulated magnitude,
+    /// the quantity the numerics observatory tracks per site to size the
+    /// regime span a format must cover. `None` when the accumulator is
+    /// zero or NaR-poisoned.
+    pub fn watermark_log2(&self) -> Option<i32> {
+        if self.nar {
+            return None;
+        }
+        self.acc.abs().msb().map(|m| m as i32 - self.origin as i32)
+    }
 }
 
 /// Exact dot product `acc + Σ aᵢ·bᵢ` with one final rounding to `out_fmt` —

@@ -28,6 +28,7 @@ use super::sgd::quire_sum;
 use crate::baselines::{DotArch, PdpuArch};
 use crate::dnn::layers::{linear_batch, relu, with_zero_seeds};
 use crate::dnn::Tensor;
+use crate::obs::numerics::{Site, SiteGuard, SiteKind};
 use crate::pdpu::PdpuConfig;
 use crate::posit::PositFormat;
 use crate::testing::Rng;
@@ -179,6 +180,7 @@ impl TrainGraph {
         let last = self.weights.len() - 1;
         let mut acts = xs.clone();
         for (l, (w, b)) in self.weights.iter().zip(&self.biases).enumerate() {
+            let _site = SiteGuard::enter(Site::new(SiteKind::Infer, l as i32));
             acts = linear_batch(self.arch.as_ref(), &acts, w, b);
             if l != last {
                 relu(acts.data_mut());
@@ -196,6 +198,7 @@ impl TrainGraph {
         let mut acts = vec![xs.clone()];
         let mut zs = Vec::with_capacity(self.weights.len());
         for (l, (w, b)) in self.weights.iter().zip(&self.biases).enumerate() {
+            let _site = SiteGuard::enter(Site::new(SiteKind::TrainFwd, l as i32));
             let z = linear_batch(self.arch.as_ref(), acts.last().unwrap(), w, b);
             zs.push(z.clone());
             if l != last {
@@ -220,6 +223,7 @@ impl TrainGraph {
         let mut dz = dlogits.clone();
         let mut col = vec![0.0; b];
         for l in (0..layers).rev() {
+            let _site = SiteGuard::enter(Site::new(SiteKind::TrainBwd, l as i32));
             let w = &self.weights[l];
             let (out_dim, in_dim) = (w.shape()[0], w.shape()[1]);
             let a_prev = &trace.acts[l]; // [B, in]

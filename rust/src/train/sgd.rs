@@ -17,6 +17,7 @@
 //! for cross-microbatch gradient accumulation.
 
 use super::graph::{Grads, TrainGraph};
+use crate::obs::numerics::{Site, SiteGuard, SiteKind};
 use crate::pdpu::PdpuConfig;
 use crate::posit::quire::CACHE_LINE_LIMBS;
 use crate::posit::{Posit, PositFormat, Quire, QuireSpec};
@@ -56,6 +57,9 @@ pub struct Sgd {
     /// Quire recipe for `grad_fmt` products, validated once at
     /// construction so per-parameter quire setup is branch-free.
     spec: QuireSpec,
+    /// The PDPU configuration this optimizer was built for, kept so
+    /// update-path numerics attribute to the right registry entry.
+    cfg: PdpuConfig,
 }
 
 impl Sgd {
@@ -71,7 +75,7 @@ impl Sgd {
         assert!(lr > 0.0 && lr.is_finite(), "learning rate must be positive");
         let grad_fmt = cfg.out_fmt;
         let spec = QuireSpec::new(grad_fmt, grad_fmt).expect("format within quire capacity");
-        Self { lr, weight_fmt: cfg.out_fmt, grad_fmt, spec }
+        Self { lr, weight_fmt: cfg.out_fmt, grad_fmt, spec, cfg: *cfg }
     }
 
     /// The configured learning rate.
@@ -89,10 +93,12 @@ impl Sgd {
     pub fn step(&self, graph: &mut TrainGraph, grads: &Grads) {
         assert_eq!(grads.dw.len(), graph.weights().len(), "one weight gradient per layer");
         assert_eq!(grads.db.len(), graph.biases().len(), "one bias gradient per layer");
-        for (w, gw) in graph.weights_mut().iter_mut().zip(&grads.dw) {
+        for (l, (w, gw)) in graph.weights_mut().iter_mut().zip(&grads.dw).enumerate() {
+            let _site = SiteGuard::enter(Site::new(SiteKind::SgdUpdate, l as i32));
             self.update_slice(w.data_mut(), gw.data());
         }
-        for (b, gb) in graph.biases_mut().iter_mut().zip(&grads.db) {
+        for (l, (b, gb)) in graph.biases_mut().iter_mut().zip(&grads.db).enumerate() {
+            let _site = SiteGuard::enter(Site::new(SiteKind::SgdUpdate, l as i32));
             self.update_slice(b, gb);
         }
     }
@@ -119,20 +125,39 @@ impl Sgd {
         assert_eq!(w.len(), g.len(), "parameter/gradient shape mismatch");
         let neg_lr = Posit::from_f64(-self.lr, self.grad_fmt);
         let mut roundings = 0u64;
+        let (mut grad_sat, mut grad_underflow) = (0u64, 0u64);
+        let mut watermark: Option<i32> = None;
+        let sign_bit = 1u32 << (self.grad_fmt.n() - 1);
         let mut q = Quire::<L>::from_spec(self.spec);
         for (wi, &gi) in w.iter_mut().zip(g) {
             let wq = Posit::from_f64(*wi, self.weight_fmt);
             let gq = Posit::from_f64(gi, self.grad_fmt);
+            // gradient regime exhaustion: quantized to ±maxpos (saturated)
+            // or clamped to ±minpos (about to vanish) — the per-layer
+            // signals Lu et al. key gradient-format choices on
+            if !gq.is_nar() && !gq.is_zero() {
+                let bits = gq.bits();
+                let abs =
+                    if bits & sign_bit != 0 { bits.wrapping_neg() & self.grad_fmt.mask() } else { bits };
+                if abs == self.grad_fmt.maxpos_bits() {
+                    grad_sat += 1;
+                } else if abs == self.grad_fmt.minpos_bits() {
+                    grad_underflow += 1;
+                }
+            }
             q.reset();
             q.add_posit(wq);
             q.add_product(neg_lr, gq);
+            if let Some(m) = q.watermark_log2() {
+                watermark = Some(watermark.map_or(m, |cur| cur.max(m)));
+            }
             let updated = q.to_posit(self.weight_fmt);
             if updated.to_f64() != wq.to_f64() + neg_lr.to_f64() * gq.to_f64() {
                 roundings += 1;
             }
             *wi = updated.to_f64();
         }
-        crate::obs::add_quire_roundings(roundings);
+        crate::obs::numerics::record_update(&self.cfg, roundings, grad_sat, grad_underflow, watermark);
     }
 }
 

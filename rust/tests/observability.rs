@@ -1,10 +1,11 @@
 //! Live-TCP tests for the observability plane: the `stats`, `metrics`,
-//! and `trace` wire ops against a real `Server` + software engine, with
-//! concurrent clients, a Prometheus exposition round trip through the
-//! in-repo parser, and a full request-lifecycle reconstruction from the
-//! exported Chrome-tracing events.
+//! `trace`, and `numerics` wire ops against a real `Server` + software
+//! engine, with concurrent clients, a Prometheus exposition round trip
+//! through the in-repo parser, a full request-lifecycle reconstruction
+//! from the exported Chrome-tracing events, and a per-layer numerics
+//! observatory report with live FP64 shadow sampling.
 //!
-//! The span ring, sampling knob, and numerics counters are process-global
+//! The span ring, sampling knobs, and numerics registry are process-global
 //! (`pdpu::obs`), so every test that toggles sampling or asserts on ring
 //! contents serializes on one mutex and restores sampling to 0.
 
@@ -319,6 +320,105 @@ fn trace_op_reconstructs_a_request_lifecycle() {
         .filter(|&e| name(e) == "s1_decode")
         .all(|e| launch_spans.contains(&num(e.get("args").expect("args"), "parent")));
     assert!(stage_parented, "stage spans must hang off an engine launch");
+    drop(server);
+    service.shutdown();
+}
+
+#[test]
+fn numerics_op_reports_per_layer_sites_shadow_accuracy_and_advisor() {
+    let _g = GLOBALS.lock().unwrap_or_else(|e| e.into_inner());
+    obs::trace::set_sampling(0);
+    let (server, _metrics, service) = start_server();
+    let mut c = Client::connect(server.addr);
+
+    // a fractional sampling rate is rejected before touching the knob
+    let bad = c.roundtrip(&Json::obj(vec![
+        ("op", Json::Str("numerics".into())),
+        ("shadow", Json::Num(1.5)),
+    ]));
+    assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+
+    // arm 1-in-1 FP64 shadow execution over the wire, then drive every
+    // kind of traffic through the server
+    let armed = c.ok(&Json::obj(vec![
+        ("op", Json::Str("numerics".into())),
+        ("shadow", Json::Num(1.0)),
+    ]));
+    assert_eq!(num(&armed, "shadow_sampling"), 1.0);
+    for i in 0..8 {
+        c.ok(&infer_req(i));
+    }
+    for i in 0..4 {
+        c.ok(&gemm_req(i));
+    }
+    c.ok(&train_req());
+
+    // read the report and disarm shadowing in the same request
+    let resp = c.ok(&Json::obj(vec![
+        ("op", Json::Str("numerics".into())),
+        ("shadow", Json::Num(0.0)),
+    ]));
+    obs::shadow::set_sampling(0);
+    assert_eq!(num(&resp, "shadow_sampling"), 0.0);
+
+    let sites = resp.get("sites").and_then(Json::as_arr).expect("sites array").to_vec();
+    assert!(!sites.is_empty());
+    let find = |label: &str| {
+        sites
+            .iter()
+            .find(|s| s.get("site").and_then(Json::as_str) == Some(label))
+            .unwrap_or_else(|| panic!("no '{label}' site in the report"))
+    };
+
+    // per-layer attribution: both MLP layers under infer, the raw GEMM
+    // plane, and every stage of the training pipeline get their own rows
+    for label in ["infer:L0", "infer:L1", "gemm", "train_fwd:L0", "train_bwd:L0"] {
+        let s = find(label);
+        assert!(num(s, "launches") >= 1.0, "{label} launches");
+        assert!(num(s, "outputs") >= 1.0, "{label} outputs");
+    }
+    // the optimizer site records update-boundary tallies, not launches
+    let sgd = find("sgd_update:L0");
+    assert!(num(sgd, "quire_roundings") >= 0.0);
+    assert!(num(sgd, "grad_sat") >= 0.0 && num(sgd, "grad_underflow") >= 0.0);
+
+    // dynamic-range histograms: 64 log2 buckets with observed mass on a
+    // live inference layer, plus a coherent observed scale range
+    let l0 = find("infer:L0");
+    for key in ["operand_scale_hist", "output_scale_hist"] {
+        let hist = l0.get(key).and_then(Json::as_f64_vec).unwrap_or_else(|| panic!("{key} array"));
+        assert_eq!(hist.len(), 64, "{key} bucket count");
+        assert!(hist.iter().sum::<f64>() > 0.0, "{key} has no mass");
+    }
+    assert!(num(l0, "min_scale") <= num(l0, "max_scale"));
+
+    // 1-in-1 shadowing left FP64 accuracy samples on the launch sites
+    let shadow_samples: f64 = sites
+        .iter()
+        .filter_map(|s| s.get("shadow"))
+        .map(|sh| num(sh, "samples"))
+        .sum();
+    assert!(shadow_samples > 0.0, "no shadow samples despite 1-in-1 sampling");
+    let l0_shadow = l0.get("shadow").expect("shadow block");
+    assert!(num(l0_shadow, "samples") > 0.0);
+    assert!(num(l0_shadow, "mean_decimal_accuracy") > 0.0, "shadowed infer layer has accuracy");
+
+    // the precision advisor emits a well-formed (n, es) recommendation for
+    // every site with scale evidence
+    let advisor = resp.get("advisor").and_then(Json::as_arr).expect("advisor array").to_vec();
+    assert!(!advisor.is_empty());
+    for a in &advisor {
+        assert!(a.get("site").and_then(Json::as_str).is_some(), "advice site label: {a}");
+        let (n, es) = (num(a, "rec_n"), num(a, "rec_es"));
+        assert!((3.0..=32.0).contains(&n), "rec_n out of range: {a}");
+        assert!((0.0..=3.0).contains(&es), "rec_es out of range: {a}");
+        assert!(num(a, "required_scale") >= 0.0, "{a}");
+        assert!(num(a, "target_decimal_digits").is_finite(), "{a}");
+    }
+    assert!(
+        advisor.iter().any(|a| a.get("site").and_then(Json::as_str) == Some("infer:L0")),
+        "advisor must cover the live inference layer"
+    );
     drop(server);
     service.shutdown();
 }

@@ -1,0 +1,100 @@
+//! Property test for the FP64 shadow executor: sampled shadow execution is
+//! a pure observer. At **any** sampling rate the primary posit outputs of
+//! `BatchEngine::gemm_posit` are bit-identical to a shadow-off run — the
+//! observatory may read `PreparedOperands` planes and the output vector,
+//! never influence them.
+//!
+//! The sampling knob and the site registry are process-global (`pdpu::obs`),
+//! so both tests serialize on one mutex and restore sampling to 0.
+
+use std::sync::Mutex;
+
+use pdpu::engine::{BatchEngine, PreparedOperands};
+use pdpu::obs::numerics::{Site, SiteGuard, SiteKind};
+use pdpu::obs::shadow;
+use pdpu::pdpu::PdpuConfig;
+use pdpu::posit::Posit;
+use pdpu::testing::diff::{adversarial_vector, cancellation_pair, rand_pattern, random_config};
+use pdpu::testing::Rng;
+
+/// Serializes tests that touch the process-global shadow-sampling knob.
+static GLOBALS: Mutex<()> = Mutex::new(());
+
+#[test]
+fn shadow_sampling_never_changes_primary_outputs() {
+    let _g = GLOBALS.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Rng::seeded(0x5AD_0001);
+    for round in 0..150 {
+        let cfg = random_config(&mut rng);
+        let engine = BatchEngine::new(cfg);
+        let (rows, cols) = (1 + rng.below(4) as usize, 1 + rng.below(4) as usize);
+        let k = 1 + rng.below(24) as usize;
+        let (w, x) = if rng.flip() {
+            (
+                adversarial_vector(&mut rng, cfg.in_fmt, rows * k),
+                adversarial_vector(&mut rng, cfg.in_fmt, cols * k),
+            )
+        } else {
+            let (a, b) = cancellation_pair(&mut rng, cfg.in_fmt, rows.max(cols) * k);
+            (a.iter().cycle().take(rows * k).copied().collect(), b.iter().cycle().take(cols * k).copied().collect())
+        };
+        let acc: Vec<Posit> = (0..rows).map(|_| rand_pattern(&mut rng, cfg.out_fmt)).collect();
+        let wp = PreparedOperands::from_posits(cfg.in_fmt, &w, k);
+        let xp = PreparedOperands::from_posits(cfg.in_fmt, &x, k);
+
+        shadow::set_sampling(0);
+        let baseline = engine.gemm_posit(&acc, &wp, &xp);
+        for every in [1u32, 2, 7] {
+            shadow::set_sampling(every);
+            let got = engine.gemm_posit(&acc, &wp, &xp);
+            shadow::set_sampling(0);
+            assert_eq!(baseline.len(), got.len(), "round {round} shape at 1-in-{every}");
+            for (i, (b, g)) in baseline.iter().zip(&got).enumerate() {
+                assert_eq!(
+                    b.bits(),
+                    g.bits(),
+                    "round {round} cfg {} out[{i}]: shadow 1-in-{every} changed the primary result",
+                    cfg.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn shadow_samples_land_in_the_site_registry_with_high_accuracy() {
+    let _g = GLOBALS.lock().unwrap_or_else(|e| e.into_inner());
+    let cfg = PdpuConfig::paper_default();
+    let engine = BatchEngine::new(cfg);
+    let (rows, cols, k) = (3usize, 3usize, 8usize);
+    // benign all-positive operands: references are nonzero and finite, so
+    // every shadowed output contributes a relative-error sample
+    let w: Vec<Posit> =
+        (0..rows * k).map(|i| Posit::from_f64(0.25 + (i % 5) as f64 * 0.125, cfg.in_fmt)).collect();
+    let x: Vec<Posit> =
+        (0..cols * k).map(|i| Posit::from_f64(0.5 + (i % 3) as f64 * 0.25, cfg.in_fmt)).collect();
+    let acc: Vec<Posit> = (0..rows).map(|_| Posit::from_f64(0.0, cfg.out_fmt)).collect();
+    let wp = PreparedOperands::from_posits(cfg.in_fmt, &w, k);
+    let xp = PreparedOperands::from_posits(cfg.in_fmt, &x, k);
+
+    let site = Site::new(SiteKind::Infer, 31_337);
+    shadow::set_sampling(1);
+    {
+        let _guard = SiteGuard::enter(site);
+        engine.gemm_posit(&acc, &wp, &xp);
+    }
+    shadow::set_sampling(0);
+
+    let entry = pdpu::obs::numerics::snapshot()
+        .into_iter()
+        .find(|e| e.site == site)
+        .expect("shadowed launch recorded at the guarded site");
+    assert_eq!(entry.stats.shadow.samples(), (rows * cols) as u64, "every output shadowed at 1-in-1");
+    assert_eq!(entry.stats.shadow.overflow_frac(), 0.0, "benign operands cannot overflow FP64");
+    // P(16,2) keeps well over one decimal digit on unit-scale dot products
+    assert!(
+        entry.stats.shadow.mean_decimal_accuracy() > 1.0,
+        "implausibly low shadow accuracy: {}",
+        entry.stats.shadow.mean_decimal_accuracy()
+    );
+}
