@@ -10,13 +10,103 @@
 //!
 //! Run: `cargo bench --bench bench_serving`
 
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use pdpu::bench_harness::{bench, report, report_header};
 use pdpu::coordinator::fusion::{execute_fused, execute_unfused, plan_fusion, GemmTile};
 use pdpu::coordinator::json::Json;
+use pdpu::coordinator::{
+    Metrics, ServerPolicy, ServiceHandle, ServingTier, SoftwareService, TierReply,
+};
 use pdpu::pdpu::PdpuConfig;
 use pdpu::testing::Rng;
+
+/// GEMM shape served by the sharded-tier section (kept small so 20k
+/// requests finish in bench time while still exercising the full path).
+const TIER_MKN: (usize, usize, usize) = (8, 64, 4);
+const TIER_PLANES: usize = 8;
+
+fn tier_service(plane_capacity: usize) -> SoftwareService {
+    SoftwareService::new(PdpuConfig::paper_default(), &[8, 4], 16, TIER_MKN, 0xBEEF)
+        .expect("valid tier config")
+        .with_plane_cache_capacity(plane_capacity)
+}
+
+fn build_tier(plane_capacity: usize, fuse: bool, max_inflight: usize) -> (Arc<ServingTier>, Arc<Metrics>) {
+    let policy = ServerPolicy { fuse_gemm: fuse, shards: 4, max_inflight, ..ServerPolicy::default() };
+    let metrics = Arc::new(Metrics::new());
+    let handle = ServiceHandle::from_software(tier_service(plane_capacity));
+    (Arc::new(ServingTier::new(handle, metrics.clone(), policy)), metrics)
+}
+
+/// The shared weight planes most simulated clients multiply.
+fn tier_planes() -> Arc<Vec<Vec<f32>>> {
+    let (m, k, _) = TIER_MKN;
+    let mut rng = Rng::seeded(0x7134_9E1A);
+    Arc::new((0..TIER_PLANES).map(|_| (0..m * k).map(|_| rng.normal() as f32).collect()).collect())
+}
+
+/// Deterministic per-(client, request) right operand.
+fn tier_b(client: usize, r: usize) -> Vec<f32> {
+    let (_, k, n) = TIER_MKN;
+    (0..k * n).map(|i| ((client * 31 + r * 17 + 3 * i) % 13) as f32 * 0.25 - 1.5).collect()
+}
+
+/// Drive `clients` simulated clients (each issuing `reqs` sequential
+/// GEMMs) through the tier on `threads` OS threads. Returns per-request
+/// latencies in µs plus the served/shed split.
+fn drive_tier(
+    tier: &Arc<ServingTier>,
+    planes: &Arc<Vec<Vec<f32>>>,
+    clients: usize,
+    reqs: usize,
+    threads: usize,
+) -> (Vec<f64>, u64, u64) {
+    let mut handles = Vec::new();
+    for t in 0..threads {
+        let tier = tier.clone();
+        let planes = planes.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut lat = Vec::new();
+            let (mut served, mut sheds) = (0u64, 0u64);
+            for client in (t..clients).step_by(threads) {
+                for r in 0..reqs {
+                    let a = planes[(client + r) % planes.len()].clone();
+                    let b = tier_b(client, r);
+                    let t0 = Instant::now();
+                    match tier.gemm(tier.assign_shard(), a, b, None) {
+                        TierReply::Ok(_) => {
+                            lat.push(t0.elapsed().as_secs_f64() * 1e6);
+                            served += 1;
+                        }
+                        TierReply::Shed => sheds += 1,
+                        TierReply::Err(e) => panic!("tier gemm errored: {e}"),
+                    }
+                }
+            }
+            (lat, served, sheds)
+        }));
+    }
+    let mut lat = Vec::new();
+    let (mut served, mut sheds) = (0u64, 0u64);
+    for h in handles {
+        let (l, ok, sh) = h.join().expect("tier client thread");
+        lat.extend(l);
+        served += ok;
+        sheds += sh;
+    }
+    lat.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    (lat, served, sheds)
+}
+
+fn pctile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
 
 /// The benchmark queue: `shared_planes` left operand planes reused by
 /// most requests plus `unique` requests with their own planes.
@@ -148,6 +238,90 @@ fn main() {
         "  -> numerics-observatory overhead at full shadow sampling: {numerics_overhead:.3}x of the fused pass"
     );
 
+    // ── sharded serving tier: 10k simulated clients ──────────────────
+    let (tm, tk, tn) = TIER_MKN;
+    let planes = tier_planes();
+    const TIER_CLIENTS: usize = 10_000;
+    const TIER_REQS: usize = 2;
+    const TIER_THREADS: usize = 32;
+    println!(
+        "\n== sharded tier: {TIER_CLIENTS} simulated clients x {TIER_REQS} GEMMs ({tm}x{tk}x{tn}), \
+         {TIER_PLANES} shared planes, 4 shards on {TIER_THREADS} OS threads ==\n"
+    );
+
+    // bit-identity property first: the sharded + cached + fused tier must
+    // match a direct, uncached, unfused oracle bit for bit
+    {
+        let (tier, _m) = build_tier(64, true, 0);
+        let oracle = tier_service(0);
+        let mut checks = Vec::new();
+        for t in 0..8usize {
+            let tier = tier.clone();
+            let planes = planes.clone();
+            checks.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                for i in 0..8usize {
+                    let a = planes[(t + i) % planes.len()].clone();
+                    let b = tier_b(t, i);
+                    match tier.gemm(tier.assign_shard(), a.clone(), b.clone(), None) {
+                        TierReply::Ok(c) => got.push((a, b, c)),
+                        other => panic!("identity pass must serve: {other:?}"),
+                    }
+                }
+                got
+            }));
+        }
+        for h in checks {
+            for (a, b, c) in h.join().expect("identity thread") {
+                let want = oracle.gemm(&a, &b).expect("oracle gemm");
+                let same = c.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(same && c.len() == want.len(), "tier diverged from the uncached oracle");
+            }
+        }
+        println!("  bit-identity vs uncached oracle: 64/64 concurrent requests identical");
+    }
+
+    // warm cache, fusion on — the production configuration
+    let (tier, _metrics) = build_tier(64, true, 4096);
+    let (lat, served, sheds) = drive_tier(&tier, &planes, TIER_CLIENTS, TIER_REQS, TIER_THREADS);
+    let total = (TIER_CLIENTS * TIER_REQS) as u64;
+    assert_eq!(served + sheds, total, "every request accounted for");
+    let cache = tier.plane_cache_stats();
+    let hit_rate = cache.hits as f64 / (cache.hits + cache.misses).max(1) as f64;
+    let (p50, p99) = (pctile(&lat, 0.50), pctile(&lat, 0.99));
+    let shed_rate = sheds as f64 / total as f64;
+    println!(
+        "  cached+fused : p50 {p50:.1}us  p99 {p99:.1}us  shed {:.3}%  plane-cache hit {:.1}% ({} hits / {} misses)",
+        shed_rate * 100.0, hit_rate * 100.0, cache.hits, cache.misses
+    );
+
+    // cold A/B: plane cache disabled, fusion on
+    let (cold_tier, _m2) = build_tier(0, true, 4096);
+    let (cold_lat, cold_served, cold_sheds) = drive_tier(&cold_tier, &planes, TIER_CLIENTS, TIER_REQS, TIER_THREADS);
+    assert_eq!(cold_served + cold_sheds, total);
+    let (cold_p50, cold_p99) = (pctile(&cold_lat, 0.50), pctile(&cold_lat, 0.99));
+    let cached_speedup = if p50 > 0.0 { cold_p50 / p50 } else { 1.0 };
+    println!("  cold  +fused : p50 {cold_p50:.1}us  p99 {cold_p99:.1}us  (cached p50 speedup {cached_speedup:.2}x)");
+
+    // unfused A/B (the --no-fuse serving configuration), cache on
+    let (unf_tier, _m3) = build_tier(64, false, 4096);
+    let (unf_lat, unf_served, unf_sheds) = drive_tier(&unf_tier, &planes, TIER_CLIENTS, TIER_REQS, TIER_THREADS);
+    assert_eq!(unf_served + unf_sheds, total);
+    let unf_p50 = pctile(&unf_lat, 0.50);
+    println!("  cached+unfused: p50 {unf_p50:.1}us  (fusion p50 speedup {:.2}x)", if p50 > 0.0 { unf_p50 / p50 } else { 1.0 });
+
+    // overload probe: a tiny admission budget under the same load must
+    // shed gracefully (structured replies, not queue collapse)
+    let (over_tier, over_metrics) = build_tier(64, true, 2);
+    let (_olat, over_served, over_sheds) = drive_tier(&over_tier, &planes, 1_000, 2, 16);
+    let overload_shed_rate = over_sheds as f64 / (over_served + over_sheds).max(1) as f64;
+    println!(
+        "  overload probe (budget=2): shed {:.1}% of {} requests ({} counted)",
+        overload_shed_rate * 100.0,
+        over_served + over_sheds,
+        over_metrics.snapshot().shed_requests
+    );
+
     let json = Json::obj(vec![
         ("bench", Json::Str("serving".into())),
         ("config", Json::Str(cfg.label())),
@@ -168,6 +342,18 @@ fn main() {
         ("unfused_macs_per_s", Json::Num(m_unfused.per_second(macs_per_pass))),
         ("fused_macs_per_s", Json::Num(m_fused.per_second(macs_per_pass))),
         ("speedup", Json::Num(speedup)),
+        ("tier_clients", Json::Num(TIER_CLIENTS as f64)),
+        ("tier_requests", Json::Num(total as f64)),
+        ("tier_shards", Json::Num(4.0)),
+        ("tier_p50_us", Json::Num(p50)),
+        ("tier_p99_us", Json::Num(p99)),
+        ("tier_shed_rate", Json::Num(shed_rate)),
+        ("plane_cache_hit_rate", Json::Num(hit_rate)),
+        ("tier_cold_p50_us", Json::Num(cold_p50)),
+        ("tier_cold_p99_us", Json::Num(cold_p99)),
+        ("tier_unfused_p50_us", Json::Num(unf_p50)),
+        ("cached_speedup", Json::Num(cached_speedup)),
+        ("overload_shed_rate", Json::Num(overload_shed_rate)),
     ]);
     let path = "BENCH_serving.json";
     std::fs::write(path, json.to_string() + "\n").expect("write BENCH_serving.json");

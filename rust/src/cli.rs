@@ -87,8 +87,9 @@ COMMANDS
   schedule [--outputs N] [--dot-len K] [--units U] [--n N] [--interleave I]
                                   PDPU-array cycle-accurate schedule
   serve [--addr HOST:PORT] [--artifacts DIR] [--software] [--batch N]
-        [--no-fuse] [--trace N] [--shadow N]
-                                  start the batched inference/GEMM server
+        [--no-fuse] [--trace N] [--shadow N] [--shards N]
+        [--max-inflight N] [--plane-cache N]
+                                  start the sharded inference/GEMM server
                                   (--software, or missing PJRT artifacts,
                                   serves the batched bit-exact PDPU engine;
                                   --no-fuse disables cross-request GEMM
@@ -97,7 +98,13 @@ COMMANDS
                                   the span ring, 0 = off, default off;
                                   --shadow N shadow-executes 1-in-N engine
                                   launches in FP64 for the numerics
-                                  observatory, 0 = off, default off)
+                                  observatory, 0 = off, default off;
+                                  --shards N accept/engine shards,
+                                  default 2; --max-inflight N admission
+                                  budget before shedding, 0 = unlimited,
+                                  default 1024; --plane-cache N cached
+                                  weight planes for the software engine,
+                                  0 = off, default 64)
   train [--epochs N] [--limit N] [--batch N] [--hidden N] [--classes N]
         [--lr F] [--seed S]       mixed-precision posit SGD through the
                                   software engine on the bundled dataset
@@ -295,19 +302,27 @@ fn cmd_schedule(args: &Args) -> anyhow::Result<i32> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
-    use crate::coordinator::{Metrics, Server, ServerPolicy, ServiceHandle};
+    use crate::coordinator::{Metrics, Server, ServerPolicy, ServiceHandle, SoftwareService};
     use std::sync::Arc;
     let addr = args.flag("addr").unwrap_or("127.0.0.1:7878");
     let dir = args.flag("artifacts").unwrap_or("artifacts");
-    let policy = ServerPolicy { fuse_gemm: args.flag("no-fuse").is_none() };
+    let policy = ServerPolicy {
+        fuse_gemm: args.flag("no-fuse").is_none(),
+        shards: args.flag_usize("shards", 2).max(1),
+        max_inflight: args.flag_usize("max-inflight", 1024),
+        ..ServerPolicy::default()
+    };
+    let plane_capacity = args.flag_usize("plane-cache", 64);
     let software = || -> anyhow::Result<ServiceHandle> {
-        Ok(ServiceHandle::start_software(
+        let svc = SoftwareService::new(
             PdpuConfig::paper_default(),
-            vec![784, 128, 10],
+            &[784, 128, 10],
             args.flag_usize("batch", 32).max(1),
             (32, 147, 32),
             2023,
-        )?)
+        )?
+        .with_plane_cache_capacity(plane_capacity);
+        Ok(ServiceHandle::from_software(svc))
     };
     let service = if args.flag("software").is_some() {
         println!("backend: software PDPU engine (batched bit-exact functional model)");
@@ -329,6 +344,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
     let metrics = Arc::new(Metrics::new());
     let server = Server::start_with(addr, service, metrics, policy)?;
     println!("pdpu coordinator listening on {}", server.addr);
+    println!(
+        "serving tier: {} shard(s), admission budget {} in flight, plane cache {} plane(s)",
+        server.tier().shard_count(),
+        policy.max_inflight,
+        plane_capacity
+    );
     println!(
         "cross-request GEMM fusion: {}",
         if policy.fuse_gemm { "on" } else { "off (--no-fuse)" }

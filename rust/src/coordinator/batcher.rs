@@ -4,6 +4,13 @@
 //! size-or-deadline policy (vLLM-router-style) and runs them through the
 //! backend in one PJRT invocation.
 //!
+//! Batch formation is **condvar-driven**: the worker blocks on the queue
+//! condvar and times out exactly at the oldest item's deadline, so an
+//! idle batcher burns no CPU (the original worker slept/polled every
+//! 100µs) and new work is picked up without polling latency. The queue is
+//! **bounded** for wire callers: [`Batcher::try_submit_traced`] refuses
+//! beyond `max_queue` so the serving tier can shed under overload.
+//!
 //! Invariants (property-tested below):
 //! * every submitted item gets exactly one reply (response or error);
 //! * batches never exceed `max_batch`;
@@ -18,9 +25,8 @@
 //! `batch_exec` span per sampled item and hands the batch's first sampled
 //! context to the backend so engine-side spans parent under the request.
 
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::lock_unpoisoned;
@@ -34,11 +40,15 @@ pub struct BatchPolicy {
     pub max_batch: usize,
     /// …or when the oldest queued item has waited this long
     pub max_wait: Duration,
+    /// bound on queued (not yet batched) items; [`Batcher::try_submit_traced`]
+    /// refuses beyond it so the serving tier can shed instead of queueing
+    /// without limit (the trusting [`Batcher::submit`] path ignores it)
+    pub max_queue: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        Self { max_batch: 32, max_wait: Duration::from_millis(2) }
+        Self { max_batch: 32, max_wait: Duration::from_millis(2), max_queue: 1024 }
     }
 }
 
@@ -63,90 +73,114 @@ struct Pending<I, O> {
     ctx: Option<TraceCtx>,
 }
 
+/// The condvar-protected batcher state: the pending queue plus the
+/// shutdown flag, under one mutex so wakeups can never be missed.
+struct Queue<I, O> {
+    items: Vec<Pending<I, O>>,
+    shutdown: bool,
+}
+
 /// Shared handle for submitting work.
 pub struct Batcher<I: Send, O: Send> {
-    queue: Arc<Mutex<Vec<Pending<I, O>>>>,
+    q: Arc<(Mutex<Queue<I, O>>, Condvar)>,
+    policy: BatchPolicy,
     metrics: Arc<Metrics>,
     kind: OpKind,
-    shutdown: Arc<AtomicBool>,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
 impl<I: Send + 'static, O: Send + 'static> Batcher<I, O> {
     /// Spawn the executor thread over `backend`, recording telemetry
     /// under `kind`.
+    ///
+    /// Batch formation is condvar-driven: the worker sleeps on the queue's
+    /// condvar (timing out exactly at the oldest item's deadline) instead
+    /// of polling on a 100µs sleep, so an idle batcher costs nothing and a
+    /// submitted item is noticed immediately.
     pub fn spawn(
         policy: BatchPolicy,
         metrics: Arc<Metrics>,
         kind: OpKind,
         mut backend: impl BatchBackend<I, O> + 'static,
     ) -> Self {
-        let queue: Arc<Mutex<Vec<Pending<I, O>>>> = Arc::new(Mutex::new(Vec::new()));
-        let shutdown = Arc::new(AtomicBool::new(false));
-        let (q, m, sd) = (queue.clone(), metrics.clone(), shutdown.clone());
-        let worker = std::thread::spawn(move || loop {
-            // form a batch under the policy
-            let batch: Vec<Pending<I, O>> = {
-                let mut guard = lock_unpoisoned(&q);
-                let ready = guard.len() >= policy.max_batch
-                    || guard.first().is_some_and(|p| p.enqueued.elapsed() >= policy.max_wait);
-                if ready {
-                    let take = guard.len().min(policy.max_batch);
-                    guard.drain(..take).collect()
-                } else {
-                    Vec::new()
-                }
-            };
-            if batch.is_empty() {
-                if sd.load(Ordering::Relaxed) {
-                    return;
-                }
-                std::thread::sleep(Duration::from_micros(100));
-                continue;
-            }
-            m.record_batch(batch.len());
-            m.queue_leave(kind, batch.len());
-            if let Some(oldest) = batch.first() {
-                m.record_batch_wait(kind, oldest.enqueued.elapsed());
-            }
-            // queue-wait spans for sampled items; the first sampled item's
-            // context rides along to the backend as the batch's parent
-            let mut batch_ctx: Option<TraceCtx> = None;
-            for p in &batch {
-                if let Some(c) = p.ctx {
-                    if batch_ctx.is_none() {
-                        batch_ctx = Some(c);
+        let q: Arc<(Mutex<Queue<I, O>>, Condvar)> =
+            Arc::new((Mutex::new(Queue { items: Vec::new(), shutdown: false }), Condvar::new()));
+        let (qw, m) = (q.clone(), metrics.clone());
+        let worker = std::thread::spawn(move || {
+            let (lock, cv) = &*qw;
+            let mut guard = lock_unpoisoned(lock);
+            loop {
+                // form a batch under the policy; a shutdown with queued
+                // items still drains them so no caller is left hanging
+                let ready = guard.items.len() >= policy.max_batch
+                    || (guard.shutdown && !guard.items.is_empty())
+                    || guard.items.first().is_some_and(|p| p.enqueued.elapsed() >= policy.max_wait);
+                if !ready {
+                    if guard.shutdown {
+                        return;
                     }
-                    let waited_ns = p.enqueued.elapsed().as_nanos() as u64;
-                    crate::obs::trace::record_ending_now("queue_wait", Some(c), waited_ns);
+                    guard = match guard
+                        .items
+                        .first()
+                        .map(|p| policy.max_wait.saturating_sub(p.enqueued.elapsed()))
+                    {
+                        // oldest item pending: sleep exactly until its deadline
+                        Some(remaining) => {
+                            cv.wait_timeout(guard, remaining).unwrap_or_else(|e| e.into_inner()).0
+                        }
+                        // empty queue: sleep until a submit or shutdown wakes us
+                        None => cv.wait(guard).unwrap_or_else(|e| e.into_inner()),
+                    };
+                    continue;
                 }
-            }
-            let started: Vec<Instant> = batch.iter().map(|p| p.enqueued).collect();
-            let ctxs: Vec<Option<TraceCtx>> = batch.iter().map(|p| p.ctx).collect();
-            let (items, replies): (Vec<I>, Vec<Sender<Result<O, String>>>) =
-                batch.into_iter().map(|p| (p.item, p.reply)).unzip();
-            let n = items.len();
-            let exec0 = crate::obs::clock::now();
-            let mut results = backend.run(items, batch_ctx);
-            let exec_ns = exec0.elapsed().as_nanos() as u64;
-            if results.len() != n {
-                let msg = format!("backend returned {} results for {} items", results.len(), n);
-                results = (0..n).map(|_| Err(msg.clone())).collect();
-            }
-            for (((r, tx), t0), ctx) in results.into_iter().zip(replies).zip(started).zip(ctxs) {
-                crate::obs::trace::record_ending_now("batch_exec", ctx, exec_ns);
-                // observed for successes AND errors — the per-op histogram
-                // carries its own count, so this cannot skew the mean
-                m.observe_latency(kind, t0.elapsed());
-                if r.is_ok() {
-                    m.responses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                } else {
-                    m.errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let take = guard.items.len().min(policy.max_batch);
+                let batch: Vec<Pending<I, O>> = guard.items.drain(..take).collect();
+                drop(guard); // run the backend without holding the queue lock
+                m.record_batch(batch.len());
+                m.queue_leave(kind, batch.len());
+                if let Some(oldest) = batch.first() {
+                    m.record_batch_wait(kind, oldest.enqueued.elapsed());
                 }
-                let _ = tx.send(r); // receiver may have given up; fine
+                // queue-wait spans for sampled items; the first sampled item's
+                // context rides along to the backend as the batch's parent
+                let mut batch_ctx: Option<TraceCtx> = None;
+                for p in &batch {
+                    if let Some(c) = p.ctx {
+                        if batch_ctx.is_none() {
+                            batch_ctx = Some(c);
+                        }
+                        let waited_ns = p.enqueued.elapsed().as_nanos() as u64;
+                        crate::obs::trace::record_ending_now("queue_wait", Some(c), waited_ns);
+                    }
+                }
+                let started: Vec<Instant> = batch.iter().map(|p| p.enqueued).collect();
+                let ctxs: Vec<Option<TraceCtx>> = batch.iter().map(|p| p.ctx).collect();
+                let (items, replies): (Vec<I>, Vec<Sender<Result<O, String>>>) =
+                    batch.into_iter().map(|p| (p.item, p.reply)).unzip();
+                let n = items.len();
+                let exec0 = crate::obs::clock::now();
+                let mut results = backend.run(items, batch_ctx);
+                let exec_ns = exec0.elapsed().as_nanos() as u64;
+                if results.len() != n {
+                    let msg = format!("backend returned {} results for {} items", results.len(), n);
+                    results = (0..n).map(|_| Err(msg.clone())).collect();
+                }
+                for (((r, tx), t0), ctx) in results.into_iter().zip(replies).zip(started).zip(ctxs) {
+                    crate::obs::trace::record_ending_now("batch_exec", ctx, exec_ns);
+                    // observed for successes AND errors — the per-op histogram
+                    // carries its own count, so this cannot skew the mean
+                    m.observe_latency(kind, t0.elapsed());
+                    if r.is_ok() {
+                        m.responses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    } else {
+                        m.errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                    let _ = tx.send(r); // receiver may have given up; fine
+                }
+                guard = lock_unpoisoned(lock);
             }
         });
-        Self { queue, metrics, kind, shutdown, worker: Some(worker) }
+        Self { q, policy, metrics, kind, worker: Some(worker) }
     }
 
     /// Submit one item and get the receiver for its reply.
@@ -154,13 +188,42 @@ impl<I: Send + 'static, O: Send + 'static> Batcher<I, O> {
         self.submit_traced(item, None)
     }
 
-    /// Submit one item carrying a trace context (sampled requests).
+    /// Submit one item carrying a trace context (sampled requests). This
+    /// trusting path never sheds — it is for in-process callers; the wire
+    /// front end goes through [`Batcher::try_submit_traced`].
     pub fn submit_traced(&self, item: I, ctx: Option<TraceCtx>) -> Receiver<Result<O, String>> {
         self.metrics.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.metrics.queue_enter(self.kind);
         let (tx, rx) = channel();
-        lock_unpoisoned(&self.queue).push(Pending { item, reply: tx, enqueued: crate::obs::clock::now(), ctx });
+        let (lock, cv) = &*self.q;
+        lock_unpoisoned(lock).items.push(Pending {
+            item,
+            reply: tx,
+            enqueued: crate::obs::clock::now(),
+            ctx,
+        });
+        cv.notify_one();
         rx
+    }
+
+    /// Bounded submit: refuses (returning `None`, touching no counters)
+    /// when the queue already holds `max_queue` items, so the caller can
+    /// shed the request instead of queueing without limit. Shed
+    /// accounting belongs to the caller ([`Metrics::record_shed`]).
+    pub fn try_submit_traced(&self, item: I, ctx: Option<TraceCtx>) -> Option<Receiver<Result<O, String>>> {
+        let (tx, rx) = channel();
+        {
+            let (lock, cv) = &*self.q;
+            let mut queue = lock_unpoisoned(lock);
+            if queue.items.len() >= self.policy.max_queue {
+                return None;
+            }
+            self.metrics.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            self.metrics.queue_enter(self.kind);
+            queue.items.push(Pending { item, reply: tx, enqueued: crate::obs::clock::now(), ctx });
+            cv.notify_one();
+        }
+        Some(rx)
     }
 
     /// Submit and block for the reply.
@@ -172,11 +235,20 @@ impl<I: Send + 'static, O: Send + 'static> Batcher<I, O> {
     pub fn call_traced(&self, item: I, ctx: Option<TraceCtx>) -> Result<O, String> {
         self.submit_traced(item, ctx).recv().map_err(|_| "batcher shut down".to_string())?
     }
+
+    /// Bounded submit-and-block: `None` means the queue was full and the
+    /// item was never enqueued (shed it); `Some` carries the reply.
+    pub fn try_call_traced(&self, item: I, ctx: Option<TraceCtx>) -> Option<Result<O, String>> {
+        let rx = self.try_submit_traced(item, ctx)?;
+        Some(rx.recv().unwrap_or_else(|_| Err("batcher shut down".to_string())))
+    }
 }
 
 impl<I: Send, O: Send> Drop for Batcher<I, O> {
     fn drop(&mut self) {
-        self.shutdown.store(true, Ordering::Relaxed);
+        let (lock, cv) = &*self.q;
+        lock_unpoisoned(lock).shutdown = true;
+        cv.notify_all();
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
@@ -208,7 +280,7 @@ mod tests {
             items.into_iter().map(Ok).collect::<Vec<_>>()
         };
         let b = Batcher::spawn(
-            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(50) },
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(50), ..BatchPolicy::default() },
             m,
             OpKind::Infer,
             backend,
@@ -226,7 +298,7 @@ mod tests {
     #[test]
     fn timeout_flushes_partial_batch() {
         let b = Batcher::spawn(
-            BatchPolicy { max_batch: 1000, max_wait: Duration::from_millis(5) },
+            BatchPolicy { max_batch: 1000, max_wait: Duration::from_millis(5), ..BatchPolicy::default() },
             Arc::new(Metrics::new()),
             OpKind::Infer,
             echo_backend(),
@@ -239,7 +311,7 @@ mod tests {
     #[test]
     fn replies_match_requests_under_concurrency() {
         let b = Arc::new(Batcher::spawn(
-            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1), ..BatchPolicy::default() },
             Arc::new(Metrics::new()),
             OpKind::Infer,
             echo_backend(),
@@ -279,7 +351,7 @@ mod tests {
     fn wrong_cardinality_backend_errors_everyone() {
         let backend = |_items: Vec<u64>, _ctx: Option<TraceCtx>| vec![Ok(1u64)]; // always 1 result
         let b = Arc::new(Batcher::spawn(
-            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1), ..BatchPolicy::default() },
             Arc::new(Metrics::new()),
             OpKind::Infer,
             backend,
@@ -303,7 +375,7 @@ mod tests {
         let m = Arc::new(Metrics::new());
         let backend_svc = svc.clone();
         let b: Batcher<Vec<f32>, Vec<f32>> = Batcher::spawn(
-            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1), ..BatchPolicy::default() },
             m.clone(),
             OpKind::Infer,
             move |images: Vec<Vec<f32>>, ctx: Option<TraceCtx>| {
@@ -338,7 +410,7 @@ mod tests {
         let (m, k, n) = svc.gemm_mkn();
         let backend_svc = svc.clone();
         let b: Arc<Batcher<(Vec<f32>, Vec<f32>), Vec<f32>>> = Arc::new(Batcher::spawn(
-            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1), ..BatchPolicy::default() },
             Arc::new(Metrics::new()),
             OpKind::Gemm,
             move |reqs: Vec<(Vec<f32>, Vec<f32>)>, _ctx: Option<TraceCtx>| backend_svc.gemm_batch(&reqs).0,
@@ -371,11 +443,45 @@ mod tests {
         }
     }
 
+    /// The bounded-submit contract, deterministically: with `max_queue: 1`
+    /// and the backend parked on a gate, one item can be in flight and one
+    /// queued; a third `try_submit` must refuse without touching counters,
+    /// and releasing the gate drains the admitted two normally.
+    #[test]
+    fn bounded_queue_sheds_beyond_max_queue() {
+        let m = Arc::new(Metrics::new());
+        let (started_tx, started_rx) = channel::<()>();
+        let (gate_tx, gate_rx) = channel::<()>();
+        let backend = move |items: Vec<u64>, _ctx: Option<TraceCtx>| {
+            let _ = started_tx.send(());
+            let _ = gate_rx.recv(); // hold the batch until the test releases it
+            items.into_iter().map(Ok).collect::<Vec<_>>()
+        };
+        let b = Batcher::spawn(
+            BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1), max_queue: 1 },
+            m.clone(),
+            OpKind::Gemm,
+            backend,
+        );
+        let rx_a = b.try_submit_traced(10, None).expect("first submit admitted");
+        started_rx.recv().unwrap(); // A drained into the backend; queue empty
+        let rx_b = b.try_submit_traced(20, None).expect("second submit queued");
+        assert!(b.try_submit_traced(30, None).is_none(), "queue full: must refuse");
+        assert_eq!(m.requests.load(std::sync::atomic::Ordering::Relaxed), 2, "refusal counts nothing");
+        gate_tx.send(()).unwrap();
+        gate_tx.send(()).unwrap();
+        assert_eq!(rx_a.recv().unwrap(), Ok(10));
+        assert_eq!(rx_b.recv().unwrap(), Ok(20));
+        let s = m.snapshot();
+        assert_eq!((s.requests, s.responses, s.errors), (2, 2, 0));
+        assert_eq!(s.gemm.queue_depth, 0);
+    }
+
     #[test]
     fn metrics_track_batching() {
         let m = Arc::new(Metrics::new());
         let b = Batcher::spawn(
-            BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
+            BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1), ..BatchPolicy::default() },
             m.clone(),
             OpKind::Infer,
             echo_backend(),

@@ -1,9 +1,17 @@
-//! Engine thread — the single owner of all PJRT state.
+//! Backend dispatch for the serving tier.
 //!
-//! The `xla` crate's client/executable handles are `!Send` (they hold
-//! `Rc`s over C++ objects), so the coordinator confines them to one
-//! dedicated thread and talks to it over channels. [`ServiceHandle`] is
-//! the cloneable, `Send + Sync` face the batcher/server/examples use.
+//! Two backends serve the same [`ServiceHandle`] surface:
+//!
+//! * **PJRT** — the `xla` crate's client/executable handles are `!Send`
+//!   (they hold `Rc`s over C++ objects), so the coordinator confines them
+//!   to one dedicated engine thread and talks to it over channels.
+//! * **Software** — the pure-Rust [`SoftwareService`] is `Send + Sync`
+//!   (its mutable state is the train graph behind a mutex), so calls
+//!   dispatch **directly on the caller's thread**. This is what lets the
+//!   sharded serving tier actually run shards in parallel: N batcher
+//!   workers execute GEMM/infer concurrently instead of serializing
+//!   behind one engine-thread channel. Train steps still serialize on the
+//!   service's internal graph lock, preserving SGD step atomicity.
 //!
 //! Requests can carry an optional [`TraceCtx`] (`*_traced` methods): the
 //! software backend threads it into the service's span-emitting variants;
@@ -15,6 +23,7 @@ use std::sync::{Arc, Mutex};
 
 use super::fusion::FusionStats;
 use super::lock_unpoisoned;
+use super::plane_cache::PlaneCacheStats;
 use super::service::{PositService, SoftwareService};
 use crate::obs::trace::TraceCtx;
 use crate::pdpu::{ConfigError, PdpuConfig};
@@ -66,16 +75,26 @@ fn macs_from_layers(layer_sizes: &[usize]) -> u64 {
     layer_sizes.windows(2).map(|w| w.iter().product::<usize>() as u64).sum()
 }
 
-/// Cloneable handle to the engine thread.
+/// Which execution backend a [`ServiceHandle`] routes to.
+#[derive(Clone)]
+enum Backend {
+    /// Channel into the dedicated PJRT engine thread (the `!Send` state
+    /// owner), plus the join handle for shutdown.
+    Pjrt { tx: Sender<EngineReq>, joiner: Arc<Mutex<Option<std::thread::JoinHandle<()>>>> },
+    /// Shared software service: thread-safe, called directly so shards
+    /// execute in parallel.
+    Software(Arc<SoftwareService>),
+}
+
+/// Cloneable, `Send + Sync` handle the batcher/server/examples use.
 #[derive(Clone)]
 pub struct ServiceHandle {
-    tx: Sender<EngineReq>,
+    backend: Backend,
     info: ModelInfo,
-    joiner: Arc<Mutex<Option<std::thread::JoinHandle<()>>>>,
 }
 
 impl ServiceHandle {
-    /// Spawn the engine thread, loading artifacts from `dir`.
+    /// Spawn the PJRT engine thread, loading artifacts from `dir`.
     pub fn start(dir: impl Into<std::path::PathBuf>) -> anyhow::Result<ServiceHandle> {
         let dir = dir.into();
         let (tx, rx) = channel::<EngineReq>();
@@ -131,20 +150,37 @@ impl ServiceHandle {
             .recv()
             .map_err(|_| anyhow::anyhow!("engine thread died during startup"))?
             .map_err(|e| anyhow::anyhow!(e))?;
-        Ok(ServiceHandle { tx, info, joiner: Arc::new(Mutex::new(Some(joiner))) })
+        Ok(ServiceHandle { backend: Backend::Pjrt { tx, joiner: Arc::new(Mutex::new(Some(joiner))) }, info })
     }
 
-    /// Spawn an engine thread over the pure-Rust [`SoftwareService`]: the
+    /// Wrap an already-constructed [`SoftwareService`] (letting the caller
+    /// tune it first, e.g. [`SoftwareService::with_plane_cache_capacity`]).
+    /// No thread is spawned: the software backend is `Send + Sync` and
+    /// executes on whichever shard calls it.
+    pub fn from_software(service: SoftwareService) -> ServiceHandle {
+        let cfg = *service.config();
+        let info = ModelInfo {
+            batch: service.batch_size(),
+            input_dim: service.input_dim(),
+            classes: service.classes(),
+            gemm_mkn: service.gemm_mkn(),
+            n_in: cfg.in_fmt.n(),
+            n_out: cfg.out_fmt.n(),
+            es: cfg.in_fmt.es(),
+            macs_per_example: macs_from_layers(service.layer_sizes()),
+        };
+        ServiceHandle { backend: Backend::Software(Arc::new(service)), info }
+    }
+
+    /// Construct and wrap the pure-Rust [`SoftwareService`]: the
     /// batched-PDPU-engine backend that needs neither artifacts nor PJRT.
     /// Inference, GEMM, and train steps are all served — training runs
     /// real posit SGD through the batched engine ([`crate::train`]), the
     /// same wire op the PJRT backend serves from its AOT artifact.
     ///
-    /// The service is constructed (and its configuration validated) on the
-    /// caller's thread *before* the engine thread spawns, so an invalid
+    /// The service's configuration is validated here, so an invalid
     /// configuration comes back as a typed [`ConfigError`] with its real
-    /// message instead of killing the engine thread and turning every
-    /// later request into an opaque "engine gone" error.
+    /// message.
     pub fn start_software(
         cfg: PdpuConfig,
         layer_sizes: Vec<usize>,
@@ -152,43 +188,21 @@ impl ServiceHandle {
         gemm_mkn: (usize, usize, usize),
         seed: u64,
     ) -> Result<ServiceHandle, ConfigError> {
-        let service = SoftwareService::new(cfg, &layer_sizes, batch, gemm_mkn, seed)?;
-        let info = ModelInfo {
-            batch,
-            input_dim: service.input_dim(),
-            classes: service.classes(),
-            gemm_mkn,
-            n_in: cfg.in_fmt.n(),
-            n_out: cfg.out_fmt.n(),
-            es: cfg.in_fmt.es(),
-            macs_per_example: macs_from_layers(&layer_sizes),
-        };
-        let (tx, rx) = channel::<EngineReq>();
-        let joiner = std::thread::spawn(move || {
-            while let Ok(req) = rx.recv() {
-                match req {
-                    EngineReq::InferBatch(images, ctx, reply) => {
-                        let _ = reply.send(service.infer_batch_traced(&images, ctx));
-                    }
-                    EngineReq::TrainStep(images, labels, ctx, reply) => {
-                        let _ = reply.send(service.train_step_traced(&images, &labels, ctx));
-                    }
-                    EngineReq::Gemm(a, b, reply) => {
-                        let _ = reply.send(service.gemm(&a, &b));
-                    }
-                    EngineReq::GemmBatch(reqs, ctx, reply) => {
-                        let _ = reply.send(service.gemm_batch_traced(&reqs, ctx));
-                    }
-                    EngineReq::Shutdown => return,
-                }
-            }
-        });
-        Ok(ServiceHandle { tx, info, joiner: Arc::new(Mutex::new(Some(joiner))) })
+        Ok(Self::from_software(SoftwareService::new(cfg, &layer_sizes, batch, gemm_mkn, seed)?))
     }
 
     /// Static model facts (shapes and posit formats).
     pub fn info(&self) -> &ModelInfo {
         &self.info
+    }
+
+    /// Plane-cache counters of the software backend's cross-batch cache
+    /// (all-zero for the PJRT backend, which has no such cache).
+    pub fn plane_cache_stats(&self) -> PlaneCacheStats {
+        match &self.backend {
+            Backend::Pjrt { .. } => PlaneCacheStats::default(),
+            Backend::Software(svc) => svc.plane_cache_stats(),
+        }
     }
 
     /// Run one inference batch through the backend.
@@ -203,9 +217,14 @@ impl ServiceHandle {
         images: Vec<Vec<f32>>,
         ctx: Option<TraceCtx>,
     ) -> Result<Vec<Vec<f32>>, String> {
-        let (tx, rx) = channel();
-        self.tx.send(EngineReq::InferBatch(images, ctx, tx)).map_err(|_| "engine gone".to_string())?;
-        rx.recv().map_err(|_| "engine gone".to_string())?
+        match &self.backend {
+            Backend::Pjrt { tx: sender, .. } => {
+                let (tx, rx) = channel();
+                sender.send(EngineReq::InferBatch(images, ctx, tx)).map_err(|_| "engine gone".to_string())?;
+                rx.recv().map_err(|_| "engine gone".to_string())?
+            }
+            Backend::Software(svc) => svc.infer_batch_traced(&images, ctx),
+        }
     }
 
     /// One SGD step on a labelled batch; updates the served parameters and
@@ -224,23 +243,35 @@ impl ServiceHandle {
         labels: Vec<u32>,
         ctx: Option<TraceCtx>,
     ) -> Result<f32, String> {
-        let (tx, rx) = channel();
-        self.tx.send(EngineReq::TrainStep(images, labels, ctx, tx)).map_err(|_| "engine gone".to_string())?;
-        rx.recv().map_err(|_| "engine gone".to_string())?
+        match &self.backend {
+            Backend::Pjrt { tx: sender, .. } => {
+                let (tx, rx) = channel();
+                sender
+                    .send(EngineReq::TrainStep(images, labels, ctx, tx))
+                    .map_err(|_| "engine gone".to_string())?;
+                rx.recv().map_err(|_| "engine gone".to_string())?
+            }
+            Backend::Software(svc) => svc.train_step_traced(&images, &labels, ctx),
+        }
     }
 
     /// One GEMM at the compiled/configured (M, K, N).
     pub fn gemm(&self, a: Vec<f32>, b: Vec<f32>) -> Result<Vec<f32>, String> {
-        let (tx, rx) = channel();
-        self.tx.send(EngineReq::Gemm(a, b, tx)).map_err(|_| "engine gone".to_string())?;
-        rx.recv().map_err(|_| "engine gone".to_string())?
+        match &self.backend {
+            Backend::Pjrt { tx: sender, .. } => {
+                let (tx, rx) = channel();
+                sender.send(EngineReq::Gemm(a, b, tx)).map_err(|_| "engine gone".to_string())?;
+                rx.recv().map_err(|_| "engine gone".to_string())?
+            }
+            Backend::Software(svc) => svc.gemm(&a, &b),
+        }
     }
 
-    /// A queue of GEMM requests executed in one engine-thread round trip.
-    /// The software backend coalesces compatible requests into fused
-    /// launches ([`super::fusion`]); the PJRT backend runs one compiled
-    /// launch per request. Either way the reply holds one result per
-    /// request, in order, plus the launch counters.
+    /// A queue of GEMM requests executed in one backend call. The
+    /// software backend coalesces compatible requests into fused launches
+    /// ([`super::fusion`]) through the cross-batch plane cache; the PJRT
+    /// backend runs one compiled launch per request. Either way the reply
+    /// holds one result per request, in order, plus the launch counters.
     pub fn gemm_batch(&self, reqs: Vec<(Vec<f32>, Vec<f32>)>) -> Result<GemmBatchReply, String> {
         self.gemm_batch_traced(reqs, None)
     }
@@ -252,16 +283,24 @@ impl ServiceHandle {
         reqs: Vec<(Vec<f32>, Vec<f32>)>,
         ctx: Option<TraceCtx>,
     ) -> Result<GemmBatchReply, String> {
-        let (tx, rx) = channel();
-        self.tx.send(EngineReq::GemmBatch(reqs, ctx, tx)).map_err(|_| "engine gone".to_string())?;
-        rx.recv().map_err(|_| "engine gone".to_string())
+        match &self.backend {
+            Backend::Pjrt { tx: sender, .. } => {
+                let (tx, rx) = channel();
+                sender.send(EngineReq::GemmBatch(reqs, ctx, tx)).map_err(|_| "engine gone".to_string())?;
+                rx.recv().map_err(|_| "engine gone".to_string())
+            }
+            Backend::Software(svc) => Ok(svc.gemm_batch_traced(&reqs, ctx)),
+        }
     }
 
-    /// Ask the engine to exit once current work drains.
+    /// Ask the PJRT engine thread to exit once current work drains (the
+    /// software backend has no thread; dropping the handle suffices).
     pub fn shutdown(&self) {
-        let _ = self.tx.send(EngineReq::Shutdown);
-        if let Some(j) = lock_unpoisoned(&self.joiner).take() {
-            let _ = j.join();
+        if let Backend::Pjrt { tx, joiner } = &self.backend {
+            let _ = tx.send(EngineReq::Shutdown);
+            if let Some(j) = lock_unpoisoned(joiner).take() {
+                let _ = j.join();
+            }
         }
     }
 }

@@ -33,7 +33,9 @@
 //! `rust/tests/engine_equivalence.rs`).
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
+use super::plane_cache::PlaneCache;
 use crate::engine::{BatchEngine, PreparedOperands};
 use crate::pdpu::PdpuConfig;
 use crate::posit::Posit;
@@ -85,25 +87,39 @@ impl GemmTile {
 }
 
 /// Bitwise slice equality (f64 patterns, so `-0.0`/`NaN` never alias).
-fn f64_bits_eq(a: &[f64], b: &[f64]) -> bool {
+/// Shared with the [`super::plane_cache`] lookup confirm.
+pub(crate) fn f64_bits_eq(a: &[f64], b: &[f64]) -> bool {
     a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+fn fnv_feed(h: u64, v: u64) -> u64 {
+    (h ^ v).wrapping_mul(FNV_PRIME)
+}
+
+/// FNV-1a over an f64 plane's bit patterns (length-seeded). This is the
+/// hash the [`super::plane_cache`] keys on; equal planes hash equally and
+/// every consumer confirms bitwise before trusting a match.
+pub(crate) fn hash_f64_plane(vals: &[f64]) -> u64 {
+    let mut h = fnv_feed(FNV_OFFSET, vals.len() as u64);
+    for &v in vals {
+        h = fnv_feed(h, v.to_bits());
+    }
+    h
 }
 
 /// FNV-1a over a tile's fusion-relevant content (accumulator seeds + left
 /// plane, as f64 bit patterns). Tiles with bit-identical content hash
 /// identically; a collision only costs one extra representative compare.
 fn plane_hash(t: &GemmTile) -> u64 {
-    const OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
-    const PRIME: u64 = 0x0000_0100_0000_01B3;
-    fn feed(h: u64, v: u64) -> u64 {
-        (h ^ v).wrapping_mul(PRIME)
-    }
-    let mut h = feed(OFFSET, t.acc.len() as u64);
+    let mut h = fnv_feed(FNV_OFFSET, t.acc.len() as u64);
     for &v in &t.acc {
-        h = feed(h, v.to_bits());
+        h = fnv_feed(h, v.to_bits());
     }
     for &v in &t.a {
-        h = feed(h, v.to_bits());
+        h = fnv_feed(h, v.to_bits());
     }
     h
 }
@@ -160,6 +176,20 @@ pub fn execute_fused(tiles: &[GemmTile]) -> (Vec<Vec<f64>>, FusionStats) {
 /// [`execute_fused`] so the serving path can time planning and launching
 /// as separate trace spans without perturbing what either step does.
 pub fn execute_planned(tiles: &[GemmTile], groups: &[Vec<usize>]) -> (Vec<Vec<f64>>, FusionStats) {
+    execute_planned_cached(tiles, groups, None)
+}
+
+/// [`execute_planned`] with an optional cross-batch [`PlaneCache`]: when a
+/// cache is supplied, each group's shared left plane is fetched through it
+/// (quantizing only on first sight) instead of being re-prepared per
+/// launch. Cached and uncached execution are bit-identical — quantization
+/// is per-value and deterministic, and the cache confirms planes bitwise —
+/// so this stays a pure scheduling/memoization optimization.
+pub fn execute_planned_cached(
+    tiles: &[GemmTile],
+    groups: &[Vec<usize>],
+    cache: Option<&PlaneCache>,
+) -> (Vec<Vec<f64>>, FusionStats) {
     let mut out: Vec<Vec<f64>> = vec![Vec::new(); tiles.len()];
     let mut stats = FusionStats::default();
     for g in groups {
@@ -171,7 +201,10 @@ pub fn execute_planned(tiles: &[GemmTile], groups: &[Vec<usize>]) -> (Vec<Vec<f6
         let first = &tiles[first_idx];
         let (cfg, k) = (first.cfg, first.k);
         let engine = BatchEngine::new(cfg);
-        let wp = PreparedOperands::quantize(cfg.in_fmt, &first.a, k);
+        let wp: Arc<PreparedOperands> = match cache {
+            Some(c) => c.get_or_prepare(&cfg, k, &first.a),
+            None => Arc::new(PreparedOperands::quantize(cfg.in_fmt, &first.a, k)),
+        };
         // shared plane prepared once; member right-hand planes concatenated
         // into one x matrix (quantization is per-value, so this equals the
         // per-tile quantization bit-for-bit)
@@ -358,6 +391,36 @@ mod tests {
         let mut t2 = t1.clone();
         t2.acc = vec![1.0; 2];
         assert_eq!(plan_fusion(&[t1, t2]).len(), 2);
+    }
+
+    #[test]
+    fn cached_execution_is_bit_identical_and_hits_on_repeat() {
+        let cfg = PdpuConfig::paper_default();
+        let mut rng = Rng::seeded(0xF5);
+        let shared = tile(cfg, &mut rng, 3, 6, 2);
+        let mut queue = Vec::new();
+        for _ in 0..3 {
+            let mut t = shared.clone();
+            t.bt = (0..2 * 6).map(|_| rng.normal()).collect();
+            queue.push(t);
+        }
+        queue.push(tile(cfg, &mut rng, 3, 6, 2)); // unique plane
+        let groups = plan_fusion(&queue);
+        let cache = PlaneCache::new(8);
+        let (cold, s_cold) = execute_planned_cached(&queue, &groups, Some(&cache));
+        let (warm, s_warm) = execute_planned_cached(&queue, &groups, Some(&cache));
+        let (plain, s_plain) = execute_planned(&queue, &groups);
+        assert_eq!(s_cold, s_plain);
+        assert_eq!(s_warm, s_plain);
+        for (i, ((c, w), p)) in cold.iter().zip(&warm).zip(&plain).enumerate() {
+            let bits = |v: &Vec<f64>| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(c), bits(p), "cold tile {i}");
+            assert_eq!(bits(w), bits(p), "warm tile {i}");
+        }
+        let cs = cache.stats();
+        // two planes entered cold (one shared + one unique); the warm pass
+        // answered both from the cache
+        assert_eq!((cs.misses, cs.hits, cs.entries), (2, 2, 2));
     }
 
     #[test]

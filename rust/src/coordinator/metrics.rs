@@ -171,6 +171,11 @@ pub struct Metrics {
     pub train_steps: AtomicU64,
     /// Labelled examples consumed by served train steps.
     pub train_examples: AtomicU64,
+    /// Requests shed by admission control under overload (counted in
+    /// `requests` too, but in neither `responses` nor `errors`).
+    pub shed_requests: AtomicU64,
+    /// Transient `accept()` failures survived by the accept loops.
+    pub accept_retries: AtomicU64,
     infer: OpStats,
     gemm: OpStats,
     train: OpStats,
@@ -245,6 +250,28 @@ impl Metrics {
         self.train_examples.fetch_add(examples as u64, Ordering::Relaxed);
     }
 
+    /// Record one request shed by admission control: it arrived (so it
+    /// counts as a request) but was neither served nor errored — the shed
+    /// reply is a deliberate backpressure signal, not a failure.
+    pub fn record_shed(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.shed_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one request rejected before reaching any backend (bad JSON,
+    /// wrong shapes, oversized line): it both arrived and failed, so the
+    /// stats stop undercounting hostile/broken traffic.
+    pub fn record_rejected(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one transient accept() failure that the accept loop
+    /// retried instead of dying.
+    pub fn record_accept_retry(&self) {
+        self.accept_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Blended histogram across all ops (for the legacy stats fields).
     fn merged_latency(&self) -> HistoSnapshot {
         self.infer.latency.snapshot().merge(&self.gemm.latency.snapshot()).merge(&self.train.latency.snapshot())
@@ -289,9 +316,14 @@ impl Metrics {
             fused_tiles: self.fused_tiles.load(Ordering::Relaxed),
             train_steps: self.train_steps.load(Ordering::Relaxed),
             train_examples: self.train_examples.load(Ordering::Relaxed),
+            shed_requests: self.shed_requests.load(Ordering::Relaxed),
+            accept_retries: self.accept_retries.load(Ordering::Relaxed),
             infer: self.infer.snapshot(),
             gemm: self.gemm.snapshot(),
             train: self.train.snapshot(),
+            // the registry does not own the plane cache; the serving tier
+            // overlays the live cache stats before rendering
+            plane_cache: super::plane_cache::PlaneCacheStats::default(),
             numerics: crate::obs::numerics(),
         }
     }
@@ -327,12 +359,20 @@ pub struct MetricsSnapshot {
     pub train_steps: u64,
     /// Labelled examples consumed by served train steps.
     pub train_examples: u64,
+    /// Requests shed by admission control (subset of `requests`; not in
+    /// `responses` or `errors`).
+    pub shed_requests: u64,
+    /// Transient accept() failures survived by the accept loops.
+    pub accept_retries: u64,
     /// Infer-path telemetry.
     pub infer: OpSnapshot,
     /// GEMM-path telemetry.
     pub gemm: OpSnapshot,
     /// Train-path telemetry.
     pub train: OpSnapshot,
+    /// Cross-batch plane-cache counters (overlaid by the serving tier;
+    /// all-zero in snapshots taken without a tier attached).
+    pub plane_cache: super::plane_cache::PlaneCacheStats,
     /// Posit numerics counters (process-wide, from [`crate::obs`]).
     pub numerics: crate::obs::NumericsSnapshot,
 }
@@ -444,6 +484,24 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.train_steps, 2);
         assert_eq!(s.train_examples, 40);
+    }
+
+    #[test]
+    fn shed_and_rejected_count_as_requests_with_distinct_outcomes() {
+        let m = Metrics::new();
+        m.record_shed();
+        m.record_shed();
+        m.record_rejected();
+        m.record_accept_retry();
+        let s = m.snapshot();
+        // sheds arrive but are neither responses nor errors; rejections
+        // arrive *and* error
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.shed_requests, 2);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.responses, 0);
+        assert_eq!(s.accept_retries, 1);
+        assert_eq!(s.plane_cache, super::super::plane_cache::PlaneCacheStats::default());
     }
 
     #[test]

@@ -12,14 +12,20 @@
 //! * [`scheduler`] — cycle-accurate PDPU-array scheduling with RAW-hazard
 //!   interleaving (the chunked-accumulation pipeline problem), including
 //!   fused-vs-unfused launch-sequence modelling.
+//! * [`plane_cache`] — cross-batch interning of quantized operand
+//!   planes, keyed by `(config, k, plane hash)` with a bitwise confirm,
+//!   so repeated weight planes skip quantization bit-identically.
 //! * [`service`] — compiled artifacts + parameter state, typed batch ops.
-//! * [`server`] — TCP JSON-lines front end (std::net + threads).
+//! * [`server`] — sharded TCP JSON-lines serving tier (std::net +
+//!   threads): N accept/engine shards over bounded condvar queues, with
+//!   admission control and structured overload shedding.
 
 pub mod batcher;
 pub mod engine;
 pub mod fusion;
 pub mod json;
 pub mod metrics;
+pub mod plane_cache;
 pub mod scheduler;
 pub mod server;
 pub mod service;
@@ -41,8 +47,12 @@ pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use engine::{ModelInfo, ServiceHandle};
-pub use fusion::{execute_fused, execute_planned, execute_unfused, plan_fusion, FusionStats, GemmTile};
+pub use fusion::{
+    execute_fused, execute_planned, execute_planned_cached, execute_unfused, plan_fusion, FusionStats,
+    GemmTile,
+};
 pub use metrics::{Metrics, MetricsSnapshot, OpKind, OpSnapshot};
+pub use plane_cache::{PlaneCache, PlaneCacheStats, DEFAULT_PLANE_CAPACITY};
 pub use scheduler::{conv_jobs, fuse_launches, schedule, schedule_launches, DotJob, ScheduleReport};
-pub use server::{Server, ServerPolicy};
+pub use server::{AdmissionBudget, AdmissionPermit, Server, ServerPolicy, ServingTier, TierReply};
 pub use service::{PositService, SoftwareService};

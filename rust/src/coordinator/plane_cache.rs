@@ -1,0 +1,354 @@
+//! Cross-batch weight-plane cache — persistent [`PreparedOperands`]
+//! interning across batches and sessions.
+//!
+//! [`super::fusion::plan_fusion`] already coalesces tiles that share a
+//! left-operand plane *within* one formed batch, but consecutive batches
+//! re-quantized the same weight plane from scratch on every launch: the
+//! canonical serving shape (one weight matrix, thousands of activation
+//! tiles over the connection lifetime) paid the quantize/decode cost per
+//! batch instead of per plane. This module keeps the prepared planes
+//! alive across batches, keyed exactly the way fusion planning interns
+//! tiles — `(config, k, FNV-1a hash of the f64 bit patterns)` with a
+//! bitwise confirm against the stored plane, so `-0.0`/NaN patterns and
+//! hash collisions can never alias (the same invariant `plan_fusion`
+//! property-tests against its linear-scan oracle).
+//!
+//! Correctness invariant: a cache hit returns a [`PreparedOperands`]
+//! whose lanes are **bit-identical** to a fresh
+//! [`PreparedOperands::quantize`] of the same plane — quantization is
+//! per-value and deterministic, so interning is pure deduplication and
+//! the served outputs cannot change (property-tested in
+//! `rust/tests/serving_tier.rs`).
+//!
+//! Eviction is deterministic: a logical tick counter (not a wall clock —
+//! the serving lint bans raw clocks in the coordinator) orders entries by
+//! last use, and the least-recently-used entry (ties broken by lowest
+//! slot index) is evicted when the bounded capacity is reached.
+//! Quantization happens **outside** the cache lock; a racing duplicate
+//! insert is resolved by re-checking the bucket before publishing.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::fusion::{f64_bits_eq, hash_f64_plane};
+use super::lock_unpoisoned;
+use crate::engine::PreparedOperands;
+use crate::pdpu::PdpuConfig;
+
+/// Default number of distinct planes a serving cache retains.
+pub const DEFAULT_PLANE_CAPACITY: usize = 64;
+
+/// Cache identity of a prepared plane: the quantization-relevant config,
+/// the inner dimension, and the FNV-1a hash of the plane's f64 bits.
+type PlaneKey = (PdpuConfig, usize, u64);
+
+/// Point-in-time counters of one [`PlaneCache`], for `stats`/Prometheus.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlaneCacheStats {
+    /// Lookups answered from the cache (quantize skipped).
+    pub hits: u64,
+    /// Lookups that had to quantize (including capacity-0 bypasses).
+    pub misses: u64,
+    /// Entries evicted to respect the capacity bound.
+    pub evictions: u64,
+    /// Planes currently resident.
+    pub entries: u64,
+    /// Configured capacity (0 = caching disabled).
+    pub capacity: u64,
+    /// Total packed lanes held by resident planes (memory proxy).
+    pub resident_elems: u64,
+}
+
+struct Entry {
+    key: PlaneKey,
+    /// The raw plane, kept for the bitwise confirm on lookup.
+    plane: Vec<f64>,
+    prepared: Arc<PreparedOperands>,
+    /// Logical tick of the last hit or insert (drives LRU eviction).
+    last_used: u64,
+}
+
+/// Slot-addressed storage: bucket lists hold stable slot indices, so an
+/// eviction only touches its own bucket instead of re-indexing the map.
+#[derive(Default)]
+struct Inner {
+    buckets: HashMap<PlaneKey, Vec<usize>>,
+    slots: Vec<Option<Entry>>,
+    free: Vec<usize>,
+    tick: u64,
+    live: usize,
+}
+
+/// A bounded, thread-safe cache of quantized weight planes shared by
+/// every shard of the serving tier. See the module docs for the keying
+/// and eviction contract.
+pub struct PlaneCache {
+    capacity: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl PlaneCache {
+    /// A cache retaining at most `capacity` distinct planes. Capacity 0
+    /// disables caching (every lookup quantizes fresh).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity,
+            inner: Mutex::new(Inner::default()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Configured capacity bound.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Planes currently resident.
+    pub fn len(&self) -> usize {
+        lock_unpoisoned(&self.inner).live
+    }
+
+    /// True when no plane is resident.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Return the prepared form of `plane` under `(cfg, k)`, quantizing
+    /// and publishing it on first sight. The returned value is
+    /// bit-identical to `PreparedOperands::quantize(cfg.in_fmt, plane, k)`
+    /// whether it came from the cache or not.
+    pub fn get_or_prepare(&self, cfg: &PdpuConfig, k: usize, plane: &[f64]) -> Arc<PreparedOperands> {
+        if self.capacity == 0 {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return Arc::new(PreparedOperands::quantize(cfg.in_fmt, plane, k));
+        }
+        let key: PlaneKey = (*cfg, k, hash_f64_plane(plane));
+        if let Some(found) = self.lookup(&key, plane) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return found;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        // quantize outside the lock: this is the expensive step the cache
+        // exists to elide, and holding the lock across it would serialize
+        // every shard on one plane's preparation
+        let prepared = Arc::new(PreparedOperands::quantize(cfg.in_fmt, plane, k));
+        self.insert(key, plane, prepared)
+    }
+
+    /// Counter + occupancy snapshot.
+    pub fn stats(&self) -> PlaneCacheStats {
+        let inner = lock_unpoisoned(&self.inner);
+        let resident_elems: u64 =
+            inner.slots.iter().flatten().map(|e| e.prepared.elem_count() as u64).sum();
+        PlaneCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: inner.live as u64,
+            capacity: self.capacity as u64,
+            resident_elems,
+        }
+    }
+
+    /// Bucket scan with bitwise confirm; bumps the LRU tick on a hit.
+    fn lookup(&self, key: &PlaneKey, plane: &[f64]) -> Option<Arc<PreparedOperands>> {
+        let mut inner = lock_unpoisoned(&self.inner);
+        inner.tick += 1;
+        let tick = inner.tick;
+        let slot = inner
+            .buckets
+            .get(key)?
+            .iter()
+            .copied()
+            .find(|&s| {
+                matches!(inner.slots.get(s), Some(Some(e)) if f64_bits_eq(&e.plane, plane))
+            })?;
+        let entry = inner.slots.get_mut(slot).and_then(Option::as_mut)?;
+        entry.last_used = tick;
+        Some(Arc::clone(&entry.prepared))
+    }
+
+    /// Publish a freshly prepared plane, re-checking for a racing insert
+    /// of the same plane and evicting the least-recently-used entry when
+    /// the capacity bound is hit.
+    fn insert(
+        &self,
+        key: PlaneKey,
+        plane: &[f64],
+        prepared: Arc<PreparedOperands>,
+    ) -> Arc<PreparedOperands> {
+        let mut inner = lock_unpoisoned(&self.inner);
+        inner.tick += 1;
+        let tick = inner.tick;
+        // racing duplicate: another thread published this plane while we
+        // quantized outside the lock — adopt theirs, drop ours
+        if let Some(bucket) = inner.buckets.get(&key) {
+            let existing = bucket.iter().copied().find(|&s| {
+                matches!(inner.slots.get(s), Some(Some(e)) if f64_bits_eq(&e.plane, plane))
+            });
+            if let Some(slot) = existing {
+                if let Some(entry) = inner.slots.get_mut(slot).and_then(Option::as_mut) {
+                    entry.last_used = tick;
+                    return Arc::clone(&entry.prepared);
+                }
+            }
+        }
+        while inner.live >= self.capacity {
+            // LRU victim: smallest (last_used, slot) over live entries —
+            // fully deterministic, no wall clock involved
+            let victim = inner
+                .slots
+                .iter()
+                .enumerate()
+                .filter_map(|(s, e)| e.as_ref().map(|e| (e.last_used, s)))
+                .min();
+            let Some((_, slot)) = victim else { break };
+            if let Some(evicted) = inner.slots.get_mut(slot).and_then(Option::take) {
+                if let Some(bucket) = inner.buckets.get_mut(&evicted.key) {
+                    bucket.retain(|&s| s != slot);
+                    if bucket.is_empty() {
+                        inner.buckets.remove(&evicted.key);
+                    }
+                }
+                inner.free.push(slot);
+                inner.live -= 1;
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let entry = Entry { key, plane: plane.to_vec(), prepared: Arc::clone(&prepared), last_used: tick };
+        let slot = match inner.free.pop() {
+            Some(s) => {
+                if let Some(cell) = inner.slots.get_mut(s) {
+                    *cell = Some(entry);
+                }
+                s
+            }
+            None => {
+                inner.slots.push(Some(entry));
+                inner.slots.len() - 1
+            }
+        };
+        inner.buckets.entry(key).or_default().push(slot);
+        inner.live += 1;
+        prepared
+    }
+}
+
+impl std::fmt::Debug for PlaneCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("PlaneCache")
+            .field("capacity", &self.capacity)
+            .field("entries", &s.entries)
+            .field("hits", &s.hits)
+            .field("misses", &s.misses)
+            .field("evictions", &s.evictions)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::BatchEngine;
+    use crate::posit::Posit;
+    use crate::testing::Rng;
+
+    fn plane(rng: &mut Rng, len: usize) -> Vec<f64> {
+        (0..len).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn repeat_plane_hits_and_returns_the_same_allocation() {
+        let cfg = PdpuConfig::paper_default();
+        let mut rng = Rng::seeded(0xCAC4E);
+        let cache = PlaneCache::new(4);
+        let p = plane(&mut rng, 3 * 5);
+        let first = cache.get_or_prepare(&cfg, 5, &p);
+        let second = cache.get_or_prepare(&cfg, 5, &p);
+        assert!(Arc::ptr_eq(&first, &second), "hit must return the cached plane");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert!(s.resident_elems >= 15);
+    }
+
+    #[test]
+    fn negated_zero_and_differing_k_do_not_alias() {
+        let cfg = PdpuConfig::paper_default();
+        let cache = PlaneCache::new(8);
+        let p = vec![0.0, 1.0, 2.0, 3.0];
+        let mut q = p.clone();
+        if let Some(v) = q.first_mut() {
+            *v = -0.0;
+        }
+        cache.get_or_prepare(&cfg, 2, &p);
+        cache.get_or_prepare(&cfg, 2, &q); // -0.0 differs bitwise → miss
+        cache.get_or_prepare(&cfg, 4, &p); // same bits, different k → miss
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 3, 3));
+    }
+
+    #[test]
+    fn lru_eviction_is_deterministic_and_bounded() {
+        let cfg = PdpuConfig::paper_default();
+        let mut rng = Rng::seeded(0x10C0);
+        let cache = PlaneCache::new(2);
+        let (a, b, c) = (plane(&mut rng, 4), plane(&mut rng, 4), plane(&mut rng, 4));
+        cache.get_or_prepare(&cfg, 2, &a);
+        cache.get_or_prepare(&cfg, 2, &b);
+        cache.get_or_prepare(&cfg, 2, &a); // touch a → b is now LRU
+        cache.get_or_prepare(&cfg, 2, &c); // evicts b
+        let s = cache.stats();
+        assert_eq!((s.evictions, s.entries), (1, 2));
+        assert_eq!(cache.len(), 2);
+        // a survived (hit), b was evicted (miss → re-quantize)
+        let before = cache.stats().hits;
+        cache.get_or_prepare(&cfg, 2, &a);
+        assert_eq!(cache.stats().hits, before + 1);
+        let misses_before = cache.stats().misses;
+        cache.get_or_prepare(&cfg, 2, &b);
+        assert_eq!(cache.stats().misses, misses_before + 1);
+    }
+
+    #[test]
+    fn capacity_zero_bypasses_without_retaining() {
+        let cfg = PdpuConfig::paper_default();
+        let cache = PlaneCache::new(0);
+        let p = vec![1.0, 2.0];
+        cache.get_or_prepare(&cfg, 1, &p);
+        cache.get_or_prepare(&cfg, 1, &p);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 2, 0));
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn cached_plane_computes_bit_identical_gemm_outputs() {
+        let cfg = PdpuConfig::paper_default();
+        let mut rng = Rng::seeded(0xB17);
+        let (m, k, n) = (3usize, 7usize, 4usize);
+        let w = plane(&mut rng, m * k);
+        let x = plane(&mut rng, n * k);
+        let cache = PlaneCache::new(4);
+        cache.get_or_prepare(&cfg, k, &w); // warm
+        let cached = cache.get_or_prepare(&cfg, k, &w); // served from cache
+        assert_eq!(cache.stats().hits, 1);
+
+        let engine = BatchEngine::new(cfg);
+        let fresh = PreparedOperands::quantize(cfg.in_fmt, &w, k);
+        let xp = PreparedOperands::quantize(cfg.in_fmt, &x, k);
+        let acc: Vec<Posit> = (0..m).map(|_| Posit::from_f64(0.0, cfg.out_fmt)).collect();
+        let out_cached = engine.gemm_posit(&acc, &cached, &xp);
+        let out_fresh = engine.gemm_posit(&acc, &fresh, &xp);
+        assert_eq!(out_cached.len(), out_fresh.len());
+        for (c, f) in out_cached.iter().zip(&out_fresh) {
+            assert_eq!(c.to_f64().to_bits(), f.to_f64().to_bits(), "cache changed output bits");
+        }
+    }
+}

@@ -1,4 +1,6 @@
-//! TCP JSON-lines server — the outward face of the L3 coordinator.
+//! TCP JSON-lines server — the outward face of the L3 coordinator, built
+//! as a **sharded serving tier** with admission control and a cross-batch
+//! plane cache.
 //!
 //! Protocol (one JSON object per line, response per line):
 //!   {"op":"ping"}                        → {"ok":true,"pong":true}
@@ -13,32 +15,61 @@
 //!   {"op":"numerics","shadow":N?}        → {"ok":true,"shadow_sampling":N,
 //!                                           "sites":[…],"advisor":[…]}
 //!
-//! Requests from all connections funnel through per-op [`Batcher`]s, so
-//! concurrent clients get batched into single backend invocations — the
-//! serving pattern of vLLM-style routers, at MLP scale. Queued GEMM
-//! requests additionally go through **cross-request fusion**
-//! ([`super::fusion`]): compatible tiles in one formed batch share a
-//! single engine launch, bit-identically to running them one at a time.
+//! **Sharding.** The tier runs N accept threads over one shared listening
+//! socket ([`TcpListener::try_clone`]); each shard owns its own pair of
+//! per-op [`Batcher`]s (condvar-driven, bounded queues), so batch
+//! formation and — with the software backend, which dispatches on the
+//! calling thread — engine execution proceed in parallel across shards.
+//! A connection is pinned to the shard that accepted it.
+//!
+//! **Admission control.** Every compute request (infer/gemm/train) must
+//! acquire a permit from a bounded in-flight budget; when the budget or a
+//! shard's bounded queue is exhausted the request is **shed** with a
+//! structured `{"ok":false,"shed":true}` reply and counted in
+//! `shed_requests` — graceful backpressure instead of unbounded queueing.
+//! Control ops (ping/stats/metrics/trace/numerics) bypass admission so
+//! observability stays reachable under overload.
+//!
+//! **Plane cache.** Queued GEMM requests go through cross-request fusion
+//! ([`super::fusion`]) *and* the service's persistent
+//! [`super::plane_cache::PlaneCache`]: weight planes seen in earlier
+//! batches skip quantization entirely, bit-identically (the `stats` op
+//! reports hit/miss/eviction counters).
+//!
 //! Train steps bypass the batchers on purpose: SGD mutates the served
-//! parameters, so steps execute in arrival order on the engine thread
-//! (which already serializes them), one step per request.
+//! parameters, so steps serialize on the service's internal graph lock,
+//! one step per request.
+//!
+//! Robustness (each regression-tested in `rust/tests/wire_robustness.rs`):
+//! the accept loops retry transient `accept()` errors with bounded
+//! backoff instead of dying (EMFILE under fd exhaustion is exactly the
+//! overload regime this tier targets); request lines are read through a
+//! **bounded** reader that rejects lines over `max_line_bytes` (a client
+//! streaming bytes without a newline can no longer OOM the server); and
+//! every parsed-or-rejected request is counted (`requests`/`errors`), so
+//! `stats` no longer undercounts hostile or malformed traffic.
 //!
 //! Sampled requests (see [`crate::obs::trace`]) open a root span named
 //! after the op; the batcher, fusion planner, engine launch, and S1–S6
 //! kernel stages hang child spans off it, so `{"op":"trace"}` exports one
 //! request's whole lifecycle as Chrome-tracing events.
 //!
-//! std::net + threads (no tokio in the offline image): one reader thread
-//! per connection, one batch-executor thread per batcher.
+//! std::net + threads (no tokio in the offline image): N accept threads,
+//! one reader thread per connection, one batch-executor thread per shard
+//! per op — with compute multiplexed through the shards' bounded queues
+//! and capped by the admission budget.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{self, BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::engine::ServiceHandle;
 use super::json::{parse, Json};
 use super::metrics::{Metrics, OpKind};
+use super::plane_cache::PlaneCacheStats;
 use crate::obs;
 use crate::obs::trace::{self, ActiveSpan, Span};
 
@@ -49,38 +80,287 @@ pub struct ServerPolicy {
     /// Off = one launch per request (the A/B baseline); outputs are
     /// bit-identical either way.
     pub fuse_gemm: bool,
+    /// Accept/engine shards (each with its own batcher pair); clamped to
+    /// at least 1.
+    pub shards: usize,
+    /// Admission budget: maximum compute requests in flight across all
+    /// shards before new ones are shed. `0` = unlimited.
+    pub max_inflight: usize,
+    /// Per-shard, per-op bound on queued (not yet batched) requests;
+    /// beyond it the request is shed.
+    pub max_queue: usize,
+    /// Maximum accepted request-line length in bytes; longer lines get an
+    /// error reply and the connection is closed (OOM guard, the wire-level
+    /// sibling of the JSON parser's depth guard).
+    pub max_line_bytes: usize,
 }
 
 impl Default for ServerPolicy {
     fn default() -> Self {
-        Self { fuse_gemm: true }
+        Self { fuse_gemm: true, shards: 2, max_inflight: 1024, max_queue: 512, max_line_bytes: 4 << 20 }
     }
 }
 
-/// Everything one connection handler needs, shared across connections.
-struct Shared {
+/// Bounded in-flight budget shared by every shard: RAII permits over an
+/// atomic counter. `limit == 0` disables the bound.
+pub struct AdmissionBudget {
+    limit: usize,
+    inflight: Arc<AtomicUsize>,
+}
+
+impl AdmissionBudget {
+    /// A budget admitting at most `limit` concurrent requests (0 = no cap).
+    pub fn new(limit: usize) -> Self {
+        Self { limit, inflight: Arc::new(AtomicUsize::new(0)) }
+    }
+
+    /// Try to admit one request; `None` means the budget is exhausted and
+    /// the caller should shed. Dropping the permit releases the slot.
+    pub fn try_acquire(&self) -> Option<AdmissionPermit> {
+        if self.limit == 0 {
+            return Some(AdmissionPermit { inflight: None });
+        }
+        let mut cur = self.inflight.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.limit {
+                return None;
+            }
+            match self.inflight.compare_exchange_weak(cur, cur + 1, Ordering::AcqRel, Ordering::Relaxed) {
+                Ok(_) => return Some(AdmissionPermit { inflight: Some(self.inflight.clone()) }),
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Requests currently holding permits.
+    pub fn in_flight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+}
+
+/// RAII admission slot; dropping it releases the budget.
+pub struct AdmissionPermit {
+    inflight: Option<Arc<AtomicUsize>>,
+}
+
+impl Drop for AdmissionPermit {
+    fn drop(&mut self) {
+        if let Some(g) = &self.inflight {
+            g.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+}
+
+/// One shard's batcher pair.
+struct Shard {
     infer: Batcher<Vec<f32>, Vec<f32>>,
     gemm: Batcher<(Vec<f32>, Vec<f32>), Vec<f32>>,
+}
+
+/// Outcome of a compute request routed through the tier.
+#[derive(Debug, PartialEq, Eq)]
+pub enum TierReply<T> {
+    /// Served normally.
+    Ok(T),
+    /// The backend replied with an error.
+    Err(String),
+    /// Shed by admission control or a full shard queue (never enqueued).
+    Shed,
+}
+
+/// The sharded serving tier: N batcher-pair shards over one service, one
+/// admission budget, and the service's cross-batch plane cache. Usable
+/// directly (benchmarks, tests) or behind [`Server`]'s TCP front end.
+pub struct ServingTier {
+    shards: Vec<Shard>,
+    budget: AdmissionBudget,
+    next: AtomicUsize,
     metrics: Arc<Metrics>,
     service: ServiceHandle,
+    policy: ServerPolicy,
+}
+
+impl ServingTier {
+    /// Build the tier: `policy.shards` batcher pairs (clamped ≥ 1), each
+    /// with bounded queues, all backed by `service`.
+    pub fn new(service: ServiceHandle, metrics: Arc<Metrics>, policy: ServerPolicy) -> ServingTier {
+        let shard_count = policy.shards.max(1);
+        let infer_policy = BatchPolicy {
+            max_batch: service.info().batch,
+            max_wait: Duration::from_millis(2),
+            max_queue: policy.max_queue,
+        };
+        let gemm_policy =
+            BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(2), max_queue: policy.max_queue };
+        let infer_macs = service.info().macs_per_example;
+        let (gm, gk, gn) = service.info().gemm_mkn;
+        let gemm_macs = (gm * gk * gn) as u64;
+        let mut shards = Vec::with_capacity(shard_count);
+        for _ in 0..shard_count {
+            let svc = service.clone();
+            let imetrics = metrics.clone();
+            let infer: Batcher<Vec<f32>, Vec<f32>> = Batcher::spawn(
+                infer_policy,
+                metrics.clone(),
+                OpKind::Infer,
+                move |images: Vec<Vec<f32>>, ctx| {
+                    let n = images.len();
+                    match svc.infer_batch_traced(images, ctx) {
+                        Ok(outs) => {
+                            imetrics.record_macs(infer_macs * n as u64);
+                            outs.into_iter().map(Ok).collect()
+                        }
+                        Err(e) => (0..n).map(|_| Err(e.clone())).collect(),
+                    }
+                },
+            );
+            let gsvc = service.clone();
+            let gmetrics = metrics.clone();
+            let fuse = policy.fuse_gemm;
+            let gemm: Batcher<(Vec<f32>, Vec<f32>), Vec<f32>> = Batcher::spawn(
+                gemm_policy,
+                metrics.clone(),
+                OpKind::Gemm,
+                move |reqs: Vec<(Vec<f32>, Vec<f32>)>, ctx| {
+                    let n = reqs.len();
+                    gmetrics.gemm_requests.fetch_add(n as u64, Ordering::Relaxed);
+                    let results: Vec<Result<Vec<f32>, String>> = if fuse {
+                        match gsvc.gemm_batch_traced(reqs, ctx) {
+                            Ok((results, stats)) => {
+                                gmetrics.record_fusion(stats.launches, stats.fused_tiles);
+                                results
+                            }
+                            Err(e) => (0..n).map(|_| Err(e.clone())).collect(),
+                        }
+                    } else {
+                        gmetrics.record_fusion(n as u64, 0);
+                        reqs.into_iter().map(|(a, b)| gsvc.gemm(a, b)).collect()
+                    };
+                    let ok = results.iter().filter(|r| r.is_ok()).count() as u64;
+                    gmetrics.record_macs(gemm_macs * ok);
+                    results
+                },
+            );
+            shards.push(Shard { infer, gemm });
+        }
+        ServingTier {
+            shards,
+            budget: AdmissionBudget::new(policy.max_inflight),
+            next: AtomicUsize::new(0),
+            metrics,
+            service,
+            policy,
+        }
+    }
+
+    /// The serving policy the tier was built with.
+    pub fn policy(&self) -> &ServerPolicy {
+        &self.policy
+    }
+
+    /// The shared metrics registry.
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// The backing service handle.
+    pub fn service(&self) -> &ServiceHandle {
+        &self.service
+    }
+
+    /// Number of shards (≥ 1).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Round-robin shard assignment for callers without an accept-time
+    /// pinning (benchmarks, in-process clients).
+    pub fn assign_shard(&self) -> usize {
+        self.next.fetch_add(1, Ordering::Relaxed) % self.shards.len()
+    }
+
+    /// Compute requests currently holding admission permits.
+    pub fn in_flight(&self) -> usize {
+        self.budget.in_flight()
+    }
+
+    /// Live counters of the service's cross-batch plane cache.
+    pub fn plane_cache_stats(&self) -> PlaneCacheStats {
+        self.service.plane_cache_stats()
+    }
+
+    /// Try to admit one compute request; records the shed on refusal so
+    /// every caller's accounting is uniform.
+    pub fn try_admit(&self) -> Option<AdmissionPermit> {
+        let permit = self.budget.try_acquire();
+        if permit.is_none() {
+            self.metrics.record_shed();
+        }
+        permit
+    }
+
+    /// One inference through `shard`'s batcher, under admission control.
+    pub fn infer(&self, shard: usize, image: Vec<f32>, ctx: Option<trace::TraceCtx>) -> TierReply<Vec<f32>> {
+        let Some(_permit) = self.try_admit() else {
+            return TierReply::Shed;
+        };
+        let Some(sh) = self.shards.get(shard % self.shards.len()) else {
+            return TierReply::Err("no shards".to_string());
+        };
+        match sh.infer.try_call_traced(image, ctx) {
+            None => {
+                self.metrics.record_shed();
+                TierReply::Shed
+            }
+            Some(Ok(v)) => TierReply::Ok(v),
+            Some(Err(e)) => TierReply::Err(e),
+        }
+    }
+
+    /// One GEMM through `shard`'s batcher, under admission control.
+    pub fn gemm(
+        &self,
+        shard: usize,
+        a: Vec<f32>,
+        b: Vec<f32>,
+        ctx: Option<trace::TraceCtx>,
+    ) -> TierReply<Vec<f32>> {
+        let Some(_permit) = self.try_admit() else {
+            return TierReply::Shed;
+        };
+        let Some(sh) = self.shards.get(shard % self.shards.len()) else {
+            return TierReply::Err("no shards".to_string());
+        };
+        match sh.gemm.try_call_traced((a, b), ctx) {
+            None => {
+                self.metrics.record_shed();
+                TierReply::Shed
+            }
+            Some(Ok(v)) => TierReply::Ok(v),
+            Some(Err(e)) => TierReply::Err(e),
+        }
+    }
 }
 
 /// Running server handle.
 pub struct Server {
     /// The bound local address (useful with `"127.0.0.1:0"` binds).
     pub addr: std::net::SocketAddr,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
-    shutdown: Arc<std::sync::atomic::AtomicBool>,
+    accept_threads: Vec<std::thread::JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+    tier: Arc<ServingTier>,
 }
 
 impl Server {
     /// Bind `addr` (e.g. "127.0.0.1:0") and serve `service` with the
-    /// default policy (GEMM fusion on) until the handle is dropped.
+    /// default policy until the handle is dropped.
     pub fn start(addr: &str, service: ServiceHandle, metrics: Arc<Metrics>) -> anyhow::Result<Server> {
         Self::start_with(addr, service, metrics, ServerPolicy::default())
     }
 
-    /// Like [`Self::start`] with an explicit [`ServerPolicy`].
+    /// Like [`Self::start`] with an explicit [`ServerPolicy`]: builds the
+    /// [`ServingTier`] and spawns one accept thread per shard over clones
+    /// of the (nonblocking) listening socket.
     pub fn start_with(
         addr: &str,
         service: ServiceHandle,
@@ -90,113 +370,191 @@ impl Server {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let tier = Arc::new(ServingTier::new(service, metrics, policy));
+        let mut accept_threads = Vec::with_capacity(tier.shard_count());
+        for shard in 0..tier.shard_count() {
+            let l = listener.try_clone()?;
+            let t = tier.clone();
+            let sd = shutdown.clone();
+            accept_threads.push(std::thread::spawn(move || accept_loop(l, t, shard, sd)));
+        }
+        Ok(Server { addr: local, accept_threads, shutdown, tier })
+    }
 
-        let svc = service.clone();
-        let imetrics = metrics.clone();
-        let infer_macs = service.info().macs_per_example;
-        let infer: Batcher<Vec<f32>, Vec<f32>> = Batcher::spawn(
-            BatchPolicy { max_batch: service.info().batch, max_wait: std::time::Duration::from_millis(2) },
-            metrics.clone(),
-            OpKind::Infer,
-            move |images: Vec<Vec<f32>>, ctx| {
-                let n = images.len();
-                match svc.infer_batch_traced(images, ctx) {
-                    Ok(outs) => {
-                        imetrics.record_macs(infer_macs * n as u64);
-                        outs.into_iter().map(Ok).collect()
-                    }
-                    Err(e) => (0..n).map(|_| Err(e.clone())).collect(),
-                }
-            },
-        );
-
-        let gsvc = service.clone();
-        let gmetrics = metrics.clone();
-        let fuse = policy.fuse_gemm;
-        let (gm, gk, gn) = service.info().gemm_mkn;
-        let gemm_macs = (gm * gk * gn) as u64;
-        let gemm: Batcher<(Vec<f32>, Vec<f32>), Vec<f32>> = Batcher::spawn(
-            BatchPolicy { max_batch: 64, max_wait: std::time::Duration::from_millis(2) },
-            metrics.clone(),
-            OpKind::Gemm,
-            move |reqs: Vec<(Vec<f32>, Vec<f32>)>, ctx| {
-                let n = reqs.len();
-                gmetrics.gemm_requests.fetch_add(n as u64, std::sync::atomic::Ordering::Relaxed);
-                let results: Vec<Result<Vec<f32>, String>> = if fuse {
-                    match gsvc.gemm_batch_traced(reqs, ctx) {
-                        Ok((results, stats)) => {
-                            gmetrics.record_fusion(stats.launches, stats.fused_tiles);
-                            results
-                        }
-                        Err(e) => (0..n).map(|_| Err(e.clone())).collect(),
-                    }
-                } else {
-                    gmetrics.record_fusion(n as u64, 0);
-                    reqs.into_iter().map(|(a, b)| gsvc.gemm(a, b)).collect()
-                };
-                let ok = results.iter().filter(|r| r.is_ok()).count() as u64;
-                gmetrics.record_macs(gemm_macs * ok);
-                results
-            },
-        );
-
-        let shared = Arc::new(Shared { infer, gemm, metrics, service });
-        let sd = shutdown.clone();
-        let accept_thread = std::thread::spawn(move || {
-            for stream in listener.incoming() {
-                if sd.load(std::sync::atomic::Ordering::Relaxed) {
-                    break;
-                }
-                match stream {
-                    Ok(s) => {
-                        let sh = shared.clone();
-                        std::thread::spawn(move || handle_conn(s, sh));
-                    }
-                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(5));
-                    }
-                    Err(_) => break,
-                }
-            }
-        });
-
-        Ok(Server { addr: local, accept_thread: Some(accept_thread), shutdown })
+    /// The serving tier behind this server (live metrics, policy, cache).
+    pub fn tier(&self) -> &Arc<ServingTier> {
+        &self.tier
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.shutdown.store(true, std::sync::atomic::Ordering::Relaxed);
-        // accept loop wakes on its polling interval
-        if let Some(t) = self.accept_thread.take() {
+        self.shutdown.store(true, Ordering::Relaxed);
+        // accept loops wake on their polling interval
+        for t in self.accept_threads.drain(..) {
             let _ = t.join();
         }
     }
 }
 
-fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
-    let peer = stream.peer_addr().ok();
+/// Backoff before retrying a failed `accept()`: 5ms doubling per
+/// consecutive failure, capped at 200ms. Transient error storms (EMFILE,
+/// ECONNABORTED floods) slow the loop down instead of killing it.
+fn accept_backoff(streak: u32) -> Duration {
+    let shift = streak.saturating_sub(1).min(6);
+    let ms = 5u64.saturating_mul(1u64 << shift);
+    Duration::from_millis(ms.min(200))
+}
+
+/// One shard's accept loop. Transient `accept()` errors are retried with
+/// [`accept_backoff`] — the loop only exits on shutdown. (The previous
+/// implementation `break`ed on any non-WouldBlock error, permanently
+/// killing the accept thread the first time the process ran out of fds.)
+fn accept_loop(listener: TcpListener, tier: Arc<ServingTier>, shard: usize, shutdown: Arc<AtomicBool>) {
+    let mut streak: u32 = 0;
+    loop {
+        if shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                streak = 0;
+                let t = tier.clone();
+                std::thread::spawn(move || handle_conn(stream, t, shard));
+            }
+            Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => {
+                tier.metrics().record_accept_retry();
+                streak = streak.saturating_add(1);
+                std::thread::sleep(accept_backoff(streak));
+            }
+        }
+    }
+}
+
+/// Result of one bounded line read.
+enum LineRead {
+    /// A complete line (newline stripped, trailing `\r` trimmed).
+    Line(String),
+    /// The line exceeded the cap before a newline arrived.
+    TooLong,
+    /// The line's bytes were not valid UTF-8.
+    NotUtf8,
+    /// Clean end of stream with no pending bytes.
+    Eof,
+}
+
+/// Read one `\n`-terminated line of at most `cap` bytes. Unlike
+/// [`BufRead::read_line`], memory is bounded: accumulation stops at
+/// `cap + one buffer chunk`. Every chunk is consumed from the reader
+/// *before* the length check, so an over-cap verdict leaves no read-side
+/// bytes pending (closing a socket with unread data would RST the error
+/// reply away). EOF with pending bytes yields a final `Line`, matching
+/// `BufRead::lines`.
+fn read_bounded_line(r: &mut impl BufRead, cap: usize) -> io::Result<LineRead> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let (take, found_nl) = {
+            let chunk = r.fill_buf()?;
+            if chunk.is_empty() {
+                break; // EOF
+            }
+            match chunk.iter().position(|&b| b == b'\n') {
+                Some(i) => {
+                    buf.extend_from_slice(&chunk[..i]);
+                    (i + 1, true)
+                }
+                None => {
+                    buf.extend_from_slice(chunk);
+                    (chunk.len(), false)
+                }
+            }
+        };
+        r.consume(take);
+        if buf.len() > cap {
+            return Ok(LineRead::TooLong);
+        }
+        if found_nl {
+            return Ok(finish_line(buf));
+        }
+    }
+    if buf.is_empty() {
+        Ok(LineRead::Eof)
+    } else {
+        Ok(finish_line(buf))
+    }
+}
+
+/// Trim an optional trailing `\r` and validate UTF-8.
+fn finish_line(mut buf: Vec<u8>) -> LineRead {
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    match String::from_utf8(buf) {
+        Ok(s) => LineRead::Line(s),
+        Err(_) => LineRead::NotUtf8,
+    }
+}
+
+fn handle_conn(stream: TcpStream, shared: Arc<ServingTier>, shard: usize) {
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let resp = handle_request(&line, &shared);
-        if writer.write_all((resp.to_string() + "\n").as_bytes()).is_err() {
-            break;
+    let cap = shared.policy().max_line_bytes;
+    let mut reader = BufReader::new(stream);
+    loop {
+        match read_bounded_line(&mut reader, cap) {
+            Ok(LineRead::Line(line)) => {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let resp = handle_request(&line, &shared, shard);
+                if writer.write_all((resp.to_string() + "\n").as_bytes()).is_err() {
+                    break;
+                }
+            }
+            Ok(LineRead::TooLong) => {
+                // counted, answered, closed: the wire-level OOM guard
+                shared.metrics().record_rejected();
+                let resp = err(format!("request line exceeds {cap} bytes"));
+                let _ = writer.write_all((resp.to_string() + "\n").as_bytes());
+                break;
+            }
+            Ok(LineRead::NotUtf8) => {
+                // counted but silently closed (matching the historical
+                // BufRead::lines behavior clients already rely on)
+                shared.metrics().record_rejected();
+                break;
+            }
+            Ok(LineRead::Eof) | Err(_) => break,
         }
     }
-    let _ = peer;
 }
 
 fn err(msg: impl Into<String>) -> Json {
     Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.into()))])
+}
+
+/// Count a malformed request (it arrived *and* failed — `requests` and
+/// `errors` both move, so `stats` sees hostile/broken traffic) and build
+/// its error reply.
+fn reject(shared: &ServingTier, msg: impl Into<String>) -> Json {
+    shared.metrics().record_rejected();
+    err(msg)
+}
+
+/// The structured overload reply: distinguishable from an error (`shed`
+/// is only ever present-and-true here) so clients can back off and retry.
+fn shed_reply() -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("shed", Json::Bool(true)),
+        ("error", Json::Str("overloaded: admission budget exhausted".to_string())),
+    ])
 }
 
 /// One completed span as a Chrome-tracing "X" (complete) event. The trace
@@ -214,114 +572,120 @@ fn span_to_chrome(s: &Span) -> Json {
     ])
 }
 
-fn handle_request(line: &str, shared: &Shared) -> Json {
+fn handle_request(line: &str, shared: &ServingTier, shard: usize) -> Json {
     let req = match parse(line) {
         Ok(v) => v,
-        Err(e) => return err(format!("bad json: {e}")),
+        Err(e) => return reject(shared, format!("bad json: {e}")),
     };
     match req.get("op").and_then(Json::as_str) {
         Some("ping") => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
         Some("infer") => {
             let Some(img) = req.get("image").and_then(Json::as_f64_vec) else {
-                return err("infer needs 'image': [f64]");
+                return reject(shared, "infer needs 'image': [f64]");
             };
-            if img.len() != shared.service.info().input_dim {
-                return err(format!("image must have {} pixels", shared.service.info().input_dim));
+            if img.len() != shared.service().info().input_dim {
+                return reject(shared, format!("image must have {} pixels", shared.service().info().input_dim));
             }
             let img: Vec<f32> = img.into_iter().map(|v| v as f32).collect();
             let root = trace::start_root("infer");
             let ctx = root.as_ref().map(ActiveSpan::ctx);
-            let out = shared.infer.call_traced(img, ctx);
+            let out = shared.infer(shard, img, ctx);
             trace::finish(root);
             match out {
-                Ok(logits) => Json::obj(vec![
+                TierReply::Ok(logits) => Json::obj(vec![
                     ("ok", Json::Bool(true)),
                     ("logits", Json::arr_f64(&logits.iter().map(|&v| v as f64).collect::<Vec<_>>())),
                 ]),
-                Err(e) => err(e),
+                TierReply::Err(e) => err(e),
+                TierReply::Shed => shed_reply(),
             }
         }
         Some("gemm") => {
-            let (m, k, n) = shared.service.info().gemm_mkn;
+            let (m, k, n) = shared.service().info().gemm_mkn;
             let Some(a) = req.get("a").and_then(Json::as_f64_vec) else {
-                return err("gemm needs 'a': [f64]");
+                return reject(shared, "gemm needs 'a': [f64]");
             };
             let Some(b) = req.get("b").and_then(Json::as_f64_vec) else {
-                return err("gemm needs 'b': [f64]");
+                return reject(shared, "gemm needs 'b': [f64]");
             };
             if a.len() != m * k {
-                return err(format!("A must be {m}x{k}"));
+                return reject(shared, format!("A must be {m}x{k}"));
             }
             if b.len() != k * n {
-                return err(format!("B must be {k}x{n}"));
+                return reject(shared, format!("B must be {k}x{n}"));
             }
             let a: Vec<f32> = a.into_iter().map(|v| v as f32).collect();
             let b: Vec<f32> = b.into_iter().map(|v| v as f32).collect();
             let root = trace::start_root("gemm");
             let ctx = root.as_ref().map(ActiveSpan::ctx);
-            let out = shared.gemm.call_traced((a, b), ctx);
+            let out = shared.gemm(shard, a, b, ctx);
             trace::finish(root);
             match out {
-                Ok(c) => Json::obj(vec![
+                TierReply::Ok(c) => Json::obj(vec![
                     ("ok", Json::Bool(true)),
                     ("c", Json::arr_f64(&c.iter().map(|&v| v as f64).collect::<Vec<_>>())),
                 ]),
-                Err(e) => err(e),
+                TierReply::Err(e) => err(e),
+                TierReply::Shed => shed_reply(),
             }
         }
         Some("train") => {
-            let info = shared.service.info();
+            let info = shared.service().info();
             let Some(rows) = req.get("images").and_then(Json::as_arr) else {
-                return err("train needs 'images': [[f64]]");
+                return reject(shared, "train needs 'images': [[f64]]");
             };
             let Some(labels) = req.get("labels").and_then(Json::as_f64_vec) else {
-                return err("train needs 'labels': [int]");
+                return reject(shared, "train needs 'labels': [int]");
             };
             if rows.len() != labels.len() {
-                return err(format!("{} labels for {} images", labels.len(), rows.len()));
+                return reject(shared, format!("{} labels for {} images", labels.len(), rows.len()));
             }
             let mut images: Vec<Vec<f32>> = Vec::with_capacity(rows.len());
             for (i, row) in rows.iter().enumerate() {
                 let Some(img) = row.as_f64_vec() else {
-                    return err(format!("images[{i}] must be [f64]"));
+                    return reject(shared, format!("images[{i}] must be [f64]"));
                 };
                 if img.len() != info.input_dim {
-                    return err(format!("images[{i}] must have {} pixels", info.input_dim));
+                    return reject(shared, format!("images[{i}] must have {} pixels", info.input_dim));
                 }
                 images.push(img.into_iter().map(|v| v as f32).collect());
             }
             let mut checked: Vec<u32> = Vec::with_capacity(labels.len());
             for (i, l) in labels.into_iter().enumerate() {
                 if l.fract() != 0.0 || !(0.0..=u32::MAX as f64).contains(&l) {
-                    return err(format!("labels[{i}] must be a non-negative integer, got {l}"));
+                    return reject(shared, format!("labels[{i}] must be a non-negative integer, got {l}"));
                 }
                 checked.push(l as u32);
             }
             let labels = checked;
+            let Some(_permit) = shared.try_admit() else {
+                return shed_reply();
+            };
             let n = images.len();
             let t0 = crate::obs::clock::now();
-            shared.metrics.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            shared.metrics().requests.fetch_add(1, Ordering::Relaxed);
             let root = trace::start_root("train");
             let ctx = root.as_ref().map(ActiveSpan::ctx);
-            let outcome = shared.service.train_step_traced(images, labels, ctx);
+            let outcome = shared.service().train_step_traced(images, labels, ctx);
             trace::finish(root);
-            shared.metrics.observe_latency(OpKind::Train, t0.elapsed());
+            shared.metrics().observe_latency(OpKind::Train, t0.elapsed());
             match outcome {
                 Ok(loss) => {
-                    shared.metrics.record_train_step(n);
+                    shared.metrics().record_train_step(n);
                     // one step ≈ forward + two backward GEMM volumes per layer
-                    shared.metrics.record_macs(3 * info.macs_per_example * n as u64);
-                    shared.metrics.responses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    shared.metrics().record_macs(3 * info.macs_per_example * n as u64);
+                    shared.metrics().responses.fetch_add(1, Ordering::Relaxed);
                     Json::obj(vec![("ok", Json::Bool(true)), ("loss", Json::Num(loss as f64))])
                 }
                 Err(e) => {
-                    shared.metrics.errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    shared.metrics().errors.fetch_add(1, Ordering::Relaxed);
                     err(e)
                 }
             }
         }
         Some("stats") => {
-            let s = shared.metrics.snapshot();
+            let mut s = shared.metrics().snapshot();
+            s.plane_cache = shared.plane_cache_stats();
             Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("requests", Json::Num(s.requests as f64)),
@@ -337,10 +701,19 @@ fn handle_request(line: &str, shared: &Shared) -> Json {
                 ("fused_tiles", Json::Num(s.fused_tiles as f64)),
                 ("train_steps", Json::Num(s.train_steps as f64)),
                 ("train_examples", Json::Num(s.train_examples as f64)),
+                ("shed_requests", Json::Num(s.shed_requests as f64)),
+                ("accept_retries", Json::Num(s.accept_retries as f64)),
+                ("shards", Json::Num(shared.shard_count() as f64)),
+                ("in_flight", Json::Num(shared.in_flight() as f64)),
+                ("plane_cache_hits", Json::Num(s.plane_cache.hits as f64)),
+                ("plane_cache_misses", Json::Num(s.plane_cache.misses as f64)),
+                ("plane_cache_evictions", Json::Num(s.plane_cache.evictions as f64)),
+                ("plane_cache_entries", Json::Num(s.plane_cache.entries as f64)),
             ])
         }
         Some("metrics") => {
-            let s = shared.metrics.snapshot();
+            let mut s = shared.metrics().snapshot();
+            s.plane_cache = shared.plane_cache_stats();
             Json::obj(vec![("ok", Json::Bool(true)), ("prometheus", Json::Str(obs::prom::render(&s)))])
         }
         Some("trace") => {
@@ -349,7 +722,7 @@ fn handle_request(line: &str, shared: &Shared) -> Json {
             }
             if let Some(every) = req.get("sample").and_then(Json::as_f64) {
                 if every.fract() != 0.0 || !(0.0..=u32::MAX as f64).contains(&every) {
-                    return err(format!("'sample' must be a non-negative integer, got {every}"));
+                    return reject(shared, format!("'sample' must be a non-negative integer, got {every}"));
                 }
                 trace::set_sampling(every as u32);
             }
@@ -363,14 +736,14 @@ fn handle_request(line: &str, shared: &Shared) -> Json {
         Some("numerics") => {
             if let Some(every) = req.get("shadow").and_then(Json::as_f64) {
                 if every.fract() != 0.0 || !(0.0..=u32::MAX as f64).contains(&every) {
-                    return err(format!("'shadow' must be a non-negative integer, got {every}"));
+                    return reject(shared, format!("'shadow' must be a non-negative integer, got {every}"));
                 }
                 crate::obs::shadow::set_sampling(every as u32);
             }
             numerics_report()
         }
-        Some(op) => err(format!("unknown op '{op}'")),
-        None => err("missing 'op'"),
+        Some(op) => reject(shared, format!("unknown op '{op}'")),
+        None => reject(shared, "missing 'op'"),
     }
 }
 
@@ -441,4 +814,101 @@ fn advice_to_json(a: &crate::obs::numerics::Advice) -> Json {
         ("required_scale", Json::Num(a.required_scale as f64)),
         ("target_decimal_digits", Json::Num(a.target_decimal_digits)),
     ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accept_backoff_doubles_and_caps() {
+        assert_eq!(accept_backoff(1), Duration::from_millis(5));
+        assert_eq!(accept_backoff(2), Duration::from_millis(10));
+        assert_eq!(accept_backoff(3), Duration::from_millis(20));
+        assert_eq!(accept_backoff(6), Duration::from_millis(160));
+        assert_eq!(accept_backoff(7), Duration::from_millis(200));
+        assert_eq!(accept_backoff(u32::MAX), Duration::from_millis(200));
+        // monotone non-decreasing
+        let mut prev = Duration::ZERO;
+        for streak in 1..40 {
+            let d = accept_backoff(streak);
+            assert!(d >= prev, "backoff regressed at streak {streak}");
+            prev = d;
+        }
+    }
+
+    fn read_all(input: &[u8], cap: usize) -> Vec<LineRead> {
+        let mut r = std::io::Cursor::new(input.to_vec());
+        let mut out = Vec::new();
+        loop {
+            let l = read_bounded_line(&mut r, cap).unwrap();
+            let stop = matches!(l, LineRead::Eof | LineRead::TooLong | LineRead::NotUtf8);
+            out.push(l);
+            if stop {
+                return out;
+            }
+        }
+    }
+
+    #[test]
+    fn bounded_reader_reads_lines_and_strips_cr() {
+        let got = read_all(b"hello\nworld\r\ntail", 64);
+        let texts: Vec<&str> = got
+            .iter()
+            .filter_map(|l| match l {
+                LineRead::Line(s) => Some(s.as_str()),
+                _ => None,
+            })
+            .collect();
+        // the unterminated trailing line is still delivered, like lines()
+        assert_eq!(texts, vec!["hello", "world", "tail"]);
+        assert!(matches!(got.last(), Some(LineRead::Eof)));
+    }
+
+    #[test]
+    fn bounded_reader_rejects_over_cap_lines() {
+        // exactly cap is fine…
+        let ok = read_all(format!("{}\n", "x".repeat(16)).as_bytes(), 16);
+        assert!(matches!(ok.first(), Some(LineRead::Line(s)) if s.len() == 16));
+        // …one byte over is not, with or without a newline ever arriving
+        assert!(matches!(read_all("x".repeat(17).as_bytes(), 16).last(), Some(LineRead::TooLong)));
+        assert!(matches!(
+            read_all(format!("{}\nnext\n", "x".repeat(17)).as_bytes(), 16).first(),
+            Some(LineRead::TooLong)
+        ));
+    }
+
+    #[test]
+    fn bounded_reader_flags_invalid_utf8() {
+        let got = read_all(&[0xFF, 0xFE, 0x80, b'\n'], 64);
+        assert!(matches!(got.first(), Some(LineRead::NotUtf8)));
+    }
+
+    #[test]
+    fn bounded_reader_handles_empty_input() {
+        assert!(matches!(read_all(b"", 8).first(), Some(LineRead::Eof)));
+    }
+
+    #[test]
+    fn admission_budget_admits_releases_and_refuses() {
+        let b = AdmissionBudget::new(2);
+        let p1 = b.try_acquire().expect("slot 1");
+        let p2 = b.try_acquire().expect("slot 2");
+        assert_eq!(b.in_flight(), 2);
+        assert!(b.try_acquire().is_none(), "budget exhausted");
+        drop(p1);
+        assert_eq!(b.in_flight(), 1);
+        let p3 = b.try_acquire().expect("slot freed by drop");
+        drop(p2);
+        drop(p3);
+        assert_eq!(b.in_flight(), 0);
+    }
+
+    #[test]
+    fn admission_budget_zero_means_unlimited() {
+        let b = AdmissionBudget::new(0);
+        let permits: Vec<_> = (0..64).map(|_| b.try_acquire().expect("unlimited")).collect();
+        assert_eq!(b.in_flight(), 0, "unlimited budget tracks nothing");
+        drop(permits);
+    }
 }

@@ -8,6 +8,7 @@ use std::sync::Mutex;
 
 use super::fusion::{self, FusionStats, GemmTile};
 use super::lock_unpoisoned;
+use super::plane_cache::{PlaneCache, PlaneCacheStats, DEFAULT_PLANE_CAPACITY};
 use crate::baselines::{DotArch, PdpuArch};
 use crate::dnn::layers::with_zero_seeds;
 use crate::dnn::Tensor;
@@ -155,6 +156,9 @@ pub struct SoftwareService {
     layer_sizes: Vec<usize>,
     batch: usize,
     gemm_mkn: (usize, usize, usize),
+    /// Cross-batch cache of prepared left-operand planes shared by every
+    /// shard's fused GEMM launches (`None` = caching disabled).
+    plane_cache: Option<PlaneCache>,
 }
 
 impl SoftwareService {
@@ -179,6 +183,7 @@ impl SoftwareService {
             layer_sizes: layer_sizes.to_vec(),
             batch,
             gemm_mkn,
+            plane_cache: Some(PlaneCache::new(DEFAULT_PLANE_CAPACITY)),
         })
     }
 
@@ -186,6 +191,23 @@ impl SoftwareService {
     pub fn with_train_lr(mut self, lr: f64) -> Self {
         self.sgd = Sgd::new(lr, self.arch.config());
         self
+    }
+
+    /// Override the cross-batch plane-cache capacity (builder style).
+    /// `0` disables caching entirely — the cold/uncached A/B baseline.
+    pub fn with_plane_cache_capacity(mut self, planes: usize) -> Self {
+        self.plane_cache = (planes > 0).then(|| PlaneCache::new(planes));
+        self
+    }
+
+    /// The PDPU configuration this service executes under.
+    pub fn config(&self) -> &PdpuConfig {
+        self.arch.config()
+    }
+
+    /// Plane-cache counters (all-zero when caching is disabled).
+    pub fn plane_cache_stats(&self) -> PlaneCacheStats {
+        self.plane_cache.as_ref().map(PlaneCache::stats).unwrap_or_default()
     }
 
     /// Input feature count per image. (`layer_sizes` was validated
@@ -324,7 +346,9 @@ impl SoftwareService {
     }
 
     /// Posit GEMM at the configured (M, K, N): quantize once per operand,
-    /// run one batched tile.
+    /// run one batched tile. Deliberately **uncached and unfused** — this
+    /// is the bit-identity oracle the fused/cached batch path is
+    /// property-tested against.
     pub fn gemm(&self, a: &[f32], b: &[f32]) -> std::result::Result<Vec<f32>, String> {
         let _site = crate::obs::numerics::SiteGuard::enter(crate::obs::numerics::Site::gemm());
         let (m, k, _) = self.gemm_mkn;
@@ -352,8 +376,9 @@ impl SoftwareService {
     /// separate `fusion_plan` / `engine_launch` spans, and the S1–S6
     /// stage-bin growth across the launch is emitted as the launch span's
     /// children. Identical outputs either way — the plan/execute split is
-    /// [`fusion::plan_fusion`] + [`fusion::execute_planned`], which
-    /// [`fusion::execute_fused`] itself composes.
+    /// [`fusion::plan_fusion`] + [`fusion::execute_planned_cached`] (fed
+    /// the service's cross-batch plane cache, so repeat weight planes skip
+    /// quantization across batches, not just within one).
     pub fn gemm_batch_traced(
         &self,
         reqs: &[(Vec<f32>, Vec<f32>)],
@@ -381,7 +406,7 @@ impl SoftwareService {
         let stages0 = crate::obs::stages::snapshot();
         let launch_span = crate::obs::trace::start_child("engine_launch", ctx);
         let lctx = launch_span.as_ref().map(ActiveSpan::ctx);
-        let (mut outs, stats) = fusion::execute_planned(&tiles, &groups);
+        let (mut outs, stats) = fusion::execute_planned_cached(&tiles, &groups, self.plane_cache.as_ref());
         crate::obs::trace::finish(launch_span);
         crate::obs::stages::emit_delta(lctx, &stages0);
         let results = slots
@@ -497,6 +522,39 @@ mod tests {
         assert!(s.train_step(&[img.clone()], &[0, 1]).unwrap_err().contains("labels"));
         assert!(s.train_step(&[img.clone()], &[7]).unwrap_err().contains("out of range"));
         assert!(s.train_step(&[vec![0.0; 3]], &[0]).unwrap_err().contains("pixels"));
+    }
+
+    /// Cross-batch caching: the same weight plane arriving in *separate*
+    /// `gemm_batch` calls must hit the plane cache (the whole point — the
+    /// per-batch fusion planner can't see across calls) while every reply
+    /// stays bit-identical to the uncached single-request oracle.
+    #[test]
+    fn plane_cache_hits_across_separate_gemm_batches_bitwise() {
+        let s = svc(); // default: cache enabled
+        let (m, k, n) = s.gemm_mkn();
+        let plane: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.43).sin()).collect();
+        let mk_b = |seed: usize| -> Vec<f32> {
+            (0..k * n).map(|i| ((i + seed) as f32 * 0.23).cos()).collect()
+        };
+        let oracle = SoftwareService::new(PdpuConfig::paper_default(), &[12, 8, 3], 4, (4, 6, 5), 0x5EED)
+            .unwrap()
+            .with_plane_cache_capacity(0);
+        for round in 0..5 {
+            let req = (plane.clone(), mk_b(round));
+            let (results, _) = s.gemm_batch(std::slice::from_ref(&req));
+            let got = results.into_iter().next().unwrap().unwrap();
+            let want = oracle.gemm(&req.0, &req.1).unwrap();
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "round {round} diverged under plane caching"
+            );
+        }
+        let cs = s.plane_cache_stats();
+        assert_eq!(cs.misses, 1, "one cold quantize for the shared plane");
+        assert_eq!(cs.hits, 4, "four later batches served from the cache");
+        assert_eq!(cs.entries, 1);
+        assert_eq!(oracle.plane_cache_stats(), Default::default());
     }
 
     #[test]

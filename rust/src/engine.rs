@@ -119,6 +119,13 @@ impl PreparedOperands {
     pub fn row(&self, r: usize) -> &[PackedLane] {
         &self.elems[r * self.k..(r + 1) * self.k]
     }
+
+    /// Total packed lanes held (`rows · k`) — the memory-accounting unit
+    /// used by the serving tier's plane cache.
+    #[inline]
+    pub fn elem_count(&self) -> usize {
+        self.elems.len()
+    }
 }
 
 /// Fuse one chunk's cached per-value decodes into the S1 record (the only

@@ -41,6 +41,14 @@ pub fn render(s: &MetricsSnapshot) -> String {
     counter(&mut out, "pdpu_fused_tiles_total", "GEMM tiles that rode a shared fused launch.", s.fused_tiles);
     counter(&mut out, "pdpu_train_steps_total", "SGD steps applied to the served model.", s.train_steps);
     counter(&mut out, "pdpu_train_examples_total", "Examples consumed by training steps.", s.train_examples);
+    counter(&mut out, "pdpu_shed_requests_total", "Requests shed by admission control under overload.", s.shed_requests);
+    counter(&mut out, "pdpu_accept_retries_total", "Transient accept() errors retried by the serving tier.", s.accept_retries);
+    counter(&mut out, "pdpu_plane_cache_hits_total", "GEMM weight planes served from the cross-batch plane cache.", s.plane_cache.hits);
+    counter(&mut out, "pdpu_plane_cache_misses_total", "GEMM weight planes quantized fresh on cache miss.", s.plane_cache.misses);
+    counter(&mut out, "pdpu_plane_cache_evictions_total", "Plane-cache entries evicted by the deterministic LRU.", s.plane_cache.evictions);
+    let _ = writeln!(out, "# HELP pdpu_plane_cache_entries Prepared operand planes resident in the cache.");
+    let _ = writeln!(out, "# TYPE pdpu_plane_cache_entries gauge");
+    let _ = writeln!(out, "pdpu_plane_cache_entries {}", s.plane_cache.entries);
 
     let name = "pdpu_request_latency_microseconds";
     let _ = writeln!(out, "# HELP {name} Request latency from enqueue to reply, per op.");

@@ -117,8 +117,11 @@ fn stats_op_counts_mixed_traffic_and_macs() {
     assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
 
     let after = c.ok(&Json::obj(vec![("op", Json::Str("stats".into()))]));
-    assert_eq!(num(&after, "requests") - num(&before, "requests"), 11.0);
+    // the malformed train request is counted too: 12 requests arrived,
+    // 11 succeeded, 1 was rejected as an error
+    assert_eq!(num(&after, "requests") - num(&before, "requests"), 12.0);
     assert_eq!(num(&after, "responses") - num(&before, "responses"), 11.0);
+    assert_eq!(num(&after, "errors") - num(&before, "errors"), 1.0);
     assert_eq!(num(&after, "train_steps"), 1.0);
     assert_eq!(num(&after, "train_examples"), 4.0);
     assert_eq!(num(&after, "gemm_requests"), 4.0);

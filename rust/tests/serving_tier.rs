@@ -1,0 +1,160 @@
+//! Integration tests for the sharded serving tier: the hard invariant is
+//! that sharding, dynamic batching, cross-request fusion, and the
+//! cross-batch plane cache are *pure routing* — every output is bitwise
+//! identical to the single-threaded, uncached, unfused oracle — while the
+//! cache actually hits across batches and admission control actually
+//! sheds under saturation.
+
+use std::sync::Arc;
+
+use pdpu::coordinator::{Metrics, ServerPolicy, ServiceHandle, ServingTier, SoftwareService, TierReply};
+use pdpu::pdpu::PdpuConfig;
+
+const MKN: (usize, usize, usize) = (4, 9, 3);
+
+fn software(planes: usize) -> SoftwareService {
+    SoftwareService::new(PdpuConfig::paper_default(), &[8, 4], 8, MKN, 0x7E57)
+        .expect("valid test config")
+        .with_plane_cache_capacity(planes)
+}
+
+fn tier(policy: ServerPolicy, planes: usize) -> (Arc<ServingTier>, Arc<Metrics>) {
+    let metrics = Arc::new(Metrics::new());
+    let handle = ServiceHandle::from_software(software(planes));
+    (Arc::new(ServingTier::new(handle, metrics.clone(), policy)), metrics)
+}
+
+fn plane_a(p: usize) -> Vec<f32> {
+    let (m, k, _) = MKN;
+    (0..m * k).map(|i| ((p * 7 + i) % 11) as f32 * 0.125 - 0.5).collect()
+}
+
+fn operand_b(seed: usize) -> Vec<f32> {
+    let (_, k, n) = MKN;
+    (0..k * n).map(|i| ((seed * 13 + 3 * i) % 9) as f32 * 0.25 - 1.0).collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// 4 shards, 4 client threads, 100 GEMMs over 3 shared weight planes:
+/// every reply is bitwise identical to a direct, uncached, unfused
+/// `SoftwareService::gemm` on a *separate* service instance — and the
+/// shared planes actually hit the cache.
+#[test]
+fn sharded_cached_fused_gemm_is_bitwise_identical_to_the_uncached_oracle() {
+    let policy = ServerPolicy { shards: 4, max_inflight: 0, ..ServerPolicy::default() };
+    let (tier, metrics) = tier(policy, 8);
+    let oracle = software(0); // no cache, and `gemm` is also unfused
+
+    let mut handles = Vec::new();
+    for t in 0..4usize {
+        let tier = tier.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut got = Vec::new();
+            for i in 0..25usize {
+                let a = plane_a((t + i) % 3);
+                let b = operand_b(t * 100 + i);
+                match tier.gemm(tier.assign_shard(), a.clone(), b.clone(), None) {
+                    TierReply::Ok(c) => got.push((a, b, c)),
+                    other => panic!("unlimited budget must serve, got {other:?}"),
+                }
+            }
+            got
+        }));
+    }
+    let mut served = 0usize;
+    for h in handles {
+        for (a, b, c) in h.join().expect("client thread") {
+            let want = oracle.gemm(&a, &b).expect("oracle gemm");
+            assert_eq!(bits(&c), bits(&want), "tier output diverged from the oracle");
+            served += 1;
+        }
+    }
+    assert_eq!(served, 100);
+    let s = metrics.snapshot();
+    assert_eq!(s.requests, 100);
+    assert_eq!(s.responses, 100);
+    assert_eq!(s.errors, 0);
+    assert_eq!(s.shed_requests, 0);
+
+    let cache = tier.plane_cache_stats();
+    assert!(cache.hits > 0, "3 shared planes over 100 requests must hit: {cache:?}");
+    assert!(cache.entries >= 1 && cache.entries <= 3, "only 3 distinct planes exist: {cache:?}");
+}
+
+/// The cache is *cross-batch*: sequential single-request batches on one
+/// shard reuse the prepared plane from earlier batches.
+#[test]
+fn plane_cache_hits_accumulate_across_batches() {
+    let policy = ServerPolicy { shards: 1, ..ServerPolicy::default() };
+    let (tier, _metrics) = tier(policy, 16);
+    let oracle = software(0);
+    let (a, b) = (plane_a(0), operand_b(42));
+    let want = bits(&oracle.gemm(&a, &b).expect("oracle gemm"));
+    for round in 0..5 {
+        match tier.gemm(0, a.clone(), b.clone(), None) {
+            TierReply::Ok(c) => assert_eq!(bits(&c), want, "round {round} diverged"),
+            other => panic!("round {round}: {other:?}"),
+        }
+    }
+    let cache = tier.plane_cache_stats();
+    assert_eq!(cache.misses, 1, "one cold quantization: {cache:?}");
+    assert_eq!(cache.hits, 4, "four warm batches: {cache:?}");
+    assert_eq!(cache.entries, 1, "{cache:?}");
+}
+
+/// A one-permit budget under concurrent load sheds — and sheds are
+/// counted as requests but never as responses or errors.
+#[test]
+fn tier_sheds_when_the_admission_budget_saturates() {
+    let policy = ServerPolicy { shards: 1, max_inflight: 1, ..ServerPolicy::default() };
+    let (tier, metrics) = tier(policy, 8);
+    const THREADS: usize = 8;
+    const PER_THREAD: usize = 20;
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let tier = tier.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut sheds = 0u64;
+            for i in 0..PER_THREAD {
+                match tier.gemm(tier.assign_shard(), plane_a(t % 3), operand_b(t * 50 + i), None) {
+                    TierReply::Ok(_) => {}
+                    TierReply::Shed => sheds += 1,
+                    TierReply::Err(e) => panic!("valid gemm errored: {e}"),
+                }
+            }
+            sheds
+        }));
+    }
+    let sheds: u64 = handles.into_iter().map(|h| h.join().expect("client thread")).sum();
+    assert!(sheds > 0, "one permit across 8 hammering threads must shed");
+    let s = metrics.snapshot();
+    let total = (THREADS * PER_THREAD) as u64;
+    assert_eq!(s.shed_requests, sheds);
+    assert_eq!(s.requests, total, "sheds still count as requests");
+    assert_eq!(s.responses, total - sheds);
+    assert_eq!(s.errors, 0);
+    assert_eq!(tier.in_flight(), 0, "all permits released");
+}
+
+/// The infer path through the tier is bitwise identical to calling the
+/// service handle directly.
+#[test]
+fn tier_infer_matches_direct_service_bitwise() {
+    let policy = ServerPolicy { shards: 2, ..ServerPolicy::default() };
+    let (tier, metrics) = tier(policy, 8);
+    let direct = ServiceHandle::from_software(software(8));
+    for seed in 0..10usize {
+        let img: Vec<f32> = (0..8).map(|i| ((seed * 5 + i) % 7) as f32 * 0.2 - 0.6).collect();
+        let got = match tier.infer(tier.assign_shard(), img.clone(), None) {
+            TierReply::Ok(v) => v,
+            other => panic!("infer {seed}: {other:?}"),
+        };
+        let want = direct.infer_batch(vec![img]).expect("direct infer");
+        let want = want.first().expect("one logit row");
+        assert_eq!(bits(&got), bits(want), "infer {seed} diverged");
+    }
+    assert_eq!(metrics.snapshot().errors, 0);
+}

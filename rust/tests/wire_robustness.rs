@@ -9,7 +9,7 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
 
-use pdpu::coordinator::{json, Metrics, Server, ServiceHandle};
+use pdpu::coordinator::{json, Metrics, Server, ServerPolicy, ServiceHandle};
 use pdpu::pdpu::PdpuConfig;
 
 /// Every prefix of a valid request — i.e. every possible truncation
@@ -69,6 +69,14 @@ fn start_test_server() -> (Server, ServiceHandle, Arc<Metrics>) {
     (server, svc, metrics)
 }
 
+fn start_policy_server(policy: ServerPolicy) -> (Server, ServiceHandle, Arc<Metrics>) {
+    let svc = ServiceHandle::start_software(PdpuConfig::paper_default(), vec![6, 3], 4, (2, 2, 2), 0xD05).unwrap();
+    let metrics = Arc::new(Metrics::new());
+    let server =
+        Server::start_with("127.0.0.1:0", svc.clone(), metrics.clone(), policy).expect("bind test server");
+    (server, svc, metrics)
+}
+
 fn ping_ok(addr: std::net::SocketAddr) -> bool {
     let stream = TcpStream::connect(addr).expect("connect");
     let mut writer = stream.try_clone().expect("clone");
@@ -124,4 +132,147 @@ fn non_utf8_bytes_drop_the_connection_not_the_server() {
     assert_eq!(n, 0, "non-UTF-8 line should close the connection silently");
 
     assert!(ping_ok(server.addr), "server must still serve after a non-UTF-8 connection");
+}
+
+/// A line longer than `max_line_bytes` gets a bounded-reader error reply
+/// and the connection is closed — the server never buffers the whole
+/// line, so a newline-free byte stream can no longer grow memory without
+/// bound. The rejection is also *counted*.
+#[test]
+fn oversized_request_line_is_rejected_and_counted() {
+    let policy = ServerPolicy { max_line_bytes: 1024, ..ServerPolicy::default() };
+    let (server, _svc, metrics) = start_policy_server(policy);
+    let stream = TcpStream::connect(server.addr).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+
+    // two-phase write: exactly the cap first (still legal), then push it
+    // over — the server has consumed phase one by the time it rejects, so
+    // the error reply isn't lost to a reset-on-close race
+    writer.write_all(&vec![b'x'; 1024]).expect("send cap bytes");
+    writer.flush().expect("flush");
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    writer.write_all(&vec![b'x'; 200]).expect("send overflow bytes");
+
+    let mut resp = String::new();
+    reader.read_line(&mut resp).expect("read rejection");
+    let v = json::parse(&resp).expect("rejection is json");
+    assert_eq!(v.get("ok"), Some(&json::Json::Bool(false)), "{resp:?}");
+    let msg = v.get("error").and_then(json::Json::as_str).expect("error field");
+    assert!(msg.contains("exceeds"), "unexpected rejection message: {msg}");
+    // the connection is closed after the reply
+    let mut buf = [0u8; 16];
+    assert_eq!(reader.read(&mut buf).unwrap_or(0), 0, "connection should close after an oversized line");
+
+    assert!(ping_ok(server.addr), "server must still serve after an oversized line");
+    let s = metrics.snapshot();
+    assert!(s.requests >= 1, "oversized line must count as a request");
+    assert!(s.errors >= 1, "oversized line must count as an error");
+}
+
+/// An idle connection (bytes may come later) does not wedge its shard:
+/// other clients keep getting served, and the idle connection still works
+/// once it finally speaks.
+#[test]
+fn idle_connection_does_not_block_service() {
+    let (server, _svc, _metrics) = start_test_server();
+    let stream = TcpStream::connect(server.addr).expect("connect idle");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+    std::thread::sleep(std::time::Duration::from_millis(150));
+
+    // fresh connections are served while the first one sits idle
+    assert!(ping_ok(server.addr), "idle connection must not block new clients");
+
+    // and the idle connection itself is still alive
+    writer.write_all(b"{\"op\":\"ping\"}\n").expect("send late ping");
+    let mut resp = String::new();
+    reader.read_line(&mut resp).expect("read late pong");
+    assert!(json::parse(&resp).expect("pong json").get("pong").is_some(), "{resp:?}");
+}
+
+/// Rapid connect/disconnect churn — including sockets dropped before the
+/// server ever reads a byte — leaves every accept loop alive.
+#[test]
+fn server_survives_connection_churn() {
+    let (server, _svc, _metrics) = start_test_server();
+    let addr = server.addr;
+    let mut handles = Vec::new();
+    for _ in 0..4 {
+        handles.push(std::thread::spawn(move || {
+            for _ in 0..50 {
+                drop(TcpStream::connect(addr).expect("churn connect"));
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("churn thread");
+    }
+    assert!(ping_ok(addr), "server must still accept after connection churn");
+}
+
+/// Saturating a one-permit admission budget sheds with the structured
+/// `{"ok":false,"shed":true}` reply, the shed counter matches what
+/// clients observed, and every request is accounted for.
+#[test]
+fn saturated_admission_budget_sheds_structurally() {
+    let policy = ServerPolicy { shards: 1, max_inflight: 1, ..ServerPolicy::default() };
+    let (server, _svc, metrics) = start_policy_server(policy);
+    let addr = server.addr;
+
+    const THREADS: usize = 6;
+    const PER_THREAD: usize = 40;
+    let mut handles = Vec::new();
+    for _ in 0..THREADS {
+        handles.push(std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).expect("connect");
+            let mut writer = stream.try_clone().expect("clone");
+            let mut reader = BufReader::new(stream);
+            let mut sheds = 0u64;
+            // valid 2x2 gemm payload for the (2, 2, 2) test service
+            let req = "{\"op\":\"gemm\",\"a\":[1,0,0,1],\"b\":[0.5,0,0,0.5]}\n";
+            for _ in 0..PER_THREAD {
+                writer.write_all(req.as_bytes()).expect("send gemm");
+                let mut resp = String::new();
+                reader.read_line(&mut resp).expect("read gemm reply");
+                let v = json::parse(&resp).expect("reply is json");
+                match v.get("ok") {
+                    Some(json::Json::Bool(true)) => {}
+                    Some(json::Json::Bool(false)) => {
+                        assert_eq!(
+                            v.get("shed"),
+                            Some(&json::Json::Bool(true)),
+                            "only sheds may fail under saturation: {resp:?}"
+                        );
+                        sheds += 1;
+                    }
+                    other => panic!("malformed reply {other:?}: {resp:?}"),
+                }
+            }
+            sheds
+        }));
+    }
+    let observed_sheds: u64 = handles.into_iter().map(|h| h.join().expect("client thread")).sum();
+    assert!(observed_sheds > 0, "a one-permit budget under 6 hammering clients must shed");
+
+    let s = metrics.snapshot();
+    let total = (THREADS * PER_THREAD) as u64;
+    assert_eq!(s.shed_requests, observed_sheds, "shed counter must match client-observed sheds");
+    assert_eq!(s.requests, total, "shed requests still count as requests");
+    assert_eq!(s.responses, total - observed_sheds, "every admitted request got a response");
+    assert_eq!(s.errors, 0, "sheds are not errors");
+
+    // the stats wire op surfaces the new fields
+    let stream = TcpStream::connect(addr).expect("connect stats");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+    writer.write_all(b"{\"op\":\"stats\"}\n").expect("send stats");
+    let mut resp = String::new();
+    reader.read_line(&mut resp).expect("read stats");
+    let v = json::parse(&resp).expect("stats json");
+    let field = |k: &str| v.get(k).and_then(json::Json::as_f64).unwrap_or_else(|| panic!("missing {k}: {resp:?}"));
+    assert_eq!(field("shed_requests"), observed_sheds as f64);
+    assert_eq!(field("shards"), 1.0);
+    assert!(field("accept_retries") >= 0.0);
+    assert!(field("plane_cache_misses") >= 1.0, "fused gemms go through the plane cache");
 }
